@@ -1,0 +1,40 @@
+//! PVC sweep: the paper's Table-V workload shape — for a dataset, sweep
+//! k across the minimum and watch the early-termination behaviour
+//! (k ≥ min returns quickly; k = min−1 must exhaust the search).
+//!
+//! ```bash
+//! cargo run --release --example pvc_sweep [dataset] [--variant ...]
+//! ```
+
+use cavc::harness::datasets;
+use cavc::solver::{solve_mvc, solve_pvc, SolverConfig};
+
+fn main() {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "power-eris1176".into());
+    let d = datasets::dataset(&name).unwrap_or_else(|| {
+        eprintln!("unknown dataset {name}; try `cavc datasets`");
+        std::process::exit(1);
+    });
+    let g = d.build();
+    println!("dataset {} (|V|={}, |E|={})", d.name, g.num_vertices(), g.num_edges());
+
+    let mvc = solve_mvc(&g, &SolverConfig::proposed());
+    println!("minimum vertex cover: {} ({:.3}s)\n", mvc.best, mvc.elapsed.as_secs_f64());
+
+    println!("{:>8} {:>8} {:>10} {:>12} {:>12}", "k", "found", "size", "time (s)", "tree nodes");
+    for dk in -2i64..=2 {
+        let k = (mvc.best as i64 + dk).max(0) as u32;
+        let r = solve_pvc(&g, k, &SolverConfig::proposed());
+        println!(
+            "{:>8} {:>8} {:>10} {:>12.4} {:>12}",
+            k,
+            if r.found { "yes" } else { "no" },
+            r.size.map(|s| s.to_string()).unwrap_or_else(|| "-".into()),
+            r.elapsed.as_secs_f64(),
+            r.stats.tree_nodes
+        );
+        // consistency with the exhaustive MVC
+        assert_eq!(r.found, k >= mvc.best, "PVC inconsistent with MVC at k={k}");
+    }
+    println!("\npvc_sweep OK (k >= {} found, k < {} exhausted)", mvc.best, mvc.best);
+}

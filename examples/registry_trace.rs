@@ -1,0 +1,78 @@
+//! Registry walkthrough: replays the paper's Figure-3 scenario against
+//! the real component branch registry, printing every entry transition —
+//! the clearest way to see how non-tail-recursive post-processing is
+//! delegated to last descendants.
+//!
+//! ```bash
+//! cargo run --release --example registry_trace
+//! ```
+
+use cavc::solver::registry::{Registry, NONE};
+
+fn dump(reg: &Registry, label: &str, ids: &[(u32, &str)]) {
+    println!("-- {label}");
+    for &(idx, name) in ids {
+        let (val, live, link, aux) = reg.snapshot(idx);
+        println!(
+            "   {name:<12} val={val:<4} live={live:<3} link={:<6} aux={aux}",
+            if link == NONE { "ROOT".into() } else { format!("#{link}") }
+        );
+    }
+}
+
+fn main() {
+    let reg = Registry::new(false);
+    let mut root_report = |t: u32| println!(">>> ROOT receives achievable total {t}");
+
+    // Figure 3: node 1 splits into components 2 and 3.
+    println!("node 1 finds two components -> registers parent + children\n");
+    let p1 = reg.new_parent(0, NONE);
+    let c2 = reg.new_child(p1, 5, 5); // component of 6 vertices
+    let c3 = reg.new_child(p1, 9, 9); // component of 10 vertices
+    reg.finish_scan(p1, &mut root_report);
+    let ids = [(p1, "parent n1"), (c2, "child n2"), (c3, "child n3")];
+    dump(&reg, "after registration", &ids);
+
+    // Node 12 (descendant of 3) splits again into 13 and 14.
+    println!("\nnode 12 (inside component 3, with 1 vertex committed) splits\n");
+    reg.on_branch(c3); // node 12 branched from node 3's subtree
+    let p12 = reg.new_parent(1, c3);
+    let c13 = reg.new_child(p12, 3, 3);
+    let c14 = reg.new_child(p12, 2, 2);
+    reg.finish_scan(p12, &mut root_report);
+    let ids2 = [
+        (p1, "parent n1"),
+        (c2, "child n2"),
+        (c3, "child n3"),
+        (p12, "parent n12"),
+        (c13, "child n13"),
+        (c14, "child n14"),
+    ];
+    dump(&reg, "after nested registration", &ids2);
+
+    // Node 20, the last descendant of 13, finds a cover of size 2.
+    println!("\nnode 20 (last descendant of 13) reports best 2 and completes\n");
+    reg.report_solution(c13, 2, &mut root_report);
+    reg.complete_node(c13, &mut root_report);
+    dump(&reg, "after n13 completes (n12.sum += 2, liveComps -= 1)", &ids2);
+
+    // Component 14 completes with its initial bound.
+    println!("\nlast descendant of 14 completes (best stays 2)\n");
+    reg.complete_node(c14, &mut root_report);
+    dump(
+        &reg,
+        "after n14 completes -> split n12 finished, total 1+2+2=5 improves n3",
+        &ids2,
+    );
+
+    // Node 3's remaining descendant finishes; then node 2's.
+    println!("\nremaining descendant of component 3 completes\n");
+    reg.complete_node(c3, &mut root_report);
+    println!("\ncomponent 2 completes with best 4\n");
+    reg.report_solution(c2, 4, &mut root_report);
+    reg.complete_node(c2, &mut root_report);
+    dump(&reg, "final state (all live counters drained)", &ids2);
+
+    reg.assert_drained();
+    println!("\nregistry_trace OK — root total = parent sum 0 + best(c2)=4 + best(c3)=5 = 9");
+}

@@ -1,0 +1,15 @@
+//! Internal: probe solve times of the full dataset suite (used while
+//! calibrating the analogs; kept as a maintenance tool).
+use cavc::harness::datasets;
+use cavc::solver::{solve_mvc, SolverConfig};
+fn main() {
+    let budget = std::time::Duration::from_secs(12);
+    for d in datasets::suite().iter().chain(datasets::table6_suite().iter()) {
+        let g = d.build();
+        let t = std::time::Instant::now();
+        let r = solve_mvc(&g, &SolverConfig::proposed().with_timeout(budget));
+        println!("{:<22} n={:<5} m={:<6} mvc={:<5} {:>8.3}s nodes={:<9} splits={:<7} to={}",
+            d.name, g.num_vertices(), g.num_edges(), r.best, t.elapsed().as_secs_f64(),
+            r.stats.tree_nodes, r.stats.component_branches, r.timed_out);
+    }
+}

@@ -1,0 +1,67 @@
+"""AOT compile path: lower every Layer-2 program to HLO **text**.
+
+Run once at build time (`make artifacts`); the Rust runtime loads the
+text with ``HloModuleProto::from_text_file`` and compiles it on the PJRT
+CPU client. Python never runs on the request path.
+
+HLO *text* — not ``lowered.compile()`` or a serialized ``HloModuleProto``
+— is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. ``return_tuple=True`` so the Rust side unpacks a
+tuple uniformly. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import PROGRAMS, SIZE_CLASSES
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(name: str, n: int) -> str:
+    """Lower one program at one size class to HLO text."""
+    fn, spec_builder = PROGRAMS[name]
+    lowered = jax.jit(fn).lower(*spec_builder(n))
+    return to_hlo_text(lowered)
+
+
+def build_all(out_dir: pathlib.Path, sizes=SIZE_CLASSES, programs=None) -> list[pathlib.Path]:
+    """Write every artifact; returns the paths written."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name in programs or PROGRAMS:
+        for n in sizes:
+            text = lower_program(name, n)
+            path = out_dir / f"{name}_{n}.hlo.txt"
+            path.write_text(text)
+            written.append(path)
+            print(f"wrote {path} ({len(text)} chars)", file=sys.stderr)
+    return written
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--sizes", default=None, help="comma-separated size classes")
+    ap.add_argument("--programs", default=None, help="comma-separated program names")
+    args = ap.parse_args()
+    sizes = tuple(int(s) for s in args.sizes.split(",")) if args.sizes else SIZE_CLASSES
+    programs = args.programs.split(",") if args.programs else None
+    build_all(pathlib.Path(args.out), sizes, programs)
+
+
+if __name__ == "__main__":
+    main()

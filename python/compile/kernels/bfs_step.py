@@ -1,0 +1,62 @@
+"""Pallas kernel: tiled BFS frontier expansion (Layer 1).
+
+Frontier expansion is a masked mat-vec: ``reach = A @ f``. On the GPU the
+paper does this pull-based with one thread block per frontier sweep; on
+TPU the natural mapping is a tiled dot that feeds the MXU — adjacency
+tiles are (128, 128) f32 blocks, the frontier is a 128-lane vector, and
+the contraction accumulates across column tiles with the output row tile
+stationary in VMEM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 128
+
+
+def _bfs_expand_kernel(a_ref, f_ref, o_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # (TILE, TILE) @ (TILE,) → (TILE,) partial reach counts on the MXU.
+    o_ref[...] += a_ref[...] @ f_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def bfs_expand(a, frontier, *, tile=TILE):
+    """Raw expansion counts ``A @ f`` (callers threshold / mask).
+
+    Matches ``ref.bfs_expand_ref``.
+    """
+    n = a.shape[0]
+    assert a.shape == (n, n) and frontier.shape == (n,)
+    assert n % tile == 0, f"n={n} must be a multiple of the {tile} tile"
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        _bfs_expand_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+            pl.BlockSpec((tile,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=True,
+    )(a, frontier)
+
+
+def bfs_step(a, frontier, visited, *, tile=TILE):
+    """One BFS step over the kernel: next frontier + updated visited.
+
+    Matches ``ref.bfs_step_ref``.
+    """
+    reached = bfs_expand(a, frontier, tile=tile) > 0
+    new_frontier = jnp.logical_and(reached, jnp.logical_not(visited > 0))
+    new_frontier = new_frontier.astype(jnp.float32)
+    return new_frontier, jnp.clip(visited + new_frontier, 0.0, 1.0)

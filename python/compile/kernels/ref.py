@@ -1,0 +1,62 @@
+"""Pure-jnp reference oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernels.py`` (hypothesis sweeps over shapes and random
+adjacency matrices). The references are deliberately written in the most
+obvious vectorized form — no tiling, no tricks — so a disagreement always
+points at the kernel.
+
+All functions take a dense symmetric 0/1 adjacency matrix ``a`` of shape
+(n, n) with a zero diagonal, in float32.
+"""
+
+import jax.numpy as jnp
+
+#: Sentinel larger than any vertex label.
+INF = jnp.float32(2**30)
+
+
+def label_prop_step_ref(a, labels):
+    """One min-label propagation step.
+
+    new[i] = min(labels[i], min_{j : a[i,j]=1} labels[j])
+    """
+    neighbor = jnp.where(a > 0, labels[None, :], INF).min(axis=1)
+    return jnp.minimum(labels, neighbor)
+
+
+def bfs_expand_ref(a, frontier):
+    """Raw frontier expansion counts: (A @ f). Callers threshold."""
+    return a @ frontier
+
+
+def bfs_step_ref(a, frontier, visited):
+    """One BFS step: the next frontier and the updated visited mask."""
+    reached = (a @ frontier) > 0
+    new_frontier = jnp.logical_and(reached, jnp.logical_not(visited > 0))
+    new_frontier = new_frontier.astype(jnp.float32)
+    return new_frontier, jnp.clip(visited + new_frontier, 0.0, 1.0)
+
+
+def triangle_rowsum_ref(a):
+    """Row sums of (A @ A) ⊙ A. Equals 2 × (triangles through vertex i)."""
+    return ((a @ a) * a).sum(axis=1)
+
+
+def connected_components_ref(a):
+    """Component labels: smallest vertex index in each component."""
+    n = a.shape[0]
+    labels = jnp.arange(n, dtype=jnp.float32)
+    # n iterations always suffice (longest shortest path < n)
+    for _ in range(n):
+        labels = label_prop_step_ref(a, labels)
+    return labels
+
+
+def bfs_reach_ref(a, seed):
+    """Reachability mask from a 0/1 seed vector."""
+    visited = seed.astype(jnp.float32)
+    frontier = visited
+    for _ in range(a.shape[0]):
+        frontier, visited = bfs_step_ref(a, frontier, visited)
+    return visited

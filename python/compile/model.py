@@ -1,0 +1,90 @@
+"""Layer 2: JAX fixpoint programs over the Pallas kernels.
+
+These are the compute graphs that get AOT-lowered to HLO by ``aot.py``
+and executed from the Rust runtime via PJRT. Each is a
+``lax.while_loop`` fixpoint with an early-exit condition, so the lowered
+module contains a genuine HLO while loop (no per-iteration host sync, no
+unrolling blowup) around the Layer-1 kernels.
+
+Inputs are dense symmetric 0/1 f32 adjacency matrices padded to the AOT
+size class; padding vertices are isolated, which every fixpoint here
+treats as its own trivial component, so padding never changes results
+for the real vertices.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.bfs_step import bfs_expand
+from .kernels.label_prop import label_prop_step
+from .kernels.triangle import triangle_rowsum
+
+
+def connected_components(a):
+    """Component labels: the smallest vertex index in each component.
+
+    Min-label propagation to a fixpoint. Converges in at most
+    diameter+1 steps; the while loop exits as soon as a step changes
+    nothing.
+    """
+    n = a.shape[0]
+    init_labels = jnp.arange(n, dtype=jnp.float32)
+
+    def cond(state):
+        _, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        new = label_prop_step(a, labels)
+        return new, jnp.any(new != labels)
+
+    labels, _ = lax.while_loop(cond, body, (init_labels, jnp.bool_(True)))
+    return (labels,)
+
+
+def bfs_reach(a, seed):
+    """Reachability mask (0/1 f32) from a 0/1 seed vector."""
+
+    def cond(state):
+        frontier, _ = state
+        return jnp.sum(frontier) > 0
+
+    def body(state):
+        frontier, visited = state
+        reached = bfs_expand(a, frontier) > 0
+        new_frontier = jnp.logical_and(reached, visited == 0).astype(jnp.float32)
+        return new_frontier, jnp.clip(visited + new_frontier, 0.0, 1.0)
+
+    seed = seed.astype(jnp.float32)
+    _, visited = lax.while_loop(cond, body, (seed, seed))
+    return (visited,)
+
+
+def triangle_census(a):
+    """Row sums of (A@A)⊙A — 2 × per-vertex triangle counts."""
+    return (triangle_rowsum(a),)
+
+
+#: Program registry: artifact stem → (fn, input_spec_builder).
+#: Must stay in sync with `rust/src/runtime/artifacts.rs`.
+def _adj_spec(n):
+    return (jax.ShapeDtypeStruct((n, n), jnp.float32),)
+
+
+def _adj_seed_spec(n):
+    return (
+        jax.ShapeDtypeStruct((n, n), jnp.float32),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
+
+
+PROGRAMS = {
+    "components": (connected_components, _adj_spec),
+    "bfs_reach": (bfs_reach, _adj_seed_spec),
+    "triangle_census": (triangle_census, _adj_spec),
+}
+
+#: AOT size classes (must match `rust/src/runtime/artifacts.rs`).
+SIZE_CLASSES = (128, 256, 512, 1024)

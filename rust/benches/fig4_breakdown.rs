@@ -1,0 +1,40 @@
+//! Figure 4: breakdown of the proposed solver's execution time across
+//! activities (reduction rules, component search, branching,
+//! stack/worklist, stopping/leaf), normalized per worker as the paper
+//! normalizes per thread block.
+
+use cavc::harness::{datasets, tables};
+use cavc::util::timer::{Activity, ALL_ACTIVITIES};
+
+fn main() {
+    let suite = if std::env::var("CAVC_SUITE").as_deref() == Ok("smoke") {
+        datasets::smoke_suite()
+    } else {
+        datasets::suite()
+    };
+    println!(
+        "# Figure 4 — activity breakdown (% of busy time), budget {}s/run",
+        tables::cell_timeout().as_secs_f64()
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for d in &suite {
+        eprintln!("[fig4] {} ...", d.name);
+        let row = tables::fig4_row(d);
+        let vals: Vec<String> = ALL_ACTIVITIES
+            .iter()
+            .filter(|a| **a != Activity::Idle)
+            .map(|a| format!("{:.4}", row.fractions[*a as usize]))
+            .collect();
+        csv.push(format!("{},{}", row.name, vals.join(",")));
+        rows.push(row);
+    }
+    tables::print_fig4(&rows, std::io::stdout().lock()).unwrap();
+    let path = tables::write_csv(
+        "fig4_breakdown",
+        "graph,reduce,component_search,branch,queue,leaf",
+        &csv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", path.display());
+}

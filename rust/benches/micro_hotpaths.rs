@@ -1,0 +1,82 @@
+//! Micro-benchmarks of the engine hot paths (used by the §Perf pass):
+//! per-node reduction sweep, component BFS, child materialization, the
+//! worklist, and the registry cascade. Reports ns/op medians.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::registry::{Registry, NONE};
+use cavc::solver::worklist::Worklist;
+use cavc::solver::{solve_mvc, SolverConfig};
+use std::time::Instant;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+    // warmup
+    for _ in 0..iters.div_ceil(10) {
+        f();
+    }
+    let mut samples = Vec::with_capacity(5);
+    for _ in 0..5 {
+        let t = Instant::now();
+        for _ in 0..iters {
+            f();
+        }
+        samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = samples[2];
+    println!("{name:<40} {med:>12.0} ns/op");
+    med
+}
+
+fn main() {
+    println!("# micro hot paths (medians of 5 runs)");
+
+    // worklist push+pop round trip under no contention
+    let wl: Worklist<u64> = Worklist::new(8);
+    bench("worklist push+pop", 100_000, || {
+        wl.push(3, 42);
+        let _ = wl.pop(3);
+    });
+
+    // registry split + cascade (2 components)
+    let reg = Registry::new(false);
+    bench("registry split+cascade (2 comps)", 50_000, || {
+        let p = reg.new_parent(0, NONE);
+        let c1 = reg.new_child(p, 3, 3);
+        let c2 = reg.new_child(p, 4, 4);
+        let mut sink = |_t: u32| {};
+        reg.finish_scan(p, &mut sink);
+        reg.complete_node(c1, &mut sink);
+        reg.complete_node(c2, &mut sink);
+    });
+
+    // end-to-end solves of reference workloads (the real hot path)
+    let workloads: Vec<(&str, Graph)> = vec![
+        ("solve c_fat(110,8)", generators::c_fat(110, 8, 0xCA09)),
+        ("solve grid(12x16)", generators::grid(12, 16, 0.08, 0xCA02)),
+        ("solve banded(320,2)", generators::banded(320, 2, 0.28, 90, 0xCA0B)),
+        ("solve gp(40,2)", generators::generalized_petersen(40, 2)),
+    ];
+    for (name, g) in &workloads {
+        let cfg = SolverConfig::proposed().with_timeout(std::time::Duration::from_secs(30));
+        let t = Instant::now();
+        let r = solve_mvc(g, &cfg);
+        let el = t.elapsed().as_secs_f64();
+        println!(
+            "{name:<40} {el:>10.4} s   (mvc={}, nodes={}, splits={})",
+            r.best, r.stats.tree_nodes, r.stats.component_branches
+        );
+    }
+
+    // per-node throughput proxy: nodes/sec on a branching-heavy instance
+    let g = generators::generalized_petersen(36, 2);
+    let t = Instant::now();
+    let r = solve_mvc(&g, &SolverConfig::proposed());
+    let el = t.elapsed().as_secs_f64();
+    println!(
+        "{:<40} {:>10.0} nodes/s ({} nodes in {:.3}s)",
+        "engine node throughput gp(36,2)",
+        r.stats.tree_nodes as f64 / el,
+        r.stats.tree_nodes,
+        el
+    );
+}

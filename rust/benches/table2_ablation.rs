@@ -1,0 +1,44 @@
+//! Table II: incremental impact of each optimization — the proposed
+//! solver with (a) component branching disabled, (b) root reduce+induce
+//! disabled, (c) non-zero bounds disabled, vs the full system.
+
+use cavc::harness::{datasets, tables};
+
+fn main() {
+    let suite = if std::env::var("CAVC_SUITE").as_deref() == Ok("smoke") {
+        datasets::smoke_suite()
+    } else {
+        datasets::suite()
+    };
+    println!(
+        "# Table II — ablations (s), budget {}s/cell",
+        tables::cell_timeout().as_secs_f64()
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for d in &suite {
+        eprintln!("[table2] {} ...", d.name);
+        let row = tables::table2_row(d);
+        csv.push(format!(
+            "{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
+            row.name,
+            row.no_components.secs,
+            row.no_components.timed_out,
+            row.no_induce.secs,
+            row.no_induce.timed_out,
+            row.no_bounds.secs,
+            row.no_bounds.timed_out,
+            row.proposed.secs,
+            row.proposed.timed_out,
+        ));
+        rows.push(row);
+    }
+    tables::print_table2(&rows, std::io::stdout().lock()).unwrap();
+    let path = tables::write_csv(
+        "table2_ablation",
+        "graph,no_components_s,no_components_to,no_induce_s,no_induce_to,no_bounds_s,no_bounds_to,proposed_s,proposed_to",
+        &csv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", path.display());
+}

@@ -1,0 +1,42 @@
+//! Table III: search-tree nodes visited without vs with component
+//! branching, plus the components-per-branch histogram of the proposed
+//! solver.
+
+use cavc::harness::{datasets, tables};
+
+fn main() {
+    let suite = if std::env::var("CAVC_SUITE").as_deref() == Ok("smoke") {
+        datasets::smoke_suite()
+    } else {
+        datasets::suite()
+    };
+    println!(
+        "# Table III — tree nodes, budget {}s/cell",
+        tables::cell_timeout().as_secs_f64()
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for d in &suite {
+        eprintln!("[table3] {} ...", d.name);
+        let row = tables::table3_row(d);
+        let hist: Vec<String> = row.histogram.iter().map(|(k, v)| format!("{k}:{v}")).collect();
+        csv.push(format!(
+            "{},{},{},{},{},{}",
+            row.name,
+            row.nodes_disabled,
+            row.disabled_timed_out,
+            row.nodes_enabled,
+            row.component_branches,
+            hist.join(";")
+        ));
+        rows.push(row);
+    }
+    tables::print_table3(&rows, std::io::stdout().lock()).unwrap();
+    let path = tables::write_csv(
+        "table3_nodes",
+        "graph,nodes_disabled,disabled_timed_out,nodes_enabled,component_branches,histogram",
+        &csv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", path.display());
+}

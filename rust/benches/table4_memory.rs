@@ -1,0 +1,35 @@
+//! Table IV: effect of reducing the graph and inducing a subgraph on the
+//! degree array size, modeled thread-block occupancy, shared-memory fit,
+//! and degree dtype. Pure preprocessing — no search, so no budget needed.
+
+use cavc::harness::{datasets, tables};
+
+fn main() {
+    println!("# Table IV — degree array / occupancy effects of reduce+induce");
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for d in datasets::suite() {
+        let row = tables::table4_row(&d);
+        csv.push(format!(
+            "{},{},{},{},{},{},{},{},{}",
+            row.name,
+            row.n_before,
+            row.n_after,
+            row.blocks_before,
+            row.blocks_after,
+            row.fits_before,
+            row.fits_after,
+            row.short_before,
+            row.short_after,
+        ));
+        rows.push(row);
+    }
+    tables::print_table4(&rows, std::io::stdout().lock()).unwrap();
+    let path = tables::write_csv(
+        "table4_memory",
+        "graph,n_before,n_after,blocks_before,blocks_after,fits_before,fits_after,short_before,short_after",
+        &csv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", path.display());
+}

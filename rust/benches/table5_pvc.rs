@@ -1,0 +1,49 @@
+//! Table V: PVC execution time at k ∈ {min−1, min, min+1} for the
+//! proposed solver vs the three baselines. Requires the MVC minimum per
+//! dataset, computed first with the proposed solver (rows are skipped if
+//! that times out, as the paper cannot define min±1 either).
+
+use cavc::harness::{datasets, tables};
+
+fn main() {
+    let suite = if std::env::var("CAVC_SUITE").as_deref() == Ok("smoke") {
+        datasets::smoke_suite()
+    } else {
+        datasets::suite()
+    };
+    println!(
+        "# Table V — PVC time (s) at k = min-1 / min / min+1, budget {}s/cell",
+        tables::cell_timeout().as_secs_f64()
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for d in &suite {
+        eprintln!("[table5] {} ...", d.name);
+        for row in tables::table5_rows(d) {
+            csv.push(format!(
+                "{},{},{},{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
+                row.name,
+                row.instance,
+                row.k,
+                row.found,
+                row.yamout.secs,
+                row.yamout.timed_out,
+                row.sequential.secs,
+                row.sequential.timed_out,
+                row.no_lb.secs,
+                row.no_lb.timed_out,
+                row.proposed.secs,
+                row.proposed.timed_out,
+            ));
+            rows.push(row);
+        }
+    }
+    tables::print_table5(&rows, std::io::stdout().lock()).unwrap();
+    let path = tables::write_csv(
+        "table5_pvc",
+        "graph,instance,k,found,yamout_s,yamout_to,seq_s,seq_to,nolb_s,nolb_to,proposed_s,proposed_to",
+        &csv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", path.display());
+}

@@ -1,0 +1,133 @@
+//! Non-zero bounds on the degree array (paper §IV-C).
+//!
+//! Deep in the search tree most degree entries are zero; the paper keeps
+//! two indices — the first and last vertex with non-zero degree — and
+//! restricts all reduction sweeps to that window. The window is cheap to
+//! maintain (shrink-only between copies; recomputed from the parent's
+//! window when a child is materialized) and costs 8 bytes, versus a full
+//! compaction pass for a sparse list.
+
+use super::DegElem;
+
+/// Inclusive `[lo, hi]` window that contains every non-zero entry.
+/// An empty window is represented as `lo > hi` (`EMPTY`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NonZeroBounds {
+    /// First possibly-nonzero index.
+    pub lo: u32,
+    /// Last possibly-nonzero index.
+    pub hi: u32,
+}
+
+impl NonZeroBounds {
+    /// The empty window.
+    pub const EMPTY: NonZeroBounds = NonZeroBounds { lo: 1, hi: 0 };
+
+    /// Window covering all of `0..n`.
+    pub fn full(n: usize) -> NonZeroBounds {
+        if n == 0 {
+            NonZeroBounds::EMPTY
+        } else {
+            NonZeroBounds { lo: 0, hi: (n - 1) as u32 }
+        }
+    }
+
+    /// True if the window contains no indices.
+    #[inline]
+    pub fn is_empty(self) -> bool {
+        self.lo > self.hi
+    }
+
+    /// Number of indices in the window.
+    #[inline]
+    pub fn width(self) -> usize {
+        if self.is_empty() {
+            0
+        } else {
+            (self.hi - self.lo + 1) as usize
+        }
+    }
+
+    /// Iterate indices in the window.
+    #[inline]
+    pub fn iter(self) -> impl Iterator<Item = u32> {
+        self.lo..=if self.is_empty() { 0 } else { self.hi }
+    }
+
+    /// Tighten the window against the actual array contents: advance `lo`
+    /// past leading zeros and retreat `hi` past trailing zeros.
+    pub fn tighten<T: DegElem>(self, deg: &[T]) -> NonZeroBounds {
+        if self.is_empty() {
+            return NonZeroBounds::EMPTY;
+        }
+        let mut lo = self.lo;
+        let mut hi = self.hi;
+        let zero = T::default();
+        while lo <= hi && deg[lo as usize] == zero {
+            lo += 1;
+        }
+        if lo > hi {
+            return NonZeroBounds::EMPTY;
+        }
+        while hi > lo && deg[hi as usize] == zero {
+            hi -= 1;
+        }
+        NonZeroBounds { lo, hi }
+    }
+
+    /// Exact bounds computed from scratch (used when bounds maintenance
+    /// is disabled we still need a full window, and in tests).
+    pub fn exact<T: DegElem>(deg: &[T]) -> NonZeroBounds {
+        NonZeroBounds::full(deg.len()).tighten(deg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_and_empty() {
+        assert!(NonZeroBounds::full(0).is_empty());
+        let b = NonZeroBounds::full(5);
+        assert_eq!((b.lo, b.hi), (0, 4));
+        assert_eq!(b.width(), 5);
+        assert!(NonZeroBounds::EMPTY.is_empty());
+        assert_eq!(NonZeroBounds::EMPTY.width(), 0);
+    }
+
+    #[test]
+    fn tighten_shrinks_both_ends() {
+        let deg: Vec<u8> = vec![0, 0, 3, 0, 1, 0, 0];
+        let b = NonZeroBounds::full(7).tighten(&deg);
+        assert_eq!((b.lo, b.hi), (2, 4));
+    }
+
+    #[test]
+    fn tighten_all_zero() {
+        let deg: Vec<u16> = vec![0; 8];
+        assert!(NonZeroBounds::full(8).tighten(&deg).is_empty());
+    }
+
+    #[test]
+    fn tighten_is_shrink_only() {
+        // window that already excludes nonzeros outside it stays put
+        let deg: Vec<u8> = vec![9, 0, 1, 0, 9];
+        let b = NonZeroBounds { lo: 1, hi: 3 }.tighten(&deg);
+        assert_eq!((b.lo, b.hi), (2, 2));
+    }
+
+    #[test]
+    fn exact_matches_manual() {
+        let deg: Vec<u32> = vec![0, 5, 0, 0, 7, 0];
+        let b = NonZeroBounds::exact(&deg);
+        assert_eq!((b.lo, b.hi), (1, 4));
+    }
+
+    #[test]
+    fn iter_covers_window() {
+        let b = NonZeroBounds { lo: 2, hi: 4 };
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![2, 3, 4]);
+        assert_eq!(NonZeroBounds::EMPTY.iter().count(), 0);
+    }
+}

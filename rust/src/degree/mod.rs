@@ -1,0 +1,168 @@
+//! Degree-array intermediate representation (paper §IV).
+//!
+//! The branch-and-reduce engine never mutates the CSR graph; the entire
+//! intermediate state of a search-tree node is a *degree array*: one
+//! counter per vertex of the (root-induced) subgraph. A vertex is present
+//! iff its entry is nonzero; an edge `uv` exists iff both endpoints are
+//! present (edges only disappear when an endpoint is removed, so the
+//! static CSR plus the degree array fully determines the residual graph).
+//!
+//! Three footprint optimizations from the paper are implemented here:
+//! * arrays sized to the **root-induced subgraph** (§IV-B) — callers
+//!   induce first, see [`crate::prep`];
+//! * **non-zero bounds** `[lo, hi]` maintained per node so reduction
+//!   sweeps skip the all-zero prefix/suffix (§IV-C);
+//! * **small integer dtypes** selected from the post-reduction maximum
+//!   degree (§IV-D): `u8` / `u16` / `u32` element types via [`DegElem`].
+
+pub mod bounds;
+
+pub use bounds::NonZeroBounds;
+
+/// Element type of a degree array. The engine is generic over this, so
+/// dtype selection changes the real memory footprint of every stack
+/// entry, as on the GPU.
+pub trait DegElem:
+    Copy + Send + Sync + Default + PartialEq + std::fmt::Debug + 'static
+{
+    /// Bytes per entry.
+    const BYTES: usize;
+    /// Largest representable degree.
+    const MAX_DEG: u32;
+    /// Widen to u32.
+    fn to_u32(self) -> u32;
+    /// Narrow from u32 (caller guarantees it fits).
+    fn from_u32(x: u32) -> Self;
+}
+
+impl DegElem for u8 {
+    const BYTES: usize = 1;
+    const MAX_DEG: u32 = u8::MAX as u32;
+    #[inline]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+    #[inline]
+    fn from_u32(x: u32) -> Self {
+        debug_assert!(x <= Self::MAX_DEG);
+        x as u8
+    }
+}
+
+impl DegElem for u16 {
+    const BYTES: usize = 2;
+    const MAX_DEG: u32 = u16::MAX as u32;
+    #[inline]
+    fn to_u32(self) -> u32 {
+        self as u32
+    }
+    #[inline]
+    fn from_u32(x: u32) -> Self {
+        debug_assert!(x <= Self::MAX_DEG);
+        x as u16
+    }
+}
+
+impl DegElem for u32 {
+    const BYTES: usize = 4;
+    const MAX_DEG: u32 = u32::MAX;
+    #[inline]
+    fn to_u32(self) -> u32 {
+        self
+    }
+    #[inline]
+    fn from_u32(x: u32) -> Self {
+        x
+    }
+}
+
+/// Runtime dtype tag (for occupancy reporting and engine dispatch).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    /// 1-byte entries (Δ ≤ 255).
+    U8,
+    /// 2-byte entries (Δ ≤ 65535).
+    U16,
+    /// 4-byte entries.
+    U32,
+}
+
+impl Dtype {
+    /// Smallest dtype that can hold `max_degree`.
+    pub fn for_max_degree(max_degree: u32) -> Dtype {
+        if max_degree <= u8::MAX_DEG {
+            Dtype::U8
+        } else if max_degree <= u16::MAX_DEG {
+            Dtype::U16
+        } else {
+            Dtype::U32
+        }
+    }
+
+    /// Bytes per entry.
+    pub fn bytes(self) -> usize {
+        match self {
+            Dtype::U8 => 1,
+            Dtype::U16 => 2,
+            Dtype::U32 => 4,
+        }
+    }
+
+    /// Short display name ("u8"/"u16"/"u32").
+    pub fn name(self) -> &'static str {
+        match self {
+            Dtype::U8 => "u8",
+            Dtype::U16 => "u16",
+            Dtype::U32 => "u32",
+        }
+    }
+
+    /// Whether this counts as a "short datatype" in Table IV.
+    pub fn is_short(self) -> bool {
+        !matches!(self, Dtype::U32)
+    }
+}
+
+/// Build the initial degree array for a graph.
+pub fn initial_degrees<T: DegElem>(g: &crate::graph::Graph) -> Vec<T> {
+    (0..g.num_vertices() as u32).map(|v| T::from_u32(g.degree(v))).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn dtype_selection() {
+        assert_eq!(Dtype::for_max_degree(0), Dtype::U8);
+        assert_eq!(Dtype::for_max_degree(255), Dtype::U8);
+        assert_eq!(Dtype::for_max_degree(256), Dtype::U16);
+        assert_eq!(Dtype::for_max_degree(65535), Dtype::U16);
+        assert_eq!(Dtype::for_max_degree(65536), Dtype::U32);
+    }
+
+    #[test]
+    fn dtype_bytes_and_short() {
+        assert_eq!(Dtype::U8.bytes(), 1);
+        assert_eq!(Dtype::U16.bytes(), 2);
+        assert_eq!(Dtype::U32.bytes(), 4);
+        assert!(Dtype::U8.is_short() && Dtype::U16.is_short());
+        assert!(!Dtype::U32.is_short());
+    }
+
+    #[test]
+    fn elem_roundtrip() {
+        assert_eq!(u8::from_u32(200).to_u32(), 200);
+        assert_eq!(u16::from_u32(60000).to_u32(), 60000);
+        assert_eq!(u32::from_u32(1 << 20).to_u32(), 1 << 20);
+    }
+
+    #[test]
+    fn initial_degrees_match_graph() {
+        let g = generators::star(10);
+        let d: Vec<u16> = initial_degrees(&g);
+        assert_eq!(d[0], 9);
+        assert!(d[1..].iter().all(|&x| x == 1));
+    }
+}

@@ -1,0 +1,185 @@
+//! Connected components on the static graph (CPU reference paths).
+//!
+//! The solver's per-node component detection works over the *dynamic*
+//! degree array (see `solver::engine`); these routines operate on the
+//! whole static graph and are used at the root split, in tests, and as
+//! the CPU fallback for the XLA-accelerated path in `runtime::accel`.
+
+use super::Graph;
+use crate::util::BitSet;
+
+/// Component label per vertex (labels are `0..count`, in discovery order).
+pub fn labels(g: &Graph) -> (Vec<u32>, usize) {
+    let n = g.num_vertices();
+    let mut label = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut queue = std::collections::VecDeque::new();
+    for s in 0..n as u32 {
+        if label[s as usize] != u32::MAX {
+            continue;
+        }
+        label[s as usize] = next;
+        queue.push_back(s);
+        while let Some(u) = queue.pop_front() {
+            for &v in g.neighbors(u) {
+                if label[v as usize] == u32::MAX {
+                    label[v as usize] = next;
+                    queue.push_back(v);
+                }
+            }
+        }
+        next += 1;
+    }
+    (label, next as usize)
+}
+
+/// Number of connected components (isolated vertices count).
+pub fn count(g: &Graph) -> usize {
+    labels(g).1
+}
+
+/// Vertex sets of each component, in discovery order.
+pub fn vertex_sets(g: &Graph) -> Vec<Vec<u32>> {
+    let (label, k) = labels(g);
+    let mut sets = vec![Vec::new(); k];
+    for (v, &l) in label.iter().enumerate() {
+        sets[l as usize].push(v as u32);
+    }
+    sets
+}
+
+/// BFS reachability from `source`: the set of reached vertices.
+pub fn bfs_reach(g: &Graph, source: u32) -> BitSet {
+    let mut seen = BitSet::new(g.num_vertices());
+    let mut queue = std::collections::VecDeque::new();
+    seen.set(source as usize);
+    queue.push_back(source);
+    while let Some(u) = queue.pop_front() {
+        for &v in g.neighbors(u) {
+            if seen.insert(v as usize) {
+                queue.push_back(v);
+            }
+        }
+    }
+    seen
+}
+
+/// Union-find structure (used by tests to cross-check BFS labeling and
+/// by the crown reduction for auxiliary bookkeeping).
+#[derive(Debug, Clone)]
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+}
+
+impl UnionFind {
+    /// `n` singleton sets.
+    pub fn new(n: usize) -> Self {
+        Self { parent: (0..n as u32).collect(), rank: vec![0; n] }
+    }
+
+    /// Representative of `x`'s set (path halving).
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Merge the sets of `a` and `b`; returns true if they were disjoint.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        true
+    }
+
+    /// Number of disjoint sets remaining.
+    pub fn num_sets(&mut self) -> usize {
+        let n = self.parent.len();
+        (0..n as u32).filter(|&x| self.find(x) == x).count()
+    }
+}
+
+/// Components via union-find (cross-check for [`labels`]).
+pub fn count_union_find(g: &Graph) -> usize {
+    let mut uf = UnionFind::new(g.num_vertices());
+    for (u, v) in g.edges() {
+        uf.union(u, v);
+    }
+    uf.num_sets()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn single_component_path() {
+        let g = generators::path(6);
+        assert_eq!(count(&g), 1);
+    }
+
+    #[test]
+    fn isolated_vertices_counted() {
+        let g = Graph::from_edges(5, &[(0, 1)]);
+        assert_eq!(count(&g), 4);
+    }
+
+    #[test]
+    fn labels_partition() {
+        let g = Graph::disjoint_union(&[generators::cycle(4), generators::path(3)]);
+        let (label, k) = labels(&g);
+        assert_eq!(k, 2);
+        assert!(label[..4].iter().all(|&l| l == label[0]));
+        assert!(label[4..].iter().all(|&l| l == label[4]));
+        assert_ne!(label[0], label[4]);
+    }
+
+    #[test]
+    fn vertex_sets_cover_all() {
+        let g = generators::union_of_random(8, 3, 6, 0.3, 5);
+        let sets = vertex_sets(&g);
+        assert_eq!(sets.len(), 8);
+        let total: usize = sets.iter().map(|s| s.len()).sum();
+        assert_eq!(total, g.num_vertices());
+    }
+
+    #[test]
+    fn bfs_reach_component_only() {
+        let g = Graph::disjoint_union(&[generators::path(4), generators::path(3)]);
+        let r = bfs_reach(&g, 0);
+        assert_eq!(r.count(), 4);
+        assert!(!r.get(4));
+    }
+
+    #[test]
+    fn union_find_agrees_with_bfs() {
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(80, 0.02, seed);
+            assert_eq!(count(&g), count_union_find(&g), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new(4);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        assert_eq!(uf.num_sets(), 3);
+        assert_eq!(uf.find(0), uf.find(1));
+    }
+}

@@ -1,0 +1,221 @@
+//! Compressed Sparse Row graph representation.
+//!
+//! Undirected simple graphs with `u32` vertex ids. Each undirected edge is
+//! stored twice (once per direction); adjacency lists are sorted, which
+//! lets edge queries run in `O(log d)` and lets the degree-two triangle
+//! rule check adjacency cheaply.
+
+/// An immutable undirected simple graph in CSR form.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Graph {
+    row_ptr: Vec<u32>,
+    adj: Vec<u32>,
+}
+
+impl Graph {
+    /// Build from an edge list over vertices `0..n`. Self-loops are
+    /// dropped (the paper removes them to keep graphs simple) and
+    /// duplicate edges are deduplicated.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+        let mut deg = vec![0u32; n];
+        let mut clean: Vec<(u32, u32)> = Vec::with_capacity(edges.len());
+        for &(a, b) in edges {
+            assert!((a as usize) < n && (b as usize) < n, "edge ({a},{b}) out of range (n={n})");
+            if a != b {
+                clean.push((a.min(b), a.max(b)));
+            }
+        }
+        clean.sort_unstable();
+        clean.dedup();
+        for &(a, b) in &clean {
+            deg[a as usize] += 1;
+            deg[b as usize] += 1;
+        }
+        let mut row_ptr = vec![0u32; n + 1];
+        for v in 0..n {
+            row_ptr[v + 1] = row_ptr[v] + deg[v];
+        }
+        let mut cursor: Vec<u32> = row_ptr[..n].to_vec();
+        let mut adj = vec![0u32; row_ptr[n] as usize];
+        for &(a, b) in &clean {
+            adj[cursor[a as usize] as usize] = b;
+            cursor[a as usize] += 1;
+            adj[cursor[b as usize] as usize] = a;
+            cursor[b as usize] += 1;
+        }
+        // Edges were sorted by (min,max) so per-row lists may be unsorted
+        // for the higher endpoint; sort each row.
+        for v in 0..n {
+            let (s, e) = (row_ptr[v] as usize, row_ptr[v + 1] as usize);
+            adj[s..e].sort_unstable();
+        }
+        Graph { row_ptr, adj }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.row_ptr.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.adj.len() / 2
+    }
+
+    /// Static degree of `v` in the full graph.
+    #[inline]
+    pub fn degree(&self, v: u32) -> u32 {
+        self.row_ptr[v as usize + 1] - self.row_ptr[v as usize]
+    }
+
+    /// Neighbors of `v`, sorted ascending.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.adj[self.row_ptr[v as usize] as usize..self.row_ptr[v as usize + 1] as usize]
+    }
+
+    /// True if edge `uv` exists (binary search on the sorted row).
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Maximum static degree Δ(G).
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_vertices() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+
+    /// Edge density `2m / (n(n-1))` in `[0,1]`.
+    pub fn density(&self) -> f64 {
+        let n = self.num_vertices() as f64;
+        if n < 2.0 {
+            return 0.0;
+        }
+        2.0 * self.num_edges() as f64 / (n * (n - 1.0))
+    }
+
+    /// Iterate over undirected edges `(u, v)` with `u < v`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.num_vertices() as u32).flat_map(move |u| {
+            self.neighbors(u).iter().copied().filter(move |&v| u < v).map(move |v| (u, v))
+        })
+    }
+
+    /// Check that a vertex set covers every edge.
+    pub fn is_vertex_cover(&self, cover: &[u32]) -> bool {
+        let mut inset = vec![false; self.num_vertices()];
+        for &v in cover {
+            inset[v as usize] = true;
+        }
+        self.edges().all(|(u, v)| inset[u as usize] || inset[v as usize])
+    }
+
+    /// Disjoint union of graphs (vertex ids shifted).
+    pub fn disjoint_union(parts: &[Graph]) -> Graph {
+        let total: usize = parts.iter().map(|g| g.num_vertices()).sum();
+        let mut edges = Vec::new();
+        let mut off = 0u32;
+        for g in parts {
+            for (u, v) in g.edges() {
+                edges.push((u + off, v + off));
+            }
+            off += g.num_vertices() as u32;
+        }
+        Graph::from_edges(total, &edges)
+    }
+
+    /// Degree histogram (index = degree).
+    pub fn degree_histogram(&self) -> Vec<usize> {
+        let mut h = vec![0usize; self.max_degree() as usize + 1];
+        for v in 0..self.num_vertices() as u32 {
+            h[self.degree(v) as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path5() -> Graph {
+        Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)])
+    }
+
+    #[test]
+    fn basic_counts() {
+        let g = path5();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.degree(0), 1);
+        assert_eq!(g.degree(2), 2);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = Graph::from_edges(4, &[(3, 0), (1, 0), (2, 0)]);
+        assert_eq!(g.neighbors(0), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 0), (0, 0), (1, 2)]);
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.degree(0), 1);
+    }
+
+    #[test]
+    fn has_edge() {
+        let g = path5();
+        assert!(g.has_edge(1, 2));
+        assert!(g.has_edge(2, 1));
+        assert!(!g.has_edge(0, 4));
+    }
+
+    #[test]
+    fn edges_iter_each_once() {
+        let g = path5();
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es, vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+    }
+
+    #[test]
+    fn vertex_cover_check() {
+        let g = path5();
+        assert!(g.is_vertex_cover(&[1, 3]));
+        assert!(!g.is_vertex_cover(&[1]));
+        assert!(g.is_vertex_cover(&[0, 1, 2, 3, 4]));
+    }
+
+    #[test]
+    fn disjoint_union_shifts() {
+        let g = Graph::disjoint_union(&[path5(), path5()]);
+        assert_eq!(g.num_vertices(), 10);
+        assert_eq!(g.num_edges(), 8);
+        assert!(g.has_edge(5, 6));
+        assert!(!g.has_edge(4, 5));
+    }
+
+    #[test]
+    fn density_triangle() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (0, 2)]);
+        assert!((g.density() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degree_histogram_path() {
+        let g = path5();
+        assert_eq!(g.degree_histogram(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[]);
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.max_degree(), 0);
+    }
+}

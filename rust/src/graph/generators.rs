@@ -1,0 +1,400 @@
+//! Synthetic graph generators.
+//!
+//! The paper's evaluation graphs (Network Data Repository + PACE 2019)
+//! are not redistributable inside this offline environment, so the
+//! benchmark harness builds deterministic synthetic analogs from these
+//! families. Each generator is seeded; equal seeds give equal graphs.
+
+use super::Graph;
+use crate::util::SplitMix64;
+
+/// Erdős–Rényi G(n, p).
+pub fn erdos_renyi(n: usize, p: f64, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            if rng.chance(p) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Erdős–Rényi with an exact edge count G(n, m).
+pub fn gnm(n: usize, m: usize, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let max = n * (n - 1) / 2;
+    let m = m.min(max);
+    let mut set = std::collections::HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let u = rng.index(n) as u32;
+        let v = rng.index(n) as u32;
+        if u == v {
+            continue;
+        }
+        let key = (u.min(v), u.max(v));
+        if set.insert(key) {
+            edges.push(key);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert preferential attachment: power-law degree
+/// distribution, the web-crawl family (web-webbase, web-spam, wikipedia).
+pub fn barabasi_albert(n: usize, m_per_node: usize, seed: u64) -> Graph {
+    assert!(m_per_node >= 1 && n > m_per_node);
+    let mut rng = SplitMix64::new(seed);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m_per_node);
+    // Repeated-endpoint list implements preferential attachment.
+    let mut targets: Vec<u32> = (0..m_per_node as u32).collect();
+    for v in m_per_node as u32..n as u32 {
+        // Vec + contains keeps iteration order deterministic (a HashSet
+        // here would make the stream depend on hash iteration order).
+        let mut picked: Vec<u32> = Vec::with_capacity(m_per_node);
+        while picked.len() < m_per_node {
+            let t = targets[rng.index(targets.len())];
+            if !picked.contains(&t) {
+                picked.push(t);
+            }
+        }
+        for &t in &picked {
+            edges.push((v, t));
+            targets.push(t);
+            targets.push(v);
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// 2D grid with optional random rewiring — the power-grid family
+/// (power-eris1176, US power grid): sparse, low degree, splits readily.
+pub fn grid(rows: usize, cols: usize, rewire_p: f64, seed: u64) -> Graph {
+    let n = rows * cols;
+    let mut rng = SplitMix64::new(seed);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    let mut edges = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < rows {
+                edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    for e in edges.iter_mut() {
+        if rng.chance(rewire_p) {
+            let w = rng.index(n) as u32;
+            if w != e.0 {
+                e.1 = w;
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// DIMACS `c-fat` family analog: vertices on a ring, each connected to
+/// the `band` nearest on each side — quasi-cliques chained in a circle.
+/// Splits into exactly two components on nearly every branch.
+pub fn c_fat(n: usize, band: usize, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for d in 1..=band {
+            let v = (u + d) % n;
+            edges.push((u as u32, v as u32));
+        }
+    }
+    // a sprinkle of chords, as in the DIMACS instances
+    for _ in 0..n / 10 {
+        let u = rng.index(n) as u32;
+        let v = rng.index(n) as u32;
+        if u != v {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// DIMACS `p_hat` family analog: random graph with a *wide degree
+/// spread* (each vertex gets its own edge probability drawn from
+/// `[lo, hi]`). Dense, does not split — the family where the paper's
+/// method loses to prior work (Table VI).
+pub fn p_hat(n: usize, lo: f64, hi: f64, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let probs: Vec<f64> = (0..n).map(|_| lo + (hi - lo) * rng.next_f64()).collect();
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let p = 0.5 * (probs[u] + probs[v]);
+            if rng.chance(p) {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Banded sparse-matrix graph — the `rajat` circuit-simulation family:
+/// a diagonal band plus sparse random fill-in. Long thin structure that
+/// fragments into many components during the search.
+pub fn banded(n: usize, band: usize, fill_p: f64, fill_span: usize, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for d in 1..=band {
+            if u + d < n {
+                edges.push((u as u32, (u + d) as u32));
+            }
+        }
+        if rng.chance(fill_p) {
+            let span = fill_span.min(n - 1).max(1);
+            let v = (u + 1 + rng.index(span)) % n;
+            if v != u {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Random geometric graph on the unit square — the face-to-face contact
+/// network family (scc-infect-dublin): local clustering, moderate density.
+pub fn geometric(n: usize, radius: f64, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let pts: Vec<(f64, f64)> = (0..n).map(|_| (rng.next_f64(), rng.next_f64())).collect();
+    let r2 = radius * radius;
+    let mut edges = Vec::new();
+    for u in 0..n {
+        for v in (u + 1)..n {
+            let dx = pts[u].0 - pts[v].0;
+            let dy = pts[u].1 - pts[v].1;
+            if dx * dx + dy * dy <= r2 {
+                edges.push((u as u32, v as u32));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Bipartite rating-style graph (movielens analog): `left` users ×
+/// `right` items, each user rates a geometric-ish number of items.
+pub fn bipartite(left: usize, right: usize, avg_deg: f64, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let n = left + right;
+    let mut edges = Vec::new();
+    for u in 0..left {
+        // degree ~ 1 + Poisson-ish around avg_deg, via repeated bernoulli
+        let mut d = 1 + rng.index((2.0 * avg_deg) as usize + 1);
+        d = d.min(right);
+        for it in rng.sample_distinct(right, d) {
+            edges.push((u as u32, (left + it) as u32));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Simple cycle C_n.
+pub fn cycle(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> =
+        (0..n).map(|i| (i as u32, ((i + 1) % n) as u32)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Complete graph K_n.
+pub fn clique(n: usize) -> Graph {
+    let mut edges = Vec::new();
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Path P_n.
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..n).map(|i| ((i - 1) as u32, i as u32)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Star S_n (one hub, n-1 leaves).
+pub fn star(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (0, v)).collect();
+    Graph::from_edges(n, &edges)
+}
+
+/// Generalized Petersen graph GP(n, k): outer cycle, inner star polygon,
+/// spokes. 3-regular and (for k=2, n≥5) triangle-free — immune to the
+/// degree-1 / degree-2-triangle / special-component rules, so it keeps
+/// the branch-and-reduce engine honest in tests.
+pub fn generalized_petersen(n: usize, k: usize) -> Graph {
+    assert!(n >= 3 && k >= 1 && k < n);
+    let mut edges = Vec::with_capacity(3 * n);
+    for i in 0..n {
+        edges.push((i as u32, ((i + 1) % n) as u32)); // outer cycle
+        edges.push(((n + i) as u32, (n + (i + k) % n) as u32)); // inner polygon
+        edges.push((i as u32, (n + i) as u32)); // spoke
+    }
+    Graph::from_edges(2 * n, &edges)
+}
+
+/// The Petersen graph GP(5, 2).
+pub fn petersen() -> Graph {
+    generalized_petersen(5, 2)
+}
+
+/// Uniform random tree (random Prüfer-like attachment).
+pub fn random_tree(n: usize, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let mut edges = Vec::with_capacity(n.saturating_sub(1));
+    for v in 1..n {
+        edges.push((rng.index(v) as u32, v as u32));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+/// Union of many small random components — the PROTEINS / SYNTHETIC
+/// family: a dataset that is *already* a disjoint union of hundreds of
+/// small graphs, the best case for component-aware branching.
+pub fn union_of_random(
+    num_parts: usize,
+    part_lo: usize,
+    part_hi: usize,
+    p: f64,
+    seed: u64,
+) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let parts: Vec<Graph> = (0..num_parts)
+        .map(|_| {
+            let n = rng.range(part_lo, part_hi);
+            let mut sub = rng.split();
+            // keep each part connected-ish: a random tree plus extra edges
+            let tree = random_tree(n, sub.next_u64());
+            let extra = erdos_renyi(n, p, sub.next_u64());
+            let mut edges: Vec<(u32, u32)> = tree.edges().collect();
+            edges.extend(extra.edges());
+            Graph::from_edges(n, &edges)
+        })
+        .collect();
+    Graph::disjoint_union(&parts)
+}
+
+/// Web-crawl analog with pendant-tree fringe: a BA core with extra
+/// degree-1/2 tendrils hanging off it (web-webbase-2001 reduces almost
+/// entirely at the root thanks to these).
+pub fn web_crawl(core_n: usize, fringe_n: usize, seed: u64) -> Graph {
+    let mut rng = SplitMix64::new(seed);
+    let core = barabasi_albert(core_n, 2, rng.next_u64());
+    let n = core_n + fringe_n;
+    let mut edges: Vec<(u32, u32)> = core.edges().collect();
+    for v in core_n..n {
+        // attach each fringe vertex under a random earlier vertex
+        edges.push((rng.index(v) as u32, v as u32));
+    }
+    Graph::from_edges(n, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::components;
+
+    #[test]
+    fn er_determinism() {
+        let a = erdos_renyi(60, 0.1, 7);
+        let b = erdos_renyi(60, 0.1, 7);
+        assert_eq!(a, b);
+        let c = erdos_renyi(60, 0.1, 8);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn gnm_exact_edges() {
+        let g = gnm(50, 100, 3);
+        assert_eq!(g.num_edges(), 100);
+    }
+
+    #[test]
+    fn ba_is_connected_and_powerlawish() {
+        let g = barabasi_albert(300, 2, 5);
+        assert_eq!(components::count(&g), 1);
+        // hub exists: max degree well above the mean
+        let mean = 2.0 * g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(g.max_degree() as f64 > 3.0 * mean);
+    }
+
+    #[test]
+    fn grid_shape() {
+        let g = grid(4, 5, 0.0, 0);
+        assert_eq!(g.num_vertices(), 20);
+        assert_eq!(g.num_edges(), 4 * 4 + 3 * 5);
+        assert_eq!(components::count(&g), 1);
+    }
+
+    #[test]
+    fn cfat_ring_band() {
+        let g = c_fat(60, 4, 1);
+        assert!(g.num_edges() >= 60 * 4);
+        assert_eq!(components::count(&g), 1);
+    }
+
+    #[test]
+    fn p_hat_degree_spread() {
+        let g = p_hat(80, 0.1, 0.7, 2);
+        let h = g.degree_histogram();
+        let lo = h.iter().take(h.len() / 3).sum::<usize>();
+        assert!(lo < g.num_vertices(), "expected spread: {h:?}");
+        assert!(g.density() > 0.2);
+    }
+
+    #[test]
+    fn banded_sparse() {
+        let g = banded(500, 2, 0.2, 50, 4);
+        assert!(g.density() < 0.05);
+    }
+
+    #[test]
+    fn geometric_local() {
+        let g = geometric(120, 0.12, 9);
+        assert!(g.num_edges() > 0);
+    }
+
+    #[test]
+    fn bipartite_no_intra_side_edges() {
+        let g = bipartite(30, 50, 3.0, 11);
+        for (u, v) in g.edges() {
+            let u_left = (u as usize) < 30;
+            let v_left = (v as usize) < 30;
+            assert_ne!(u_left, v_left, "edge within one side: {u}-{v}");
+        }
+    }
+
+    #[test]
+    fn basic_shapes() {
+        assert_eq!(cycle(5).num_edges(), 5);
+        assert_eq!(clique(6).num_edges(), 15);
+        assert_eq!(path(7).num_edges(), 6);
+        assert_eq!(star(8).num_edges(), 7);
+        assert_eq!(random_tree(40, 1).num_edges(), 39);
+        assert_eq!(components::count(&random_tree(40, 1)), 1);
+    }
+
+    #[test]
+    fn union_has_many_components() {
+        let g = union_of_random(25, 4, 9, 0.2, 13);
+        assert_eq!(components::count(&g), 25);
+    }
+
+    #[test]
+    fn web_crawl_connected() {
+        let g = web_crawl(100, 300, 17);
+        assert_eq!(g.num_vertices(), 400);
+        assert_eq!(components::count(&g), 1);
+    }
+}

@@ -1,0 +1,113 @@
+//! Induced subgraphs with vertex remapping.
+//!
+//! The paper's key memory optimization (§IV-B) runs reduction rules
+//! exhaustively at the root, then *induces a subgraph* on the surviving
+//! vertices so that degree arrays are sized to the reduced graph, not the
+//! original. [`InducedSubgraph`] keeps the old→new and new→old maps so
+//! solutions can be translated back to original vertex ids.
+
+use super::Graph;
+use crate::util::BitSet;
+
+/// A subgraph induced on a vertex subset, with id translation maps.
+#[derive(Debug, Clone)]
+pub struct InducedSubgraph {
+    /// The induced graph over compacted ids `0..keep.len()`.
+    pub graph: Graph,
+    /// new id → original id.
+    pub to_original: Vec<u32>,
+    /// original id → new id (`u32::MAX` if dropped).
+    pub from_original: Vec<u32>,
+}
+
+impl InducedSubgraph {
+    /// Induce on the vertices whose bit is set in `keep`.
+    pub fn new(g: &Graph, keep: &BitSet) -> InducedSubgraph {
+        assert_eq!(keep.len(), g.num_vertices());
+        let to_original: Vec<u32> = keep.iter_ones().map(|v| v as u32).collect();
+        let mut from_original = vec![u32::MAX; g.num_vertices()];
+        for (new, &orig) in to_original.iter().enumerate() {
+            from_original[orig as usize] = new as u32;
+        }
+        let mut edges = Vec::new();
+        for &orig in &to_original {
+            let nu = from_original[orig as usize];
+            for &w in g.neighbors(orig) {
+                let nw = from_original[w as usize];
+                if nw != u32::MAX && nu < nw {
+                    edges.push((nu, nw));
+                }
+            }
+        }
+        let graph = Graph::from_edges(to_original.len(), &edges);
+        InducedSubgraph { graph, to_original, from_original }
+    }
+
+    /// Induce on an explicit vertex list (order preserved, must be unique).
+    pub fn from_vertices(g: &Graph, vertices: &[u32]) -> InducedSubgraph {
+        let mut keep = BitSet::new(g.num_vertices());
+        for &v in vertices {
+            keep.set(v as usize);
+        }
+        assert_eq!(keep.count(), vertices.len(), "duplicate vertices");
+        InducedSubgraph::new(g, &keep)
+    }
+
+    /// Translate a cover over the induced graph back to original ids.
+    pub fn translate_cover(&self, cover: &[u32]) -> Vec<u32> {
+        cover.iter().map(|&v| self.to_original[v as usize]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn induce_middle_of_path() {
+        let g = generators::path(5); // 0-1-2-3-4
+        let ind = InducedSubgraph::from_vertices(&g, &[1, 2, 3]);
+        assert_eq!(ind.graph.num_vertices(), 3);
+        assert_eq!(ind.graph.num_edges(), 2);
+        assert_eq!(ind.to_original, vec![1, 2, 3]);
+        assert_eq!(ind.from_original[0], u32::MAX);
+        assert_eq!(ind.from_original[2], 1);
+    }
+
+    #[test]
+    fn translate_cover_roundtrip() {
+        let g = generators::cycle(6);
+        let ind = InducedSubgraph::from_vertices(&g, &[2, 3, 4]);
+        // induced graph is the path 2-3-4 → cover {3} (new id 1)
+        let cover = ind.translate_cover(&[1]);
+        assert_eq!(cover, vec![3]);
+    }
+
+    #[test]
+    fn induced_edges_only_within_subset() {
+        let g = generators::clique(6);
+        let ind = InducedSubgraph::from_vertices(&g, &[0, 2, 4]);
+        assert_eq!(ind.graph.num_edges(), 3); // K3
+    }
+
+    #[test]
+    fn empty_induce() {
+        let g = generators::path(4);
+        let keep = BitSet::new(4);
+        let ind = InducedSubgraph::new(&g, &keep);
+        assert_eq!(ind.graph.num_vertices(), 0);
+    }
+
+    #[test]
+    fn full_induce_is_identity() {
+        let g = generators::erdos_renyi(40, 0.1, 3);
+        let mut keep = BitSet::new(40);
+        for i in 0..40 {
+            keep.set(i);
+        }
+        let ind = InducedSubgraph::new(&g, &keep);
+        assert_eq!(ind.graph, g);
+        assert_eq!(ind.to_original, (0..40).collect::<Vec<u32>>());
+    }
+}

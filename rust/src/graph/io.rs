@@ -1,0 +1,257 @@
+//! Graph readers and writers.
+//!
+//! Formats: whitespace edge lists (SNAP / Network Data Repository style),
+//! MatrixMarket `.mtx` pattern matrices, DIMACS clique/coloring files
+//! (`p edge n m`, `e u v`), and PACE 2019 `.gr` vertex-cover instances
+//! (`p td n m`). All formats use the detected parser through
+//! [`read_graph`]; vertices are normalized to `0..n`.
+
+use super::Graph;
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+/// Supported on-disk formats.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    /// `u v` per line, `#`/`%` comments, ids 0- or 1-based (auto).
+    EdgeList,
+    /// MatrixMarket coordinate pattern (1-based).
+    MatrixMarket,
+    /// DIMACS: `p edge n m`, edges as `e u v` (1-based).
+    Dimacs,
+    /// PACE 2019 `.gr`: `p td n m`, edges `u v` (1-based), `c` comments.
+    Pace,
+}
+
+impl Format {
+    /// Infer from a file extension, defaulting to edge list.
+    pub fn from_path(path: &Path) -> Format {
+        match path.extension().and_then(|e| e.to_str()).unwrap_or("") {
+            "mtx" => Format::MatrixMarket,
+            "dimacs" | "col" | "clq" => Format::Dimacs,
+            "gr" => Format::Pace,
+            _ => Format::EdgeList,
+        }
+    }
+}
+
+/// Read a graph from `path`, inferring the format from the extension.
+pub fn read_graph(path: &Path) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    read_graph_from(BufReader::new(file), Format::from_path(path))
+}
+
+/// Read a graph in a specific format from any reader.
+pub fn read_graph_from<R: BufRead>(reader: R, format: Format) -> Result<Graph> {
+    match format {
+        Format::EdgeList => read_edge_list(reader),
+        Format::MatrixMarket => read_mtx(reader),
+        Format::Dimacs => read_dimacs(reader),
+        Format::Pace => read_pace(reader),
+    }
+}
+
+fn parse_two(line: &str) -> Option<(u64, u64)> {
+    let mut it = line.split_whitespace();
+    let a = it.next()?.parse().ok()?;
+    let b = it.next()?.parse().ok()?;
+    Some((a, b))
+}
+
+fn normalize(pairs: Vec<(u64, u64)>, declared_n: Option<u64>, one_based: bool) -> Graph {
+    let shift = u64::from(one_based);
+    let edges: Vec<(u32, u32)> = pairs
+        .iter()
+        .map(|&(a, b)| ((a - shift) as u32, (b - shift) as u32))
+        .collect();
+    let max_seen = edges.iter().map(|&(a, b)| a.max(b) as u64 + 1).max().unwrap_or(0);
+    let n = declared_n.unwrap_or(max_seen).max(max_seen) as usize;
+    Graph::from_edges(n, &edges)
+}
+
+fn read_edge_list<R: BufRead>(reader: R) -> Result<Graph> {
+    let mut pairs = Vec::new();
+    let mut min_id = u64::MAX;
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let (a, b) = parse_two(t).with_context(|| format!("bad edge line: {t:?}"))?;
+        min_id = min_id.min(a).min(b);
+        pairs.push((a, b));
+    }
+    // Heuristic: a file that never mentions vertex 0 is 1-based.
+    let one_based = min_id != u64::MAX && min_id >= 1;
+    Ok(normalize(pairs, None, one_based))
+}
+
+fn read_mtx<R: BufRead>(reader: R) -> Result<Graph> {
+    let mut lines = reader.lines();
+    let header = loop {
+        match lines.next() {
+            Some(l) => {
+                let l = l?;
+                let t = l.trim().to_string();
+                if !t.is_empty() && !t.starts_with('%') {
+                    break t;
+                }
+            }
+            None => bail!("mtx: missing size header"),
+        }
+    };
+    let mut it = header.split_whitespace();
+    let rows: u64 = it.next().context("mtx rows")?.parse()?;
+    let cols: u64 = it.next().context("mtx cols")?.parse()?;
+    let n = rows.max(cols);
+    let mut pairs = Vec::new();
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let (a, b) = parse_two(t).with_context(|| format!("bad mtx line: {t:?}"))?;
+        pairs.push((a, b));
+    }
+    Ok(normalize(pairs, Some(n), true))
+}
+
+fn read_dimacs<R: BufRead>(reader: R) -> Result<Graph> {
+    let mut n: Option<u64> = None;
+    let mut pairs = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('c') {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("p ") {
+            let mut it = rest.split_whitespace();
+            let _kind = it.next();
+            n = Some(it.next().context("dimacs: p line n")?.parse()?);
+        } else if let Some(rest) = t.strip_prefix("e ") {
+            let (a, b) = parse_two(rest).with_context(|| format!("bad dimacs edge: {t:?}"))?;
+            pairs.push((a, b));
+        }
+    }
+    if n.is_none() {
+        bail!("dimacs: missing p line");
+    }
+    Ok(normalize(pairs, n, true))
+}
+
+fn read_pace<R: BufRead>(reader: R) -> Result<Graph> {
+    let mut n: Option<u64> = None;
+    let mut pairs = Vec::new();
+    for line in reader.lines() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('c') {
+            continue;
+        }
+        if let Some(rest) = t.strip_prefix("p ") {
+            let mut it = rest.split_whitespace();
+            let _td = it.next();
+            n = Some(it.next().context("pace: p line n")?.parse()?);
+        } else {
+            let (a, b) = parse_two(t).with_context(|| format!("bad pace edge: {t:?}"))?;
+            pairs.push((a, b));
+        }
+    }
+    if n.is_none() {
+        bail!("pace: missing `p td n m` line");
+    }
+    Ok(normalize(pairs, n, true))
+}
+
+/// Write a graph as a PACE `.gr` instance.
+pub fn write_pace<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    writeln!(w, "p td {} {}", g.num_vertices(), g.num_edges())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{} {}", u + 1, v + 1)?;
+    }
+    Ok(())
+}
+
+/// Write a graph as a 0-based edge list.
+pub fn write_edge_list<W: Write>(g: &Graph, mut w: W) -> Result<()> {
+    writeln!(w, "# cavc edge list: n={} m={}", g.num_vertices(), g.num_edges())?;
+    for (u, v) in g.edges() {
+        writeln!(w, "{u} {v}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn edge_list_zero_based() {
+        let g = read_graph_from(Cursor::new("# c\n0 1\n1 2\n"), Format::EdgeList).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn edge_list_one_based_autodetect() {
+        let g = read_graph_from(Cursor::new("1 2\n2 3\n"), Format::EdgeList).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
+    }
+
+    #[test]
+    fn mtx_roundtrip() {
+        let src = "%%MatrixMarket matrix coordinate pattern symmetric\n% c\n4 4 3\n1 2\n2 3\n4 1\n";
+        let g = read_graph_from(Cursor::new(src), Format::MatrixMarket).unwrap();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 3);
+        assert!(g.has_edge(0, 3));
+    }
+
+    #[test]
+    fn dimacs_parse() {
+        let src = "c comment\np edge 5 3\ne 1 2\ne 2 3\ne 4 5\n";
+        let g = read_graph_from(Cursor::new(src), Format::Dimacs).unwrap();
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn pace_roundtrip() {
+        let src = "c x\np td 4 2\n1 2\n3 4\n";
+        let g = read_graph_from(Cursor::new(src), Format::Pace).unwrap();
+        assert_eq!(g.num_vertices(), 4);
+        let mut buf = Vec::new();
+        write_pace(&g, &mut buf).unwrap();
+        let g2 = read_graph_from(Cursor::new(buf), Format::Pace).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn edge_list_write_read() {
+        let g = Graph::from_edges(4, &[(0, 1), (2, 3), (1, 2)]);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let g2 = read_graph_from(Cursor::new(buf), Format::EdgeList).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn format_from_extension() {
+        assert_eq!(Format::from_path(Path::new("a.mtx")), Format::MatrixMarket);
+        assert_eq!(Format::from_path(Path::new("a.gr")), Format::Pace);
+        assert_eq!(Format::from_path(Path::new("a.clq")), Format::Dimacs);
+        assert_eq!(Format::from_path(Path::new("a.txt")), Format::EdgeList);
+    }
+
+    #[test]
+    fn dimacs_missing_p_line_errors() {
+        assert!(read_graph_from(Cursor::new("e 1 2\n"), Format::Dimacs).is_err());
+    }
+}

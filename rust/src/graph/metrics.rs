@@ -1,0 +1,148 @@
+//! Structural metrics used by the harness tables and the `info` CLI verb.
+
+use super::{components, Graph};
+
+/// Summary statistics for a graph.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphMetrics {
+    /// |V|.
+    pub n: usize,
+    /// |E|.
+    pub m: usize,
+    /// Δ(G).
+    pub max_degree: u32,
+    /// Mean degree 2m/n.
+    pub avg_degree: f64,
+    /// Edge density in [0,1].
+    pub density: f64,
+    /// Connected components.
+    pub components: usize,
+    /// Vertices with degree 0.
+    pub isolated: usize,
+    /// Vertices with degree 1 (prime degree-one-rule targets).
+    pub degree_one: usize,
+    /// Triangle count (sum over edges of common neighbors / 3).
+    pub triangles: u64,
+}
+
+/// Compute all metrics. Triangle counting is `O(Σ d(v)^2)` via sorted
+/// adjacency intersection — fine at harness scale.
+pub fn compute(g: &Graph) -> GraphMetrics {
+    let n = g.num_vertices();
+    let m = g.num_edges();
+    let mut isolated = 0;
+    let mut degree_one = 0;
+    for v in 0..n as u32 {
+        match g.degree(v) {
+            0 => isolated += 1,
+            1 => degree_one += 1,
+            _ => {}
+        }
+    }
+    GraphMetrics {
+        n,
+        m,
+        max_degree: g.max_degree(),
+        avg_degree: if n == 0 { 0.0 } else { 2.0 * m as f64 / n as f64 },
+        density: g.density(),
+        components: components::count(g),
+        isolated,
+        degree_one,
+        triangles: triangle_count(g),
+    }
+}
+
+/// Total number of triangles in the graph.
+pub fn triangle_count(g: &Graph) -> u64 {
+    let mut total = 0u64;
+    for (u, v) in g.edges() {
+        total += sorted_intersection_size(g.neighbors(u), g.neighbors(v)) as u64;
+    }
+    total / 3
+}
+
+/// Per-vertex triangle membership counts (cross-checked against the
+/// XLA triangle-census artifact in `runtime::accel`).
+pub fn triangles_per_vertex(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut t = vec![0u32; n];
+    for (u, v) in g.edges() {
+        let (mut i, mut j) = (0, 0);
+        let (nu, nv) = (g.neighbors(u), g.neighbors(v));
+        while i < nu.len() && j < nv.len() {
+            match nu[i].cmp(&nv[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    let w = nu[i];
+                    if w > v {
+                        // count each triangle once at its smallest edge
+                        t[u as usize] += 1;
+                        t[v as usize] += 1;
+                        t[w as usize] += 1;
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    t
+}
+
+fn sorted_intersection_size(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut k) = (0, 0, 0);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                k += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    k
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn triangle_count_known() {
+        assert_eq!(triangle_count(&generators::clique(4)), 4);
+        assert_eq!(triangle_count(&generators::clique(5)), 10);
+        assert_eq!(triangle_count(&generators::cycle(5)), 0);
+        assert_eq!(triangle_count(&generators::cycle(3)), 1);
+    }
+
+    #[test]
+    fn per_vertex_sums_to_three_times_total() {
+        let g = generators::erdos_renyi(60, 0.1, 5);
+        let per = triangles_per_vertex(&g);
+        let total: u64 = per.iter().map(|&x| x as u64).sum();
+        assert_eq!(total, 3 * triangle_count(&g));
+    }
+
+    #[test]
+    fn metrics_path() {
+        let m = compute(&generators::path(5));
+        assert_eq!(m.n, 5);
+        assert_eq!(m.m, 4);
+        assert_eq!(m.components, 1);
+        assert_eq!(m.degree_one, 2);
+        assert_eq!(m.isolated, 0);
+        assert_eq!(m.triangles, 0);
+    }
+
+    #[test]
+    fn metrics_counts_isolated() {
+        let g = Graph::from_edges(4, &[(0, 1)]);
+        let m = compute(&g);
+        assert_eq!(m.isolated, 2);
+        assert_eq!(m.components, 3);
+    }
+}

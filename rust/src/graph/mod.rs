@@ -1,0 +1,16 @@
+//! Graph substrate: static CSR representation, IO, synthetic generators,
+//! connected components, induced subgraphs, and structural metrics.
+//!
+//! The solver treats the graph as immutable; all intermediate state during
+//! branch-and-reduce lives in the degree array (see [`crate::degree`]),
+//! exactly as in the paper's CSR + degree-array representation.
+
+pub mod components;
+pub mod csr;
+pub mod generators;
+pub mod induced;
+pub mod io;
+pub mod metrics;
+
+pub use csr::Graph;
+pub use induced::InducedSubgraph;

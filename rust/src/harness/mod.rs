@@ -1,0 +1,8 @@
+//! Experiment harness: the dataset suite (synthetic analogs of the
+//! paper's evaluation graphs) and the drivers that regenerate every table
+//! and figure of the paper's evaluation section.
+
+pub mod datasets;
+pub mod tables;
+
+pub use datasets::{dataset, suite, table6_suite, Dataset};

@@ -1,0 +1,598 @@
+//! Table/figure drivers: run the solver variants over the dataset suite
+//! and print rows shaped like the paper's evaluation tables. Shared by
+//! the `benches/` binaries and the `cavc tables` CLI verb.
+
+use super::datasets::Dataset;
+use crate::graph::Graph;
+use crate::solver::{self, SolverConfig};
+use crate::util::{fmt_secs, fmt_speedup};
+use std::io::Write;
+use std::time::Duration;
+
+/// One timed run.
+#[derive(Debug, Clone)]
+pub struct Timed {
+    /// Seconds elapsed.
+    pub secs: f64,
+    /// Whether the run hit its budget (the ">6hrs" stand-in).
+    pub timed_out: bool,
+    /// Cover size reported (upper bound when timed out).
+    pub best: u32,
+    /// Tree nodes visited.
+    pub tree_nodes: u64,
+}
+
+/// Wall-clock budget per table cell, configurable via `CAVC_TIMEOUT_S`.
+pub fn cell_timeout() -> Duration {
+    let secs = std::env::var("CAVC_TIMEOUT_S")
+        .ok()
+        .and_then(|s| s.parse::<f64>().ok())
+        .unwrap_or(5.0);
+    Duration::from_secs_f64(secs)
+}
+
+/// Run MVC with a variant preset + budget.
+pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
+    cfg.timeout = Some(cell_timeout());
+    let r = solver::solve_mvc(g, &cfg);
+    Timed {
+        secs: r.elapsed.as_secs_f64(),
+        timed_out: r.timed_out,
+        best: r.best,
+        tree_nodes: r.stats.tree_nodes,
+    }
+}
+
+/// Run PVC with a variant preset + budget.
+pub fn run_pvc(g: &Graph, k: u32, mut cfg: SolverConfig) -> (Timed, bool) {
+    cfg.timeout = Some(cell_timeout());
+    let r = solver::solve_pvc(g, k, &cfg);
+    (
+        Timed {
+            secs: r.elapsed.as_secs_f64(),
+            timed_out: r.timed_out,
+            best: r.size.unwrap_or(0),
+            tree_nodes: r.stats.tree_nodes,
+        },
+        r.found,
+    )
+}
+
+/// Format a timed cell the way the paper prints it.
+pub fn cell(t: &Timed) -> String {
+    fmt_secs(t.secs, t.timed_out, cell_timeout().as_secs_f64())
+}
+
+/// Format a speedup cell (baseline vs ours).
+pub fn speedup_cell(baseline: &Timed, ours: &Timed) -> String {
+    let base = if baseline.timed_out { cell_timeout().as_secs_f64() } else { baseline.secs };
+    fmt_speedup(base, ours.secs, baseline.timed_out)
+}
+
+/// Table I row: four variants on one dataset.
+#[derive(Debug, Clone)]
+pub struct Table1Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Analog |V|.
+    pub n: usize,
+    /// Analog |E|.
+    pub m: usize,
+    /// Prior-work GPU baseline (Yamout et al.).
+    pub yamout: Timed,
+    /// Sequential optimized baseline.
+    pub sequential: Timed,
+    /// Component-aware without load balancing.
+    pub no_lb: Timed,
+    /// The proposed solver.
+    pub proposed: Timed,
+}
+
+/// Run one Table I row.
+pub fn table1_row(d: &Dataset) -> Table1Row {
+    let g = d.build();
+    let proposed = run_mvc(&g, SolverConfig::proposed());
+    let yamout = run_mvc(&g, SolverConfig::prior_work());
+    let sequential = run_mvc(&g, SolverConfig::sequential());
+    let no_lb = run_mvc(&g, SolverConfig::no_load_balance());
+    // correctness cross-check between all finished variants
+    let finished: Vec<u32> = [&proposed, &yamout, &sequential, &no_lb]
+        .iter()
+        .filter(|t| !t.timed_out)
+        .map(|t| t.best)
+        .collect();
+    if let Some(&first) = finished.first() {
+        assert!(
+            finished.iter().all(|&b| b == first),
+            "{}: variants disagree: {:?}",
+            d.name,
+            finished
+        );
+    }
+    Table1Row {
+        name: d.name,
+        n: g.num_vertices(),
+        m: g.num_edges(),
+        yamout,
+        sequential,
+        no_lb,
+        proposed,
+    }
+}
+
+/// Print a Table I header + rows to `w` (markdown-ish pipe table).
+pub fn print_table1(rows: &[Table1Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>6} | {:>7} | {:>10} | {:>10} | {:>10} | {:>10} | {:>12} | {:>10} | {:>10} |",
+        "Graph", "|V|", "|E|", "Yamout[5]", "Sequential", "No-LB", "Proposed",
+        "vs Yamout", "vs Seq", "vs No-LB"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(136))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:>6} | {:>7} | {:>10} | {:>10} | {:>10} | {:>10} | {:>12} | {:>10} | {:>10} |",
+            r.name,
+            r.n,
+            r.m,
+            cell(&r.yamout),
+            cell(&r.sequential),
+            cell(&r.no_lb),
+            cell(&r.proposed),
+            speedup_cell(&r.yamout, &r.proposed),
+            speedup_cell(&r.sequential, &r.proposed),
+            speedup_cell(&r.no_lb, &r.proposed),
+        )?;
+    }
+    Ok(())
+}
+
+/// Table II row: disable one optimization at a time.
+#[derive(Debug, Clone)]
+pub struct Table2Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Proposed minus component branching.
+    pub no_components: Timed,
+    /// Proposed minus root reduce+induce.
+    pub no_induce: Timed,
+    /// Proposed minus non-zero bounds.
+    pub no_bounds: Timed,
+    /// Full proposed.
+    pub proposed: Timed,
+}
+
+/// Run one Table II row.
+pub fn table2_row(d: &Dataset) -> Table2Row {
+    let g = d.build();
+    let mut no_comp = SolverConfig::proposed();
+    no_comp.component_aware = false;
+    let mut no_induce = SolverConfig::proposed();
+    no_induce.reduce_root = false;
+    no_induce.use_crown = false;
+    let mut no_bounds = SolverConfig::proposed();
+    no_bounds.use_bounds = false;
+    Table2Row {
+        name: d.name,
+        no_components: run_mvc(&g, no_comp),
+        no_induce: run_mvc(&g, no_induce),
+        no_bounds: run_mvc(&g, no_bounds),
+        proposed: run_mvc(&g, SolverConfig::proposed()),
+    }
+}
+
+/// Print Table II.
+pub fn print_table2(rows: &[Table2Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>12} | {:>12} | {:>12} | {:>10} |",
+        "Graph", "-components", "-induce", "-bounds", "Proposed"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(82))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:>12} | {:>12} | {:>12} | {:>10} |",
+            r.name,
+            cell(&r.no_components),
+            cell(&r.no_induce),
+            cell(&r.no_bounds),
+            cell(&r.proposed)
+        )?;
+    }
+    Ok(())
+}
+
+/// Table III row: tree nodes without/with component branching plus the
+/// components-per-branch histogram.
+#[derive(Debug, Clone)]
+pub struct Table3Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Nodes visited with component branching disabled (lower bound when
+    /// the run timed out, as in the paper).
+    pub nodes_disabled: u64,
+    /// Whether the disabled run timed out.
+    pub disabled_timed_out: bool,
+    /// Nodes visited by the proposed solver.
+    pub nodes_enabled: u64,
+    /// Branches on components.
+    pub component_branches: u64,
+    /// Histogram {components per branch → count}.
+    pub histogram: std::collections::BTreeMap<u32, u64>,
+}
+
+/// Run one Table III row.
+pub fn table3_row(d: &Dataset) -> Table3Row {
+    let g = d.build();
+    let mut no_comp = SolverConfig::proposed();
+    no_comp.component_aware = false;
+    no_comp.timeout = Some(cell_timeout());
+    let disabled = solver::solve_mvc(&g, &no_comp);
+    let mut prop = SolverConfig::proposed();
+    prop.timeout = Some(cell_timeout());
+    let enabled = solver::solve_mvc(&g, &prop);
+    Table3Row {
+        name: d.name,
+        nodes_disabled: disabled.stats.tree_nodes,
+        disabled_timed_out: disabled.timed_out,
+        nodes_enabled: enabled.stats.tree_nodes,
+        component_branches: enabled.stats.component_branches,
+        histogram: enabled.stats.comp_histogram,
+    }
+}
+
+/// Print Table III.
+pub fn print_table3(rows: &[Table3Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>16} | {:>12} | {:>10} | histogram |",
+        "Graph", "nodes (disabled)", "nodes (prop)", "splits"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(100))?;
+    for r in rows {
+        let hist: Vec<String> =
+            r.histogram.iter().map(|(k, v)| format!("{k}: {v}")).collect();
+        let disabled = if r.disabled_timed_out {
+            format!(">{}", r.nodes_disabled)
+        } else {
+            r.nodes_disabled.to_string()
+        };
+        writeln!(
+            w,
+            "| {:<22} | {:>16} | {:>12} | {:>10} | {{{}}} |",
+            r.name,
+            disabled,
+            r.nodes_enabled,
+            r.component_branches,
+            hist.join("; ")
+        )?;
+    }
+    Ok(())
+}
+
+/// Table IV row: degree-array / occupancy effect of reduce+induce.
+#[derive(Debug, Clone)]
+pub struct Table4Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Degree-array vertices before (original |V|).
+    pub n_before: usize,
+    /// Degree-array vertices after root reduce+induce.
+    pub n_after: usize,
+    /// Modeled blocks before.
+    pub blocks_before: usize,
+    /// Modeled blocks after.
+    pub blocks_after: usize,
+    /// Shared-memory fit before/after.
+    pub fits_before: bool,
+    /// Shared-memory fit after.
+    pub fits_after: bool,
+    /// Short dtype before/after.
+    pub short_before: bool,
+    /// Short dtype after.
+    pub short_after: bool,
+}
+
+/// Run one Table IV row (pure preprocessing, no search).
+pub fn table4_row(d: &Dataset) -> Table4Row {
+    use crate::degree::Dtype;
+    use crate::prep::{prepare, PrepConfig};
+    use crate::solver::occupancy::OccupancyModel;
+    let g = d.build();
+    let model = OccupancyModel::default();
+    // before: full graph, 32-bit entries (prior work)
+    let before = model.plan(g.num_vertices(), Dtype::U32);
+    // after: reduce + induce + small dtype
+    let p = prepare(&g, &PrepConfig::default(), None);
+    let after = model.plan(p.residual.graph.num_vertices(), p.dtype);
+    Table4Row {
+        name: d.name,
+        n_before: g.num_vertices(),
+        n_after: p.residual.graph.num_vertices(),
+        blocks_before: before.blocks,
+        blocks_after: after.blocks,
+        fits_before: before.fits_shared_mem,
+        fits_after: after.fits_shared_mem,
+        short_before: Dtype::U32.is_short(),
+        short_after: p.dtype.is_short(),
+    }
+}
+
+/// Print Table IV.
+pub fn print_table4(rows: &[Table4Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>8} | {:>8} | {:>6} | {:>7} | {:>7} | {:>8} | {:>9} | {:>9} | {:>9} | {:>9} |",
+        "Graph", "n before", "n after", "ratio", "blk bef", "blk aft", "increase",
+        "shm bef", "shm aft", "short bef", "short aft"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(132))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:>8} | {:>8} | {:>5.2}x | {:>7} | {:>7} | {:>7.2}x | {:>9} | {:>9} | {:>9} | {:>9} |",
+            r.name,
+            r.n_before,
+            r.n_after,
+            r.n_after as f64 / r.n_before.max(1) as f64,
+            r.blocks_before,
+            r.blocks_after,
+            r.blocks_after as f64 / r.blocks_before.max(1) as f64,
+            yn(r.fits_before),
+            yn(r.fits_after),
+            yn(r.short_before),
+            yn(r.short_after),
+        )?;
+    }
+    Ok(())
+}
+
+fn yn(b: bool) -> &'static str {
+    if b {
+        "Yes"
+    } else {
+        "No"
+    }
+}
+
+/// Table V row: PVC at k ∈ {min−1, min, min+1} for one variant set.
+#[derive(Debug, Clone)]
+pub struct Table5Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Which instance: "min-1" | "min" | "min+1".
+    pub instance: &'static str,
+    /// k value used.
+    pub k: u32,
+    /// Prior-work baseline.
+    pub yamout: Timed,
+    /// Sequential baseline.
+    pub sequential: Timed,
+    /// No load balance.
+    pub no_lb: Timed,
+    /// Proposed.
+    pub proposed: Timed,
+    /// Found flags (proposed) — must be false for k=min−1, true otherwise
+    /// unless timed out.
+    pub found: bool,
+}
+
+/// Run the three Table V instances for one dataset. Needs the MVC size,
+/// which is computed with the proposed solver first (and reused).
+pub fn table5_rows(d: &Dataset) -> Vec<Table5Row> {
+    let g = d.build();
+    let mvc = run_mvc(&g, SolverConfig::proposed());
+    if mvc.timed_out {
+        return Vec::new(); // cannot derive k = min±1 without the minimum
+    }
+    let min = mvc.best;
+    let mut out = Vec::new();
+    for (instance, k) in [
+        ("min-1", min.saturating_sub(1)),
+        ("min", min),
+        ("min+1", min + 1),
+    ] {
+        let (proposed, found) = run_pvc(&g, k, SolverConfig::proposed());
+        let (yamout, _) = run_pvc(&g, k, SolverConfig::prior_work());
+        let (sequential, _) = run_pvc(&g, k, SolverConfig::sequential());
+        let (no_lb, _) = run_pvc(&g, k, SolverConfig::no_load_balance());
+        out.push(Table5Row {
+            name: d.name,
+            instance,
+            k,
+            yamout,
+            sequential,
+            no_lb,
+            proposed,
+            found,
+        });
+    }
+    out
+}
+
+/// Print Table V.
+pub fn print_table5(rows: &[Table5Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:<6} | {:>5} | {:>10} | {:>10} | {:>10} | {:>10} | {:>12} | {:>10} | {:>10} |",
+        "Graph", "k", "found", "Yamout[5]", "Sequential", "No-LB", "Proposed",
+        "vs Yamout", "vs Seq", "vs No-LB"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(132))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:<6} | {:>5} | {:>10} | {:>10} | {:>10} | {:>10} | {:>12} | {:>10} | {:>10} |",
+            r.name,
+            r.instance,
+            yn(r.found),
+            cell(&r.yamout),
+            cell(&r.sequential),
+            cell(&r.no_lb),
+            cell(&r.proposed),
+            speedup_cell(&r.yamout, &r.proposed),
+            speedup_cell(&r.sequential, &r.proposed),
+            speedup_cell(&r.no_lb, &r.proposed),
+        )?;
+    }
+    Ok(())
+}
+
+/// Table VI row: proposed vs prior work on prior work's datasets.
+#[derive(Debug, Clone)]
+pub struct Table6Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Density of the analog (the paper's 10% predictor).
+    pub density: f64,
+    /// Prior work.
+    pub yamout: Timed,
+    /// Proposed.
+    pub proposed: Timed,
+}
+
+/// Run one Table VI row.
+pub fn table6_row(d: &Dataset) -> Table6Row {
+    let g = d.build();
+    Table6Row {
+        name: d.name,
+        density: g.density(),
+        yamout: run_mvc(&g, SolverConfig::prior_work()),
+        proposed: run_mvc(&g, SolverConfig::proposed()),
+    }
+}
+
+/// Print Table VI.
+pub fn print_table6(rows: &[Table6Row], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>8} | {:>10} | {:>10} | {:>10} |",
+        "Graph", "density", "Yamout[5]", "Proposed", "Speedup"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(74))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:>7.1}% | {:>10} | {:>10} | {:>10} |",
+            r.name,
+            100.0 * r.density,
+            cell(&r.yamout),
+            cell(&r.proposed),
+            speedup_cell(&r.yamout, &r.proposed),
+        )?;
+    }
+    Ok(())
+}
+
+/// Figure 4 row: normalized activity breakdown for the proposed solver.
+#[derive(Debug, Clone)]
+pub struct Fig4Row {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Busy-time fractions in `ALL_ACTIVITIES` order.
+    pub fractions: [f64; crate::util::timer::NUM_ACTIVITIES],
+}
+
+/// Run one Figure 4 row.
+pub fn fig4_row(d: &Dataset) -> Fig4Row {
+    use crate::util::timer::{ActivityTimer, NUM_ACTIVITIES};
+    let g = d.build();
+    let mut cfg = SolverConfig::proposed();
+    cfg.instrument = true;
+    cfg.timeout = Some(cell_timeout());
+    let r = solver::solve_mvc(&g, &cfg);
+    // rebuild a timer to reuse the normalization logic
+    let mut t = ActivityTimer::enabled();
+    t.stop();
+    let mut totals = [0u64; NUM_ACTIVITIES];
+    totals.copy_from_slice(&r.stats.activity);
+    let busy: u64 = totals
+        .iter()
+        .enumerate()
+        .filter(|(i, _)| *i != crate::util::timer::Activity::Idle as usize)
+        .map(|(_, v)| *v)
+        .sum();
+    let mut fractions = [0.0; NUM_ACTIVITIES];
+    if busy > 0 {
+        for (i, &v) in totals.iter().enumerate() {
+            if i != crate::util::timer::Activity::Idle as usize {
+                fractions[i] = v as f64 / busy as f64;
+            }
+        }
+    }
+    Fig4Row { name: d.name, fractions }
+}
+
+/// Print Figure 4 as a percentage table.
+pub fn print_fig4(rows: &[Fig4Row], mut w: impl Write) -> std::io::Result<()> {
+    use crate::util::timer::{Activity, ALL_ACTIVITIES};
+    write!(w, "| {:<22} |", "Graph")?;
+    for a in ALL_ACTIVITIES {
+        if a != Activity::Idle {
+            write!(w, " {:>18} |", a.label())?;
+        }
+    }
+    writeln!(w)?;
+    writeln!(w, "|{}|", "-".repeat(24 + 21 * 5))?;
+    for r in rows {
+        write!(w, "| {:<22} |", r.name)?;
+        for a in ALL_ACTIVITIES {
+            if a != Activity::Idle {
+                write!(w, " {:>17.1}% |", 100.0 * r.fractions[a as usize])?;
+            }
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Write rows as CSV under `bench_out/`.
+pub fn write_csv(name: &str, header: &str, lines: &[String]) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("bench_out");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("{name}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "{header}")?;
+    for l in lines {
+        writeln!(f, "{l}")?;
+    }
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::datasets;
+
+    #[test]
+    fn table1_row_smoke() {
+        std::env::set_var("CAVC_TIMEOUT_S", "5");
+        let d = datasets::dataset("qc324").unwrap();
+        let r = table1_row(&d);
+        assert!(!r.proposed.timed_out, "qc324 analog must finish fast");
+        assert!(r.proposed.best > 0);
+    }
+
+    #[test]
+    fn table4_row_shows_reduction() {
+        let d = datasets::dataset("web-webbase-2001").unwrap();
+        let r = table4_row(&d);
+        assert!(r.n_after < r.n_before);
+        assert!(r.blocks_after >= r.blocks_before);
+        assert!(r.short_after);
+        assert!(!r.short_before);
+    }
+
+    #[test]
+    fn printers_do_not_panic() {
+        std::env::set_var("CAVC_TIMEOUT_S", "5");
+        let d = datasets::dataset("qc324").unwrap();
+        let mut buf = Vec::new();
+        print_table1(&[table1_row(&d)], &mut buf).unwrap();
+        print_table2(&[table2_row(&d)], &mut buf).unwrap();
+        print_table4(&[table4_row(&d)], &mut buf).unwrap();
+        assert!(!buf.is_empty());
+    }
+}

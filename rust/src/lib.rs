@@ -1,0 +1,35 @@
+//! # CAVC — Component-Aware Vertex Cover
+//!
+//! A reproduction of *"Faster Vertex Cover Algorithms on GPUs with
+//! Component-Aware Parallel Branching"* (TPDS 2025) as a three-layer
+//! Rust + JAX + Pallas stack. The GPU execution model (thread blocks with
+//! private stacks, a shared load-balancing worklist, and a component
+//! branch registry in global memory) is reproduced with worker threads,
+//! sharded MPMC deques, and an atomic registry arena; the paper's
+//! block-level BFS/analytics kernels are AOT-compiled from Pallas/JAX to
+//! HLO and executed via PJRT from the Rust runtime.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use cavc::graph::Graph;
+//! use cavc::solver::{solve_mvc, SolverConfig};
+//!
+//! let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+//! let res = solve_mvc(&g, &SolverConfig::proposed());
+//! assert_eq!(res.best, 2);
+//! ```
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index.
+
+pub mod degree;
+pub mod graph;
+pub mod harness;
+pub mod prep;
+pub mod reduce;
+pub mod runtime;
+pub mod solver;
+pub mod util;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

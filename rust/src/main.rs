@@ -1,0 +1,329 @@
+//! `cavc` — command-line launcher for the component-aware vertex cover
+//! system.
+//!
+//! Verbs:
+//!   solve <graph|dataset>      minimum vertex cover
+//!   pvc <graph|dataset> --k K  parameterized vertex cover
+//!   info <graph|dataset>       structural metrics + preprocessing report
+//!   components <graph>         component split (XLA-accelerated if
+//!                              artifacts are built, CPU fallback)
+//!   gen <family> --out F       write a synthetic graph
+//!   datasets                   list the benchmark suite
+//!   tables <1..6|fig4>         regenerate a paper table/figure
+//!
+//! Options: --variant proposed|yamout|no-lb|sequential, --workers N,
+//! --timeout SECS, --k K, --out FILE, --no-accel, --seed S.
+
+use anyhow::{bail, Context, Result};
+use cavc::graph::{generators, io, Graph};
+use cavc::harness::{datasets, tables};
+use cavc::solver::{self, SolverConfig, Variant};
+
+use cavc::util::cli::Args;
+use std::path::Path;
+use std::time::Duration;
+
+const VALUED: &[&str] = &[
+    "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
+];
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(args) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw, VALUED).map_err(anyhow::Error::msg)?;
+    match args.pos(0) {
+        Some("solve") => cmd_solve(&args),
+        Some("pvc") => cmd_pvc(&args),
+        Some("mis") => cmd_mis(&args),
+        Some("info") => cmd_info(&args),
+        Some("components") => cmd_components(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("datasets") => cmd_datasets(),
+        Some("tables") => cmd_tables(&args),
+        Some("version") => {
+            println!("cavc {}", cavc::VERSION);
+            Ok(())
+        }
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "cavc {} — component-aware vertex cover (TPDS'25 reproduction)\n\n\
+         usage: cavc <solve|pvc|mis|info|components|gen|datasets|tables> [args]\n\
+         \n\
+         solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
+        \x20                   [--workers N] [--timeout SECS]\n\
+         pvc <graph|dataset> --k K [--variant ...]\n         mis <graph|dataset> [--variant ...]\n\
+         info <graph|dataset>\n\
+         components <graph|dataset> [--no-accel]\n\
+         gen <er|ba|grid|cfat|phat|banded|union> --out FILE [--n N] [--p P] [--seed S]\n\
+         datasets\n\
+         tables <1|2|3|4|5|6|fig4>   (CAVC_TIMEOUT_S bounds each cell)",
+        cavc::VERSION
+    );
+}
+
+/// Load a graph argument: a dataset name from the suite, or a file path.
+fn load_graph(spec: &str) -> Result<Graph> {
+    if let Some(d) = datasets::dataset(spec) {
+        return Ok(d.build());
+    }
+    let p = Path::new(spec);
+    if p.exists() {
+        return io::read_graph(p);
+    }
+    bail!("{spec}: not a dataset name or readable file (try `cavc datasets`)")
+}
+
+fn parse_config(args: &Args) -> Result<SolverConfig> {
+    let mut cfg = match args.get("variant").unwrap_or("proposed") {
+        "proposed" => SolverConfig::proposed(),
+        "yamout" | "prior" => SolverConfig::prior_work(),
+        "no-lb" | "nolb" => SolverConfig::no_load_balance(),
+        "sequential" | "seq" => SolverConfig::sequential(),
+        v => bail!("unknown variant {v:?}"),
+    };
+    if let Some(w) = args.get("workers") {
+        cfg.workers = Some(w.parse().context("--workers")?);
+    }
+    let t: f64 = args.get_parse("timeout", 0.0).map_err(anyhow::Error::msg)?;
+    if t > 0.0 {
+        cfg.timeout = Some(Duration::from_secs_f64(t));
+    }
+    Ok(cfg)
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let spec = args.pos(1).context("solve: missing <graph|dataset>")?;
+    let g = load_graph(spec)?;
+    let mut cfg = parse_config(args)?;
+    if cfg.variant == Variant::Sequential {
+        cfg.extract_cover = true;
+    }
+    let r = solver::solve_mvc(&g, &cfg);
+    println!("graph           : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
+    println!("variant         : {}", cfg.variant.name());
+    println!("mvc             : {}{}", r.best, if r.timed_out { " (timeout: upper bound)" } else { "" });
+    println!("elapsed         : {:.3}s", r.elapsed.as_secs_f64());
+    println!("tree nodes      : {}", r.stats.tree_nodes);
+    println!("component splits: {}", r.stats.component_branches);
+    println!(
+        "prep            : n {} -> {}, forced {}, dtype {}, blocks {}, workers {}",
+        r.prep.n_original,
+        r.prep.n_residual,
+        r.prep.forced,
+        r.prep.dtype.name(),
+        r.prep.blocks,
+        r.prep.workers
+    );
+    if let Some(c) = &r.cover {
+        println!("cover valid     : {}", g.is_vertex_cover(c));
+    }
+    Ok(())
+}
+
+fn cmd_pvc(args: &Args) -> Result<()> {
+    let spec = args.pos(1).context("pvc: missing <graph|dataset>")?;
+    let k: u32 = args
+        .get("k")
+        .context("pvc: missing --k")?
+        .parse()
+        .context("--k")?;
+    let g = load_graph(spec)?;
+    let cfg = parse_config(args)?;
+    let r = solver::solve_pvc(&g, k, &cfg);
+    println!("graph   : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
+    println!("variant : {}", cfg.variant.name());
+    match (r.found, r.timed_out) {
+        (true, _) => println!("found   : yes (size {})", r.size.unwrap()),
+        (false, true) => println!("found   : unknown (timeout)"),
+        (false, false) => println!("found   : no (no cover of size <= {k})"),
+    }
+    println!("elapsed : {:.3}s", r.elapsed.as_secs_f64());
+    println!("nodes   : {}", r.stats.tree_nodes);
+    Ok(())
+}
+
+fn cmd_mis(args: &Args) -> Result<()> {
+    let spec = args.pos(1).context("mis: missing <graph|dataset>")?;
+    let g = load_graph(spec)?;
+    let mut cfg = parse_config(args)?;
+    if cfg.variant == Variant::Sequential {
+        cfg.extract_cover = true;
+    }
+    let r = cavc::solver::mis::solve_mis(&g, &cfg);
+    println!("graph   : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
+    println!("alpha   : {}{}", r.alpha, if r.mvc.timed_out { " (timeout: lower bound)" } else { "" });
+    println!("elapsed : {:.3}s", r.mvc.elapsed.as_secs_f64());
+    if let Some(set) = &r.set {
+        println!("witness : independent = {}", cavc::solver::mis::is_independent_set(&g, set));
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let spec = args.pos(1).context("info: missing <graph|dataset>")?;
+    let g = load_graph(spec)?;
+    let m = cavc::graph::metrics::compute(&g);
+    println!("graph      : {spec}");
+    println!("|V|        : {}", m.n);
+    println!("|E|        : {}", m.m);
+    println!("max degree : {}", m.max_degree);
+    println!("avg degree : {:.2}", m.avg_degree);
+    println!("density    : {:.3}%", 100.0 * m.density);
+    println!("components : {}", m.components);
+    println!("isolated   : {}", m.isolated);
+    println!("degree-1   : {}", m.degree_one);
+    println!("triangles  : {}", m.triangles);
+    let p = cavc::prep::prepare(&g, &cavc::prep::PrepConfig::default(), None);
+    println!("-- preprocessing (paper §IV-B) --");
+    println!("greedy ub  : {}", p.greedy_ub);
+    println!("forced     : {}", p.forced_cover.len());
+    println!("residual |V|: {}", p.residual.graph.num_vertices());
+    println!("dtype      : {}", p.dtype.name());
+    println!(
+        "occupancy  : {} blocks, degree array {} B, shared-mem fit: {}",
+        p.occupancy.blocks,
+        p.occupancy.degree_array_bytes,
+        p.occupancy.fits_shared_mem
+    );
+    Ok(())
+}
+
+fn cmd_components(args: &Args) -> Result<()> {
+    let spec = args.pos(1).context("components: missing <graph|dataset>")?;
+    let g = load_graph(spec)?;
+    let use_accel = !args.flag("no-accel");
+    let sets = if use_accel {
+        match cavc::runtime::Accelerator::new() {
+            Ok(acc) => match acc.component_split(&g) {
+                Ok(sets) => {
+                    println!("backend: xla/pjrt ({} artifacts)", "hlo-text");
+                    sets
+                }
+                Err(e) => {
+                    println!("backend: cpu (accelerator unavailable: {e})");
+                    cavc::graph::components::vertex_sets(&g)
+                }
+            },
+            Err(e) => {
+                println!("backend: cpu (no pjrt: {e})");
+                cavc::graph::components::vertex_sets(&g)
+            }
+        }
+    } else {
+        println!("backend: cpu (--no-accel)");
+        cavc::graph::components::vertex_sets(&g)
+    };
+    println!("components: {}", sets.len());
+    let mut sizes: Vec<usize> = sets.iter().map(|s| s.len()).collect();
+    sizes.sort_unstable_by(|a, b| b.cmp(a));
+    println!("largest   : {:?}", &sizes[..sizes.len().min(10)]);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let family = args.pos(1).context("gen: missing family")?;
+    let out = args.get("out").context("gen: missing --out")?;
+    let n: usize = args.get_parse("n", 200).map_err(anyhow::Error::msg)?;
+    let p: f64 = args.get_parse("p", 0.1).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_parse("seed", 42).map_err(anyhow::Error::msg)?;
+    let g = match family {
+        "er" => generators::erdos_renyi(n, p, seed),
+        "ba" => generators::barabasi_albert(n, 2, seed),
+        "grid" => {
+            let rows: usize = args.get_parse("rows", 16).map_err(anyhow::Error::msg)?;
+            let cols: usize = args.get_parse("cols", n.div_ceil(16)).map_err(anyhow::Error::msg)?;
+            generators::grid(rows, cols, p, seed)
+        }
+        "cfat" => {
+            let band: usize = args.get_parse("m", 6).map_err(anyhow::Error::msg)?;
+            generators::c_fat(n, band, seed)
+        }
+        "phat" => generators::p_hat(n, 0.1, 0.5, seed),
+        "banded" => {
+            let band: usize = args.get_parse("m", 2).map_err(anyhow::Error::msg)?;
+            generators::banded(n, band, p, 50, seed)
+        }
+        "geo" => generators::geometric(n, p.max(0.01), seed),
+        "union" => {
+            let lo: usize = args.get_parse("rows", 5).map_err(anyhow::Error::msg)?;
+            let hi: usize = args.get_parse("cols", 12).map_err(anyhow::Error::msg)?;
+            generators::union_of_random(n / 10, lo, hi, p.max(0.15), seed)
+        }
+        f => bail!("unknown family {f:?}"),
+    };
+    let path = Path::new(out);
+    let file = std::fs::File::create(path).with_context(|| format!("creating {out}"))?;
+    match path.extension().and_then(|e| e.to_str()) {
+        Some("gr") => io::write_pace(&g, file)?,
+        _ => io::write_edge_list(&g, file)?,
+    }
+    println!("wrote {} (|V|={}, |E|={})", out, g.num_vertices(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_datasets() -> Result<()> {
+    println!("{:<24} {:<40} {:>10} {:>10}", "name", "family", "paper |V|", "paper |E|");
+    for d in datasets::suite() {
+        println!("{:<24} {:<40} {:>10} {:>10}", d.name, d.family, d.paper_nv, d.paper_ne);
+    }
+    println!("-- table VI suite --");
+    for d in datasets::table6_suite() {
+        println!("{:<24} {:<40} {:>10} {:>10}", d.name, d.family, d.paper_nv, d.paper_ne);
+    }
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let which = args.pos(1).unwrap_or("1");
+    let stdout = std::io::stdout();
+    let suite = datasets::suite();
+    match which {
+        "1" => {
+            let rows: Vec<_> = suite.iter().map(tables::table1_row).collect();
+            tables::print_table1(&rows, stdout.lock())?;
+        }
+        "2" => {
+            let rows: Vec<_> = suite.iter().map(tables::table2_row).collect();
+            tables::print_table2(&rows, stdout.lock())?;
+        }
+        "3" => {
+            let rows: Vec<_> = suite.iter().map(tables::table3_row).collect();
+            tables::print_table3(&rows, stdout.lock())?;
+        }
+        "4" => {
+            let rows: Vec<_> = suite.iter().map(tables::table4_row).collect();
+            tables::print_table4(&rows, stdout.lock())?;
+        }
+        "5" => {
+            let rows: Vec<_> = suite.iter().flat_map(|d| tables::table5_rows(d)).collect();
+            tables::print_table5(&rows, stdout.lock())?;
+        }
+        "6" => {
+            let rows: Vec<_> =
+                datasets::table6_suite().iter().map(tables::table6_row).collect();
+            tables::print_table6(&rows, stdout.lock())?;
+        }
+        "fig4" => {
+            let rows: Vec<_> = suite.iter().map(tables::fig4_row).collect();
+            tables::print_fig4(&rows, stdout.lock())?;
+        }
+        t => bail!("unknown table {t:?} (use 1..6 or fig4)"),
+    }
+    Ok(())
+}

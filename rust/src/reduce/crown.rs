@@ -1,0 +1,193 @@
+//! Crown reduction (Chlebík & Chlebíková), applied exhaustively at the
+//! root node only (paper §IV-B: "sophisticated and heavyweight … applying
+//! it just at the root node contributes to further reducing the graph").
+//!
+//! A *crown* is a pair `(I, H)` where `I` is a non-empty independent set,
+//! `H = N(I)`, and there is a matching of `H` into `I` saturating `H`.
+//! Every minimum vertex cover contains all of `H` and none of `I`, so we
+//! add `H` to the cover and delete `I ∪ H`.
+//!
+//! Construction (standard):
+//! 1. greedy maximal matching `M1`; `O` = unmatched vertices (independent);
+//! 2. maximum bipartite matching `M2` between `O` and `N(O)`;
+//! 3. `I0` = vertices of `O` unmatched by `M2`; iterate
+//!    `I_{k+1} = I_k ∪ {M2-partners in O of N(I_k)}` to a fixpoint;
+//!    `H = N(I)`. If `I0 = ∅` there is no crown.
+
+use crate::graph::Graph;
+use crate::util::BitSet;
+
+use super::matching;
+
+/// Result of one crown extraction on the residual graph.
+#[derive(Debug, Clone)]
+pub struct Crown {
+    /// Head: vertices forced into the cover.
+    pub head: Vec<u32>,
+    /// Crown: independent vertices excluded from the cover.
+    pub independent: Vec<u32>,
+}
+
+/// Find a crown in the residual graph (`alive[v] && deg[v] > 0`).
+/// Returns `None` if no crown exists for the chosen maximal matching.
+pub fn find_crown(g: &Graph, deg: &[u32]) -> Option<Crown> {
+    let n = g.num_vertices();
+    let present = |v: u32| deg[v as usize] > 0;
+
+    // 1. Greedy maximal matching over residual edges.
+    let residual_edges = g
+        .edges()
+        .filter(|&(u, v)| present(u) && present(v));
+    let matched = matching::greedy_maximal_matching(n, residual_edges);
+
+    // O = present, unmatched (independent by maximality of M1).
+    let outsiders: Vec<u32> = (0..n as u32)
+        .filter(|&v| present(v) && !matched[v as usize])
+        .collect();
+    if outsiders.is_empty() {
+        return None;
+    }
+
+    // N(O): the matched neighbors of outsiders.
+    let mut in_outsiders = BitSet::new(n);
+    for &v in &outsiders {
+        in_outsiders.set(v as usize);
+    }
+    let mut boundary_ids = vec![u32::MAX; n]; // graph id -> right id
+    let mut boundary: Vec<u32> = Vec::new();
+    for &o in &outsiders {
+        for &w in g.neighbors(o) {
+            if present(w) && boundary_ids[w as usize] == u32::MAX {
+                boundary_ids[w as usize] = boundary.len() as u32;
+                boundary.push(w);
+            }
+        }
+    }
+    if boundary.is_empty() {
+        return None; // outsiders are isolated; nothing to do here
+    }
+
+    // 2. Maximum bipartite matching O ↔ N(O).
+    let adj: Vec<Vec<u32>> = outsiders
+        .iter()
+        .map(|&o| {
+            g.neighbors(o)
+                .iter()
+                .filter(|&&w| present(w))
+                .map(|&w| boundary_ids[w as usize])
+                .collect()
+        })
+        .collect();
+    let m2 = matching::hopcroft_karp(outsiders.len(), boundary.len(), &adj);
+
+    // 3. Grow I from the M2-unmatched outsiders.
+    let mut in_i = vec![false; outsiders.len()];
+    let mut stack: Vec<usize> = (0..outsiders.len())
+        .filter(|&i| m2.left_match[i] == u32::MAX)
+        .collect();
+    if stack.is_empty() {
+        return None; // M2 saturates O: no crown from this matching
+    }
+    for &i in &stack {
+        in_i[i] = true;
+    }
+    let mut in_h = vec![false; boundary.len()];
+    while let Some(i) = stack.pop() {
+        for &r in &adj[i] {
+            if !in_h[r as usize] {
+                in_h[r as usize] = true;
+                // r is matched (otherwise it would have been matched to an
+                // unmatched outsider — impossible for a maximum matching).
+                let partner = m2.right_match[r as usize];
+                debug_assert_ne!(partner, u32::MAX, "boundary of I must be matched");
+                if !in_i[partner as usize] {
+                    in_i[partner as usize] = true;
+                    stack.push(partner as usize);
+                }
+            }
+        }
+    }
+
+    let independent: Vec<u32> = outsiders
+        .iter()
+        .enumerate()
+        .filter(|&(i, _)| in_i[i])
+        .map(|(_, &v)| v)
+        .collect();
+    let head: Vec<u32> = boundary
+        .iter()
+        .enumerate()
+        .filter(|&(r, _)| in_h[r])
+        .map(|(_, &v)| v)
+        .collect();
+    if independent.is_empty() {
+        return None;
+    }
+    Some(Crown { head, independent })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn full_deg(g: &Graph) -> Vec<u32> {
+        (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect()
+    }
+
+    #[test]
+    fn star_yields_crown() {
+        // Star: leaves form I, hub forms H.
+        let g = generators::star(6);
+        let c = find_crown(&g, &full_deg(&g)).expect("star has a crown");
+        assert_eq!(c.head, vec![0]);
+        assert!(c.independent.len() >= 4);
+    }
+
+    #[test]
+    fn crown_properties_hold() {
+        for seed in 0..20 {
+            let g = generators::erdos_renyi(40, 0.05, seed);
+            let deg = full_deg(&g);
+            if let Some(c) = find_crown(&g, &deg) {
+                // I independent
+                for (i, &u) in c.independent.iter().enumerate() {
+                    for &v in &c.independent[i + 1..] {
+                        assert!(!g.has_edge(u, v), "I not independent (seed {seed})");
+                    }
+                }
+                // N(I) ⊆ H (over residual = whole graph here)
+                let hset: std::collections::HashSet<u32> =
+                    c.head.iter().copied().collect();
+                for &u in &c.independent {
+                    for &w in g.neighbors(u) {
+                        if deg[w as usize] > 0 {
+                            assert!(hset.contains(&w), "N(I) ⊄ H (seed {seed})");
+                        }
+                    }
+                }
+                // |H| ≤ |I| (H is matched into I)
+                assert!(c.head.len() <= c.independent.len(), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn clique_has_no_crown() {
+        let g = generators::clique(6);
+        // Greedy matching leaves possibly 0 outsiders on even cliques;
+        // on odd cliques the single outsider is saturated by M2.
+        let g7 = generators::clique(7);
+        assert!(find_crown(&g, &full_deg(&g)).is_none());
+        assert!(find_crown(&g7, &full_deg(&g7)).is_none());
+    }
+
+    #[test]
+    fn respects_residual_degrees() {
+        // Vertex 0 "removed" (deg 0) — crown must not touch it.
+        let g = generators::star(5);
+        let mut deg = full_deg(&g);
+        deg[0] = 0; // hub gone → leaves isolated, no crown
+        assert!(find_crown(&g, &deg).is_none());
+    }
+}

@@ -1,0 +1,421 @@
+//! Reduction rules (paper §II-B, §III-D, §IV-B).
+//!
+//! Two deployment contexts:
+//! * **root** ([`reduce_root`]): run exhaustively on the CPU over the
+//!   original graph before the search — degree-one, degree-two triangle,
+//!   high-degree, and the crown rule — then the caller induces a subgraph
+//!   on the survivors (paper §IV-B);
+//! * **in-engine**: the same cheap rules applied per search-tree node over
+//!   the degree array; that variant lives in `solver::engine` because it
+//!   is generic over the degree dtype, and is cross-checked against this
+//!   one in tests.
+
+pub mod crown;
+pub mod matching;
+pub mod special;
+
+use crate::graph::Graph;
+use crate::util::BitSet;
+
+pub use special::{classify, SpecialComponent};
+
+/// Statistics from the exhaustive root reduction.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RootReduceStats {
+    /// Vertices forced into the cover by the degree-one rule.
+    pub degree_one: usize,
+    /// Vertices forced by the degree-two triangle rule.
+    pub degree_two_triangle: usize,
+    /// Vertices forced by the high-degree rule.
+    pub high_degree: usize,
+    /// Vertices forced by crown heads (over all crown iterations).
+    pub crown_head: usize,
+    /// Crown independent-set vertices excluded from the cover.
+    pub crown_independent: usize,
+    /// Number of crown iterations that found a crown.
+    pub crown_rounds: usize,
+    /// Vertices solved via special components (cliques/cycles) at the root.
+    pub special_cover: usize,
+}
+
+/// Result of the exhaustive root reduction.
+#[derive(Debug, Clone)]
+pub struct RootReduction {
+    /// Original-id vertices forced into every (improving) cover.
+    pub in_cover: Vec<u32>,
+    /// Residual degree of every original vertex (0 = removed/isolated).
+    pub residual_deg: Vec<u32>,
+    /// Vertices that survive with non-zero degree (the set to induce on).
+    pub kept: BitSet,
+    /// Rule application counts.
+    pub stats: RootReduceStats,
+}
+
+impl RootReduction {
+    /// Number of surviving vertices.
+    pub fn kept_count(&self) -> usize {
+        self.kept.count()
+    }
+}
+
+struct RootCtx<'g> {
+    g: &'g Graph,
+    deg: Vec<u32>,
+    in_cover: Vec<u32>,
+    queue: std::collections::VecDeque<u32>,
+    queued: BitSet,
+    stats: RootReduceStats,
+}
+
+impl<'g> RootCtx<'g> {
+    #[inline]
+    fn present(&self, v: u32) -> bool {
+        self.deg[v as usize] > 0
+    }
+
+    fn enqueue(&mut self, v: u32) {
+        if self.queued.insert(v as usize) {
+            self.queue.push_back(v);
+        }
+    }
+
+    /// Remove `v` into the cover; neighbors lose a degree and re-enter
+    /// the rule queue.
+    fn cover(&mut self, v: u32) {
+        debug_assert!(self.present(v));
+        self.in_cover.push(v);
+        self.deg[v as usize] = 0;
+        for &w in self.g.neighbors(v) {
+            if self.present(w) {
+                self.deg[w as usize] -= 1;
+                self.enqueue(w);
+            }
+        }
+    }
+
+    /// Remove `v` from the graph *without* covering it (crown independent
+    /// vertices). All its edges must already be covered by its neighbors.
+    fn discard(&mut self, v: u32) {
+        if !self.present(v) {
+            return;
+        }
+        self.deg[v as usize] = 0;
+        for &w in self.g.neighbors(v) {
+            if self.present(w) {
+                self.deg[w as usize] -= 1;
+                self.enqueue(w);
+            }
+        }
+    }
+
+    /// First present neighbor of `v`.
+    fn first_neighbor(&self, v: u32) -> Option<u32> {
+        self.g.neighbors(v).iter().copied().find(|&w| self.present(w))
+    }
+
+    /// Two present neighbors of a degree-2 vertex.
+    fn two_neighbors(&self, v: u32) -> (u32, u32) {
+        let mut it = self.g.neighbors(v).iter().copied().filter(|&w| self.present(w));
+        let a = it.next().expect("degree-2 vertex has a neighbor");
+        let b = it.next().expect("degree-2 vertex has two neighbors");
+        (a, b)
+    }
+
+    /// Fixpoint of the cheap rules. `threshold(sol_len)` is the
+    /// high-degree cutoff, or `u32::MAX` to disable.
+    fn cheap_rules(&mut self, ub: u32, use_high_degree: bool) {
+        while let Some(v) = self.queue.pop_front() {
+            self.queued.clear(v as usize);
+            if !self.present(v) {
+                continue;
+            }
+            match self.deg[v as usize] {
+                1 => {
+                    let u = self.first_neighbor(v).expect("deg-1 neighbor");
+                    self.cover(u);
+                    self.stats.degree_one += 1;
+                }
+                2 => {
+                    let (a, b) = self.two_neighbors(v);
+                    if self.g.has_edge(a, b) {
+                        self.cover(a);
+                        self.cover(b);
+                        self.stats.degree_two_triangle += 1;
+                    }
+                }
+                d => {
+                    if use_high_degree {
+                        let budget =
+                            ub.saturating_sub(self.in_cover.len() as u32).saturating_sub(1);
+                        if d > budget {
+                            self.cover(v);
+                            self.stats.high_degree += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Run the exhaustive root reduction (paper §IV-B).
+///
+/// `ub` is the current best cover size (e.g. from the greedy bound); the
+/// high-degree rule preserves every cover *strictly smaller* than `ub`.
+/// With `use_crown`, crown decompositions are extracted between fixpoints
+/// of the cheap rules until none remains.
+pub fn reduce_root(g: &Graph, ub: u32, use_crown: bool, use_high_degree: bool) -> RootReduction {
+    let n = g.num_vertices();
+    let mut ctx = RootCtx {
+        g,
+        deg: (0..n as u32).map(|v| g.degree(v)).collect(),
+        in_cover: Vec::new(),
+        queue: std::collections::VecDeque::new(),
+        queued: BitSet::new(n),
+        stats: RootReduceStats::default(),
+    };
+    for v in 0..n as u32 {
+        ctx.enqueue(v);
+    }
+    loop {
+        ctx.cheap_rules(ub, use_high_degree);
+
+        // Special components (cliques / chordless cycles) solvable in
+        // closed form at the root: cover size is forced, so commit the
+        // canonical optimal cover directly.
+        if solve_special_components(&mut ctx) {
+            continue;
+        }
+
+        if !use_crown {
+            break;
+        }
+        match crown::find_crown(g, &ctx.deg) {
+            None => break,
+            Some(c) => {
+                ctx.stats.crown_rounds += 1;
+                ctx.stats.crown_head += c.head.len();
+                ctx.stats.crown_independent += c.independent.len();
+                for &h in &c.head {
+                    if ctx.present(h) {
+                        ctx.cover(h);
+                    }
+                }
+                for &i in &c.independent {
+                    ctx.discard(i);
+                }
+            }
+        }
+    }
+
+    let mut kept = BitSet::new(n);
+    for v in 0..n {
+        if ctx.deg[v] > 0 {
+            kept.set(v);
+        }
+    }
+    RootReduction {
+        in_cover: ctx.in_cover,
+        residual_deg: ctx.deg,
+        kept,
+        stats: ctx.stats,
+    }
+}
+
+/// Detect and solve residual components that are cliques or chordless
+/// cycles (paper §III-D applied at the root). Returns true if anything
+/// was removed (so the cheap-rule fixpoint must be re-run).
+fn solve_special_components(ctx: &mut RootCtx<'_>) -> bool {
+    let n = ctx.g.num_vertices();
+    let mut visited = BitSet::new(n);
+    let mut changed = false;
+    for s in 0..n as u32 {
+        if !ctx.present(s) || visited.get(s as usize) {
+            continue;
+        }
+        // BFS to collect the component.
+        let mut comp = vec![s];
+        visited.set(s as usize);
+        let mut head = 0;
+        while head < comp.len() {
+            let u = comp[head];
+            head += 1;
+            for &w in ctx.g.neighbors(u) {
+                if ctx.present(w) && visited.insert(w as usize) {
+                    comp.push(w);
+                }
+            }
+        }
+        let size = comp.len() as u32;
+        let special = classify(size, comp.iter().map(|&v| ctx.deg[v as usize]));
+        match special {
+            Some(SpecialComponent::Clique { .. }) => {
+                // all but one vertex into the cover
+                for &v in &comp[1..] {
+                    if ctx.present(v) {
+                        ctx.cover(v);
+                    }
+                }
+                ctx.stats.special_cover += comp.len() - 1;
+                changed = true;
+            }
+            Some(SpecialComponent::ChordlessCycle { .. }) => {
+                // walk the cycle, take every other vertex (+1 if odd)
+                let cover = cycle_cover(ctx.g, &comp, &ctx.deg);
+                ctx.stats.special_cover += cover.len();
+                for v in cover {
+                    if ctx.present(v) {
+                        ctx.cover(v);
+                    }
+                }
+                changed = true;
+            }
+            None => {}
+        }
+    }
+    changed
+}
+
+/// Canonical minimum cover of a chordless cycle: walk it and take every
+/// second vertex, plus one extra for odd cycles.
+fn cycle_cover(g: &Graph, comp: &[u32], deg: &[u32]) -> Vec<u32> {
+    let start = comp[0];
+    let mut order = vec![start];
+    let mut prev = start;
+    let mut cur = g
+        .neighbors(start)
+        .iter()
+        .copied()
+        .find(|&w| deg[w as usize] > 0)
+        .expect("cycle vertex has a neighbor");
+    while cur != start {
+        order.push(cur);
+        let next = g
+            .neighbors(cur)
+            .iter()
+            .copied()
+            .find(|&w| deg[w as usize] > 0 && w != prev)
+            .expect("cycle vertex has two neighbors");
+        prev = cur;
+        cur = next;
+    }
+    debug_assert_eq!(order.len(), comp.len(), "cycle walk must visit all vertices");
+    // take odd positions 1,3,5,...; for odd cycles also take the last
+    let mut cover: Vec<u32> = order.iter().skip(1).step_by(2).copied().collect();
+    if comp.len() % 2 == 1 {
+        cover.push(order[comp.len() - 1]);
+    }
+    cover
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    /// Reduction soundness: forced cover + optimum of the residual ==
+    /// optimum of the original (when an optimum < ub exists).
+    fn check_sound(g: &Graph, use_crown: bool) {
+        let opt = crate::solver::oracle::mvc_size(g);
+        let ub = g.num_vertices() as u32; // trivial, never prunes optimum
+        let red = reduce_root(g, ub, use_crown, true);
+        let ind = crate::graph::InducedSubgraph::new(g, &red.kept);
+        let residual_opt = crate::solver::oracle::mvc_size(&ind.graph);
+        assert_eq!(
+            red.in_cover.len() as u32 + residual_opt,
+            opt,
+            "root reduction changed the optimum (crown={use_crown})"
+        );
+    }
+
+    #[test]
+    fn path_fully_reduced() {
+        // P5 reduces completely via degree-one cascades.
+        let g = generators::path(5);
+        let red = reduce_root(&g, 5, false, true);
+        assert_eq!(red.kept_count(), 0);
+        assert_eq!(red.in_cover.len(), 2);
+        assert!(g.is_vertex_cover(&red.in_cover));
+    }
+
+    #[test]
+    fn triangle_rule_fires() {
+        // A triangle with a pendant: pendant forces its neighbor, rest
+        // collapses; final cover must be optimal (=2).
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        let red = reduce_root(&g, 4, false, true);
+        assert_eq!(red.kept_count(), 0);
+        assert_eq!(red.in_cover.len() as u32, crate::solver::oracle::mvc_size(&g));
+    }
+
+    #[test]
+    fn clique_component_solved() {
+        let g = generators::clique(6);
+        let red = reduce_root(&g, 6, false, false);
+        assert_eq!(red.kept_count(), 0);
+        assert_eq!(red.in_cover.len(), 5);
+        assert!(g.is_vertex_cover(&red.in_cover));
+    }
+
+    #[test]
+    fn cycle_component_solved() {
+        for n in [4usize, 5, 6, 7, 9] {
+            let g = generators::cycle(n);
+            let red = reduce_root(&g, n as u32, false, false);
+            assert_eq!(red.kept_count(), 0, "C{n}");
+            assert_eq!(red.in_cover.len(), n.div_ceil(2), "C{n}");
+            assert!(g.is_vertex_cover(&red.in_cover), "C{n}");
+        }
+    }
+
+    #[test]
+    fn crown_reduces_star_forest() {
+        let g = Graph::disjoint_union(&[generators::star(8), generators::star(5)]);
+        let red = reduce_root(&g, 13, true, false);
+        assert_eq!(red.kept_count(), 0);
+        assert_eq!(red.in_cover.len(), 2);
+    }
+
+    #[test]
+    fn sound_on_random_graphs() {
+        for seed in 0..12 {
+            let g = generators::erdos_renyi(14, 0.18, seed);
+            check_sound(&g, false);
+            check_sound(&g, true);
+        }
+    }
+
+    #[test]
+    fn sound_on_structured_graphs() {
+        check_sound(&generators::grid(3, 4, 0.0, 0), true);
+        check_sound(&generators::c_fat(12, 2, 1), true);
+        check_sound(&generators::union_of_random(3, 3, 5, 0.3, 7), true);
+    }
+
+    #[test]
+    fn high_degree_rule_preserves_improving_covers() {
+        // hub-heavy graph; ub from greedy; optimum must be reachable
+        for seed in 0..8 {
+            let g = generators::barabasi_albert(16, 2, seed);
+            let opt = crate::solver::oracle::mvc_size(&g);
+            let ub = crate::solver::greedy::greedy_cover(&g).len() as u32;
+            let red = reduce_root(&g, ub, true, true);
+            let ind = crate::graph::InducedSubgraph::new(&g, &red.kept);
+            let residual = crate::solver::oracle::mvc_size(&ind.graph);
+            let total = red.in_cover.len() as u32 + residual;
+            // the reduced answer can only be wrong if it claims better
+            // than optimal; and if opt < ub it must equal opt
+            assert!(total >= opt, "seed {seed}");
+            if opt < ub {
+                assert_eq!(total, opt, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn stats_populated() {
+        let g = generators::path(9);
+        let red = reduce_root(&g, 9, false, true);
+        assert!(red.stats.degree_one > 0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Component-targeting reduction rules (paper §III-D): cliques and
+//! chordless cycles are solved in closed form the moment component
+//! detection identifies them, instead of being branched on.
+//!
+//! These helpers are representation-agnostic (they take a degree lookup)
+//! so both the root reducer (u32 degrees over the original graph) and the
+//! generic engine (u8/u16/u32 degree arrays over the induced subgraph)
+//! share them.
+
+/// Closed-form classification of a connected component.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecialComponent {
+    /// Complete graph on `size` vertices → MVC = size − 1.
+    Clique {
+        /// Component vertex count.
+        size: u32,
+    },
+    /// Chordless cycle on `size` vertices → MVC = ⌈size/2⌉.
+    ChordlessCycle {
+        /// Component vertex count.
+        size: u32,
+    },
+}
+
+impl SpecialComponent {
+    /// Minimum vertex cover size of the special component.
+    pub fn mvc_size(self) -> u32 {
+        match self {
+            SpecialComponent::Clique { size } => size - 1,
+            SpecialComponent::ChordlessCycle { size } => size.div_ceil(2),
+        }
+    }
+}
+
+/// Classify a *connected* component given its vertex list and a residual
+/// degree lookup.
+///
+/// * all degrees == `size − 1` → clique (every vertex adjacent to every
+///   other, since degrees are counted within the residual graph);
+/// * all degrees == 2 → chordless cycle (a connected 2-regular graph is a
+///   cycle; a chord would raise two degrees to 3).
+///
+/// Components of size ≤ 2 are handled by the degree rules, but classifying
+/// them here is still correct: an edge is K2 (cover 1).
+pub fn classify(size: u32, mut degrees: impl Iterator<Item = u32>) -> Option<SpecialComponent> {
+    if size < 2 {
+        return None;
+    }
+    let first = degrees.next()?;
+    let uniform = degrees.all(|d| d == first);
+    if !uniform {
+        return None;
+    }
+    if first == size - 1 {
+        Some(SpecialComponent::Clique { size })
+    } else if first == 2 && size >= 3 {
+        Some(SpecialComponent::ChordlessCycle { size })
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_classified() {
+        let c = classify(5, [4u32, 4, 4, 4, 4].into_iter()).unwrap();
+        assert_eq!(c, SpecialComponent::Clique { size: 5 });
+        assert_eq!(c.mvc_size(), 4);
+    }
+
+    #[test]
+    fn cycle_classified() {
+        let c = classify(6, [2u32; 6].into_iter()).unwrap();
+        assert_eq!(c, SpecialComponent::ChordlessCycle { size: 6 });
+        assert_eq!(c.mvc_size(), 3);
+        let odd = classify(7, [2u32; 7].into_iter()).unwrap();
+        assert_eq!(odd.mvc_size(), 4); // ceil(7/2)
+    }
+
+    #[test]
+    fn triangle_is_both_but_clique_wins() {
+        // K3: all degrees 2 and size-1 == 2; clique branch must win
+        // (same answer either way: 2 = ceil(3/2) = 3-1).
+        let c = classify(3, [2u32, 2, 2].into_iter()).unwrap();
+        assert_eq!(c, SpecialComponent::Clique { size: 3 });
+        assert_eq!(c.mvc_size(), 2);
+    }
+
+    #[test]
+    fn edge_is_k2() {
+        let c = classify(2, [1u32, 1].into_iter()).unwrap();
+        assert_eq!(c, SpecialComponent::Clique { size: 2 });
+        assert_eq!(c.mvc_size(), 1);
+    }
+
+    #[test]
+    fn non_uniform_rejected() {
+        assert!(classify(4, [1u32, 2, 2, 1].into_iter()).is_none());
+    }
+
+    #[test]
+    fn path_rejected() {
+        // P3 has degrees 1,2,1 — not special.
+        assert!(classify(3, [1u32, 2, 1].into_iter()).is_none());
+        // 3-regular on 6 vertices (prism) — not special.
+        assert!(classify(6, [3u32; 6].into_iter()).is_none());
+    }
+}

@@ -1,0 +1,145 @@
+//! XLA-accelerated graph analytics on the solve pipeline.
+//!
+//! The paper's component finding is a block-collaborative pull-based BFS
+//! on the GPU (§III-B). That data-parallel primitive is what we author as
+//! Pallas kernels (L1), wrap into fixpoint programs in JAX (L2), and AOT
+//! to HLO. This module executes those artifacts via PJRT from the Rust
+//! request path:
+//!
+//! * root-level component split of the reduced/induced graph before the
+//!   search launches (graphs ≤ 1024 vertices after padding);
+//! * triangle census for the preprocessing report and the degree-2
+//!   triangle rule statistics.
+//!
+//! Per-*node* component detection inside the engine stays native: a PJRT
+//! dispatch per search-tree node would measure IPC overhead, not the
+//! algorithm (see DESIGN.md §Hardware-Adaptation). Every accelerated
+//! routine has a native fallback and is cross-checked against it in
+//! integration tests.
+
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::artifacts::{ArtifactKind, ArtifactSet};
+use super::client::{Executable, Runtime, TensorF32};
+use crate::graph::Graph;
+
+/// PJRT-backed analytics with lazy per-(kind, size-class) compilation.
+pub struct Accelerator {
+    rt: Runtime,
+    artifacts: ArtifactSet,
+    cache: Mutex<HashMap<(ArtifactKind, usize), std::sync::Arc<Executable>>>,
+}
+
+impl std::fmt::Debug for Accelerator {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Accelerator").field("artifacts", &self.artifacts.dir()).finish()
+    }
+}
+
+impl Accelerator {
+    /// Create an accelerator over the default artifact location.
+    pub fn new() -> Result<Accelerator> {
+        Self::with_artifacts(ArtifactSet::default_location())
+    }
+
+    /// Create an accelerator over a specific artifact set.
+    pub fn with_artifacts(artifacts: ArtifactSet) -> Result<Accelerator> {
+        Ok(Accelerator { rt: Runtime::cpu()?, artifacts, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Largest graph the compiled artifacts can handle.
+    pub fn max_vertices(&self) -> usize {
+        super::artifacts::SIZE_CLASSES[super::artifacts::SIZE_CLASSES.len() - 1]
+    }
+
+    fn executable(
+        &self,
+        kind: ArtifactKind,
+        n: usize,
+    ) -> Result<(std::sync::Arc<Executable>, usize)> {
+        let (path, class) = self.artifacts.path_for(kind, n)?;
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(e) = cache.get(&(kind, class)) {
+            return Ok((e.clone(), class));
+        }
+        let exe = std::sync::Arc::new(self.rt.load_hlo_text(&path)?);
+        cache.insert((kind, class), exe.clone());
+        Ok((exe, class))
+    }
+
+    /// Dense 0/1 adjacency padded to `class × class` (padding vertices
+    /// are isolated so they never affect the fixpoints).
+    fn dense_adjacency(g: &Graph, class: usize) -> Vec<f32> {
+        let mut a = vec![0f32; class * class];
+        for (u, v) in g.edges() {
+            a[u as usize * class + v as usize] = 1.0;
+            a[v as usize * class + u as usize] = 1.0;
+        }
+        a
+    }
+
+    /// Connected-component labels via the AOT min-label-propagation
+    /// program. Labels are the smallest vertex id in each component
+    /// (canonical), matching `graph::components::labels` up to renaming.
+    pub fn connected_components(&self, g: &Graph) -> Result<Vec<u32>> {
+        let n = g.num_vertices();
+        let (exe, class) = self.executable(ArtifactKind::ConnectedComponents, n)?;
+        let a = Self::dense_adjacency(g, class);
+        let dims = [class as i64, class as i64];
+        let out = exe
+            .run_f32(&[TensorF32 { data: &a, dims: &dims }])
+            .context("components artifact")?;
+        let labels = &out[0];
+        Ok((0..n).map(|v| labels[v] as u32).collect())
+    }
+
+    /// BFS reachability mask from `source` via the AOT frontier-expansion
+    /// program.
+    pub fn bfs_reach(&self, g: &Graph, source: u32) -> Result<Vec<bool>> {
+        let n = g.num_vertices();
+        let (exe, class) = self.executable(ArtifactKind::BfsReach, n)?;
+        let a = Self::dense_adjacency(g, class);
+        let mut seed = vec![0f32; class];
+        seed[source as usize] = 1.0;
+        let adims = [class as i64, class as i64];
+        let sdims = [class as i64];
+        let out = exe
+            .run_f32(&[
+                TensorF32 { data: &a, dims: &adims },
+                TensorF32 { data: &seed, dims: &sdims },
+            ])
+            .context("bfs artifact")?;
+        Ok(out[0][..n].iter().map(|&x| x > 0.5).collect())
+    }
+
+    /// Per-vertex triangle counts via the AOT (A·A)⊙A row-sum program.
+    pub fn triangle_census(&self, g: &Graph) -> Result<Vec<u32>> {
+        let n = g.num_vertices();
+        let (exe, class) = self.executable(ArtifactKind::TriangleCensus, n)?;
+        let a = Self::dense_adjacency(g, class);
+        let dims = [class as i64, class as i64];
+        let out = exe
+            .run_f32(&[TensorF32 { data: &a, dims: &dims }])
+            .context("triangle artifact")?;
+        // program returns row sums of (A@A)⊙A = 2 × triangles per vertex
+        Ok(out[0][..n].iter().map(|&x| (x / 2.0).round() as u32).collect())
+    }
+
+    /// Component vertex sets via the accelerated labels, with native
+    /// fallback for graphs beyond the largest size class.
+    pub fn component_split(&self, g: &Graph) -> Result<Vec<Vec<u32>>> {
+        if g.num_vertices() > self.max_vertices() {
+            return Ok(crate::graph::components::vertex_sets(g));
+        }
+        let labels = self.connected_components(g)?;
+        let mut by_label: HashMap<u32, Vec<u32>> = HashMap::new();
+        for (v, &l) in labels.iter().enumerate() {
+            by_label.entry(l).or_default().push(v as u32);
+        }
+        let mut sets: Vec<Vec<u32>> = by_label.into_values().collect();
+        sets.sort_by_key(|s| s[0]);
+        Ok(sets)
+    }
+}

@@ -1,0 +1,130 @@
+//! Artifact registry: discovers `artifacts/*.hlo.txt` produced by
+//! `make artifacts` (`python/compile/aot.py`) and picks the right size
+//! class for a given graph.
+//!
+//! Each program is AOT-compiled at fixed padded sizes (XLA requires
+//! static shapes); the runtime pads inputs up to the nearest class.
+
+use anyhow::{bail, Result};
+use std::path::{Path, PathBuf};
+
+/// The AOT-compiled programs (must match `python/compile/aot.py`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ArtifactKind {
+    /// Connected-component labels via min-label propagation fixpoint.
+    ConnectedComponents,
+    /// BFS reachability mask from a seed vector.
+    BfsReach,
+    /// Per-vertex triangle counts ((A·A)⊙A row sums).
+    TriangleCensus,
+}
+
+impl ArtifactKind {
+    /// File-name stem used by the AOT script.
+    pub fn stem(self) -> &'static str {
+        match self {
+            ArtifactKind::ConnectedComponents => "components",
+            ArtifactKind::BfsReach => "bfs_reach",
+            ArtifactKind::TriangleCensus => "triangle_census",
+        }
+    }
+
+    /// All kinds.
+    pub const ALL: [ArtifactKind; 3] = [
+        ArtifactKind::ConnectedComponents,
+        ArtifactKind::BfsReach,
+        ArtifactKind::TriangleCensus,
+    ];
+}
+
+/// Size classes compiled by the AOT script (must stay in sync).
+pub const SIZE_CLASSES: [usize; 4] = [128, 256, 512, 1024];
+
+/// Locates artifacts on disk.
+#[derive(Debug, Clone)]
+pub struct ArtifactSet {
+    dir: PathBuf,
+}
+
+impl ArtifactSet {
+    /// Use artifacts from `dir`.
+    pub fn new(dir: impl Into<PathBuf>) -> ArtifactSet {
+        ArtifactSet { dir: dir.into() }
+    }
+
+    /// Default location: `$CAVC_ARTIFACTS` or `./artifacts`.
+    pub fn default_location() -> ArtifactSet {
+        let dir = std::env::var_os("CAVC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"));
+        ArtifactSet::new(dir)
+    }
+
+    /// Directory root.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Smallest compiled size class that fits `n` vertices.
+    pub fn size_class(n: usize) -> Option<usize> {
+        SIZE_CLASSES.iter().copied().find(|&c| c >= n)
+    }
+
+    /// Path of an artifact for `kind` at size class `class`.
+    pub fn path(&self, kind: ArtifactKind, class: usize) -> PathBuf {
+        self.dir.join(format!("{}_{}.hlo.txt", kind.stem(), class))
+    }
+
+    /// Path of the artifact that fits a graph of `n` vertices.
+    pub fn path_for(&self, kind: ArtifactKind, n: usize) -> Result<(PathBuf, usize)> {
+        let Some(class) = Self::size_class(n) else {
+            bail!("no size class fits n={n} (max {})", SIZE_CLASSES[SIZE_CLASSES.len() - 1]);
+        };
+        let p = self.path(kind, class);
+        if !p.exists() {
+            bail!("artifact missing: {} (run `make artifacts`)", p.display());
+        }
+        Ok((p, class))
+    }
+
+    /// True if every artifact exists (all kinds × all classes).
+    pub fn complete(&self) -> bool {
+        ArtifactKind::ALL
+            .iter()
+            .all(|k| SIZE_CLASSES.iter().all(|&c| self.path(*k, c).exists()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_class_selection() {
+        assert_eq!(ArtifactSet::size_class(1), Some(128));
+        assert_eq!(ArtifactSet::size_class(128), Some(128));
+        assert_eq!(ArtifactSet::size_class(129), Some(256));
+        assert_eq!(ArtifactSet::size_class(1024), Some(1024));
+        assert_eq!(ArtifactSet::size_class(1025), None);
+    }
+
+    #[test]
+    fn path_shape() {
+        let a = ArtifactSet::new("/tmp/x");
+        assert_eq!(
+            a.path(ArtifactKind::ConnectedComponents, 256),
+            PathBuf::from("/tmp/x/components_256.hlo.txt")
+        );
+        assert_eq!(
+            a.path(ArtifactKind::TriangleCensus, 1024),
+            PathBuf::from("/tmp/x/triangle_census_1024.hlo.txt")
+        );
+    }
+
+    #[test]
+    fn missing_artifact_errors() {
+        let a = ArtifactSet::new("/nonexistent");
+        assert!(a.path_for(ArtifactKind::BfsReach, 100).is_err());
+        assert!(!a.complete());
+    }
+}

@@ -1,0 +1,107 @@
+//! PJRT client wrapper: load HLO-text artifacts and execute them.
+//!
+//! Interchange is HLO **text**, not serialized `HloModuleProto`: jax ≥0.5
+//! emits protos with 64-bit instruction ids which xla_extension 0.5.1
+//! rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+//! `/opt/xla-example/README.md` and `python/compile/aot.py`).
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A PJRT CPU client plus compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").field("platform", &self.platform()).finish()
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    /// Platform name (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it for this client.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path must be utf-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled HLO program. All our artifacts are lowered with
+/// `return_tuple=True`, so outputs are unpacked from a tuple literal.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").finish()
+    }
+}
+
+/// A dense f32 input tensor.
+#[derive(Debug, Clone)]
+pub struct TensorF32<'a> {
+    /// Row-major data.
+    pub data: &'a [f32],
+    /// Dimensions.
+    pub dims: &'a [i64],
+}
+
+impl Executable {
+    /// Execute with f32 inputs; returns each tuple output flattened to
+    /// `Vec<f32>` (converting from whatever dtype the program produced).
+    pub fn run_f32(&self, inputs: &[TensorF32<'_>]) -> Result<Vec<Vec<f32>>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| {
+                let expected: i64 = t.dims.iter().product();
+                anyhow::ensure!(
+                    expected as usize == t.data.len(),
+                    "dims {:?} do not match data length {}",
+                    t.dims,
+                    t.data.len()
+                );
+                Ok(xla::Literal::vec1(t.data).reshape(t.dims)?)
+            })
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        let outputs = result.to_tuple().context("unpacking output tuple")?;
+        outputs
+            .into_iter()
+            .map(|lit| {
+                let lit = lit
+                    .convert(xla::ElementType::F32.primitive_type())
+                    .context("converting output to f32")?;
+                Ok(lit.to_vec::<f32>()?)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Runtime tests that need real artifacts live in `rust/tests/`
+    // (integration) and run only when `artifacts/` has been built.
+}

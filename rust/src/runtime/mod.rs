@@ -1,0 +1,10 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts (built once by
+//! `python/compile/aot.py`) and execute them from the Rust request path.
+//! Python is never on the request path.
+
+pub mod accel;
+pub mod artifacts;
+pub mod client;
+
+pub use accel::Accelerator;
+pub use artifacts::{ArtifactKind, ArtifactSet};

@@ -1,0 +1,1054 @@
+//! The parallel branch-and-reduce engine (paper §III).
+//!
+//! Reproduces the GPU execution model: N workers ("thread blocks"), each
+//! with a private LIFO stack of search-tree nodes, plus a shared MPMC
+//! worklist for load balancing. A node's entire intermediate state is a
+//! degree array over the root-induced subgraph (generic dtype `T`), the
+//! committed solution size, an incremental edge count, the non-zero
+//! bounds window, and a registry context.
+//!
+//! One engine serves all three paper variants:
+//! * **proposed** — `component_aware + load_balance`;
+//! * **prior work (Yamout et al.)** — `load_balance` only (plus the
+//!   pipeline disables root-induce / bounds / small dtypes);
+//! * **no load balance** — `component_aware` with private stacks only
+//!   (sub-trees statically seeded round-robin, components kept local).
+//!
+//! PVC (§III-E) runs the same engine with the global best initialized to
+//! `k + 1`, registry propagation enabled, and stop-on-first-improvement.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::degree::{DegElem, NonZeroBounds};
+use crate::graph::Graph;
+use crate::reduce::special::classify;
+use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
+
+use super::registry::{cas_min, Registry, NONE};
+use super::worklist::Worklist;
+
+/// Flattened engine configuration (see `SolverConfig` for the public
+/// pipeline-level knobs).
+#[derive(Debug, Clone)]
+pub struct EngineCfg {
+    /// Detect component splits and branch on components (§III).
+    pub component_aware: bool,
+    /// Offload children to the shared worklist (§II-C).
+    pub load_balance: bool,
+    /// Maintain non-zero bounds windows (§IV-C).
+    pub use_bounds: bool,
+    /// Worker threads to run.
+    pub workers: usize,
+    /// Stop on the first global improvement (PVC semantics).
+    pub stop_on_improvement: bool,
+    /// Wall-clock deadline.
+    pub deadline: Option<Instant>,
+    /// Record per-activity timings (Figure 4).
+    pub instrument: bool,
+}
+
+/// Counters collected by the engine (Tables III / IV / Fig 4 inputs).
+#[derive(Debug, Clone, Default)]
+pub struct EngineStats {
+    /// Search-tree nodes visited.
+    pub tree_nodes: u64,
+    /// Nodes that branched on components.
+    pub component_branches: u64,
+    /// Histogram: components-per-branch → occurrence count.
+    pub comp_histogram: BTreeMap<u32, u64>,
+    /// Components solved in closed form (§III-D clique/cycle rules).
+    pub special_solved: u64,
+    /// Deepest private stack observed.
+    pub max_stack_depth: usize,
+    /// Nodes offloaded to the shared worklist.
+    pub worklist_pushes: u64,
+    /// Cross-worker steals from the worklist.
+    pub worklist_steals: u64,
+    /// Registry entries allocated.
+    pub registry_entries: u64,
+    /// Per-activity busy nanoseconds (all workers merged).
+    pub activity: [u64; NUM_ACTIVITIES],
+}
+
+impl EngineStats {
+    fn merge(&mut self, other: &EngineStats) {
+        self.tree_nodes += other.tree_nodes;
+        self.component_branches += other.component_branches;
+        for (&k, &v) in &other.comp_histogram {
+            *self.comp_histogram.entry(k).or_insert(0) += v;
+        }
+        self.special_solved += other.special_solved;
+        self.max_stack_depth = self.max_stack_depth.max(other.max_stack_depth);
+        self.worklist_pushes += other.worklist_pushes;
+        self.worklist_steals += other.worklist_steals;
+        for i in 0..NUM_ACTIVITIES {
+            self.activity[i] += other.activity[i];
+        }
+    }
+}
+
+/// Result of an engine run over the residual graph.
+#[derive(Debug, Clone)]
+pub struct EngineOutcome {
+    /// Best (residual-relative) cover size found, including the initial
+    /// bound if never improved.
+    pub best: u32,
+    /// Whether the initial bound was improved.
+    pub improved: bool,
+    /// Counters.
+    pub stats: EngineStats,
+    /// True if the deadline fired before exhausting the search.
+    pub timed_out: bool,
+}
+
+/// One search-tree node. `deg` is the full degree array of the induced
+/// subgraph — exactly the paper's stack-entry payload.
+struct Node<T> {
+    deg: Box<[T]>,
+    sol: u32,
+    edges: u64,
+    bounds: NonZeroBounds,
+    ctx: u32,
+}
+
+struct Shared<'g, T> {
+    g: &'g Graph,
+    cfg: EngineCfg,
+    registry: Registry,
+    worklist: Worklist<Node<T>>,
+    best: AtomicU32,
+    pending: AtomicU64,
+    stop: AtomicBool,
+    improved: AtomicBool,
+    timed_out: AtomicBool,
+    low_water: usize,
+    stats_sink: Mutex<EngineStats>,
+}
+
+impl<'g, T: DegElem> Shared<'g, T> {
+    /// Prune bound for a node: global best at the root, `min(Best,
+    /// Limit)` inside a component context.
+    #[inline]
+    fn bound_of(&self, ctx: u32) -> u32 {
+        if ctx == NONE {
+            self.best.load(Ordering::SeqCst)
+        } else {
+            self.registry.bound(ctx)
+        }
+    }
+
+    /// Record an achievable root-level total.
+    fn on_root_total(&self, total: u32) {
+        if cas_min(&self.best, total).is_some() {
+            self.improved.store(true, Ordering::SeqCst);
+            if self.cfg.stop_on_improvement {
+                self.stop.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+struct WorkerCtx<T> {
+    id: usize,
+    stack: Vec<Node<T>>,
+    /// Seeding mode (no-load-balance): children go to this FIFO frontier.
+    frontier: Option<std::collections::VecDeque<Node<T>>>,
+    /// BFS scratch: visit stamps (avoids clearing between searches).
+    visit: Vec<u32>,
+    stamp: u32,
+    queue: Vec<u32>,
+    nbuf: Vec<u32>,
+    stats: EngineStats,
+    timer: ActivityTimer,
+    deadline_tick: u32,
+}
+
+impl<T: DegElem> WorkerCtx<T> {
+    fn new(id: usize, n: usize, instrument: bool) -> Self {
+        WorkerCtx {
+            id,
+            stack: Vec::new(),
+            frontier: None,
+            visit: vec![0; n],
+            stamp: 0,
+            queue: Vec::new(),
+            nbuf: Vec::new(),
+            stats: EngineStats::default(),
+            timer: if instrument { ActivityTimer::enabled() } else { ActivityTimer::disabled() },
+            deadline_tick: 0,
+        }
+    }
+}
+
+/// Run the engine on the (already root-reduced, induced) graph.
+///
+/// `initial_best` is the residual-relative upper bound (greedy bound
+/// minus root-forced vertices for MVC; `k + 1` for PVC). Returns the best
+/// value found (`== initial_best` if not improved).
+pub fn run<T: DegElem>(
+    g: &Graph,
+    initial_best: u32,
+    cfg: EngineCfg,
+) -> EngineOutcome {
+    let n = g.num_vertices();
+    let workers = cfg.workers.max(1);
+    let shared = Shared::<T> {
+        g,
+        registry: Registry::new(cfg.stop_on_improvement),
+        worklist: Worklist::new(workers),
+        best: AtomicU32::new(initial_best),
+        pending: AtomicU64::new(0),
+        stop: AtomicBool::new(false),
+        improved: AtomicBool::new(false),
+        timed_out: AtomicBool::new(false),
+        low_water: 2 * workers,
+        stats_sink: Mutex::new(EngineStats::default()),
+        cfg,
+    };
+
+    // Root node over the full residual graph.
+    let root = Node::<T> {
+        deg: crate::degree::initial_degrees::<T>(g).into_boxed_slice(),
+        sol: 0,
+        edges: g.num_edges() as u64,
+        bounds: NonZeroBounds::full(n),
+        ctx: NONE,
+    };
+
+    if shared.cfg.load_balance {
+        shared.pending.store(1, Ordering::SeqCst);
+        shared.worklist.push(0, root);
+        run_workers(&shared, workers, None);
+    } else {
+        // Static seeding (prior works [3], [4]): expand a frontier of
+        // sub-trees breadth-first, then give each worker a fixed share.
+        let mut seeder = WorkerCtx::<T>::new(0, n, shared.cfg.instrument);
+        seeder.frontier = Some(std::collections::VecDeque::new());
+        shared.pending.store(1, Ordering::SeqCst);
+        seeder.frontier.as_mut().unwrap().push_back(root);
+        let target = workers * 4;
+        let mut processed = 0usize;
+        while processed < 4096 {
+            let Some(node) = seeder.frontier.as_mut().unwrap().pop_front() else { break };
+            if seeder.frontier.as_ref().unwrap().len() + 1 >= target {
+                seeder.frontier.as_mut().unwrap().push_front(node);
+                break;
+            }
+            process(&shared, &mut seeder, node);
+            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            processed += 1;
+            if shared.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        let frontier = seeder.frontier.take().unwrap();
+        seeder.timer.stop();
+        let mut sink = shared.stats_sink.lock().unwrap();
+        seeder.stats.activity = seeder.timer.totals();
+        sink.merge(&seeder.stats);
+        drop(sink);
+        run_workers(&shared, workers, Some(frontier));
+    }
+
+    let mut stats = shared.stats_sink.into_inner().unwrap();
+    stats.worklist_pushes = shared.worklist.total_pushes() as u64;
+    stats.worklist_steals = shared.worklist.total_steals() as u64;
+    stats.registry_entries = shared.registry.len() as u64;
+    let timed_out = shared.timed_out.load(Ordering::SeqCst);
+    if cfg!(debug_assertions) && !timed_out && !shared.stop.load(Ordering::SeqCst) {
+        shared.registry.assert_drained();
+    }
+    EngineOutcome {
+        best: shared.best.load(Ordering::SeqCst),
+        improved: shared.improved.load(Ordering::SeqCst),
+        stats,
+        timed_out,
+    }
+}
+
+fn run_workers<T: DegElem>(
+    shared: &Shared<'_, T>,
+    workers: usize,
+    seed: Option<std::collections::VecDeque<Node<T>>>,
+) {
+    let n = shared.g.num_vertices();
+    let mut seeds: Vec<Vec<Node<T>>> = (0..workers).map(|_| Vec::new()).collect();
+    if let Some(frontier) = seed {
+        for (i, node) in frontier.into_iter().enumerate() {
+            seeds[i % workers].push(node);
+        }
+    }
+    std::thread::scope(|s| {
+        for (id, seed_nodes) in seeds.into_iter().enumerate() {
+            let shared = &*shared;
+            s.spawn(move || {
+                let mut ctx = WorkerCtx::<T>::new(id, n, shared.cfg.instrument);
+                ctx.stack = seed_nodes;
+                worker_loop(shared, &mut ctx);
+                ctx.timer.stop();
+                ctx.stats.activity = ctx.timer.totals();
+                shared.stats_sink.lock().unwrap().merge(&ctx.stats);
+            });
+        }
+    });
+}
+
+fn worker_loop<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
+    let mut idle_spins = 0u32;
+    loop {
+        if shared.stop.load(Ordering::Relaxed) {
+            return;
+        }
+        ctx.timer.switch(Activity::Queue);
+        let node = ctx.stack.pop().or_else(|| {
+            if shared.cfg.load_balance {
+                shared.worklist.pop(ctx.id)
+            } else {
+                None
+            }
+        });
+        match node {
+            Some(node) => {
+                idle_spins = 0;
+                process(shared, ctx, node);
+                shared.pending.fetch_sub(1, Ordering::SeqCst);
+                check_deadline(shared, ctx);
+            }
+            None => {
+                if shared.pending.load(Ordering::SeqCst) == 0 {
+                    return;
+                }
+                ctx.timer.switch(Activity::Idle);
+                idle_spins += 1;
+                if idle_spins > 64 {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                    check_deadline(shared, ctx);
+                } else {
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+}
+
+#[inline]
+fn check_deadline<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
+    ctx.deadline_tick = ctx.deadline_tick.wrapping_add(1);
+    if ctx.deadline_tick % 64 != 0 {
+        return;
+    }
+    if let Some(d) = shared.cfg.deadline {
+        if Instant::now() >= d {
+            shared.timed_out.store(true, Ordering::SeqCst);
+            shared.stop.store(true, Ordering::SeqCst);
+        }
+    }
+}
+
+/// Process one search-tree node, descending left branches in place.
+fn process<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, mut node: Node<T>) {
+    loop {
+        ctx.stats.tree_nodes += 1;
+
+        // ---- reduce (Alg. 2 line 2) ----
+        ctx.timer.switch(Activity::Reduce);
+        let red = reduce_node(shared, &mut node);
+
+        // ---- stopping conditions (lines 3-4) ----
+        ctx.timer.switch(Activity::Leaf);
+        let bound = shared.bound_of(node.ctx);
+        if node.sol >= bound {
+            complete(shared, node.ctx);
+            return;
+        }
+        let rem = (bound - node.sol - 1) as u64;
+        if node.edges > rem * rem {
+            complete(shared, node.ctx);
+            return;
+        }
+        // ---- leaf (lines 5-7) ----
+        if node.edges == 0 {
+            report_leaf(shared, node.ctx, node.sol);
+            complete(shared, node.ctx);
+            return;
+        }
+
+        // ---- component search (line 9) ----
+        if shared.cfg.component_aware {
+            ctx.timer.switch(Activity::ComponentSearch);
+            match scan_components(shared, ctx, &node, &red) {
+                Scan::Single => {}
+                Scan::SingleSpecial(mvc) => {
+                    ctx.stats.special_solved += 1;
+                    report_leaf(shared, node.ctx, node.sol + mvc);
+                    complete(shared, node.ctx);
+                    return;
+                }
+                Scan::Split { first_size, dmin, dmax } => {
+                    branch_on_components(shared, ctx, node, first_size, dmin, dmax);
+                    return;
+                }
+            }
+        }
+
+        // ---- single-component branch (lines 11-13) ----
+        ctx.timer.switch(Activity::Branch);
+        let vmax = red.vmax;
+        debug_assert_eq!(vmax, max_degree_vertex(&node), "fused argmax out of sync");
+        debug_assert_ne!(vmax, u32::MAX);
+
+        // right child: N(vmax) into S
+        let right = make_right_child(shared, ctx, &node, vmax);
+        shared.registry.on_branch(node.ctx);
+        push_child(shared, ctx, right);
+
+        // left child: vmax into S — descend in place
+        cover_vertex(shared.g, &mut node, vmax);
+        node.sol += 1;
+    }
+}
+
+/// Outcome of the reduce fixpoint, carrying facts the final sweep
+/// computed for free so later stages skip their own window scans.
+#[derive(Debug, Clone, Copy)]
+struct ReduceOutcome {
+    /// Present (non-zero-degree) vertices in the residual.
+    present: usize,
+    /// First present vertex (BFS seed), or `u32::MAX`.
+    first: u32,
+    /// Vertex of maximum residual degree, or `u32::MAX`.
+    vmax: u32,
+}
+
+const NO_VERTEX: ReduceOutcome = ReduceOutcome { present: 0, first: u32::MAX, vmax: u32::MAX };
+
+/// Apply the cheap reduction rules to a fixpoint over the bounds window.
+///
+/// The final (unchanged) sweep doubles as the census pass: it counts the
+/// present vertices, finds the first one (the component-BFS seed), and
+/// selects the maximum-degree branch vertex — so neither the component
+/// scan nor the branching step needs another pass over the window.
+fn reduce_node<T: DegElem>(shared: &Shared<'_, T>, node: &mut Node<T>) -> ReduceOutcome {
+    let g = shared.g;
+    loop {
+        if shared.cfg.use_bounds {
+            node.bounds = node.bounds.tighten(&node.deg);
+        } else {
+            node.bounds = NonZeroBounds::full(node.deg.len());
+        }
+        if node.edges == 0 || node.bounds.is_empty() {
+            return NO_VERTEX;
+        }
+        let bound = shared.bound_of(node.ctx);
+        if node.sol >= bound {
+            return NO_VERTEX; // stopping condition will fire
+        }
+        let mut changed = false;
+        let mut present = 0usize;
+        let mut first = u32::MAX;
+        let mut vmax = u32::MAX;
+        let mut dmax = 0u32;
+        let lo = node.bounds.lo as usize;
+        let hi = node.bounds.hi as usize;
+        let mut v = lo;
+        // while-loop over the window: measurably cheaper than the
+        // RangeInclusive iterator in this innermost sweep
+        while v <= hi {
+            let d = node.deg[v].to_u32();
+            if d == 0 {
+                v += 1;
+                continue;
+            }
+            present += 1;
+            if first == u32::MAX {
+                first = v as u32;
+            }
+            if d > dmax {
+                dmax = d;
+                vmax = v as u32;
+            }
+            match d {
+                1 => {
+                    // degree-one: cover the neighbor
+                    let u = first_present_neighbor(g, &node.deg, v as u32);
+                    cover_vertex(g, node, u);
+                    node.sol += 1;
+                    changed = true;
+                }
+                2 => {
+                    // degree-two triangle: cover both neighbors
+                    let (a, b) = two_present_neighbors(g, &node.deg, v as u32);
+                    if g.has_edge(a, b) {
+                        cover_vertex(g, node, a);
+                        cover_vertex(g, node, b);
+                        node.sol += 2;
+                        changed = true;
+                    }
+                }
+                d => {
+                    // high-degree rule
+                    let budget = bound.saturating_sub(node.sol).saturating_sub(1);
+                    if d > budget {
+                        cover_vertex(g, node, v as u32);
+                        node.sol += 1;
+                        changed = true;
+                    }
+                }
+            }
+            if node.edges == 0 || node.sol >= bound {
+                return NO_VERTEX;
+            }
+            v += 1;
+        }
+        if !changed {
+            // nothing fired this sweep, so the census is exact
+            return ReduceOutcome { present, first, vmax };
+        }
+    }
+}
+
+/// Remove `v` into the cover: zero its degree, decrement present
+/// neighbors, maintain the edge count. (Does not touch `sol`.)
+#[inline]
+fn cover_vertex<T: DegElem>(g: &Graph, node: &mut Node<T>, v: u32) {
+    let d = node.deg[v as usize].to_u32();
+    debug_assert!(d > 0);
+    node.deg[v as usize] = T::from_u32(0);
+    node.edges -= d as u64;
+    let mut remaining = d;
+    for &w in g.neighbors(v) {
+        let dw = node.deg[w as usize].to_u32();
+        if dw > 0 {
+            node.deg[w as usize] = T::from_u32(dw - 1);
+            remaining -= 1;
+            if remaining == 0 {
+                break;
+            }
+        }
+    }
+    debug_assert_eq!(remaining, 0, "degree count out of sync");
+}
+
+#[inline]
+fn first_present_neighbor<T: DegElem>(g: &Graph, deg: &[T], v: u32) -> u32 {
+    for &w in g.neighbors(v) {
+        if deg[w as usize].to_u32() > 0 {
+            return w;
+        }
+    }
+    unreachable!("degree-1 vertex must have a present neighbor")
+}
+
+#[inline]
+fn two_present_neighbors<T: DegElem>(g: &Graph, deg: &[T], v: u32) -> (u32, u32) {
+    let mut first = u32::MAX;
+    for &w in g.neighbors(v) {
+        if deg[w as usize].to_u32() > 0 {
+            if first == u32::MAX {
+                first = w;
+            } else {
+                return (first, w);
+            }
+        }
+    }
+    unreachable!("degree-2 vertex must have two present neighbors")
+}
+
+/// Vertex of maximum residual degree within the bounds window
+/// (debug cross-check for the fused census in `reduce_node`).
+#[cfg_attr(not(debug_assertions), allow(dead_code))]
+fn max_degree_vertex<T: DegElem>(node: &Node<T>) -> u32 {
+    let mut vmax = u32::MAX;
+    let mut dmax = 0u32;
+    for v in node.bounds.lo..=node.bounds.hi {
+        let d = node.deg[v as usize].to_u32();
+        if d > dmax {
+            dmax = d;
+            vmax = v;
+        }
+    }
+    vmax
+}
+
+/// Build the right child (`N(vmax)` into the cover).
+fn make_right_child<T: DegElem>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    node: &Node<T>,
+    vmax: u32,
+) -> Node<T> {
+    let g = shared.g;
+    ctx.nbuf.clear();
+    ctx.nbuf.extend(
+        g.neighbors(vmax).iter().copied().filter(|&w| node.deg[w as usize].to_u32() > 0),
+    );
+    let mut child = Node {
+        deg: node.deg.clone(),
+        sol: node.sol + ctx.nbuf.len() as u32,
+        edges: node.edges,
+        bounds: node.bounds,
+        ctx: node.ctx,
+    };
+    for &u in &ctx.nbuf {
+        if child.deg[u as usize].to_u32() > 0 {
+            cover_vertex(g, &mut child, u);
+        }
+    }
+    debug_assert_eq!(child.deg[vmax as usize].to_u32(), 0);
+    child
+}
+
+/// Push a child node to the worklist (if balancing and it is hungry) or
+/// the private stack / seed frontier.
+fn push_child<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, node: Node<T>) {
+    shared.pending.fetch_add(1, Ordering::SeqCst);
+    if let Some(front) = ctx.frontier.as_mut() {
+        front.push_back(node);
+        return;
+    }
+    if shared.cfg.load_balance && shared.worklist.is_hungry(shared.low_water) {
+        shared.worklist.push(ctx.id, node);
+    } else {
+        ctx.stack.push(node);
+        ctx.stats.max_stack_depth = ctx.stats.max_stack_depth.max(ctx.stack.len());
+    }
+}
+
+fn report_leaf<T: DegElem>(shared: &Shared<'_, T>, ctx: u32, size: u32) {
+    if ctx == NONE {
+        shared.on_root_total(size);
+    } else {
+        let mut on_root = |t: u32| shared.on_root_total(t);
+        shared.registry.report_solution(ctx, size, &mut on_root);
+    }
+}
+
+fn complete<T: DegElem>(shared: &Shared<'_, T>, ctx: u32) {
+    let mut on_root = |t: u32| shared.on_root_total(t);
+    shared.registry.complete_node(ctx, &mut on_root);
+}
+
+enum Scan {
+    /// Residual graph is one component (not special).
+    Single,
+    /// One component and it is a clique / chordless cycle with this MVC.
+    SingleSpecial(u32),
+    /// Multiple components. The detection BFS's component is left in
+    /// `ctx.queue` (stamp intact) so the split branch can reuse it.
+    Split {
+        /// |V| of the already-discovered first component.
+        first_size: u32,
+        /// Its minimum residual degree.
+        dmin: u32,
+        /// Its maximum residual degree.
+        dmax: u32,
+    },
+}
+
+/// One BFS from the first present vertex; decides single vs split.
+/// On `Single`, also classifies the special-component rules (§III-D).
+/// `present_total` comes for free from the reduce fixpoint's final sweep.
+fn scan_components<T: DegElem>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    node: &Node<T>,
+    red: &ReduceOutcome,
+) -> Scan {
+    let start = red.first;
+    debug_assert!(start != u32::MAX, "edges > 0 implies a present vertex");
+    let (size, dmin, dmax) = bfs_component(shared.g, node, ctx, start);
+    if (size as usize) == red.present {
+        if dmin == dmax {
+            if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
+                return Scan::SingleSpecial(sp.mvc_size());
+            }
+        }
+        return Scan::Single;
+    }
+    Scan::Split { first_size: size, dmin, dmax }
+}
+
+/// Branch on components (Alg. 2 lines 14-20): register a parent entry,
+/// dispatch each component **eagerly** as it is found (special ones in
+/// closed form), and release the discovery reference at the end.
+///
+/// The split-detection BFS already discovered the first component
+/// (`ctx.queue`, visit stamps intact), so discovery resumes from there
+/// instead of re-walking it.
+fn branch_on_components<T: DegElem>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    node: Node<T>,
+    first_size: u32,
+    first_dmin: u32,
+    first_dmax: u32,
+) {
+    let g = shared.g;
+    ctx.stats.component_branches += 1;
+    let parent = shared.registry.new_parent(node.sol, node.ctx);
+    ctx.stats.registry_entries += 1;
+
+    // Component 1: reuse the detection BFS result.
+    dispatch_component(shared, ctx, &node, parent, first_size, first_dmin, first_dmax);
+    let mut comp_count = 1u32;
+
+    // Remaining components: continue scanning under the same stamp.
+    let mut cursor = node.bounds.lo;
+    loop {
+        // next unvisited present vertex
+        let mut start = u32::MAX;
+        while cursor <= node.bounds.hi {
+            let v = cursor;
+            cursor += 1;
+            if node.deg[v as usize].to_u32() > 0 && ctx.visit[v as usize] != ctx.stamp {
+                start = v;
+                break;
+            }
+        }
+        if start == u32::MAX {
+            break;
+        }
+        let (size, dmin, dmax) = bfs_component_accumulate(g, &node, ctx, start);
+        comp_count += 1;
+        dispatch_component(shared, ctx, &node, parent, size, dmin, dmax);
+    }
+
+    *ctx.stats.comp_histogram.entry(comp_count).or_insert(0) += 1;
+    let mut on_root = |t: u32| shared.on_root_total(t);
+    shared.registry.finish_scan(parent, &mut on_root);
+}
+
+/// Handle one discovered component (vertex list in `ctx.queue`): solve
+/// cliques/chordless cycles in closed form (§III-D), otherwise register
+/// a child entry and dispatch the component node for search.
+fn dispatch_component<T: DegElem>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    node: &Node<T>,
+    parent: u32,
+    size: u32,
+    dmin: u32,
+    dmax: u32,
+) {
+    if dmin == dmax {
+        if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
+            ctx.stats.special_solved += 1;
+            shared.registry.add_solved_component(parent, sp.mvc_size());
+            return;
+        }
+    }
+
+    // Register the component child: Best starts at the achievable
+    // |V_i|-1; Limit adds the parent's remaining budget.
+    let parent_bound = shared.bound_of_parent(node.ctx, parent);
+    let best0 = size - 1;
+    let limit = best0.min(parent_bound);
+    let child_ctx = shared.registry.new_child(parent, best0, limit);
+    ctx.stats.registry_entries += 1;
+
+    // Materialize the component node: degrees masked to the component.
+    let mut deg = vec![T::from_u32(0); node.deg.len()].into_boxed_slice();
+    let mut edges2 = 0u64;
+    let (mut lo, mut hi) = (u32::MAX, 0u32);
+    for &v in &ctx.queue {
+        let d = node.deg[v as usize];
+        deg[v as usize] = d;
+        edges2 += d.to_u32() as u64;
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let child = Node {
+        deg,
+        sol: 0,
+        edges: edges2 / 2,
+        bounds: NonZeroBounds { lo, hi },
+        ctx: child_ctx,
+    };
+    push_child(shared, ctx, child);
+}
+
+impl<'g, T: DegElem> Shared<'g, T> {
+    /// Remaining budget for a new component: the enclosing context bound
+    /// minus what the split has already committed (`Sum` so far).
+    fn bound_of_parent(&self, node_ctx: u32, parent: u32) -> u32 {
+        let ctx_bound = self.bound_of(node_ctx);
+        let (sum_now, _, _, _) = self.registry.snapshot(parent);
+        ctx_bound.saturating_sub(sum_now)
+    }
+}
+
+/// BFS one component starting at `start` using a fresh stamp.
+/// Returns (size, min residual degree, max residual degree); the visited
+/// vertex list is left in `ctx.queue`.
+fn bfs_component<T: DegElem>(
+    g: &Graph,
+    node: &Node<T>,
+    ctx: &mut WorkerCtx<T>,
+    start: u32,
+) -> (u32, u32, u32) {
+    fresh_stamp(ctx);
+    bfs_component_accumulate(g, node, ctx, start)
+}
+
+/// Advance the visit stamp, clearing marks on wraparound.
+fn fresh_stamp<T: DegElem>(ctx: &mut WorkerCtx<T>) {
+    ctx.stamp = ctx.stamp.wrapping_add(1);
+    if ctx.stamp == 0 {
+        ctx.visit.fill(0);
+        ctx.stamp = 1;
+    }
+}
+
+/// BFS one component reusing the current stamp (so successive calls in a
+/// split scan accumulate the visited set).
+fn bfs_component_accumulate<T: DegElem>(
+    g: &Graph,
+    node: &Node<T>,
+    ctx: &mut WorkerCtx<T>,
+    start: u32,
+) -> (u32, u32, u32) {
+    ctx.queue.clear();
+    ctx.queue.push(start);
+    ctx.visit[start as usize] = ctx.stamp;
+    let mut head = 0;
+    let (mut dmin, mut dmax) = (u32::MAX, 0u32);
+    while head < ctx.queue.len() {
+        let u = ctx.queue[head];
+        head += 1;
+        let du = node.deg[u as usize].to_u32();
+        dmin = dmin.min(du);
+        dmax = dmax.max(du);
+        let mut remaining = du;
+        for &w in g.neighbors(u) {
+            if node.deg[w as usize].to_u32() > 0 {
+                remaining -= 1;
+                if ctx.visit[w as usize] != ctx.stamp {
+                    ctx.visit[w as usize] = ctx.stamp;
+                    ctx.queue.push(w);
+                }
+                if remaining == 0 {
+                    break;
+                }
+            }
+        }
+    }
+    (ctx.queue.len() as u32, dmin, dmax)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::solver::oracle;
+
+    fn run_cfg(g: &Graph, component_aware: bool, load_balance: bool, workers: usize) -> u32 {
+        let ub = crate::solver::greedy::greedy_bound(g);
+        let out = run::<u32>(
+            g,
+            ub,
+            EngineCfg {
+                component_aware,
+                load_balance,
+                use_bounds: true,
+                workers,
+                stop_on_improvement: false,
+                deadline: None,
+                instrument: false,
+            },
+        );
+        assert!(!out.timed_out);
+        out.best
+    }
+
+    #[test]
+    fn matches_oracle_all_variants() {
+        for seed in 0..15 {
+            let g = generators::erdos_renyi(18, 0.18, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(run_cfg(&g, true, true, 4), opt, "proposed seed {seed}");
+            assert_eq!(run_cfg(&g, false, true, 4), opt, "yamout seed {seed}");
+            assert_eq!(run_cfg(&g, true, false, 4), opt, "no-lb seed {seed}");
+            assert_eq!(run_cfg(&g, true, true, 1), opt, "1-worker seed {seed}");
+        }
+    }
+
+    #[test]
+    fn splitting_graphs_match_oracle() {
+        for seed in 0..10 {
+            let g = generators::union_of_random(4, 3, 6, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(run_cfg(&g, true, true, 4), opt, "seed {seed}");
+            assert_eq!(run_cfg(&g, false, true, 4), opt, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn structured_graphs() {
+        let cases: Vec<(Graph, u32)> = vec![
+            (generators::cycle(9), 5),
+            (generators::clique(7), 6),
+            (generators::path(10), 5),
+            (generators::star(12), 1),
+        ];
+        for (g, expect) in cases {
+            assert_eq!(run_cfg(&g, true, true, 2), expect);
+        }
+    }
+
+    #[test]
+    fn component_branches_counted() {
+        // two reduction-proof, non-special components (3-regular,
+        // triangle-free) so the split must be handled by the registry
+        let g = Graph::disjoint_union(&[generators::petersen(), generators::petersen()]);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(
+            &g,
+            ub,
+            EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 2,
+                stop_on_improvement: false,
+                deadline: None,
+                instrument: false,
+            },
+        );
+        assert_eq!(out.best, oracle::mvc_size(&g));
+        assert!(out.stats.component_branches >= 1);
+        assert!(!out.stats.comp_histogram.is_empty());
+    }
+
+    #[test]
+    fn pvc_mode_stops_early_when_found() {
+        let g = generators::erdos_renyi(20, 0.2, 3);
+        let opt = oracle::mvc_size(&g);
+        // k = opt: initial best = k+1, must improve and stop
+        let out = run::<u32>(
+            &g,
+            opt + 1,
+            EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 4,
+                stop_on_improvement: true,
+                deadline: None,
+                instrument: false,
+            },
+        );
+        assert!(out.improved);
+        assert!(out.best <= opt);
+    }
+
+    #[test]
+    fn pvc_mode_k_too_small_finds_nothing() {
+        let g = generators::erdos_renyi(16, 0.25, 5);
+        let opt = oracle::mvc_size(&g);
+        let out = run::<u32>(
+            &g,
+            opt, // searching for < opt ⇒ impossible
+            EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 4,
+                stop_on_improvement: true,
+                deadline: None,
+                instrument: false,
+            },
+        );
+        assert!(!out.improved);
+        assert_eq!(out.best, opt);
+    }
+
+    #[test]
+    fn small_dtypes_agree() {
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(20, 0.15, seed);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            let cfg = EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 3,
+                stop_on_improvement: false,
+                deadline: None,
+                instrument: false,
+            };
+            let a = run::<u8>(&g, ub, cfg.clone()).best;
+            let b = run::<u16>(&g, ub, cfg.clone()).best;
+            let c = run::<u32>(&g, ub, cfg).best;
+            assert_eq!(a, b, "seed {seed}");
+            assert_eq!(b, c, "seed {seed}");
+            assert_eq!(c, oracle::mvc_size(&g), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn bounds_disabled_agrees() {
+        for seed in 0..5 {
+            let g = generators::union_of_random(3, 4, 7, 0.25, seed);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            let mk = |use_bounds| EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds,
+                workers: 2,
+                stop_on_improvement: false,
+                deadline: None,
+                instrument: false,
+            };
+            assert_eq!(
+                run::<u32>(&g, ub, mk(true)).best,
+                run::<u32>(&g, ub, mk(false)).best,
+                "seed {seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn deadline_times_out() {
+        // a dense-ish graph with an immediate deadline must report timeout
+        let g = generators::p_hat(60, 0.3, 0.8, 1);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(
+            &g,
+            ub,
+            EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 2,
+                stop_on_improvement: false,
+                deadline: Some(Instant::now()),
+                instrument: false,
+            },
+        );
+        assert!(out.timed_out);
+    }
+
+    #[test]
+    fn instrumentation_records_activity() {
+        let g = generators::erdos_renyi(24, 0.2, 9);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(
+            &g,
+            ub,
+            EngineCfg {
+                component_aware: true,
+                load_balance: true,
+                use_bounds: true,
+                workers: 2,
+                stop_on_improvement: false,
+                deadline: None,
+                instrument: true,
+            },
+        );
+        let busy: u64 = out.stats.activity.iter().sum();
+        assert!(busy > 0);
+    }
+}

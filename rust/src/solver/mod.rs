@@ -1,0 +1,480 @@
+//! Vertex-cover solvers: public pipeline over the parallel engine and the
+//! sequential baseline.
+//!
+//! Variant presets mirror the paper's Table I columns:
+//! * [`SolverConfig::proposed`] — component-aware + load-balanced + all
+//!   degree-array optimizations (the paper's contribution);
+//! * [`SolverConfig::prior_work`] — the Yamout et al. baseline
+//!   (load-balanced, *not* component-aware, no §IV optimizations);
+//! * [`SolverConfig::no_load_balance`] — component-aware with private
+//!   stacks only;
+//! * [`SolverConfig::sequential`] — single-threaded Algorithm 2 with all
+//!   optimizations (supports witness extraction).
+
+pub mod engine;
+pub mod mis;
+pub mod greedy;
+pub mod occupancy;
+pub mod oracle;
+pub mod registry;
+pub mod sequential;
+pub mod worklist;
+
+use crate::degree::Dtype;
+use crate::graph::Graph;
+use crate::prep::{self, PrepConfig};
+use engine::{EngineCfg, EngineStats};
+use std::time::{Duration, Instant};
+
+/// Which execution strategy to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Variant {
+    /// Parallel, component-aware, load-balanced (the paper's system).
+    Proposed,
+    /// Parallel, load-balanced, *not* component-aware and without the
+    /// §IV degree-array optimizations (Yamout et al. [5]).
+    PriorWork,
+    /// Parallel, component-aware, but no shared worklist.
+    NoLoadBalance,
+    /// Single-threaded recursive Algorithm 2 with all optimizations.
+    Sequential,
+}
+
+impl Variant {
+    /// Short display name used in harness tables.
+    pub fn name(self) -> &'static str {
+        match self {
+            Variant::Proposed => "proposed",
+            Variant::PriorWork => "yamout",
+            Variant::NoLoadBalance => "no-lb",
+            Variant::Sequential => "sequential",
+        }
+    }
+}
+
+/// Full solver configuration.
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// Execution strategy.
+    pub variant: Variant,
+    /// Branch on components (§III). Defaults per variant.
+    pub component_aware: bool,
+    /// Root reduction + induced subgraph (§IV-B).
+    pub reduce_root: bool,
+    /// Crown rule at the root (§IV-B).
+    pub use_crown: bool,
+    /// Non-zero bounds windows (§IV-C).
+    pub use_bounds: bool,
+    /// Small degree dtypes (§IV-D).
+    pub small_dtypes: bool,
+    /// Worker override (default: occupancy model ∧ hardware threads).
+    pub workers: Option<usize>,
+    /// Wall-clock budget (tables use this as the ">6hrs" stand-in).
+    pub timeout: Option<Duration>,
+    /// Record Figure-4 activity timings.
+    pub instrument: bool,
+    /// Extract a witness cover (sequential variant only).
+    pub extract_cover: bool,
+}
+
+impl SolverConfig {
+    /// The paper's proposed solver.
+    pub fn proposed() -> SolverConfig {
+        SolverConfig {
+            variant: Variant::Proposed,
+            component_aware: true,
+            reduce_root: true,
+            use_crown: true,
+            use_bounds: true,
+            small_dtypes: true,
+            workers: None,
+            timeout: None,
+            instrument: false,
+            extract_cover: false,
+        }
+    }
+
+    /// The prior state-of-the-art GPU solution (Yamout et al. [5]):
+    /// worklist load balancing, but no component awareness and none of
+    /// the degree-array optimizations.
+    pub fn prior_work() -> SolverConfig {
+        SolverConfig {
+            variant: Variant::PriorWork,
+            component_aware: false,
+            reduce_root: false,
+            use_crown: false,
+            use_bounds: false,
+            small_dtypes: false,
+            ..SolverConfig::proposed()
+        }
+    }
+
+    /// Component-aware but statically scheduled (Table I column 3).
+    pub fn no_load_balance() -> SolverConfig {
+        SolverConfig { variant: Variant::NoLoadBalance, ..SolverConfig::proposed() }
+    }
+
+    /// Sequential baseline with all optimizations (Table I column 2).
+    pub fn sequential() -> SolverConfig {
+        SolverConfig { variant: Variant::Sequential, ..SolverConfig::proposed() }
+    }
+
+    /// Set a wall-clock budget.
+    pub fn with_timeout(mut self, t: Duration) -> SolverConfig {
+        self.timeout = Some(t);
+        self
+    }
+
+    /// Set an explicit worker count.
+    pub fn with_workers(mut self, w: usize) -> SolverConfig {
+        self.workers = Some(w);
+        self
+    }
+}
+
+/// Solver output.
+#[derive(Debug, Clone)]
+pub struct SolveResult {
+    /// Minimum vertex cover size (MVC), or the best found before timeout.
+    pub best: u32,
+    /// Witness cover (sequential variant with `extract_cover`).
+    pub cover: Option<Vec<u32>>,
+    /// Engine statistics (tree nodes, splits, histogram, …).
+    pub stats: EngineStats,
+    /// Vertices forced at the root / residual sizes (Table IV inputs).
+    pub prep: PrepSummary,
+    /// Wall-clock time.
+    pub elapsed: Duration,
+    /// True if the timeout fired before the search finished (the reported
+    /// `best` is then only an upper bound).
+    pub timed_out: bool,
+}
+
+/// Compact summary of the preparation stage.
+#[derive(Debug, Clone)]
+pub struct PrepSummary {
+    /// |V| of the original graph.
+    pub n_original: usize,
+    /// |V| of the residual (induced) graph the engine ran on.
+    pub n_residual: usize,
+    /// Vertices forced into the cover at the root.
+    pub forced: usize,
+    /// Greedy upper bound.
+    pub greedy_ub: u32,
+    /// Degree dtype used.
+    pub dtype: Dtype,
+    /// Modeled thread blocks (occupancy).
+    pub blocks: usize,
+    /// Whether one degree array fits in modeled shared memory.
+    pub fits_shared_mem: bool,
+    /// Worker threads actually used.
+    pub workers: usize,
+}
+
+/// PVC output.
+#[derive(Debug, Clone)]
+pub struct PvcResult {
+    /// Whether a cover of size ≤ k exists (false may also mean timeout).
+    pub found: bool,
+    /// Size of the found cover (≤ k) when `found`.
+    pub size: Option<u32>,
+    /// Engine statistics.
+    pub stats: EngineStats,
+    /// Wall-clock time.
+    pub elapsed: Duration,
+    /// True if the timeout fired before the search was exhausted.
+    pub timed_out: bool,
+}
+
+/// Solve Minimum Vertex Cover.
+pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
+    let start = Instant::now();
+    let deadline = cfg.timeout.map(|t| start + t);
+    let prep_cfg = PrepConfig {
+        reduce_root: cfg.reduce_root,
+        use_crown: cfg.use_crown,
+        small_dtypes: cfg.small_dtypes,
+    };
+    let p = prep::prepare(g, &prep_cfg, None);
+    let workers = resolve_workers(cfg, &p);
+
+    let initial = p.residual_ub;
+    let (engine_out, cover) = match cfg.variant {
+        Variant::Sequential => {
+            let out = sequential::solve(
+                &p.residual.graph,
+                initial,
+                cfg.component_aware,
+                cfg.extract_cover,
+                deadline,
+            );
+            let mut stats = EngineStats::default();
+            stats.tree_nodes = out.tree_nodes;
+            stats.component_branches = out.component_branches;
+            let cover = out.cover.map(|c| {
+                let mut full = p.forced_cover.clone();
+                full.extend(p.residual.translate_cover(&c));
+                full
+            });
+            (
+                engine::EngineOutcome {
+                    best: out.best,
+                    improved: out.best < initial,
+                    stats,
+                    timed_out: out.timed_out,
+                },
+                cover,
+            )
+        }
+        _ => {
+            let ecfg = EngineCfg {
+                component_aware: cfg.component_aware,
+                load_balance: cfg.variant != Variant::NoLoadBalance,
+                use_bounds: cfg.use_bounds,
+                workers,
+                stop_on_improvement: false,
+                deadline,
+                instrument: cfg.instrument,
+            };
+            (run_engine(&p.residual.graph, p.dtype, initial, ecfg), None)
+        }
+    };
+
+    // best = min(greedy, forced + residual best)
+    let total = p.total_size(engine_out.best.min(initial));
+    let best = total.min(p.greedy_ub);
+    // If the engine did not improve, fall back to the greedy witness.
+    let cover = cover.filter(|c| c.len() as u32 == best);
+
+    SolveResult {
+        best,
+        cover,
+        stats: engine_out.stats,
+        prep: summarize(g, &p, workers),
+        elapsed: start.elapsed(),
+        timed_out: engine_out.timed_out,
+    }
+}
+
+/// Solve Parameterized Vertex Cover: is there a cover of size ≤ k?
+pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
+    let start = Instant::now();
+    let deadline = cfg.timeout.map(|t| start + t);
+    let prep_cfg = PrepConfig {
+        reduce_root: cfg.reduce_root,
+        use_crown: cfg.use_crown,
+        small_dtypes: cfg.small_dtypes,
+    };
+    // ub = k+1 keeps the high-degree rule sound for covers ≤ k.
+    let p = prep::prepare(g, &prep_cfg, Some(k.saturating_add(1)));
+
+    // The greedy bound may already satisfy k.
+    if p.greedy_ub <= k {
+        return PvcResult {
+            found: true,
+            size: Some(p.greedy_ub),
+            stats: EngineStats::default(),
+            elapsed: start.elapsed(),
+            timed_out: false,
+        };
+    }
+    let forced = p.forced_cover.len() as u32;
+    if forced > k {
+        return PvcResult {
+            found: false,
+            size: None,
+            stats: EngineStats::default(),
+            elapsed: start.elapsed(),
+            timed_out: false,
+        };
+    }
+    let k_resid = k - forced;
+    let initial = (k_resid + 1).min(p.residual.graph.num_vertices() as u32 + 1);
+    let workers = resolve_workers(cfg, &p);
+
+    let out = match cfg.variant {
+        Variant::Sequential => {
+            // sequential PVC: same bound trick; recursion stops via best
+            let o = sequential::solve(&p.residual.graph, initial, cfg.component_aware, false, deadline);
+            engine::EngineOutcome {
+                best: o.best,
+                improved: o.best < initial,
+                stats: {
+                    let mut s = EngineStats::default();
+                    s.tree_nodes = o.tree_nodes;
+                    s.component_branches = o.component_branches;
+                    s
+                },
+                timed_out: o.timed_out,
+            }
+        }
+        _ => {
+            let ecfg = EngineCfg {
+                component_aware: cfg.component_aware,
+                load_balance: cfg.variant != Variant::NoLoadBalance,
+                use_bounds: cfg.use_bounds,
+                workers,
+                stop_on_improvement: true,
+                deadline,
+                instrument: cfg.instrument,
+            };
+            run_engine(&p.residual.graph, p.dtype, initial, ecfg)
+        }
+    };
+
+    let found = out.improved && out.best <= k_resid;
+    PvcResult {
+        found,
+        size: if found { Some(forced + out.best) } else { None },
+        stats: out.stats,
+        elapsed: start.elapsed(),
+        timed_out: out.timed_out,
+    }
+}
+
+/// Dispatch the engine over the selected degree dtype (§IV-D: the dtype
+/// changes the physical size of every stack entry).
+fn run_engine(g: &Graph, dtype: Dtype, initial: u32, cfg: EngineCfg) -> engine::EngineOutcome {
+    match dtype {
+        Dtype::U8 => engine::run::<u8>(g, initial, cfg),
+        Dtype::U16 => engine::run::<u16>(g, initial, cfg),
+        Dtype::U32 => engine::run::<u32>(g, initial, cfg),
+    }
+}
+
+fn resolve_workers(cfg: &SolverConfig, p: &prep::Prepared) -> usize {
+    match cfg.variant {
+        Variant::Sequential => 1,
+        _ => cfg.workers.unwrap_or_else(|| {
+            let hw = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+            p.occupancy.blocks.min(hw).max(1)
+        }),
+    }
+}
+
+fn summarize(g: &Graph, p: &prep::Prepared, workers: usize) -> PrepSummary {
+    PrepSummary {
+        n_original: g.num_vertices(),
+        n_residual: p.residual.graph.num_vertices(),
+        forced: p.forced_cover.len(),
+        greedy_ub: p.greedy_ub,
+        dtype: p.dtype,
+        blocks: p.occupancy.blocks,
+        fits_shared_mem: p.occupancy.fits_shared_mem,
+        workers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn all_variants_agree_with_oracle() {
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(18, 0.18, seed);
+            let opt = oracle::mvc_size(&g);
+            for cfg in [
+                SolverConfig::proposed(),
+                SolverConfig::prior_work(),
+                SolverConfig::no_load_balance(),
+                SolverConfig::sequential(),
+            ] {
+                let r = solve_mvc(&g, &cfg);
+                assert_eq!(r.best, opt, "{} seed {seed}", cfg.variant.name());
+                assert!(!r.timed_out);
+            }
+        }
+    }
+
+    #[test]
+    fn splitting_graph_all_variants() {
+        let g = generators::union_of_random(5, 4, 7, 0.3, 3);
+        let opt = oracle::mvc_size(&g);
+        for cfg in [
+            SolverConfig::proposed(),
+            SolverConfig::prior_work(),
+            SolverConfig::no_load_balance(),
+            SolverConfig::sequential(),
+        ] {
+            assert_eq!(solve_mvc(&g, &cfg).best, opt, "{}", cfg.variant.name());
+        }
+    }
+
+    #[test]
+    fn sequential_extraction_is_valid() {
+        let g = generators::erdos_renyi(20, 0.15, 7);
+        let mut cfg = SolverConfig::sequential();
+        cfg.extract_cover = true;
+        let r = solve_mvc(&g, &cfg);
+        if let Some(c) = &r.cover {
+            assert!(g.is_vertex_cover(c));
+            assert_eq!(c.len() as u32, r.best);
+        }
+        assert_eq!(r.best, oracle::mvc_size(&g));
+    }
+
+    #[test]
+    fn pvc_boundary_values() {
+        for seed in 0..8 {
+            let g = generators::erdos_renyi(16, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            let cfg = SolverConfig::proposed();
+            assert!(!solve_pvc(&g, opt.saturating_sub(1), &cfg).found, "k=opt-1 seed {seed}");
+            let at = solve_pvc(&g, opt, &cfg);
+            assert!(at.found, "k=opt seed {seed}");
+            assert!(at.size.unwrap() <= opt);
+            assert!(solve_pvc(&g, opt + 1, &cfg).found, "k=opt+1 seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pvc_all_variants_agree() {
+        let g = generators::union_of_random(3, 4, 7, 0.3, 5);
+        let opt = oracle::mvc_size(&g);
+        for cfg in [
+            SolverConfig::proposed(),
+            SolverConfig::prior_work(),
+            SolverConfig::no_load_balance(),
+            SolverConfig::sequential(),
+        ] {
+            assert!(solve_pvc(&g, opt, &cfg).found, "{} k=opt", cfg.variant.name());
+            assert!(
+                !solve_pvc(&g, opt.saturating_sub(1), &cfg).found,
+                "{} k=opt-1",
+                cfg.variant.name()
+            );
+        }
+    }
+
+    #[test]
+    fn timeout_is_reported_and_best_is_upper_bound() {
+        let g = generators::p_hat(80, 0.3, 0.8, 4);
+        let cfg = SolverConfig::proposed().with_timeout(Duration::from_millis(1));
+        let r = solve_mvc(&g, &cfg);
+        assert!(r.best >= 1); // still a sound upper bound (greedy at worst)
+        // dense p_hat(80) cannot finish in 1ms
+        assert!(r.timed_out);
+    }
+
+    #[test]
+    fn prep_summary_populated() {
+        let g = generators::web_crawl(50, 200, 9);
+        let r = solve_mvc(&g, &SolverConfig::proposed());
+        assert_eq!(r.prep.n_original, 250);
+        assert!(r.prep.n_residual < 250);
+        assert!(r.prep.blocks >= 1);
+        assert!(r.prep.workers >= 1);
+    }
+
+    #[test]
+    fn empty_and_trivial_graphs() {
+        let empty = Graph::from_edges(5, &[]);
+        assert_eq!(solve_mvc(&empty, &SolverConfig::proposed()).best, 0);
+        let single = Graph::from_edges(2, &[(0, 1)]);
+        assert_eq!(solve_mvc(&single, &SolverConfig::proposed()).best, 1);
+        assert!(solve_pvc(&single, 1, &SolverConfig::proposed()).found);
+        assert!(!solve_pvc(&single, 0, &SolverConfig::proposed()).found);
+    }
+}

@@ -1,0 +1,125 @@
+//! GPU occupancy model (paper §IV, Table IV).
+//!
+//! On the V100 the number of concurrently resident thread blocks is
+//! limited by the per-block stack of degree arrays in global memory and
+//! by whether one degree array fits in shared memory. We have no GPU, so
+//! this model reproduces those *decisions* analytically: the engine
+//! launches `min(blocks, hw_threads)` workers, and Table IV reports the
+//! modeled block counts — the same lever the paper's optimizations move.
+
+use crate::degree::Dtype;
+
+/// V100-derived model constants.
+#[derive(Debug, Clone)]
+pub struct OccupancyModel {
+    /// Global-memory budget dedicated to per-block stacks (bytes).
+    pub stack_budget_bytes: u64,
+    /// Shared-memory capacity available per block for one degree array.
+    pub shared_mem_bytes: u64,
+    /// Hard cap on resident blocks (paper's observed maximum grid).
+    pub max_blocks: usize,
+}
+
+impl Default for OccupancyModel {
+    fn default() -> Self {
+        OccupancyModel {
+            // 4 GiB of the V100's 32 GiB device memory for stacks.
+            stack_budget_bytes: 4 << 30,
+            // 32 KiB threshold reproduces every Yes/No in the paper's
+            // Table IV (96 KiB/SM shared among resident blocks).
+            shared_mem_bytes: 32 << 10,
+            max_blocks: 2560,
+        }
+    }
+}
+
+/// Occupancy decision for one solver launch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Occupancy {
+    /// Modeled number of thread blocks the GPU could keep resident.
+    pub blocks: usize,
+    /// Bytes of one degree array (stack entry payload).
+    pub degree_array_bytes: u64,
+    /// Modeled per-block stack depth bound.
+    pub stack_depth: u64,
+    /// Whether one degree array fits in shared memory.
+    pub fits_shared_mem: bool,
+    /// Degree-array element type.
+    pub dtype: Dtype,
+}
+
+impl OccupancyModel {
+    /// Model a launch for a degree array of `n` entries of `dtype`.
+    ///
+    /// The stack depth bound follows §IV-B: branching depth is bounded by
+    /// the number of vertices that can still be removed, i.e. the reduced
+    /// |V| (+1 root frame), and root reductions tighten it.
+    pub fn plan(&self, n: usize, dtype: Dtype) -> Occupancy {
+        let degree_array_bytes = (n as u64) * dtype.bytes() as u64;
+        let stack_depth = (n as u64 + 1).min(4096);
+        let per_block = degree_array_bytes.saturating_mul(stack_depth).max(1);
+        let blocks = (self.stack_budget_bytes / per_block)
+            .clamp(1, self.max_blocks as u64) as usize;
+        Occupancy {
+            blocks,
+            degree_array_bytes,
+            stack_depth,
+            fits_shared_mem: degree_array_bytes <= self.shared_mem_bytes,
+            dtype,
+        }
+    }
+
+    /// Number of OS worker threads to actually run for a modeled launch:
+    /// the model's block count capped by the hardware parallelism.
+    pub fn workers(&self, n: usize, dtype: Dtype) -> usize {
+        let hw = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        self.plan(n, dtype).blocks.min(hw).max(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smaller_arrays_more_blocks() {
+        let m = OccupancyModel::default();
+        let big = m.plan(90_000, Dtype::U32);
+        let small = m.plan(3_500, Dtype::U16);
+        assert!(small.blocks > big.blocks);
+        assert!(small.blocks >= 100 * big.blocks.max(1) / 100);
+    }
+
+    #[test]
+    fn shared_mem_threshold_matches_paper_rows() {
+        let m = OccupancyModel::default();
+        // paper Table IV: (n, dtype_after) → fits?
+        assert!(!m.plan(16_062, Dtype::U32).fits_shared_mem); // webbase before
+        assert!(m.plan(1_631, Dtype::U16).fits_shared_mem); // webbase after
+        assert!(m.plan(4_767, Dtype::U32).fits_shared_mem); // web-spam before
+        assert!(!m.plan(10_972, Dtype::U32).fits_shared_mem); // dublin before
+        assert!(m.plan(9_785, Dtype::U16).fits_shared_mem); // dublin after
+        assert!(!m.plan(21_900, Dtype::U16).fits_shared_mem); // SYNTHETIC after
+        assert!(!m.plan(36_099, Dtype::U16).fits_shared_mem); // PROTEINS after
+    }
+
+    #[test]
+    fn max_blocks_cap_for_tiny_arrays() {
+        let m = OccupancyModel::default();
+        assert_eq!(m.plan(324, Dtype::U8).blocks, 2560); // qc324 stays at max
+    }
+
+    #[test]
+    fn at_least_one_block() {
+        let m = OccupancyModel::default();
+        assert!(m.plan(10_000_000, Dtype::U32).blocks >= 1);
+    }
+
+    #[test]
+    fn workers_bounded_by_hw() {
+        let m = OccupancyModel::default();
+        let hw = std::thread::available_parallelism().unwrap().get();
+        assert!(m.workers(324, Dtype::U8) <= hw);
+        assert!(m.workers(324, Dtype::U8) >= 1);
+    }
+}

@@ -1,0 +1,168 @@
+//! Exact brute-force oracle for small graphs (≤ 64 vertices).
+//!
+//! Used only by tests and the harness's self-checks: an independent,
+//! dead-simple implementation (bitmask branch-and-bound, no reduction
+//! rules beyond degree-0) that every production solver is validated
+//! against on thousands of random instances.
+
+use crate::graph::Graph;
+
+/// Exact minimum vertex cover size. Panics if `g` has more than 64
+/// vertices (use the real solvers beyond that).
+pub fn mvc_size(g: &Graph) -> u32 {
+    let n = g.num_vertices();
+    assert!(n <= 64, "oracle supports ≤ 64 vertices");
+    let adj: Vec<u64> = (0..n as u32)
+        .map(|v| g.neighbors(v).iter().fold(0u64, |m, &w| m | (1u64 << w)))
+        .collect();
+    let present: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut best = n as u32;
+    branch(&adj, present, 0, &mut best);
+    best
+}
+
+/// Exact minimum vertex cover (one witness), for cover-validity tests.
+pub fn mvc_cover(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    assert!(n <= 64, "oracle supports ≤ 64 vertices");
+    let adj: Vec<u64> = (0..n as u32)
+        .map(|v| g.neighbors(v).iter().fold(0u64, |m, &w| m | (1u64 << w)))
+        .collect();
+    let mut present: u64 = if n == 64 { u64::MAX } else { (1u64 << n) - 1 };
+    let mut cover = Vec::new();
+    // Self-reducibility: vertex v is in some MVC of the residual iff
+    // mvc(residual − v) == mvc(residual) − 1.
+    loop {
+        let mut remaining = (present.count_ones()).max(1);
+        branch(&adj, present, 0, &mut remaining);
+        if remaining == 0 {
+            break;
+        }
+        let v = (0..n)
+            .find(|&v| {
+                if present >> v & 1 == 0 || adj[v] & present == 0 {
+                    return false;
+                }
+                let mut sub = remaining; // prune at remaining → finds < remaining
+                branch(&adj, present & !(1u64 << v), 0, &mut sub);
+                sub <= remaining - 1
+            })
+            .expect("witness vertex must exist");
+        cover.push(v as u32);
+        present &= !(1u64 << v);
+    }
+    debug_assert!(g.is_vertex_cover(&cover));
+    cover
+}
+
+fn branch(adj: &[u64], present: u64, size: u32, best: &mut u32) {
+    if size >= *best {
+        return;
+    }
+    // find a vertex with maximum residual degree
+    let mut vmax = usize::MAX;
+    let mut dmax = 0u32;
+    let mut p = present;
+    while p != 0 {
+        let v = p.trailing_zeros() as usize;
+        p &= p - 1;
+        let d = (adj[v] & present).count_ones();
+        if d > dmax {
+            dmax = d;
+            vmax = v;
+        }
+    }
+    if dmax == 0 {
+        *best = size; // no edges left; size < *best guaranteed above
+        return;
+    }
+    if dmax == 1 {
+        // residual is a perfect matching fragment: one vertex per edge
+        let mut extra = 0u32;
+        let mut q = present;
+        let mut seen = 0u64;
+        while q != 0 {
+            let v = q.trailing_zeros() as usize;
+            q &= q - 1;
+            if seen >> v & 1 == 1 {
+                continue;
+            }
+            let nb = adj[v] & present & !seen;
+            if nb != 0 {
+                let w = nb.trailing_zeros() as usize;
+                seen |= (1u64 << v) | (1u64 << w);
+                extra += 1;
+            }
+        }
+        if size + extra < *best {
+            *best = size + extra;
+        }
+        return;
+    }
+    // include vmax
+    branch(adj, present & !(1u64 << vmax), size + 1, best);
+    // include N(vmax)
+    let nb = adj[vmax] & present;
+    branch(
+        adj,
+        present & !nb & !(1u64 << vmax),
+        size + nb.count_ones(),
+        best,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(mvc_size(&generators::path(2)), 1);
+        assert_eq!(mvc_size(&generators::path(5)), 2);
+        assert_eq!(mvc_size(&generators::cycle(5)), 3);
+        assert_eq!(mvc_size(&generators::cycle(6)), 3);
+        assert_eq!(mvc_size(&generators::clique(6)), 5);
+        assert_eq!(mvc_size(&generators::star(9)), 1);
+        assert_eq!(mvc_size(&Graph::from_edges(4, &[])), 0);
+    }
+
+    #[test]
+    fn petersen_graph() {
+        // Petersen: MVC = 6 (independence number 4).
+        let edges = [
+            (0, 1), (1, 2), (2, 3), (3, 4), (4, 0), // outer C5
+            (5, 7), (7, 9), (9, 6), (6, 8), (8, 5), // inner pentagram
+            (0, 5), (1, 6), (2, 7), (3, 8), (4, 9), // spokes
+        ];
+        let g = Graph::from_edges(10, &edges);
+        assert_eq!(mvc_size(&g), 6);
+    }
+
+    #[test]
+    fn disjoint_union_adds() {
+        let g = Graph::disjoint_union(&[generators::cycle(5), generators::clique(4)]);
+        assert_eq!(mvc_size(&g), 3 + 3);
+    }
+
+    #[test]
+    fn cover_witness_valid_and_optimal() {
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(12, 0.25, seed);
+            let c = mvc_cover(&g);
+            assert!(g.is_vertex_cover(&c), "seed {seed}");
+            assert_eq!(c.len() as u32, mvc_size(&g), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn matches_complement_independent_set_bound() {
+        // sanity: n - mvc = max independent set ≥ n/(Δ+1)
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(16, 0.2, seed);
+            let mis = 16 - mvc_size(&g);
+            let lower = 16 / (g.max_degree() + 1);
+            assert!(mis >= lower, "seed {seed}");
+        }
+    }
+}

@@ -1,0 +1,592 @@
+//! The component branch registry (paper §III-C) — the mechanism that
+//! makes *non-tail-recursive* branches load-balanceable.
+//!
+//! Branching on components needs post-processing after the children
+//! return (accumulate each component's minimum into the parent's sum;
+//! fold the completed sum into the enclosing context). Instead of pinning
+//! a parent and its descendants to one worker, every component branch is
+//! *registered* in shared memory and the post-processing is delegated to
+//! the **last descendant** of each branch:
+//!
+//! * a **child** (component) entry holds `Best` (smallest achievable
+//!   cover found for the component so far), a prune `Limit`, `LiveNodes`
+//!   (descendants still executing), and `ParentIdx`;
+//! * a **parent** (split) entry holds `Sum` (solution vertices committed
+//!   by the parent plus all finished components), `LiveComps` (components
+//!   still being solved — including one reference held by the parent
+//!   while it is still *discovering* components, so the count cannot hit
+//!   zero early), and `AncestorIdx` (the context the parent node itself
+//!   was solving, possibly another child entry: splits nest arbitrarily).
+//!
+//! All updates are atomic; whoever decrements a counter to zero owns the
+//! continuation. The cascade in [`Registry::complete_node`] implements
+//! lines 19–20 of Algorithm 2 across arbitrary nesting.
+//!
+//! ### MVC vs PVC
+//! MVC defers all upward reporting to the last descendant. PVC (§III-E)
+//! additionally propagates *achievable* improvements to the root as they
+//! happen so the search can stop as soon as the root bound reaches `k`:
+//! each parent maintains `Est = Sum₀ + Σ child Best` (always achievable
+//! once component discovery has finished, since every child's `Best`
+//! starts at the achievable `|V_i| − 1`), and child improvements bubble
+//! through `Est` while discovery-complete. The paper conflates `Best`
+//! with the prune bound; we split `Best` (achievable) from `Limit`
+//! (prune-only) so the propagated totals are always sound.
+
+use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Sentinel context: "report to the global best" (the search root).
+pub const NONE: u32 = u32::MAX;
+
+const CHUNK_BITS: usize = 14;
+const CHUNK: usize = 1 << CHUNK_BITS; // entries per chunk
+const MAX_CHUNKS: usize = 1 << 16; // ~1.07e9 entries max
+
+const KIND_CHILD: u32 = 1;
+const KIND_PARENT: u32 = 2;
+const FLAG_SCAN_DONE: u32 = 4;
+
+/// One registry entry (child or parent role; see module docs).
+#[derive(Debug)]
+pub struct Entry {
+    /// child: `Best`; parent: `Sum`.
+    val: AtomicU32,
+    /// child: `LiveNodes`; parent: `LiveComps`. u64 with debug underflow checks.
+    live: AtomicU64,
+    /// child: `ParentIdx`; parent: `AncestorIdx` (or [`NONE`]).
+    link: AtomicU32,
+    /// child: prune `Limit`; parent: `Est` for PVC propagation.
+    aux: AtomicU32,
+    /// role + scan-done flag.
+    flags: AtomicU32,
+}
+
+impl Entry {
+    const fn empty() -> Entry {
+        Entry {
+            val: AtomicU32::new(0),
+            live: AtomicU64::new(0),
+            link: AtomicU32::new(NONE),
+            aux: AtomicU32::new(0),
+            flags: AtomicU32::new(0),
+        }
+    }
+}
+
+/// Append-only atomic arena of registry entries.
+///
+/// Entries are addressed by dense `u32` ids; storage grows in chunks whose
+/// base pointers are published through `AtomicPtr`, so readers never take
+/// a lock and ids stay valid for the lifetime of the registry (mirroring
+/// the paper's preallocated global-memory registry).
+pub struct Registry {
+    chunks: Vec<AtomicPtr<Entry>>,
+    next: AtomicU64,
+    grow: Mutex<()>,
+    /// PVC mode: maintain `Est` and propagate improvements upward.
+    propagate: bool,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Registry").field("len", &self.len()).finish()
+    }
+}
+
+impl Drop for Registry {
+    fn drop(&mut self) {
+        for c in &self.chunks {
+            let p = c.load(Ordering::Acquire);
+            if !p.is_null() {
+                // SAFETY: allocated as Box<[Entry; CHUNK]> in ensure_chunk.
+                unsafe { drop(Box::from_raw(p as *mut [Entry; CHUNK])) };
+            }
+        }
+    }
+}
+
+impl Registry {
+    /// Create an empty registry. `propagate` enables PVC-style upward
+    /// propagation of achievable totals.
+    pub fn new(propagate: bool) -> Registry {
+        let mut chunks = Vec::with_capacity(MAX_CHUNKS);
+        chunks.resize_with(MAX_CHUNKS, || AtomicPtr::new(std::ptr::null_mut()));
+        Registry { chunks, next: AtomicU64::new(0), grow: Mutex::new(()), propagate }
+    }
+
+    /// Number of entries ever allocated.
+    pub fn len(&self) -> usize {
+        self.next.load(Ordering::Relaxed) as usize
+    }
+
+    /// True if no entries were allocated.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn ensure_chunk(&self, ci: usize) -> *mut Entry {
+        let p = self.chunks[ci].load(Ordering::Acquire);
+        if !p.is_null() {
+            return p;
+        }
+        let _g = self.grow.lock().unwrap();
+        let p = self.chunks[ci].load(Ordering::Acquire);
+        if !p.is_null() {
+            return p;
+        }
+        let boxed: Box<[Entry; CHUNK]> = {
+            // avoid large stack temporaries: build via Vec
+            let mut v = Vec::with_capacity(CHUNK);
+            v.resize_with(CHUNK, Entry::empty);
+            v.into_boxed_slice().try_into().ok().expect("exact chunk size")
+        };
+        let raw = Box::into_raw(boxed) as *mut Entry;
+        self.chunks[ci].store(raw, Ordering::Release);
+        raw
+    }
+
+    #[inline]
+    fn entry(&self, idx: u32) -> &Entry {
+        debug_assert!((idx as usize) < self.len(), "registry index {idx} out of range");
+        let ci = idx as usize >> CHUNK_BITS;
+        let off = idx as usize & (CHUNK - 1);
+        let base = self.chunks[ci].load(Ordering::Acquire);
+        debug_assert!(!base.is_null());
+        // SAFETY: chunk pointers are published once and never freed until drop.
+        unsafe { &*base.add(off) }
+    }
+
+    fn alloc(&self) -> u32 {
+        let idx = self.next.fetch_add(1, Ordering::Relaxed);
+        assert!(idx < (MAX_CHUNKS * CHUNK) as u64, "registry exhausted");
+        self.ensure_chunk(idx as usize >> CHUNK_BITS);
+        idx as u32
+    }
+
+    /// Register a parent (split) entry: `sum0` = |S| committed at the
+    /// split node, `ancestor` = the node's own context. `LiveComps`
+    /// starts at 1 — the discovery reference held by the scanning parent.
+    pub fn new_parent(&self, sum0: u32, ancestor: u32) -> u32 {
+        let idx = self.alloc();
+        let e = self.entry(idx);
+        e.val.store(sum0, Ordering::SeqCst);
+        e.live.store(1, Ordering::SeqCst);
+        e.link.store(ancestor, Ordering::SeqCst);
+        e.aux.store(sum0, Ordering::SeqCst); // Est = Sum₀ (+ children as they register)
+        e.flags.store(KIND_PARENT, Ordering::SeqCst);
+        idx
+    }
+
+    /// Register a child (component) entry under `parent`.
+    ///
+    /// `best0` must be *achievable* for the component (the paper's
+    /// `|V_i| − 1`); `limit` is the prune-only bound
+    /// `min(ctx_bound − sum, |V_i| − 1)`. Increments the parent's
+    /// `LiveComps` and folds `best0` into the parent's `Est`.
+    pub fn new_child(&self, parent: u32, best0: u32, limit: u32) -> u32 {
+        let idx = self.alloc();
+        let e = self.entry(idx);
+        e.val.store(best0, Ordering::SeqCst);
+        e.live.store(1, Ordering::SeqCst);
+        e.link.store(parent, Ordering::SeqCst);
+        e.aux.store(limit, Ordering::SeqCst);
+        e.flags.store(KIND_CHILD, Ordering::SeqCst);
+        let p = self.entry(parent);
+        debug_assert_eq!(p.flags.load(Ordering::SeqCst) & KIND_PARENT, KIND_PARENT);
+        p.live.fetch_add(1, Ordering::SeqCst);
+        p.aux.fetch_add(best0, Ordering::SeqCst);
+        idx
+    }
+
+    /// A component solved in closed form during discovery (clique /
+    /// chordless-cycle rules, §III-D): fold its exact cover size straight
+    /// into the parent's `Sum`/`Est` without allocating a child entry.
+    pub fn add_solved_component(&self, parent: u32, mvc: u32) {
+        let p = self.entry(parent);
+        p.val.fetch_add(mvc, Ordering::SeqCst);
+        p.aux.fetch_add(mvc, Ordering::SeqCst);
+    }
+
+    /// The prune bound for a node in context `ctx`: `min(Best, Limit)` of
+    /// the child entry (callers handle `ctx == NONE` via the global best).
+    #[inline]
+    pub fn bound(&self, ctx: u32) -> u32 {
+        let e = self.entry(ctx);
+        e.val.load(Ordering::SeqCst).min(e.aux.load(Ordering::SeqCst))
+    }
+
+    /// A node in context `ctx` branched into two children: one extra live
+    /// descendant.
+    #[inline]
+    pub fn on_branch(&self, ctx: u32) {
+        if ctx != NONE {
+            self.entry(ctx).live.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Extra live descendant for an out-of-band hand-off (e.g. seeding).
+    pub fn add_live(&self, ctx: u32, n: u64) {
+        if ctx != NONE && n > 0 {
+            self.entry(ctx).live.fetch_add(n, Ordering::SeqCst);
+        }
+    }
+
+    /// A leaf in context `ctx` found a cover of size `size` for its
+    /// component. Records it and, in PVC mode, propagates the achievable
+    /// total toward the root. `on_root` receives any resulting achievable
+    /// *root-level* total (for the global best / early termination).
+    pub fn report_solution(&self, ctx: u32, size: u32, on_root: &mut dyn FnMut(u32)) {
+        debug_assert_ne!(ctx, NONE);
+        if self.propagate {
+            self.propagate_improvement(ctx, size, on_root);
+        } else {
+            cas_min(&self.entry(ctx).val, size);
+        }
+    }
+
+    /// Component discovery at parent `p` finished: release the discovery
+    /// reference (may trigger the completion cascade if every component
+    /// already finished) and enable PVC propagation through `p`.
+    pub fn finish_scan(&self, p: u32, on_root: &mut dyn FnMut(u32)) {
+        let e = self.entry(p);
+        e.flags.fetch_or(FLAG_SCAN_DONE, Ordering::SeqCst);
+        if self.propagate {
+            // One propagation now that Est covers all components.
+            let est = e.aux.load(Ordering::SeqCst);
+            let anc = e.link.load(Ordering::SeqCst);
+            if anc == NONE {
+                on_root(est);
+            } else {
+                self.propagate_improvement(anc, est, on_root);
+            }
+        }
+        self.complete_parent_ref(p, on_root);
+    }
+
+    /// A node in context `ctx` completed (leaf, pruned, or branched-away).
+    /// Runs the last-descendant cascade (paper §III-C / Figure 3).
+    pub fn complete_node(&self, mut ctx: u32, on_root: &mut dyn FnMut(u32)) {
+        while ctx != NONE {
+            let e = self.entry(ctx);
+            debug_assert_eq!(e.flags.load(Ordering::SeqCst) & KIND_CHILD, KIND_CHILD);
+            let prev = e.live.fetch_sub(1, Ordering::SeqCst);
+            debug_assert!(prev >= 1, "LiveNodes underflow");
+            if prev != 1 {
+                return; // other descendants still running
+            }
+            // Last descendant of component `ctx`: fold Best into parent Sum.
+            let parent = e.link.load(Ordering::SeqCst);
+            let best = e.val.load(Ordering::SeqCst);
+            let p = self.entry(parent);
+            p.val.fetch_add(best, Ordering::SeqCst);
+            match self.release_parent_ref(parent) {
+                ParentState::StillLive => return,
+                ParentState::Finished { total, ancestor } => {
+                    if ancestor == NONE {
+                        on_root(total);
+                        return;
+                    }
+                    // Fold the completed split into the enclosing component
+                    // and continue the cascade there.
+                    self.improve_child_value(ancestor, total, on_root);
+                    ctx = ancestor;
+                }
+            }
+        }
+    }
+
+    /// Decrement a parent's `LiveComps` due to `complete_node` folding.
+    fn release_parent_ref(&self, p_idx: u32) -> ParentState {
+        let p = self.entry(p_idx);
+        let prev = p.live.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev >= 1, "LiveComps underflow");
+        if prev != 1 {
+            return ParentState::StillLive;
+        }
+        ParentState::Finished {
+            total: p.val.load(Ordering::SeqCst),
+            ancestor: p.link.load(Ordering::SeqCst),
+        }
+    }
+
+    /// Release the discovery reference and, if that finished the parent,
+    /// continue the cascade (shared by `finish_scan`).
+    fn complete_parent_ref(&self, p_idx: u32, on_root: &mut dyn FnMut(u32)) {
+        match self.release_parent_ref(p_idx) {
+            ParentState::StillLive => {}
+            ParentState::Finished { total, ancestor } => {
+                if ancestor == NONE {
+                    on_root(total);
+                } else {
+                    self.improve_child_value(ancestor, total, on_root);
+                    self.complete_node(ancestor, on_root);
+                }
+            }
+        }
+    }
+
+    /// CAS-min a child's `Best` and keep parent `Est` consistent (PVC).
+    fn improve_child_value(&self, ctx: u32, val: u32, on_root: &mut dyn FnMut(u32)) {
+        if self.propagate {
+            self.propagate_improvement(ctx, val, on_root);
+        } else {
+            cas_min(&self.entry(ctx).val, val);
+        }
+    }
+
+    /// PVC upward propagation (§III-E): improve `ctx.Best`, adjust the
+    /// parent's `Est` by the achieved delta, and if the parent finished
+    /// discovery, push the (achievable) `Est` further up — all the way to
+    /// the root when the chain allows.
+    fn propagate_improvement(&self, mut ctx: u32, mut val: u32, on_root: &mut dyn FnMut(u32)) {
+        loop {
+            let e = self.entry(ctx);
+            let Some(old) = cas_min(&e.val, val) else { return };
+            let delta = old - val;
+            let p_idx = e.link.load(Ordering::SeqCst);
+            let p = self.entry(p_idx);
+            p.aux.fetch_sub(delta, Ordering::SeqCst);
+            if p.flags.load(Ordering::SeqCst) & FLAG_SCAN_DONE == 0 {
+                return; // Est incomplete until discovery ends
+            }
+            let est = p.aux.load(Ordering::SeqCst);
+            let anc = p.link.load(Ordering::SeqCst);
+            if anc == NONE {
+                on_root(est);
+                return;
+            }
+            ctx = anc;
+            val = est;
+        }
+    }
+
+    /// Test/diagnostic: (val, live, link, aux) of an entry.
+    pub fn snapshot(&self, idx: u32) -> (u32, u64, u32, u32) {
+        let e = self.entry(idx);
+        (
+            e.val.load(Ordering::SeqCst),
+            e.live.load(Ordering::SeqCst),
+            e.link.load(Ordering::SeqCst),
+            e.aux.load(Ordering::SeqCst),
+        )
+    }
+
+    /// Invariant check after a run: every counter drained to zero.
+    pub fn assert_drained(&self) {
+        for i in 0..self.len() as u32 {
+            let (_, live, _, _) = self.snapshot(i);
+            assert_eq!(live, 0, "entry {i} still live after completion");
+        }
+    }
+}
+
+enum ParentState {
+    StillLive,
+    Finished { total: u32, ancestor: u32 },
+}
+
+/// Atomic CAS-min; returns the displaced larger value if it decreased.
+pub fn cas_min(a: &AtomicU32, new: u32) -> Option<u32> {
+    let mut cur = a.load(Ordering::SeqCst);
+    loop {
+        if cur <= new {
+            return None;
+        }
+        match a.compare_exchange_weak(cur, new, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return Some(cur),
+            Err(c) => cur = c,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Single split with two components, solved sequentially.
+    #[test]
+    fn basic_split_aggregates() {
+        let reg = Registry::new(false);
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+
+        let p = reg.new_parent(3, NONE); // parent committed 3 vertices
+        let c1 = reg.new_child(p, 4, 4); // component of 5 vertices
+        let c2 = reg.new_child(p, 2, 2);
+        reg.finish_scan(p, &mut on_root);
+
+        // component 1 solved with best 2 (a leaf reports, then completes)
+        reg.report_solution(c1, 2, &mut on_root);
+        reg.complete_node(c1, &mut on_root);
+        assert!(root_totals.borrow().is_empty());
+
+        // component 2 keeps its initial best (fully pruned)
+        reg.complete_node(c2, &mut on_root);
+        assert_eq!(*root_totals.borrow(), vec![3 + 2 + 2]);
+        reg.assert_drained();
+    }
+
+    /// The discovery reference keeps LiveComps from reaching zero early.
+    #[test]
+    fn scan_reference_blocks_early_completion() {
+        let reg = Registry::new(false);
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+
+        let p = reg.new_parent(0, NONE);
+        let c1 = reg.new_child(p, 1, 1);
+        // child finishes BEFORE the scan ends
+        reg.complete_node(c1, &mut on_root);
+        assert!(root_totals.borrow().is_empty(), "must wait for finish_scan");
+        reg.finish_scan(p, &mut on_root);
+        assert_eq!(*root_totals.borrow(), vec![1]);
+    }
+
+    /// Nested splits: the cascade walks multiple levels (paper Figure 3).
+    #[test]
+    fn nested_cascade() {
+        let reg = Registry::new(false);
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+
+        // node1 splits into comps 2 and 3 (Figure 3)
+        let p1 = reg.new_parent(0, NONE);
+        let c2 = reg.new_child(p1, 5, 5);
+        let c3 = reg.new_child(p1, 9, 9);
+        reg.finish_scan(p1, &mut on_root);
+
+        // node 12 (a descendant of c3) splits into comps 13, 14
+        let p12 = reg.new_parent(1, c3); // 1 vertex committed on the path
+        let c13 = reg.new_child(p12, 3, 3);
+        let c14 = reg.new_child(p12, 2, 2);
+        reg.on_branch(c3); // node12 branched from c3's tree: net +1 live
+        reg.finish_scan(p12, &mut on_root);
+
+        // solve comp 13 with best 2, comp 14 with best 1
+        reg.report_solution(c13, 2, &mut on_root);
+        reg.complete_node(c13, &mut on_root);
+        reg.report_solution(c14, 1, &mut on_root);
+        reg.complete_node(c14, &mut on_root);
+        // split p12 finished: total = 1+2+1 = 4 < c3.best (9), improves c3,
+        // and cascades: c3 live 2-1=1 (node12 done), still live
+        assert!(root_totals.borrow().is_empty());
+        let (c3_best, c3_live, _, _) = reg.snapshot(c3);
+        assert_eq!(c3_best, 4);
+        assert_eq!(c3_live, 1);
+
+        // remaining c3 descendant and c2 finish
+        reg.complete_node(c3, &mut on_root);
+        assert!(root_totals.borrow().is_empty());
+        reg.complete_node(c2, &mut on_root);
+        assert_eq!(*root_totals.borrow(), vec![5 + 4]);
+        reg.assert_drained();
+    }
+
+    /// Closed-form components fold into Sum without child entries.
+    #[test]
+    fn solved_component_folds_into_sum() {
+        let reg = Registry::new(false);
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+        let p = reg.new_parent(2, NONE);
+        reg.add_solved_component(p, 3); // a clique handled by §III-D
+        let c = reg.new_child(p, 4, 4);
+        reg.finish_scan(p, &mut on_root);
+        reg.complete_node(c, &mut on_root);
+        assert_eq!(*root_totals.borrow(), vec![2 + 3 + 4]);
+    }
+
+    /// PVC propagation reaches the root before completion.
+    #[test]
+    fn pvc_propagates_achievable_totals() {
+        let reg = Registry::new(true);
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+
+        let p = reg.new_parent(1, NONE);
+        let c1 = reg.new_child(p, 4, 4);
+        let _c2 = reg.new_child(p, 6, 6);
+        // no propagation before the scan completes
+        reg.report_solution(c1, 3, &mut on_root);
+        assert!(root_totals.borrow().is_empty());
+        reg.finish_scan(p, &mut on_root);
+        // Est = 1 + 3 + 6 = 10 announced at scan end
+        assert_eq!(*root_totals.borrow(), vec![10]);
+        // an improvement on c1 now bubbles immediately
+        reg.report_solution(c1, 2, &mut on_root);
+        assert_eq!(*root_totals.borrow(), vec![10, 9]);
+    }
+
+    #[test]
+    fn bound_is_min_of_best_and_limit() {
+        let reg = Registry::new(false);
+        let p = reg.new_parent(0, NONE);
+        let c = reg.new_child(p, 10, 7);
+        assert_eq!(reg.bound(c), 7);
+        let mut sink = |_t: u32| {};
+        reg.report_solution(c, 5, &mut sink);
+        assert_eq!(reg.bound(c), 5);
+    }
+
+    #[test]
+    fn on_branch_tracks_live_nodes() {
+        let reg = Registry::new(false);
+        let p = reg.new_parent(0, NONE);
+        let c = reg.new_child(p, 3, 3);
+        reg.on_branch(c);
+        reg.on_branch(c);
+        assert_eq!(reg.snapshot(c).1, 3);
+        let mut sink = |_t: u32| {};
+        reg.complete_node(c, &mut sink);
+        reg.complete_node(c, &mut sink);
+        assert_eq!(reg.snapshot(c).1, 1);
+    }
+
+    #[test]
+    fn cas_min_behaviour() {
+        let a = AtomicU32::new(10);
+        assert_eq!(cas_min(&a, 7), Some(10));
+        assert_eq!(cas_min(&a, 9), None);
+        assert_eq!(a.load(Ordering::SeqCst), 7);
+    }
+
+    /// Hammer the registry from many threads: a two-component split where
+    /// each component is "solved" by T workers branching and completing.
+    #[test]
+    fn concurrent_cascade_exactly_once() {
+        use std::sync::atomic::AtomicUsize;
+        for trial in 0..20 {
+            let reg = Registry::new(false);
+            let fired = AtomicUsize::new(0);
+            let p = reg.new_parent(0, NONE);
+            let c1 = reg.new_child(p, 8, 8);
+            let c2 = reg.new_child(p, 8, 8);
+            // pre-add live nodes for 8 simulated descendants per component
+            reg.add_live(c1, 7);
+            reg.add_live(c2, 7);
+            {
+                let mut sink = |_t: u32| {};
+                reg.finish_scan(p, &mut sink);
+            }
+            std::thread::scope(|s| {
+                for t in 0..16usize {
+                    let reg = &reg;
+                    let fired = &fired;
+                    let ctx = if t % 2 == 0 { c1 } else { c2 };
+                    s.spawn(move || {
+                        let mut on_root = |_t: u32| {
+                            fired.fetch_add(1, Ordering::SeqCst);
+                        };
+                        reg.report_solution(ctx, 4 + (t as u32 % 3), &mut on_root);
+                        reg.complete_node(ctx, &mut on_root);
+                    });
+                }
+            });
+            assert_eq!(fired.load(Ordering::SeqCst), 1, "trial {trial}");
+            reg.assert_drained();
+            // final total = best(c1) + best(c2) = 4 + 4
+            assert_eq!(reg.snapshot(p).0, 8, "trial {trial}");
+        }
+    }
+}

@@ -1,0 +1,459 @@
+//! Sequential component-aware solver (Algorithm 2, recursive form).
+//!
+//! This is the paper's "Sequential" baseline: a single-threaded CPU
+//! implementation that embodies *all* the proposed optimizations
+//! (component-awareness, clique/cycle rules, reduced + induced root,
+//! bounds) but none of the parallel machinery. It additionally supports
+//! **cover extraction** (the parallel engine tracks sizes only, as on the
+//! GPU), so it doubles as the witness producer for validity tests.
+
+use crate::degree::NonZeroBounds;
+use crate::graph::Graph;
+use crate::reduce::special::{classify, SpecialComponent};
+use std::time::Instant;
+
+/// Outcome of a sequential search.
+#[derive(Debug, Clone)]
+pub struct SeqOutcome {
+    /// Best cover size found (== initial bound if not improved).
+    pub best: u32,
+    /// A witness cover of size `best`, if one strictly better than the
+    /// initial bound was found and extraction was requested.
+    pub cover: Option<Vec<u32>>,
+    /// Search-tree nodes visited.
+    pub tree_nodes: u64,
+    /// Nodes that branched on components.
+    pub component_branches: u64,
+    /// True if the deadline fired.
+    pub timed_out: bool,
+}
+
+struct Seq<'g> {
+    g: &'g Graph,
+    component_aware: bool,
+    extract: bool,
+    deadline: Option<Instant>,
+    tree_nodes: u64,
+    component_branches: u64,
+    timed_out: bool,
+}
+
+/// Solve MVC on `g` sequentially. `initial_best` is an exclusive upper
+/// bound (search for strictly smaller covers). Returns the best size and
+/// optionally a witness for the improvement.
+pub fn solve(
+    g: &Graph,
+    initial_best: u32,
+    component_aware: bool,
+    extract: bool,
+    deadline: Option<Instant>,
+) -> SeqOutcome {
+    let mut s = Seq {
+        g,
+        component_aware,
+        extract,
+        deadline,
+        tree_nodes: 0,
+        component_branches: 0,
+        timed_out: false,
+    };
+    let deg: Vec<u32> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+    let edges = g.num_edges() as u64;
+    let mut best = initial_best;
+    let mut cover = None;
+    s.mvc(deg, edges, 0, &mut best, &mut cover, &mut Vec::new());
+    SeqOutcome {
+        best,
+        cover,
+        tree_nodes: s.tree_nodes,
+        component_branches: s.component_branches,
+        timed_out: s.timed_out,
+    }
+}
+
+impl<'g> Seq<'g> {
+    /// Algorithm 2. `sol` is the vertices committed on this branch (kept
+    /// only when extracting); on improvement, `best`/`best_cover` update.
+    #[allow(clippy::too_many_arguments)]
+    fn mvc(
+        &mut self,
+        mut deg: Vec<u32>,
+        mut edges: u64,
+        mut sol_size: u32,
+        best: &mut u32,
+        best_cover: &mut Option<Vec<u32>>,
+        sol: &mut Vec<u32>,
+    ) {
+        if self.timed_out {
+            return;
+        }
+        self.tree_nodes += 1;
+        if self.tree_nodes % 128 == 0 {
+            if let Some(d) = self.deadline {
+                if Instant::now() >= d {
+                    self.timed_out = true;
+                    return;
+                }
+            }
+        }
+        let sol_mark = sol.len();
+
+        // reduce (line 2)
+        self.reduce(&mut deg, &mut edges, &mut sol_size, *best, sol);
+
+        // stopping conditions (lines 3-4)
+        let prune = sol_size >= *best || {
+            let rem = (*best - sol_size - 1) as u64;
+            edges > rem * rem
+        };
+        if prune {
+            sol.truncate(sol_mark);
+            return;
+        }
+        // leaf (lines 5-7)
+        if edges == 0 {
+            *best = sol_size;
+            if self.extract {
+                *best_cover = Some(sol.clone());
+            }
+            sol.truncate(sol_mark);
+            return;
+        }
+
+        // components (lines 9-20)
+        if self.component_aware {
+            let comps = self.components(&deg);
+            if comps.len() > 1 {
+                self.component_branches += 1;
+                let mut sum = sol_size;
+                let comp_mark = sol.len();
+                for comp in &comps {
+                    // closed-form special components (§III-D)
+                    if let Some(sp) =
+                        classify(comp.len() as u32, comp.iter().map(|&v| deg[v as usize]))
+                    {
+                        sum += sp.mvc_size();
+                        if self.extract {
+                            special_cover(self.g, comp, &deg, sp, sol);
+                        }
+                        continue;
+                    }
+                    // best_i = min(best - sum, |V_i| - 1)   (line 17)
+                    let size = comp.len() as u32;
+                    let cap = (*best).saturating_sub(sum).min(size - 1);
+                    // sub-degree array restricted to the component
+                    let mut sdeg = vec![0u32; deg.len()];
+                    let mut sedges = 0u64;
+                    for &v in comp {
+                        sdeg[v as usize] = deg[v as usize];
+                        sedges += deg[v as usize] as u64;
+                    }
+                    let mut sub_cover: Option<Vec<u32>> = None;
+                    let mut sub_sol = Vec::new();
+                    let mut limit = cap;
+                    // search strictly below `cap`; fall back to the
+                    // always-achievable all-but-one cover if nothing better
+                    self.mvc(sdeg, sedges / 2, 0, &mut limit, &mut sub_cover, &mut sub_sol);
+                    let improved = limit < cap;
+                    let best_i = if improved { limit } else { size - 1 };
+                    sum += best_i;
+                    if self.extract {
+                        match sub_cover {
+                            Some(c) if improved => sol.extend(c),
+                            // all-but-one witness for the unimproved bound
+                            _ => sol.extend(comp.iter().skip(1).copied()),
+                        }
+                    }
+                    if self.timed_out {
+                        sol.truncate(sol_mark);
+                        return;
+                    }
+                }
+                if sum < *best {
+                    *best = sum; // line 20
+                    if self.extract {
+                        *best_cover = Some(sol.clone());
+                    }
+                }
+                let _ = comp_mark;
+                sol.truncate(sol_mark);
+                return;
+            }
+        }
+
+        // single-component branch (lines 11-13)
+        let vmax = (0..deg.len() as u32).max_by_key(|&v| deg[v as usize]).unwrap();
+        debug_assert!(deg[vmax as usize] > 0);
+
+        // `sol` currently holds the ancestor prefix plus this node's
+        // reduction commits; both branches extend from here.
+        let reduce_mark = sol.len();
+
+        // left: vmax into S
+        {
+            let mut d2 = deg.clone();
+            let mut e2 = edges;
+            let mut s2 = sol_size;
+            self.cover(&mut d2, &mut e2, &mut s2, vmax, sol);
+            self.mvc(d2, e2, s2, best, best_cover, sol);
+            sol.truncate(reduce_mark);
+        }
+        // right: N(vmax) into S (consumes this node's arrays)
+        {
+            let nbrs: Vec<u32> = self
+                .g
+                .neighbors(vmax)
+                .iter()
+                .copied()
+                .filter(|&w| deg[w as usize] > 0)
+                .collect();
+            for &u in &nbrs {
+                if deg[u as usize] > 0 {
+                    self.cover(&mut deg, &mut edges, &mut sol_size, u, sol);
+                }
+            }
+            self.mvc(deg, edges, sol_size, best, best_cover, sol);
+            sol.truncate(sol_mark);
+        }
+    }
+
+    fn cover(&self, deg: &mut [u32], edges: &mut u64, sol_size: &mut u32, v: u32, sol: &mut Vec<u32>) {
+        let d = deg[v as usize];
+        debug_assert!(d > 0);
+        deg[v as usize] = 0;
+        *edges -= d as u64;
+        let mut rem = d;
+        for &w in self.g.neighbors(v) {
+            if deg[w as usize] > 0 {
+                deg[w as usize] -= 1;
+                rem -= 1;
+                if rem == 0 {
+                    break;
+                }
+            }
+        }
+        *sol_size += 1;
+        if self.extract {
+            sol.push(v);
+        }
+    }
+
+    /// Reduction fixpoint (degree-1, degree-2 triangle, high-degree).
+    fn reduce(
+        &self,
+        deg: &mut Vec<u32>,
+        edges: &mut u64,
+        sol_size: &mut u32,
+        best: u32,
+        sol: &mut Vec<u32>,
+    ) {
+        loop {
+            if *edges == 0 || *sol_size >= best {
+                return;
+            }
+            let mut changed = false;
+            let w = NonZeroBounds::exact(deg.as_slice());
+            if w.is_empty() {
+                return;
+            }
+            for v in w.lo..=w.hi {
+                let d = deg[v as usize];
+                match d {
+                    0 => continue,
+                    1 => {
+                        let u = self
+                            .g
+                            .neighbors(v)
+                            .iter()
+                            .copied()
+                            .find(|&w| deg[w as usize] > 0)
+                            .unwrap();
+                        self.cover(deg, edges, sol_size, u, sol);
+                        changed = true;
+                    }
+                    2 => {
+                        let mut it = self
+                            .g
+                            .neighbors(v)
+                            .iter()
+                            .copied()
+                            .filter(|&w| deg[w as usize] > 0);
+                        let a = it.next().unwrap();
+                        let b = it.next().unwrap();
+                        if self.g.has_edge(a, b) {
+                            self.cover(deg, edges, sol_size, a, sol);
+                            self.cover(deg, edges, sol_size, b, sol);
+                            changed = true;
+                        }
+                    }
+                    d => {
+                        let budget = best.saturating_sub(*sol_size).saturating_sub(1);
+                        if d > budget {
+                            self.cover(deg, edges, sol_size, v, sol);
+                            changed = true;
+                        }
+                    }
+                }
+                if *edges == 0 || *sol_size >= best {
+                    return;
+                }
+            }
+            if !changed {
+                return;
+            }
+        }
+    }
+
+    /// Connected components of the residual graph (vertex lists).
+    fn components(&self, deg: &[u32]) -> Vec<Vec<u32>> {
+        let n = deg.len();
+        let mut seen = vec![false; n];
+        let mut comps = Vec::new();
+        for s in 0..n as u32 {
+            if deg[s as usize] == 0 || seen[s as usize] {
+                continue;
+            }
+            let mut comp = vec![s];
+            seen[s as usize] = true;
+            let mut head = 0;
+            while head < comp.len() {
+                let u = comp[head];
+                head += 1;
+                for &w in self.g.neighbors(u) {
+                    if deg[w as usize] > 0 && !seen[w as usize] {
+                        seen[w as usize] = true;
+                        comp.push(w);
+                    }
+                }
+            }
+            comps.push(comp);
+        }
+        comps
+    }
+}
+
+/// Append the canonical cover of a special component to `sol`.
+fn special_cover(g: &Graph, comp: &[u32], deg: &[u32], sp: SpecialComponent, sol: &mut Vec<u32>) {
+    match sp {
+        SpecialComponent::Clique { .. } => sol.extend(comp.iter().skip(1).copied()),
+        SpecialComponent::ChordlessCycle { .. } => {
+            // walk the cycle, take alternating vertices (+1 when odd)
+            let start = comp[0];
+            let mut order = vec![start];
+            let mut prev = start;
+            let mut cur = g
+                .neighbors(start)
+                .iter()
+                .copied()
+                .find(|&w| deg[w as usize] > 0)
+                .unwrap();
+            while cur != start {
+                order.push(cur);
+                let next = g
+                    .neighbors(cur)
+                    .iter()
+                    .copied()
+                    .find(|&w| deg[w as usize] > 0 && w != prev)
+                    .unwrap();
+                prev = cur;
+                cur = next;
+            }
+            sol.extend(order.iter().skip(1).step_by(2).copied());
+            if order.len() % 2 == 1 {
+                sol.push(order[order.len() - 1]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::solver::{greedy, oracle};
+
+    fn seq_best(g: &Graph, component_aware: bool) -> u32 {
+        let ub = greedy::greedy_bound(g);
+        solve(g, ub + 1, component_aware, false, None).best.min(ub)
+    }
+
+    #[test]
+    fn matches_oracle_random() {
+        for seed in 0..15 {
+            let g = generators::erdos_renyi(16, 0.2, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(seq_best(&g, true), opt, "ca seed {seed}");
+            assert_eq!(seq_best(&g, false), opt, "plain seed {seed}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_split_graphs() {
+        for seed in 0..10 {
+            let g = generators::union_of_random(4, 3, 6, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(seq_best(&g, true), opt, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn extraction_produces_valid_optimal_cover() {
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(15, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            let n = g.num_vertices() as u32;
+            let out = solve(&g, n + 1, true, true, None);
+            assert_eq!(out.best, opt, "seed {seed}");
+            if opt <= n {
+                let cover = out.cover.expect("improvement below n+1 must exist");
+                assert_eq!(cover.len() as u32, opt, "seed {seed}");
+                assert!(g.is_vertex_cover(&cover), "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn extraction_on_component_split() {
+        let g = Graph::disjoint_union(&[
+            generators::cycle(7),
+            generators::clique(5),
+            generators::erdos_renyi(10, 0.3, 3),
+        ]);
+        let opt = oracle::mvc_size(&g);
+        let out = solve(&g, g.num_vertices() as u32 + 1, true, true, None);
+        assert_eq!(out.best, opt);
+        let cover = out.cover.unwrap();
+        assert_eq!(cover.len() as u32, opt);
+        assert!(g.is_vertex_cover(&cover));
+        assert!(out.component_branches >= 1);
+    }
+
+    #[test]
+    fn component_awareness_visits_fewer_nodes() {
+        // reduction-proof components: the component-aware tree must be
+        // smaller than the oblivious one (paper §III-A)
+        let g = Graph::disjoint_union(&[
+            generators::petersen(),
+            generators::generalized_petersen(7, 2),
+            generators::generalized_petersen(9, 2),
+        ]);
+        let ub = greedy::greedy_bound(&g) + 1;
+        let with = solve(&g, ub, true, false, None);
+        let without = solve(&g, ub, false, false, None);
+        assert_eq!(with.best, without.best);
+        assert!(
+            with.tree_nodes < without.tree_nodes,
+            "with={} without={}",
+            with.tree_nodes,
+            without.tree_nodes
+        );
+    }
+
+    #[test]
+    fn timeout_reported() {
+        // hard enough to exceed the first deadline check
+        let g = generators::generalized_petersen(40, 2);
+        let out = solve(&g, g.num_vertices() as u32, true, false, Some(Instant::now()));
+        assert!(out.timed_out);
+    }
+}

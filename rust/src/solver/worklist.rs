@@ -1,0 +1,162 @@
+//! Shared load-balancing worklist (paper §II-C).
+//!
+//! The state-of-the-art GPU solution offloads search-tree nodes from busy
+//! thread blocks to idle ones through a multi-producer multi-consumer
+//! broker queue. Here: mutex-sharded FIFO deques with an approximate
+//! global length counter. A worker pushes to its home shard and steals
+//! round-robin from the others; the length counter implements the
+//! "is the worklist hungry?" offload heuristic without taking locks.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Sharded MPMC worklist.
+#[derive(Debug)]
+pub struct Worklist<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    len: AtomicUsize,
+    pushes: AtomicUsize,
+    steals: AtomicUsize,
+}
+
+impl<T> Worklist<T> {
+    /// Create a worklist with one shard per `shards` (≥ 1).
+    pub fn new(shards: usize) -> Self {
+        let shards = shards.max(1);
+        Worklist {
+            shards: (0..shards).map(|_| Mutex::new(VecDeque::new())).collect(),
+            len: AtomicUsize::new(0),
+            pushes: AtomicUsize::new(0),
+            steals: AtomicUsize::new(0),
+        }
+    }
+
+    /// Approximate number of queued items.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    /// True if no items are queued (approximate).
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Offload heuristic: the worklist wants more work if it holds fewer
+    /// than `low_water` items.
+    #[inline]
+    pub fn is_hungry(&self, low_water: usize) -> bool {
+        self.len() < low_water
+    }
+
+    /// Push an item to the `home` shard.
+    pub fn push(&self, home: usize, item: T) {
+        let shard = &self.shards[home % self.shards.len()];
+        shard.lock().unwrap().push_back(item);
+        self.len.fetch_add(1, Ordering::Relaxed);
+        self.pushes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Pop, scanning shards starting from `home` (so a worker drains its
+    /// own shard before stealing).
+    pub fn pop(&self, home: usize) -> Option<T> {
+        if self.is_empty() {
+            return None;
+        }
+        let k = self.shards.len();
+        for i in 0..k {
+            let shard = &self.shards[(home + i) % k];
+            if let Some(item) = shard.lock().unwrap().pop_front() {
+                self.len.fetch_sub(1, Ordering::Relaxed);
+                if i > 0 {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                }
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Total pushes over the run (statistics).
+    pub fn total_pushes(&self) -> usize {
+        self.pushes.load(Ordering::Relaxed)
+    }
+
+    /// Total cross-shard steals over the run (statistics).
+    pub fn total_steals(&self) -> usize {
+        self.steals.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_within_shard() {
+        let w = Worklist::new(1);
+        w.push(0, 1);
+        w.push(0, 2);
+        w.push(0, 3);
+        assert_eq!(w.pop(0), Some(1));
+        assert_eq!(w.pop(0), Some(2));
+        assert_eq!(w.pop(0), Some(3));
+        assert_eq!(w.pop(0), None);
+    }
+
+    #[test]
+    fn steals_across_shards() {
+        let w = Worklist::new(4);
+        w.push(2, 42);
+        assert_eq!(w.pop(0), Some(42));
+        assert_eq!(w.total_steals(), 1);
+    }
+
+    #[test]
+    fn hungry_threshold() {
+        let w = Worklist::new(2);
+        assert!(w.is_hungry(1));
+        w.push(0, 1);
+        assert!(!w.is_hungry(1));
+        assert!(w.is_hungry(5));
+    }
+
+    #[test]
+    fn concurrent_push_pop_conserves_items() {
+        let w = Arc::new(Worklist::new(8));
+        let n_threads = 8;
+        let per = 5_000usize;
+        let popped = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for t in 0..n_threads {
+                let w = Arc::clone(&w);
+                s.spawn(move || {
+                    for i in 0..per {
+                        w.push(t, (t, i));
+                    }
+                });
+            }
+            for t in 0..n_threads {
+                let w = Arc::clone(&w);
+                let popped = Arc::clone(&popped);
+                s.spawn(move || loop {
+                    if w.pop(t).is_some() {
+                        let c = popped.fetch_add(1, Ordering::Relaxed) + 1;
+                        if c == n_threads * per {
+                            break;
+                        }
+                    } else if popped.load(Ordering::Relaxed) == n_threads * per {
+                        break;
+                    } else {
+                        std::thread::yield_now();
+                    }
+                });
+            }
+        });
+        assert_eq!(popped.load(Ordering::Relaxed), n_threads * per);
+        assert!(w.is_empty());
+    }
+}

@@ -1,0 +1,164 @@
+//! Fixed-capacity bitset used by BFS visitation marks, crown reduction,
+//! and induced-subgraph construction.
+
+/// A fixed-size bitset over `u64` words.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct BitSet {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl BitSet {
+    /// Create a bitset with `len` bits, all clear.
+    pub fn new(len: usize) -> Self {
+        Self { words: vec![0; len.div_ceil(64)], len }
+    }
+
+    /// Number of bits.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True if the bitset has zero capacity.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Set bit `i`.
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] |= 1 << (i & 63);
+    }
+
+    /// Clear bit `i`.
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i >> 6] &= !(1 << (i & 63));
+    }
+
+    /// Test bit `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i >> 6] >> (i & 63)) & 1 == 1
+    }
+
+    /// Set bit `i` and report whether it was previously clear.
+    #[inline]
+    pub fn insert(&mut self, i: usize) -> bool {
+        let was = self.get(i);
+        self.set(i);
+        !was
+    }
+
+    /// Clear all bits.
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Number of set bits.
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Iterate over indices of set bits in ascending order.
+    pub fn iter_ones(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let b = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some((wi << 6) + b)
+                }
+            })
+        })
+    }
+
+    /// Index of the first clear bit below `self.len()`, if any.
+    pub fn first_zero(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != u64::MAX {
+                let b = (!w).trailing_zeros() as usize;
+                let idx = (wi << 6) + b;
+                if idx < self.len {
+                    return Some(idx);
+                }
+            }
+        }
+        None
+    }
+
+    /// In-place union with another bitset of the same length.
+    pub fn union_with(&mut self, other: &BitSet) {
+        assert_eq!(self.len, other.len);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= *b;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_clear() {
+        let mut b = BitSet::new(130);
+        assert!(!b.get(0));
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1) && !b.get(63) && !b.get(128));
+        b.clear(64);
+        assert!(!b.get(64));
+        assert_eq!(b.count(), 2);
+    }
+
+    #[test]
+    fn insert_reports_new() {
+        let mut b = BitSet::new(10);
+        assert!(b.insert(3));
+        assert!(!b.insert(3));
+    }
+
+    #[test]
+    fn iter_ones_order() {
+        let mut b = BitSet::new(200);
+        for &i in &[5usize, 63, 64, 127, 128, 199] {
+            b.set(i);
+        }
+        let got: Vec<usize> = b.iter_ones().collect();
+        assert_eq!(got, vec![5, 63, 64, 127, 128, 199]);
+    }
+
+    #[test]
+    fn first_zero_skips_full_words() {
+        let mut b = BitSet::new(130);
+        for i in 0..100 {
+            b.set(i);
+        }
+        assert_eq!(b.first_zero(), Some(100));
+        for i in 100..130 {
+            b.set(i);
+        }
+        assert_eq!(b.first_zero(), None);
+    }
+
+    #[test]
+    fn union() {
+        let mut a = BitSet::new(70);
+        let mut b = BitSet::new(70);
+        a.set(1);
+        b.set(69);
+        a.union_with(&b);
+        assert!(a.get(1) && a.get(69));
+    }
+}

@@ -1,0 +1,118 @@
+//! A tiny argument parser (the build is offline; no `clap`).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, in any order. Unknown flags are an error so typos fail fast.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals plus key/value options.
+#[derive(Debug, Default)]
+pub struct Args {
+    positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `valued` lists option names that consume a
+    /// value; anything else starting with `--` is a boolean flag.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        raw: I,
+        valued: &[&str],
+    ) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if valued.contains(&body) {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| format!("--{body} expects a value"))?;
+                    out.options.insert(body.to_string(), v);
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional argument `i`.
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positional.get(i).map(|s| s.as_str())
+    }
+
+    /// All positionals.
+    pub fn positionals(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    /// Typed option with default; errors if present but unparsable.
+    pub fn get_parse<T: std::str::FromStr>(
+        &self,
+        key: &str,
+        default: T,
+    ) -> Result<T, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("--{key}: cannot parse {s:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = Args::parse(
+            v(&["solve", "--workers", "8", "--timeout=30", "--verbose", "g.mtx"]),
+            &["workers", "timeout"],
+        )
+        .unwrap();
+        assert_eq!(a.pos(0), Some("solve"));
+        assert_eq!(a.pos(1), Some("g.mtx"));
+        assert_eq!(a.get("workers"), Some("8"));
+        assert_eq!(a.get_parse::<f64>("timeout", 0.0).unwrap(), 30.0);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(v(&["--workers"]), &["workers"]).is_err());
+    }
+
+    #[test]
+    fn parse_error_reported() {
+        let a = Args::parse(v(&["--k=abc"]), &[]).unwrap();
+        assert!(a.get_parse::<u32>("k", 0).is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(v(&[]), &[]).unwrap();
+        assert_eq!(a.get_parse::<u32>("k", 7).unwrap(), 7);
+    }
+}

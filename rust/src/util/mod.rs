@@ -1,0 +1,78 @@
+//! Small self-contained utilities (the build is fully offline, so these
+//! replace the usual `rand` / `fixedbitset` / `clap` dependencies).
+
+pub mod bitset;
+pub mod cli;
+pub mod rng;
+pub mod timer;
+
+pub use bitset::BitSet;
+pub use rng::SplitMix64;
+pub use timer::ActivityTimer;
+
+/// Format a duration in seconds the way the paper's tables do: seconds
+/// with millisecond precision, or `>Xhrs` when the run timed out.
+pub fn fmt_secs(secs: f64, timed_out: bool, timeout_secs: f64) -> String {
+    if timed_out {
+        if timeout_secs >= 3600.0 {
+            format!(">{:.0}hrs", timeout_secs / 3600.0)
+        } else {
+            format!(">{:.0}s", timeout_secs)
+        }
+    } else if secs >= 3600.0 {
+        format!("{:.3}hrs", secs / 3600.0)
+    } else {
+        format!("{:.3}", secs)
+    }
+}
+
+/// Format a speedup ratio like the paper: `12.8x`, or `>732.8x` when the
+/// baseline timed out (lower bound).
+pub fn fmt_speedup(baseline: f64, ours: f64, baseline_timed_out: bool) -> String {
+    if ours <= 0.0 {
+        return "-".to_string();
+    }
+    let ratio = baseline / ours;
+    let pretty = if ratio >= 100.0 {
+        format!("{:.0}x", ratio)
+    } else if ratio >= 10.0 {
+        format!("{:.1}x", ratio)
+    } else {
+        format!("{:.2}x", ratio)
+    };
+    if baseline_timed_out {
+        format!(">{pretty}")
+    } else {
+        pretty
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_basic() {
+        assert_eq!(fmt_secs(0.00731, false, 30.0), "0.007");
+        assert_eq!(fmt_secs(2.147, false, 30.0), "2.147");
+    }
+
+    #[test]
+    fn fmt_secs_timeout() {
+        assert_eq!(fmt_secs(21600.0, true, 21600.0), ">6hrs");
+        assert_eq!(fmt_secs(30.0, true, 30.0), ">30s");
+    }
+
+    #[test]
+    fn fmt_secs_hours() {
+        assert_eq!(fmt_secs(5.628 * 3600.0, false, 21600.0), "5.628hrs");
+    }
+
+    #[test]
+    fn fmt_speedup_bands() {
+        assert_eq!(fmt_speedup(0.131, 0.066, false), "1.98x");
+        assert_eq!(fmt_speedup(70.5, 30.6, false), "2.30x");
+        assert_eq!(fmt_speedup(21600.0, 29.475, true), ">733x");
+        assert_eq!(fmt_speedup(1000.0, 1.0, false), "1000x");
+    }
+}

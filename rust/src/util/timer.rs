@@ -1,0 +1,190 @@
+//! Per-worker activity timing for the Figure-4 execution breakdown.
+//!
+//! The paper instruments CUDA thread blocks with SM clocks, counts cycles
+//! per activity, normalizes per block, and averages across blocks. We do
+//! the same with monotonic clocks per worker thread: each worker owns an
+//! [`ActivityTimer`], charges elapsed time to one [`Activity`] at a time,
+//! and the harness merges + normalizes the per-worker totals.
+
+use std::time::Instant;
+
+/// Activities charged by the solver engine, matching Figure 4's legend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(usize)]
+pub enum Activity {
+    /// Applying reduction rules (incl. root reduce + induce on worker 0).
+    Reduce = 0,
+    /// BFS component search + registry updates.
+    ComponentSearch = 1,
+    /// Selecting the branch vertex and materializing children.
+    Branch = 2,
+    /// Private stack and shared worklist access (push/pop/steal).
+    Queue = 3,
+    /// Stopping-condition checks and leaf handling.
+    Leaf = 4,
+    /// Waiting while idle (excluded from the normalized breakdown, the
+    /// paper reports busy-time proportions).
+    Idle = 5,
+}
+
+/// Number of activity classes.
+pub const NUM_ACTIVITIES: usize = 6;
+
+/// All activities in display order.
+pub const ALL_ACTIVITIES: [Activity; NUM_ACTIVITIES] = [
+    Activity::Reduce,
+    Activity::ComponentSearch,
+    Activity::Branch,
+    Activity::Queue,
+    Activity::Leaf,
+    Activity::Idle,
+];
+
+impl Activity {
+    /// Human-readable label as used in Figure 4.
+    pub fn label(self) -> &'static str {
+        match self {
+            Activity::Reduce => "reduction rules",
+            Activity::ComponentSearch => "components search",
+            Activity::Branch => "branching",
+            Activity::Queue => "stack/worklist",
+            Activity::Leaf => "stopping/leaf",
+            Activity::Idle => "idle",
+        }
+    }
+}
+
+/// Accumulates nanoseconds per activity for one worker.
+#[derive(Debug, Clone)]
+pub struct ActivityTimer {
+    nanos: [u64; NUM_ACTIVITIES],
+    current: Option<(Activity, Instant)>,
+    enabled: bool,
+}
+
+impl Default for ActivityTimer {
+    fn default() -> Self {
+        Self::disabled()
+    }
+}
+
+impl ActivityTimer {
+    /// A timer that records.
+    pub fn enabled() -> Self {
+        Self { nanos: [0; NUM_ACTIVITIES], current: None, enabled: true }
+    }
+
+    /// A timer that is a no-op (zero overhead on the hot path).
+    pub fn disabled() -> Self {
+        Self { nanos: [0; NUM_ACTIVITIES], current: None, enabled: false }
+    }
+
+    /// Switch the charged activity, closing out the previous one.
+    #[inline]
+    pub fn switch(&mut self, act: Activity) {
+        if !self.enabled {
+            return;
+        }
+        let now = Instant::now();
+        if let Some((prev, start)) = self.current.take() {
+            self.nanos[prev as usize] += now.duration_since(start).as_nanos() as u64;
+        }
+        self.current = Some((act, now));
+    }
+
+    /// Stop charging (e.g. at worker exit).
+    pub fn stop(&mut self) {
+        if !self.enabled {
+            return;
+        }
+        if let Some((prev, start)) = self.current.take() {
+            self.nanos[prev as usize] += start.elapsed().as_nanos() as u64;
+        }
+    }
+
+    /// Raw nanosecond totals.
+    pub fn totals(&self) -> [u64; NUM_ACTIVITIES] {
+        self.nanos
+    }
+
+    /// Merge another worker's totals into this one.
+    pub fn merge(&mut self, other: &ActivityTimer) {
+        for i in 0..NUM_ACTIVITIES {
+            self.nanos[i] += other.nanos[i];
+        }
+    }
+
+    /// Busy-time fractions per activity (idle excluded), summing to ~1.
+    pub fn breakdown(&self) -> [f64; NUM_ACTIVITIES] {
+        let busy: u64 = ALL_ACTIVITIES
+            .iter()
+            .filter(|a| **a != Activity::Idle)
+            .map(|a| self.nanos[*a as usize])
+            .sum();
+        let mut out = [0.0; NUM_ACTIVITIES];
+        if busy > 0 {
+            for a in ALL_ACTIVITIES {
+                if a != Activity::Idle {
+                    out[a as usize] = self.nanos[a as usize] as f64 / busy as f64;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_noop() {
+        let mut t = ActivityTimer::disabled();
+        t.switch(Activity::Reduce);
+        t.stop();
+        assert_eq!(t.totals(), [0; NUM_ACTIVITIES]);
+    }
+
+    #[test]
+    fn charges_elapsed_time() {
+        let mut t = ActivityTimer::enabled();
+        t.switch(Activity::Reduce);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        t.switch(Activity::Branch);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.stop();
+        let n = t.totals();
+        assert!(n[Activity::Reduce as usize] >= 1_000_000);
+        assert!(n[Activity::Branch as usize] >= 500_000);
+        assert_eq!(n[Activity::Idle as usize], 0);
+    }
+
+    #[test]
+    fn breakdown_sums_to_one() {
+        let mut t = ActivityTimer::enabled();
+        t.switch(Activity::Reduce);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.switch(Activity::Idle);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        t.stop();
+        let b = t.breakdown();
+        let sum: f64 = b.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9, "sum={sum}");
+        assert_eq!(b[Activity::Idle as usize], 0.0);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = ActivityTimer::enabled();
+        a.switch(Activity::Queue);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        a.stop();
+        let mut b = ActivityTimer::enabled();
+        b.switch(Activity::Queue);
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        b.stop();
+        let before = a.totals()[Activity::Queue as usize];
+        a.merge(&b);
+        assert!(a.totals()[Activity::Queue as usize] > before);
+    }
+}

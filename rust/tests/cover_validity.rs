@@ -1,0 +1,97 @@
+//! Witness validity: extracted covers are genuine vertex covers of
+//! optimal size, and the greedy/matching bounds bracket the optimum.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{greedy, oracle, solve_mvc, SolverConfig};
+use cavc::util::SplitMix64;
+
+fn extract_cfg() -> SolverConfig {
+    let mut cfg = SolverConfig::sequential();
+    cfg.extract_cover = true;
+    cfg
+}
+
+#[test]
+fn sequential_witnesses_are_optimal_covers() {
+    let mut rng = SplitMix64::new(0xC0FE);
+    for trial in 0..40 {
+        let n = rng.range(6, 20);
+        let p = 0.08 + rng.next_f64() * 0.3;
+        let g = generators::erdos_renyi(n, p, rng.next_u64());
+        let opt = oracle::mvc_size(&g);
+        let r = solve_mvc(&g, &extract_cfg());
+        assert_eq!(r.best, opt, "trial {trial}");
+        if let Some(c) = &r.cover {
+            assert!(g.is_vertex_cover(c), "trial {trial}: not a cover");
+            assert_eq!(c.len() as u32, opt, "trial {trial}: wrong size");
+            // no duplicates
+            let set: std::collections::HashSet<_> = c.iter().collect();
+            assert_eq!(set.len(), c.len(), "trial {trial}: duplicate vertices");
+        }
+    }
+}
+
+#[test]
+fn witnesses_on_splitting_graphs() {
+    for seed in 0..12 {
+        let g = generators::union_of_random(4, 3, 8, 0.3, seed);
+        let opt = oracle::mvc_size(&g);
+        let r = solve_mvc(&g, &extract_cfg());
+        assert_eq!(r.best, opt, "seed {seed}");
+        if let Some(c) = &r.cover {
+            assert!(g.is_vertex_cover(c), "seed {seed}");
+            assert_eq!(c.len() as u32, opt, "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn witnesses_on_special_components() {
+    // unions of cliques and cycles exercise the §III-D closed forms
+    let g = Graph::disjoint_union(&[
+        generators::clique(6),
+        generators::cycle(9),
+        generators::cycle(8),
+        generators::clique(4),
+    ]);
+    let opt = oracle::mvc_size(&g);
+    assert_eq!(opt, 5 + 5 + 4 + 3);
+    let r = solve_mvc(&g, &extract_cfg());
+    assert_eq!(r.best, opt);
+    if let Some(c) = &r.cover {
+        assert!(g.is_vertex_cover(c));
+        assert_eq!(c.len() as u32, opt);
+    }
+}
+
+#[test]
+fn witness_respects_crown_and_root_reduction() {
+    // graphs that reduce heavily at the root: the translated witness must
+    // still cover the *original* graph
+    for seed in 0..8 {
+        let g = generators::web_crawl(30, 120, seed);
+        let r = solve_mvc(&g, &extract_cfg());
+        if let Some(c) = &r.cover {
+            assert!(g.is_vertex_cover(c), "seed {seed}");
+            assert_eq!(c.len() as u32, r.best, "seed {seed}");
+        }
+        // parallel result must agree
+        let p = solve_mvc(&g, &SolverConfig::proposed());
+        assert_eq!(p.best, r.best, "seed {seed}");
+    }
+}
+
+#[test]
+fn bounds_bracket_the_optimum() {
+    let mut rng = SplitMix64::new(0xB0);
+    for trial in 0..30 {
+        let n = rng.range(6, 22);
+        let g = generators::erdos_renyi(n, 0.2, rng.next_u64());
+        let opt = oracle::mvc_size(&g);
+        let gre = greedy::greedy_bound(&g);
+        assert!(gre >= opt, "trial {trial}: greedy below optimum");
+        let matching = greedy::matching_cover(&g);
+        assert!(g.is_vertex_cover(&matching), "trial {trial}");
+        assert!(matching.len() as u32 <= 2 * opt.max(1), "trial {trial}: 2-approx broken");
+    }
+}

@@ -1,0 +1,110 @@
+//! End-to-end pipeline over the benchmark suite: prepare → (optionally
+//! XLA-split) → parallel search, with cross-variant agreement on the
+//! fast datasets and sane table-row generation on the rest.
+
+use cavc::harness::{datasets, tables};
+use cavc::solver::{solve_mvc, SolverConfig};
+
+#[test]
+fn smoke_suite_all_variants_agree() {
+    std::env::set_var("CAVC_TIMEOUT_S", "20");
+    for d in datasets::smoke_suite() {
+        let g = d.build();
+        let mut answers = Vec::new();
+        for cfg in [
+            SolverConfig::proposed(),
+            SolverConfig::sequential(),
+            SolverConfig::no_load_balance(),
+        ] {
+            let cfg = cfg.with_timeout(std::time::Duration::from_secs(20));
+            let r = solve_mvc(&g, &cfg);
+            if !r.timed_out {
+                answers.push((cfg.variant.name(), r.best));
+            }
+        }
+        assert!(!answers.is_empty(), "{}: every variant timed out", d.name);
+        let first = answers[0].1;
+        for (name, best) in &answers {
+            assert_eq!(*best, first, "{}: {name} disagrees", d.name);
+        }
+    }
+}
+
+#[test]
+fn proposed_beats_trivial_bound_on_suite() {
+    std::env::set_var("CAVC_TIMEOUT_S", "20");
+    for d in datasets::smoke_suite() {
+        let g = d.build();
+        let r = tables::run_mvc(&g, SolverConfig::proposed());
+        assert!(!r.timed_out, "{} timed out", d.name);
+        assert!(r.best < g.num_vertices() as u32, "{}: trivial answer", d.name);
+        assert!(r.best > 0, "{}: zero cover on a graph with edges", d.name);
+    }
+}
+
+#[test]
+fn table4_rows_reproduce_paper_shape() {
+    // The qualitative claims of Table IV on our analogs: reduction never
+    // grows the array, never reduces blocks, and always enables short
+    // dtypes at analog scale.
+    for d in datasets::suite() {
+        let row = tables::table4_row(&d);
+        assert!(row.n_after <= row.n_before, "{}", d.name);
+        assert!(row.blocks_after >= row.blocks_before, "{}", d.name);
+        assert!(row.short_after, "{}: expected short dtype after", d.name);
+    }
+}
+
+#[test]
+fn splitting_dataset_visits_fewer_nodes_with_components() {
+    std::env::set_var("CAVC_TIMEOUT_S", "20");
+    // c-fat: the paper's canonical always-splits family (Table III shows
+    // every split has exactly 2 components)
+    let d = datasets::dataset("c-fat500-5").unwrap();
+    let row = tables::table3_row(&d);
+    assert!(
+        row.disabled_timed_out || row.nodes_enabled <= row.nodes_disabled,
+        "{}: component branching did not reduce tree nodes ({} vs {})",
+        d.name,
+        row.nodes_enabled,
+        row.nodes_disabled
+    );
+    assert!(row.component_branches > 0, "c-fat must branch on components");
+    // paper: c-fat splits are all 2-component
+    let max_comps = row.histogram.keys().max().copied().unwrap_or(0);
+    assert!(max_comps >= 2);
+}
+
+#[test]
+fn fig4_fractions_are_normalized() {
+    std::env::set_var("CAVC_TIMEOUT_S", "20");
+    let d = datasets::dataset("power-eris1176").unwrap();
+    let row = tables::fig4_row(&d);
+    let sum: f64 = row.fractions.iter().sum();
+    assert!((sum - 1.0).abs() < 1e-6, "fractions sum to {sum}");
+}
+
+#[test]
+fn accelerated_root_split_agrees_with_cpu_when_available() {
+    use cavc::runtime::{Accelerator, ArtifactSet};
+    let set = ArtifactSet::default_location();
+    if !set.complete() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let acc = Accelerator::with_artifacts(set).unwrap();
+    let d = datasets::dataset("SYNTHETIC").unwrap();
+    let g = d.build();
+    // root split of the reduced residual graph, as the solve pipeline does
+    let p = cavc::prep::prepare(&g, &cavc::prep::PrepConfig::default(), None);
+    let sets = acc.component_split(&p.residual.graph).unwrap();
+    let cpu = cavc::graph::components::vertex_sets(&p.residual.graph);
+    let mut a: Vec<usize> = sets.iter().map(|s| s.len()).collect();
+    let mut b: Vec<usize> = cpu.iter().map(|s| s.len()).filter(|&l| l > 0).collect();
+    a.sort_unstable();
+    b.sort_unstable();
+    // accel path returns every vertex incl. isolated; compare non-trivial
+    let a: Vec<usize> = a.into_iter().filter(|&l| l > 1).collect();
+    let b: Vec<usize> = b.into_iter().filter(|&l| l > 1).collect();
+    assert_eq!(a, b);
+}

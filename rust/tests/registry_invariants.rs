@@ -1,0 +1,142 @@
+//! Stress tests for the component branch registry under real concurrent
+//! solver runs: counters must drain, totals must be exact, and the
+//! last-descendant cascade must fire exactly once per split — across
+//! hundreds of racy repetitions.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::registry::{cas_min, Registry, NONE};
+use cavc::solver::{oracle, solve_mvc, SolverConfig};
+use cavc::util::SplitMix64;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+/// Deeply nested splits driven directly against the registry from many
+/// threads: a random split tree is generated, every leaf is "solved" by a
+/// worker pool in random order, and the root total must equal the sum of
+/// leaf minima exactly once.
+#[test]
+fn randomized_nested_split_trees() {
+    for trial in 0..30u64 {
+        let mut rng = SplitMix64::new(trial);
+        let reg = Registry::new(false);
+        // Build a random nested split structure:
+        // each parent has 2-4 children; children may nest another split.
+        struct Leaf {
+            ctx: u32,
+            answer: u32,
+        }
+        let mut leaves = Vec::new();
+        let mut expected_root = 0u32;
+
+        fn build(
+            reg: &Registry,
+            rng: &mut SplitMix64,
+            ancestor: u32,
+            depth: usize,
+            leaves: &mut Vec<Leaf>,
+        ) -> u32 {
+            // returns the exact total this split contributes
+            let sum0 = rng.range(0, 3) as u32;
+            let p = reg.new_parent(sum0, ancestor);
+            let kids = rng.range(2, 4);
+            let mut total = sum0;
+            for _ in 0..kids {
+                let answer = rng.range(1, 6) as u32;
+                let best0 = answer + rng.range(0, 3) as u32; // achievable init
+                let c = reg.new_child(p, best0, best0);
+                if depth < 2 && rng.chance(0.4) {
+                    // nested split inside this component: its total becomes
+                    // the component's best (assume it improves on best0)
+                    let nested_total = build(reg, rng, c, depth + 1, leaves);
+                    total += nested_total.min(best0);
+                } else {
+                    leaves.push(Leaf { ctx: c, answer });
+                    total += answer.min(best0);
+                }
+            }
+            let mut sink = |_t: u32| {};
+            reg.finish_scan(p, &mut sink);
+            total
+        }
+
+        expected_root += build(&reg, &mut rng, NONE, 0, &mut leaves);
+        rng.shuffle(&mut leaves);
+
+        let root_val = AtomicU32::new(u32::MAX);
+        let fired = AtomicUsize::new(0);
+        let chunk = leaves.len().div_ceil(4).max(1);
+        std::thread::scope(|s| {
+            for batch in leaves.chunks(chunk) {
+                let reg = &reg;
+                let root_val = &root_val;
+                let fired = &fired;
+                s.spawn(move || {
+                    for leaf in batch {
+                        let mut on_root = |t: u32| {
+                            fired.fetch_add(1, Ordering::SeqCst);
+                            cas_min(root_val, t);
+                        };
+                        reg.report_solution(leaf.ctx, leaf.answer, &mut on_root);
+                        reg.complete_node(leaf.ctx, &mut on_root);
+                    }
+                });
+            }
+        });
+        assert_eq!(fired.load(Ordering::SeqCst), 1, "trial {trial}: cascade fired != once");
+        assert_eq!(
+            root_val.load(Ordering::SeqCst),
+            expected_root,
+            "trial {trial}: wrong root total"
+        );
+        reg.assert_drained();
+    }
+}
+
+/// Repeated parallel solves on splitting graphs: results must be
+/// deterministic (equal to the oracle) regardless of scheduling races.
+#[test]
+fn parallel_solves_are_schedule_independent() {
+    let graphs: Vec<Graph> = vec![
+        generators::union_of_random(5, 4, 8, 0.3, 1),
+        Graph::disjoint_union(&[
+            generators::petersen(),
+            generators::generalized_petersen(8, 2),
+            generators::cycle(11),
+        ]),
+        generators::banded(60, 2, 0.3, 10, 2),
+    ];
+    for (gi, g) in graphs.iter().enumerate() {
+        let opt = if g.num_vertices() <= 64 { Some(oracle::mvc_size(g)) } else { None };
+        let mut answers = std::collections::HashSet::new();
+        for rep in 0..12 {
+            let cfg = SolverConfig::proposed().with_workers(1 + rep % 6);
+            let r = solve_mvc(g, &cfg);
+            answers.insert(r.best);
+        }
+        assert_eq!(answers.len(), 1, "graph {gi}: nondeterministic answers {answers:?}");
+        if let Some(opt) = opt {
+            assert!(answers.contains(&opt), "graph {gi}: wrong answer");
+        }
+    }
+}
+
+/// The registry's Best/Limit split keeps PVC totals achievable: a PVC
+/// search must never claim a cover smaller than the true optimum.
+#[test]
+fn pvc_never_claims_below_optimum() {
+    let mut rng = SplitMix64::new(0x9E);
+    for trial in 0..30 {
+        let parts = rng.range(2, 5);
+        let g = generators::union_of_random(parts, 3, 7, 0.35, rng.next_u64());
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        for k in [opt, opt + 1, opt + 3] {
+            let r = cavc::solver::solve_pvc(&g, k, &SolverConfig::proposed());
+            assert!(r.found, "trial {trial} k={k}");
+            let sz = r.size.unwrap();
+            assert!(sz >= opt, "trial {trial}: claimed {sz} < optimum {opt}");
+            assert!(sz <= k, "trial {trial}: claimed {sz} > k {k}");
+        }
+    }
+}

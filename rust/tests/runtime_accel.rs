@@ -1,0 +1,105 @@
+//! Integration: the PJRT runtime executes the AOT artifacts and agrees
+//! with the native CPU implementations. Requires `make artifacts`; every
+//! test is skipped (with a message) when the artifacts are absent.
+
+use cavc::graph::{components, generators, metrics, Graph};
+use cavc::runtime::{Accelerator, ArtifactSet};
+
+fn accel() -> Option<Accelerator> {
+    let set = ArtifactSet::default_location();
+    if !set.complete() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Accelerator::with_artifacts(set).expect("pjrt cpu client"))
+}
+
+/// Labels must define the same partition (accel labels are min-vertex-id
+/// per component; CPU labels are discovery-ordered).
+fn same_partition(a: &[u32], b: &[u32]) -> bool {
+    use std::collections::HashMap;
+    let mut fwd: HashMap<u32, u32> = HashMap::new();
+    let mut bwd: HashMap<u32, u32> = HashMap::new();
+    for (&x, &y) in a.iter().zip(b) {
+        if *fwd.entry(x).or_insert(y) != y || *bwd.entry(y).or_insert(x) != x {
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn components_match_cpu_on_random_graphs() {
+    let Some(acc) = accel() else { return };
+    for seed in 0..6 {
+        let g = generators::erdos_renyi(100, 0.02, seed);
+        let xla = acc.connected_components(&g).expect("xla components");
+        let (cpu, _) = components::labels(&g);
+        assert!(same_partition(&xla, &cpu), "seed {seed}");
+    }
+}
+
+#[test]
+fn components_match_on_multi_component_suite() {
+    let Some(acc) = accel() else { return };
+    let g = generators::union_of_random(12, 4, 9, 0.3, 7);
+    let xla = acc.connected_components(&g).expect("xla components");
+    let (cpu, k) = components::labels(&g);
+    assert_eq!(k, 12);
+    assert!(same_partition(&xla, &cpu));
+}
+
+#[test]
+fn components_all_size_classes() {
+    let Some(acc) = accel() else { return };
+    for n in [100usize, 200, 500, 1000] {
+        let g = generators::banded(n, 1, 0.1, 20, n as u64);
+        let xla = acc.connected_components(&g).expect("xla components");
+        let (cpu, _) = components::labels(&g);
+        assert!(same_partition(&xla, &cpu), "n={n}");
+    }
+}
+
+#[test]
+fn bfs_reach_matches_cpu() {
+    let Some(acc) = accel() else { return };
+    let g = Graph::disjoint_union(&[
+        generators::random_tree(60, 3),
+        generators::cycle(40),
+        generators::clique(10),
+    ]);
+    for source in [0u32, 65, 105] {
+        let xla = acc.bfs_reach(&g, source).expect("xla bfs");
+        let cpu = components::bfs_reach(&g, source);
+        for v in 0..g.num_vertices() {
+            assert_eq!(xla[v], cpu.get(v), "source {source} vertex {v}");
+        }
+    }
+}
+
+#[test]
+fn triangle_census_matches_cpu() {
+    let Some(acc) = accel() else { return };
+    for seed in 0..4 {
+        let g = generators::erdos_renyi(90, 0.08, seed);
+        let xla = acc.triangle_census(&g).expect("xla triangles");
+        let cpu = metrics::triangles_per_vertex(&g);
+        assert_eq!(xla, cpu, "seed {seed}");
+    }
+}
+
+#[test]
+fn component_split_falls_back_beyond_max_class() {
+    let Some(acc) = accel() else { return };
+    let g = generators::banded(2000, 1, 0.05, 10, 5); // > 1024 vertices
+    let sets = acc.component_split(&g).expect("fallback split");
+    let total: usize = sets.iter().map(|s| s.len()).sum();
+    assert_eq!(total, g.num_vertices());
+}
+
+#[test]
+fn oversize_direct_call_errors() {
+    let Some(acc) = accel() else { return };
+    let g = generators::path(1500);
+    assert!(acc.connected_components(&g).is_err());
+}

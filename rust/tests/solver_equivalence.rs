@@ -1,0 +1,166 @@
+//! Property tests: every solver variant computes the same MVC as the
+//! brute-force oracle, across graph families, dtypes, worker counts, and
+//! optimization toggles. This is the repo's primary correctness gate.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{oracle, solve_mvc, solve_pvc, SolverConfig};
+use cavc::util::SplitMix64;
+
+fn variants() -> Vec<SolverConfig> {
+    vec![
+        SolverConfig::proposed(),
+        SolverConfig::prior_work(),
+        SolverConfig::no_load_balance(),
+        SolverConfig::sequential(),
+    ]
+}
+
+fn assert_all_agree(g: &Graph, tag: &str) {
+    let opt = oracle::mvc_size(g);
+    for cfg in variants() {
+        let r = solve_mvc(g, &cfg);
+        assert!(!r.timed_out, "{tag}: {} timed out", cfg.variant.name());
+        assert_eq!(r.best, opt, "{tag}: {} disagrees with oracle", cfg.variant.name());
+    }
+}
+
+/// A pool of random graphs spanning the families the engine must handle:
+/// sparse/dense ER, unions (splits), reduction-proof regulars, stars,
+/// trees, cycles, cliques, bipartite.
+fn random_graph(rng: &mut SplitMix64) -> (Graph, String) {
+    let kind = rng.index(9);
+    let seed = rng.next_u64();
+    match kind {
+        0 => {
+            let n = rng.range(6, 22);
+            let p = 0.05 + rng.next_f64() * 0.3;
+            (generators::erdos_renyi(n, p, seed), format!("er({n},{p:.2},{seed})"))
+        }
+        1 => {
+            let parts = rng.range(2, 5);
+            (
+                generators::union_of_random(parts, 3, 7, 0.3, seed),
+                format!("union({parts},{seed})"),
+            )
+        }
+        2 => {
+            let n = rng.range(5, 11);
+            (generators::generalized_petersen(n, 2), format!("gp({n},2)"))
+        }
+        3 => {
+            let n = rng.range(3, 15);
+            (generators::cycle(n), format!("cycle({n})"))
+        }
+        4 => {
+            let n = rng.range(3, 9);
+            (generators::clique(n), format!("clique({n})"))
+        }
+        5 => {
+            let n = rng.range(4, 30);
+            (generators::random_tree(n, seed), format!("tree({n},{seed})"))
+        }
+        6 => {
+            let l = rng.range(3, 8);
+            let r = rng.range(3, 8);
+            (generators::bipartite(l, r, 2.0, seed), format!("bip({l},{r},{seed})"))
+        }
+        7 => {
+            let n = rng.range(10, 26);
+            (generators::banded(n, 2, 0.3, 5, seed), format!("banded({n},{seed})"))
+        }
+        _ => {
+            let n = rng.range(8, 18);
+            (generators::p_hat(n, 0.2, 0.6, seed), format!("phat({n},{seed})"))
+        }
+    }
+}
+
+#[test]
+fn equivalence_over_random_family_pool() {
+    let mut rng = SplitMix64::new(0xE001u64);
+    for trial in 0..60 {
+        let (g, tag) = random_graph(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        assert_all_agree(&g, &format!("trial {trial}: {tag}"));
+    }
+}
+
+#[test]
+fn equivalence_with_varied_worker_counts() {
+    let mut rng = SplitMix64::new(0xE002u64);
+    for trial in 0..20 {
+        let (g, tag) = random_graph(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        for workers in [1usize, 2, 3, 7] {
+            let cfg = SolverConfig::proposed().with_workers(workers);
+            assert_eq!(
+                solve_mvc(&g, &cfg).best,
+                opt,
+                "trial {trial} {tag} workers={workers}"
+            );
+        }
+    }
+}
+
+#[test]
+fn equivalence_with_optimizations_toggled() {
+    let mut rng = SplitMix64::new(0xE003u64);
+    for trial in 0..15 {
+        let (g, tag) = random_graph(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        for bits in 0..16u32 {
+            let mut cfg = SolverConfig::proposed();
+            cfg.component_aware = bits & 1 != 0;
+            cfg.reduce_root = bits & 2 != 0;
+            cfg.use_crown = bits & 2 != 0 && bits & 4 != 0;
+            cfg.use_bounds = bits & 8 != 0;
+            assert_eq!(
+                solve_mvc(&g, &cfg).best,
+                opt,
+                "trial {trial} {tag} bits={bits:04b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pvc_agrees_with_oracle_boundaries() {
+    let mut rng = SplitMix64::new(0xE004u64);
+    for trial in 0..25 {
+        let (g, tag) = random_graph(&mut rng);
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        for cfg in variants() {
+            let below = solve_pvc(&g, opt.saturating_sub(1), &cfg);
+            assert!(
+                !below.found,
+                "trial {trial} {tag} {}: found below optimum",
+                cfg.variant.name()
+            );
+            let at = solve_pvc(&g, opt, &cfg);
+            assert!(at.found, "trial {trial} {tag} {}: missed k=opt", cfg.variant.name());
+            let sz = at.size.unwrap();
+            assert!(sz <= opt, "trial {trial} {tag}: size {sz} > k {opt}");
+        }
+    }
+}
+
+#[test]
+fn stats_consistency_proposed() {
+    // tree_nodes > 0 whenever a search ran; histogram sums to splits
+    let g = generators::union_of_random(4, 5, 9, 0.3, 99);
+    let r = solve_mvc(&g, &SolverConfig::proposed());
+    assert!(r.stats.tree_nodes > 0);
+    let hist_total: u64 = r.stats.comp_histogram.values().sum();
+    assert_eq!(hist_total, r.stats.component_branches);
+}
