@@ -6,13 +6,15 @@
 //! make artifacts && cargo run --release --example accel_components
 //! ```
 
+use cavc::ensure;
 use cavc::graph::{components, generators, metrics, Graph};
 use cavc::runtime::{Accelerator, ArtifactSet};
+use cavc::util::error::Result;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let set = ArtifactSet::default_location();
-    anyhow::ensure!(
+    ensure!(
         set.complete(),
         "artifacts missing under {} — run `make artifacts` first",
         set.dir().display()

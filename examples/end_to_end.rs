@@ -20,11 +20,16 @@
 use cavc::harness::{datasets, tables};
 use cavc::prep::{prepare, PrepConfig};
 use cavc::runtime::{Accelerator, ArtifactSet};
+use cavc::util::error::Result;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let budget = tables::cell_timeout();
-    println!("== CAVC end-to-end driver (budget {}s/solve) ==\n", budget.as_secs_f64());
+    println!(
+        "== CAVC end-to-end driver (budget {}s/solve, scheduler {}) ==\n",
+        budget.as_secs_f64(),
+        tables::cell_scheduler().name()
+    );
 
     // Layer check: PJRT + artifacts.
     let accel = match ArtifactSet::default_location() {

@@ -30,11 +30,38 @@ fn main() {
         rows.push(row);
     }
     tables::print_fig4(&rows, std::io::stdout().lock()).unwrap();
+    println!("\n# per-worker scheduler counters (push/pop/steal/retry)");
+    tables::print_fig4_sched(&rows, std::io::stdout().lock()).unwrap();
     let path = tables::write_csv(
         "fig4_breakdown",
         "graph,reduce,component_search,branch,queue,leaf",
         &csv,
     )
     .unwrap();
+    let sched_csv: Vec<String> = rows
+        .iter()
+        .flat_map(|r| {
+            r.sched_workers.iter().enumerate().map(move |(w, c)| {
+                format!(
+                    "{},{},{w},{},{},{},{},{},{}",
+                    r.name,
+                    r.scheduler.name(),
+                    c.pushes,
+                    c.pops,
+                    c.shared_pops,
+                    c.steals,
+                    c.steal_retries,
+                    c.max_depth
+                )
+            })
+        })
+        .collect();
+    let sched_path = tables::write_csv(
+        "fig4_sched_counters",
+        "graph,scheduler,worker,pushes,pops,shared_pops,steals,steal_retries,max_depth",
+        &sched_csv,
+    )
+    .unwrap();
     println!("\ncsv: {}", path.display());
+    println!("csv: {}", sched_path.display());
 }

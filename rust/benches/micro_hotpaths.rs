@@ -1,11 +1,15 @@
 //! Micro-benchmarks of the engine hot paths (used by the §Perf pass):
-//! per-node reduction sweep, component BFS, child materialization, the
-//! worklist, and the registry cascade. Reports ns/op medians.
+//! the scheduler queues (Chase–Lev deque, injector, sharded worklist),
+//! the registry cascade, and end-to-end solves — including the
+//! scheduler-vs-scheduler race on an imbalanced-tree workload that the
+//! work-stealing runtime exists to win.
 
 use cavc::graph::{generators, Graph};
 use cavc::solver::registry::{Registry, NONE};
+use cavc::solver::sched::deque::{ChaseLev, Steal};
+use cavc::solver::sched::injector::Injector;
 use cavc::solver::worklist::Worklist;
-use cavc::solver::{solve_mvc, SolverConfig};
+use cavc::solver::{solve_mvc, SchedulerKind, SolverConfig};
 use std::time::Instant;
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
@@ -27,14 +31,46 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     med
 }
 
+/// Time one solve of `g` with the given scheduler and worker count.
+fn timed_solve(g: &Graph, sched: SchedulerKind, workers: usize) -> (f64, u32, bool) {
+    let cfg = SolverConfig::proposed()
+        .with_scheduler(sched)
+        .with_workers(workers)
+        .with_timeout(std::time::Duration::from_secs(60));
+    let t = Instant::now();
+    let r = solve_mvc(g, &cfg);
+    (t.elapsed().as_secs_f64(), r.best, r.timed_out)
+}
+
 fn main() {
     println!("# micro hot paths (medians of 5 runs)");
 
-    // worklist push+pop round trip under no contention
+    // sharded worklist push+pop round trip under no contention
     let wl: Worklist<u64> = Worklist::new(8);
-    bench("worklist push+pop", 100_000, || {
+    bench("worklist push+pop (sharded)", 100_000, || {
         wl.push(3, 42);
         let _ = wl.pop(3);
+    });
+
+    // Chase-Lev owner push+pop round trip (the work stealer's fast path)
+    let dq: ChaseLev<u64> = ChaseLev::with_capacity(256);
+    bench("deque push+pop (chase-lev owner)", 100_000, || unsafe {
+        dq.push(42);
+        let _ = dq.pop();
+    });
+
+    // Chase-Lev push+steal (owner enqueues, consumer takes from the top)
+    let dq2: ChaseLev<u64> = ChaseLev::with_capacity(256);
+    bench("deque push+steal (chase-lev)", 100_000, || {
+        unsafe { dq2.push(42) };
+        let _ = matches!(dq2.steal(), Steal::Taken(_));
+    });
+
+    // injector round trip (root/restart queue; cold path in real runs)
+    let inj: Injector<u64> = Injector::new();
+    bench("injector push+pop (michael-scott)", 100_000, || {
+        inj.push(42);
+        let _ = inj.pop();
     });
 
     // registry split + cascade (2 components)
@@ -49,6 +85,21 @@ fn main() {
         reg.complete_node(c2, &mut sink);
     });
 
+    // Scheduler head-to-head on an imbalanced search tree: a banded
+    // graph fragments into wildly different sub-tree sizes, so static
+    // partitions starve and load balancing decides the wall clock.
+    println!("\n# scheduler comparison (imbalanced-tree workload, s/solve)");
+    let imbalanced = generators::banded(320, 2, 0.28, 90, 0xCA0B);
+    println!("{:<28} {:>10} {:>10}", "workload", "sharded", "steal");
+    for workers in [1usize, 2, 4, 8] {
+        let (sharded_s, a, a_to) = timed_solve(&imbalanced, SchedulerKind::Sharded, workers);
+        let (steal_s, b, b_to) = timed_solve(&imbalanced, SchedulerKind::WorkSteal, workers);
+        if !a_to && !b_to {
+            assert_eq!(a, b, "schedulers disagree on banded(320)");
+        }
+        println!("banded(320,2) @ {workers:>2} workers   {sharded_s:>10.4} {steal_s:>10.4}");
+    }
+
     // end-to-end solves of reference workloads (the real hot path)
     let workloads: Vec<(&str, Graph)> = vec![
         ("solve c_fat(110,8)", generators::c_fat(110, 8, 0xCA09)),
@@ -56,6 +107,7 @@ fn main() {
         ("solve banded(320,2)", generators::banded(320, 2, 0.28, 90, 0xCA0B)),
         ("solve gp(40,2)", generators::generalized_petersen(40, 2)),
     ];
+    println!();
     for (name, g) in &workloads {
         let cfg = SolverConfig::proposed().with_timeout(std::time::Duration::from_secs(30));
         let t = Instant::now();

@@ -15,9 +15,10 @@ fn main() {
         datasets::suite()
     };
     println!(
-        "# Table I — MVC time (s), budget {}s/cell, {} datasets",
+        "# Table I — MVC time (s), budget {}s/cell, {} datasets, scheduler {} (CAVC_SCHED=steal|sharded)",
         tables::cell_timeout().as_secs_f64(),
-        suite.len()
+        suite.len(),
+        tables::cell_scheduler().name()
     );
     let mut rows = Vec::new();
     let mut csv = Vec::new();

@@ -12,8 +12,9 @@ fn main() {
         datasets::suite()
     };
     println!(
-        "# Table V — PVC time (s) at k = min-1 / min / min+1, budget {}s/cell",
-        tables::cell_timeout().as_secs_f64()
+        "# Table V — PVC time (s) at k = min-1 / min / min+1, budget {}s/cell, scheduler {}",
+        tables::cell_timeout().as_secs_f64(),
+        tables::cell_scheduler().name()
     );
     let mut rows = Vec::new();
     let mut csv = Vec::new();

@@ -7,7 +7,8 @@
 //! [`read_graph`]; vertices are normalized to `0..n`.
 
 use super::Graph;
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::path::Path;
 

@@ -4,7 +4,8 @@
 
 use super::datasets::Dataset;
 use crate::graph::Graph;
-use crate::solver::{self, SolverConfig};
+use crate::solver::sched::WorkerCounters;
+use crate::solver::{self, SchedulerKind, SolverConfig};
 use crate::util::{fmt_secs, fmt_speedup};
 use std::io::Write;
 use std::time::Duration;
@@ -31,9 +32,20 @@ pub fn cell_timeout() -> Duration {
     Duration::from_secs_f64(secs)
 }
 
+/// Scheduler used by every table cell, configurable via `CAVC_SCHED`
+/// (`steal` | `sharded`) so scheduler runs can be compared head-to-head
+/// without recompiling.
+pub fn cell_scheduler() -> SchedulerKind {
+    std::env::var("CAVC_SCHED")
+        .ok()
+        .and_then(|s| SchedulerKind::parse(&s))
+        .unwrap_or_default()
+}
+
 /// Run MVC with a variant preset + budget.
 pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
     cfg.timeout = Some(cell_timeout());
+    cfg.scheduler = cell_scheduler();
     let r = solver::solve_mvc(g, &cfg);
     Timed {
         secs: r.elapsed.as_secs_f64(),
@@ -46,6 +58,7 @@ pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
 /// Run PVC with a variant preset + budget.
 pub fn run_pvc(g: &Graph, k: u32, mut cfg: SolverConfig) -> (Timed, bool) {
     cfg.timeout = Some(cell_timeout());
+    cfg.scheduler = cell_scheduler();
     let r = solver::solve_pvc(g, k, &cfg);
     (
         Timed {
@@ -493,19 +506,22 @@ pub struct Fig4Row {
     pub name: &'static str,
     /// Busy-time fractions in `ALL_ACTIVITIES` order.
     pub fractions: [f64; crate::util::timer::NUM_ACTIVITIES],
+    /// Scheduler used for the run.
+    pub scheduler: SchedulerKind,
+    /// Per-worker scheduler traffic (push/pop/steal/retry) behind the
+    /// `stack/worklist` activity bar.
+    pub sched_workers: Vec<WorkerCounters>,
 }
 
 /// Run one Figure 4 row.
 pub fn fig4_row(d: &Dataset) -> Fig4Row {
-    use crate::util::timer::{ActivityTimer, NUM_ACTIVITIES};
+    use crate::util::timer::NUM_ACTIVITIES;
     let g = d.build();
     let mut cfg = SolverConfig::proposed();
     cfg.instrument = true;
     cfg.timeout = Some(cell_timeout());
+    cfg.scheduler = cell_scheduler();
     let r = solver::solve_mvc(&g, &cfg);
-    // rebuild a timer to reuse the normalization logic
-    let mut t = ActivityTimer::enabled();
-    t.stop();
     let mut totals = [0u64; NUM_ACTIVITIES];
     totals.copy_from_slice(&r.stats.activity);
     let busy: u64 = totals
@@ -522,7 +538,12 @@ pub fn fig4_row(d: &Dataset) -> Fig4Row {
             }
         }
     }
-    Fig4Row { name: d.name, fractions }
+    Fig4Row {
+        name: d.name,
+        fractions,
+        scheduler: cfg.scheduler,
+        sched_workers: r.stats.sched_workers,
+    }
 }
 
 /// Print Figure 4 as a percentage table.
@@ -544,6 +565,30 @@ pub fn print_fig4(rows: &[Fig4Row], mut w: impl Write) -> std::io::Result<()> {
             }
         }
         writeln!(w)?;
+    }
+    Ok(())
+}
+
+/// Print the per-worker scheduler counters behind each Figure 4 row
+/// (push/pop/steal/retry — the worklist-traffic half of the breakdown).
+pub fn print_fig4_sched(rows: &[Fig4Row], mut w: impl Write) -> std::io::Result<()> {
+    for r in rows {
+        let total: u64 = r.sched_workers.iter().map(|c| c.acquired()).sum();
+        writeln!(
+            w,
+            "{} [{}]: {} workers, {} nodes through queues",
+            r.name,
+            r.scheduler.name(),
+            r.sched_workers.len(),
+            total
+        )?;
+        for (i, c) in r.sched_workers.iter().enumerate() {
+            writeln!(
+                w,
+                "  w{i:<3} push {:>9}  pop {:>9}  shared {:>7}  steal {:>7}  retry {:>6}  depth {:>5}",
+                c.pushes, c.pops, c.shared_pops, c.steals, c.steal_retries, c.max_depth
+            )?;
+        }
     }
     Ok(())
 }

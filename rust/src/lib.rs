@@ -2,12 +2,25 @@
 //!
 //! A reproduction of *"Faster Vertex Cover Algorithms on GPUs with
 //! Component-Aware Parallel Branching"* (TPDS 2025) as a three-layer
-//! Rust + JAX + Pallas stack. The GPU execution model (thread blocks with
-//! private stacks, a shared load-balancing worklist, and a component
-//! branch registry in global memory) is reproduced with worker threads,
-//! sharded MPMC deques, and an atomic registry arena; the paper's
-//! block-level BFS/analytics kernels are AOT-compiled from Pallas/JAX to
-//! HLO and executed via PJRT from the Rust runtime.
+//! Rust + JAX + Pallas stack. The GPU execution model is reproduced on
+//! worker threads through a pluggable scheduler abstraction
+//! ([`solver::sched`]):
+//!
+//! | GPU concept (paper)            | CPU reproduction                            |
+//! |--------------------------------|---------------------------------------------|
+//! | thread block w/ private stack  | worker thread owning a Chase–Lev deque      |
+//! | broker worklist (§II-C)        | global injector + the stealable deque tops  |
+//! | "is the worklist hungry?"      | thief-pull stealing (no donation heuristic) |
+//! | grid-wide quiescence           | epoch-validated idle-count termination      |
+//! | component branch registry      | lock-free atomic registry arena (§III-C)    |
+//!
+//! The previous mutex-sharded worklist survives as a second [`solver::sched::Scheduler`]
+//! implementation, selectable from `SolverConfig`, so the paper's
+//! variants stay expressible as scheduler + config choices and benches
+//! can race runtimes on identical searches. The paper's block-level
+//! BFS/analytics kernels are AOT-compiled from Pallas/JAX to HLO and
+//! executed via PJRT from the Rust runtime (behind the `xla` feature;
+//! native fallbacks otherwise).
 //!
 //! ## Quickstart
 //!

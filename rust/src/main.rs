@@ -14,10 +14,11 @@
 //! Options: --variant proposed|yamout|no-lb|sequential, --workers N,
 //! --timeout SECS, --k K, --out FILE, --no-accel, --seed S.
 
-use anyhow::{bail, Context, Result};
+use cavc::bail;
 use cavc::graph::{generators, io, Graph};
+use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
-use cavc::solver::{self, SolverConfig, Variant};
+use cavc::solver::{self, SchedulerKind, SolverConfig, Variant};
 
 use cavc::util::cli::Args;
 use std::path::Path;
@@ -25,6 +26,7 @@ use std::time::Duration;
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
+    "sched",
 ];
 
 fn main() {
@@ -39,7 +41,7 @@ fn main() {
 }
 
 fn run(raw: Vec<String>) -> Result<()> {
-    let args = Args::parse(raw, VALUED).map_err(anyhow::Error::msg)?;
+    let args = Args::parse(raw, VALUED).map_err(Error::msg)?;
     match args.pos(0) {
         Some("solve") => cmd_solve(&args),
         Some("pvc") => cmd_pvc(&args),
@@ -66,7 +68,7 @@ fn print_help() {
          usage: cavc <solve|pvc|mis|info|components|gen|datasets|tables> [args]\n\
          \n\
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
-        \x20                   [--workers N] [--timeout SECS]\n\
+        \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
          pvc <graph|dataset> --k K [--variant ...]\n         mis <graph|dataset> [--variant ...]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
@@ -100,7 +102,11 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
     if let Some(w) = args.get("workers") {
         cfg.workers = Some(w.parse().context("--workers")?);
     }
-    let t: f64 = args.get_parse("timeout", 0.0).map_err(anyhow::Error::msg)?;
+    if let Some(s) = args.get("sched") {
+        cfg.scheduler = SchedulerKind::parse(s)
+            .with_context(|| format!("unknown scheduler {s:?} (use steal|sharded)"))?;
+    }
+    let t: f64 = args.get_parse("timeout", 0.0).map_err(Error::msg)?;
     if t > 0.0 {
         cfg.timeout = Some(Duration::from_secs_f64(t));
     }
@@ -117,6 +123,7 @@ fn cmd_solve(args: &Args) -> Result<()> {
     let r = solver::solve_mvc(&g, &cfg);
     println!("graph           : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
     println!("variant         : {}", cfg.variant.name());
+    println!("scheduler       : {}", cfg.scheduler.name());
     println!("mvc             : {}{}", r.best, if r.timed_out { " (timeout: upper bound)" } else { "" });
     println!("elapsed         : {:.3}s", r.elapsed.as_secs_f64());
     println!("tree nodes      : {}", r.stats.tree_nodes);
@@ -239,30 +246,30 @@ fn cmd_components(args: &Args) -> Result<()> {
 fn cmd_gen(args: &Args) -> Result<()> {
     let family = args.pos(1).context("gen: missing family")?;
     let out = args.get("out").context("gen: missing --out")?;
-    let n: usize = args.get_parse("n", 200).map_err(anyhow::Error::msg)?;
-    let p: f64 = args.get_parse("p", 0.1).map_err(anyhow::Error::msg)?;
-    let seed: u64 = args.get_parse("seed", 42).map_err(anyhow::Error::msg)?;
+    let n: usize = args.get_parse("n", 200).map_err(Error::msg)?;
+    let p: f64 = args.get_parse("p", 0.1).map_err(Error::msg)?;
+    let seed: u64 = args.get_parse("seed", 42).map_err(Error::msg)?;
     let g = match family {
         "er" => generators::erdos_renyi(n, p, seed),
         "ba" => generators::barabasi_albert(n, 2, seed),
         "grid" => {
-            let rows: usize = args.get_parse("rows", 16).map_err(anyhow::Error::msg)?;
-            let cols: usize = args.get_parse("cols", n.div_ceil(16)).map_err(anyhow::Error::msg)?;
+            let rows: usize = args.get_parse("rows", 16).map_err(Error::msg)?;
+            let cols: usize = args.get_parse("cols", n.div_ceil(16)).map_err(Error::msg)?;
             generators::grid(rows, cols, p, seed)
         }
         "cfat" => {
-            let band: usize = args.get_parse("m", 6).map_err(anyhow::Error::msg)?;
+            let band: usize = args.get_parse("m", 6).map_err(Error::msg)?;
             generators::c_fat(n, band, seed)
         }
         "phat" => generators::p_hat(n, 0.1, 0.5, seed),
         "banded" => {
-            let band: usize = args.get_parse("m", 2).map_err(anyhow::Error::msg)?;
+            let band: usize = args.get_parse("m", 2).map_err(Error::msg)?;
             generators::banded(n, band, p, 50, seed)
         }
         "geo" => generators::geometric(n, p.max(0.01), seed),
         "union" => {
-            let lo: usize = args.get_parse("rows", 5).map_err(anyhow::Error::msg)?;
-            let hi: usize = args.get_parse("cols", 12).map_err(anyhow::Error::msg)?;
+            let lo: usize = args.get_parse("rows", 5).map_err(Error::msg)?;
+            let hi: usize = args.get_parse("cols", 12).map_err(Error::msg)?;
             generators::union_of_random(n / 10, lo, hi, p.max(0.15), seed)
         }
         f => bail!("unknown family {f:?}"),

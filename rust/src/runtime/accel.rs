@@ -17,7 +17,7 @@
 //! routine has a native fallback and is cross-checked against it in
 //! integration tests.
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 

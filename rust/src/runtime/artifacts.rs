@@ -5,7 +5,8 @@
 //! Each program is AOT-compiled at fixed padded sizes (XLA requires
 //! static shapes); the runtime pads inputs up to the nearest class.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 use std::path::{Path, PathBuf};
 
 /// The AOT-compiled programs (must match `python/compile/aot.py`).

@@ -4,59 +4,12 @@
 //! emits protos with 64-bit instruction ids which xla_extension 0.5.1
 //! rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids (see
 //! `/opt/xla-example/README.md` and `python/compile/aot.py`).
-
-use anyhow::{Context, Result};
-use std::path::Path;
-
-/// A PJRT CPU client plus compiled-executable cache.
-pub struct Runtime {
-    client: xla::PjRtClient,
-}
-
-impl std::fmt::Debug for Runtime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Runtime").field("platform", &self.platform()).finish()
-    }
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime { client })
-    }
-
-    /// Platform name (e.g. "cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Load an HLO-text artifact and compile it for this client.
-    pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path must be utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        Ok(Executable { exe })
-    }
-}
-
-/// A compiled HLO program. All our artifacts are lowered with
-/// `return_tuple=True`, so outputs are unpacked from a tuple literal.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
-
-impl std::fmt::Debug for Executable {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("Executable").finish()
-    }
-}
+//!
+//! The PJRT path requires the vendored `xla` crate and is compiled only
+//! with the `xla` cargo feature. Without it this module is a stub whose
+//! constructors return an error, so every caller (CLI `components` verb,
+//! `end_to_end` example, accel integration tests) takes its native CPU
+//! fallback — the offline build stays dependency-free.
 
 /// A dense f32 input tensor.
 #[derive(Debug, Clone)]
@@ -67,41 +20,161 @@ pub struct TensorF32<'a> {
     pub dims: &'a [i64],
 }
 
-impl Executable {
-    /// Execute with f32 inputs; returns each tuple output flattened to
-    /// `Vec<f32>` (converting from whatever dtype the program produced).
-    pub fn run_f32(&self, inputs: &[TensorF32<'_>]) -> Result<Vec<Vec<f32>>> {
-        let literals: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| {
-                let expected: i64 = t.dims.iter().product();
-                anyhow::ensure!(
-                    expected as usize == t.data.len(),
-                    "dims {:?} do not match data length {}",
-                    t.dims,
-                    t.data.len()
-                );
-                Ok(xla::Literal::vec1(t.data).reshape(t.dims)?)
-            })
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()
-            .context("fetching result literal")?;
-        let outputs = result.to_tuple().context("unpacking output tuple")?;
-        outputs
-            .into_iter()
-            .map(|lit| {
-                let lit = lit
-                    .convert(xla::ElementType::F32.primitive_type())
-                    .context("converting output to f32")?;
-                Ok(lit.to_vec::<f32>()?)
-            })
-            .collect()
+#[cfg(feature = "xla")]
+mod imp {
+    use super::TensorF32;
+    use crate::util::error::{Context, Error, Result};
+    use std::path::Path;
+
+    /// A PJRT CPU client plus compiled-executable cache.
+    pub struct Runtime {
+        client: xla::PjRtClient,
     }
+
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Runtime> {
+            let client =
+                xla::PjRtClient::cpu().map_err(Error::msg).context("creating PJRT CPU client")?;
+            Ok(Runtime { client })
+        }
+
+        /// Platform name (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Load an HLO-text artifact and compile it for this client.
+        pub fn load_hlo_text(&self, path: &Path) -> Result<Executable> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path must be utf-8")?,
+            )
+            .map_err(Error::msg)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(Error::msg)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            Ok(Executable { exe })
+        }
+    }
+
+    /// A compiled HLO program. All our artifacts are lowered with
+    /// `return_tuple=True`, so outputs are unpacked from a tuple literal.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        /// Execute with f32 inputs; returns each tuple output flattened to
+        /// `Vec<f32>` (converting from whatever dtype the program produced).
+        pub fn run_f32(&self, inputs: &[TensorF32<'_>]) -> Result<Vec<Vec<f32>>> {
+            let literals: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|t| {
+                    let expected: i64 = t.dims.iter().product();
+                    crate::ensure!(
+                        expected as usize == t.data.len(),
+                        "dims {:?} do not match data length {}",
+                        t.dims,
+                        t.data.len()
+                    );
+                    xla::Literal::vec1(t.data).reshape(t.dims).map_err(Error::msg)
+                })
+                .collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&literals).map_err(Error::msg)?[0][0]
+                .to_literal_sync()
+                .map_err(Error::msg)
+                .context("fetching result literal")?;
+            let outputs =
+                result.to_tuple().map_err(Error::msg).context("unpacking output tuple")?;
+            outputs
+                .into_iter()
+                .map(|lit| {
+                    let lit = lit
+                        .convert(xla::ElementType::F32.primitive_type())
+                        .map_err(Error::msg)
+                        .context("converting output to f32")?;
+                    lit.to_vec::<f32>().map_err(Error::msg)
+                })
+                .collect()
+        }
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+mod imp {
+    use super::TensorF32;
+    use crate::bail;
+    use crate::util::error::Result;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "PJRT unavailable: cavc was built without the `xla` feature (native CPU paths remain)";
+
+    /// Stub runtime: construction fails so callers use CPU fallbacks.
+    pub struct Runtime {
+        never: std::convert::Infallible,
+    }
+
+    impl Runtime {
+        /// Always errors in stub builds.
+        pub fn cpu() -> Result<Runtime> {
+            bail!("{UNAVAILABLE}")
+        }
+
+        /// Unreachable in stub builds (no value can be constructed).
+        pub fn platform(&self) -> String {
+            match self.never {}
+        }
+
+        /// Unreachable in stub builds.
+        pub fn load_hlo_text(&self, _path: &Path) -> Result<Executable> {
+            match self.never {}
+        }
+    }
+
+    /// Stub executable (never constructed).
+    pub struct Executable {
+        never: std::convert::Infallible,
+    }
+
+    impl Executable {
+        /// Unreachable in stub builds.
+        pub fn run_f32(&self, _inputs: &[TensorF32<'_>]) -> Result<Vec<Vec<f32>>> {
+            match self.never {}
+        }
+    }
+}
+
+pub use imp::{Executable, Runtime};
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").finish()
+    }
+}
+
+impl std::fmt::Debug for Executable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Executable").finish()
+    }
+}
+
+/// True if this build can execute PJRT artifacts at all.
+pub fn pjrt_compiled_in() -> bool {
+    cfg!(feature = "xla")
 }
 
 #[cfg(test)]
 mod tests {
-    // Runtime tests that need real artifacts live in `rust/tests/`
-    // (integration) and run only when `artifacts/` has been built.
+    #[test]
+    fn stub_reports_unavailable() {
+        if !super::pjrt_compiled_in() {
+            let err = super::Runtime::cpu().err().expect("stub must fail");
+            assert!(err.to_string().contains("xla"), "{err}");
+        }
+    }
 }

@@ -1,24 +1,33 @@
 //! The parallel branch-and-reduce engine (paper §III).
 //!
 //! Reproduces the GPU execution model: N workers ("thread blocks"), each
-//! with a private LIFO stack of search-tree nodes, plus a shared MPMC
-//! worklist for load balancing. A node's entire intermediate state is a
-//! degree array over the root-induced subgraph (generic dtype `T`), the
-//! committed solution size, an incremental edge count, the non-zero
-//! bounds window, and a registry context.
+//! with a private LIFO queue of search-tree nodes, load-balanced through
+//! a pluggable [`Scheduler`] (see [`crate::solver::sched`]). A node's
+//! entire intermediate state is a degree array over the root-induced
+//! subgraph (generic dtype `T`), the committed solution size, an
+//! incremental edge count, the non-zero bounds window, and a registry
+//! context.
+//!
+//! Scheduling is split out of branching: the engine decides *what* to
+//! explore (reduce, bound, branch, split on components) and the
+//! scheduler decides *where* child nodes run. Two runtimes implement the
+//! trait — the lock-free Chase–Lev work stealer (default) and the
+//! mutex-sharded worklist baseline — selected by
+//! [`EngineCfg::scheduler`], so schedulers can be compared head-to-head
+//! on identical searches.
 //!
 //! One engine serves all three paper variants:
 //! * **proposed** — `component_aware + load_balance`;
 //! * **prior work (Yamout et al.)** — `load_balance` only (plus the
 //!   pipeline disables root-induce / bounds / small dtypes);
-//! * **no load balance** — `component_aware` with private stacks only
+//! * **no load balance** — `component_aware` with private queues only
 //!   (sub-trees statically seeded round-robin, components kept local).
 //!
 //! PVC (§III-E) runs the same engine with the global best initialized to
 //! `k + 1`, registry propagation enabled, and stop-on-first-improvement.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -28,7 +37,13 @@ use crate::reduce::special::classify;
 use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
 
 use super::registry::{cas_min, Registry, NONE};
-use super::worklist::Worklist;
+use super::sched::{
+    IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
+    WorkerHandle,
+};
+
+/// Default per-worker queue capacity when no occupancy plan is supplied.
+pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 
 /// Flattened engine configuration (see `SolverConfig` for the public
 /// pipeline-level knobs).
@@ -36,7 +51,7 @@ use super::worklist::Worklist;
 pub struct EngineCfg {
     /// Detect component splits and branch on components (§III).
     pub component_aware: bool,
-    /// Offload children to the shared worklist (§II-C).
+    /// Let idle workers take other workers' nodes (§II-C).
     pub load_balance: bool,
     /// Maintain non-zero bounds windows (§IV-C).
     pub use_bounds: bool,
@@ -48,6 +63,27 @@ pub struct EngineCfg {
     pub deadline: Option<Instant>,
     /// Record per-activity timings (Figure 4).
     pub instrument: bool,
+    /// Scheduling runtime to move nodes between workers.
+    pub scheduler: SchedulerKind,
+    /// Initial per-worker queue capacity (the occupancy model's
+    /// stack-depth bound; queues grow beyond it as needed).
+    pub queue_capacity: usize,
+}
+
+impl Default for EngineCfg {
+    fn default() -> Self {
+        EngineCfg {
+            component_aware: true,
+            load_balance: true,
+            use_bounds: true,
+            workers: 1,
+            stop_on_improvement: false,
+            deadline: None,
+            instrument: false,
+            scheduler: SchedulerKind::default(),
+            queue_capacity: DEFAULT_QUEUE_CAPACITY,
+        }
+    }
 }
 
 /// Counters collected by the engine (Tables III / IV / Fig 4 inputs).
@@ -61,16 +97,20 @@ pub struct EngineStats {
     pub comp_histogram: BTreeMap<u32, u64>,
     /// Components solved in closed form (§III-D clique/cycle rules).
     pub special_solved: u64,
-    /// Deepest private stack observed.
+    /// Deepest per-worker queue observed.
     pub max_stack_depth: usize,
-    /// Nodes offloaded to the shared worklist.
+    /// Nodes made visible to other workers (shared-queue/deque pushes).
     pub worklist_pushes: u64,
-    /// Cross-worker steals from the worklist.
+    /// Nodes taken from another worker.
     pub worklist_steals: u64,
     /// Registry entries allocated.
     pub registry_entries: u64,
     /// Per-activity busy nanoseconds (all workers merged).
     pub activity: [u64; NUM_ACTIVITIES],
+    /// Per-worker scheduler counters, indexed by worker id (Figure-4
+    /// instrumentation: push/pop/steal/retry traffic behind the
+    /// `stack/worklist` bar).
+    pub sched_workers: Vec<WorkerCounters>,
 }
 
 impl EngineStats {
@@ -86,6 +126,12 @@ impl EngineStats {
         self.worklist_steals += other.worklist_steals;
         for i in 0..NUM_ACTIVITIES {
             self.activity[i] += other.activity[i];
+        }
+        if other.sched_workers.len() > self.sched_workers.len() {
+            self.sched_workers.resize(other.sched_workers.len(), WorkerCounters::default());
+        }
+        for (i, c) in other.sched_workers.iter().enumerate() {
+            self.sched_workers[i].accumulate(c);
         }
     }
 }
@@ -118,14 +164,12 @@ struct Shared<'g, T> {
     g: &'g Graph,
     cfg: EngineCfg,
     registry: Registry,
-    worklist: Worklist<Node<T>>,
     best: AtomicU32,
-    pending: AtomicU64,
     stop: AtomicBool,
     improved: AtomicBool,
     timed_out: AtomicBool,
-    low_water: usize,
     stats_sink: Mutex<EngineStats>,
+    _marker: std::marker::PhantomData<T>,
 }
 
 impl<'g, T: DegElem> Shared<'g, T> {
@@ -149,12 +193,20 @@ impl<'g, T: DegElem> Shared<'g, T> {
             }
         }
     }
+
+    /// Remaining budget for a new component: the enclosing context bound
+    /// minus what the split has already committed (`Sum` so far).
+    fn bound_of_parent(&self, node_ctx: u32, parent: u32) -> u32 {
+        let ctx_bound = self.bound_of(node_ctx);
+        let (sum_now, _, _, _) = self.registry.snapshot(parent);
+        ctx_bound.saturating_sub(sum_now)
+    }
 }
 
 struct WorkerCtx<T> {
-    id: usize,
-    stack: Vec<Node<T>>,
-    /// Seeding mode (no-load-balance): children go to this FIFO frontier.
+    worker: usize,
+    /// Seeding mode (no-load-balance): children go to this FIFO frontier
+    /// instead of the scheduler.
     frontier: Option<std::collections::VecDeque<Node<T>>>,
     /// BFS scratch: visit stamps (avoids clearing between searches).
     visit: Vec<u32>,
@@ -167,10 +219,9 @@ struct WorkerCtx<T> {
 }
 
 impl<T: DegElem> WorkerCtx<T> {
-    fn new(id: usize, n: usize, instrument: bool) -> Self {
+    fn new(worker: usize, n: usize, instrument: bool) -> Self {
         WorkerCtx {
-            id,
-            stack: Vec::new(),
+            worker,
             frontier: None,
             visit: vec![0; n],
             stamp: 0,
@@ -181,6 +232,18 @@ impl<T: DegElem> WorkerCtx<T> {
             deadline_tick: 0,
         }
     }
+
+    /// Flush this worker's timer and scheduler counters into its stats
+    /// and merge them into the shared sink.
+    fn finish(mut self, shared: &Shared<'_, T>, counters: WorkerCounters) {
+        self.timer.stop();
+        self.stats.activity = self.timer.totals();
+        self.stats.max_stack_depth = self.stats.max_stack_depth.max(counters.max_depth);
+        let mut per_worker = vec![WorkerCounters::default(); self.worker + 1];
+        per_worker[self.worker] = counters;
+        self.stats.sched_workers = per_worker;
+        shared.stats_sink.lock().unwrap().merge(&self.stats);
+    }
 }
 
 /// Run the engine on the (already root-reduced, induced) graph.
@@ -188,25 +251,39 @@ impl<T: DegElem> WorkerCtx<T> {
 /// `initial_best` is the residual-relative upper bound (greedy bound
 /// minus root-forced vertices for MVC; `k + 1` for PVC). Returns the best
 /// value found (`== initial_best` if not improved).
-pub fn run<T: DegElem>(
+pub fn run<T: DegElem>(g: &Graph, initial_best: u32, cfg: EngineCfg) -> EngineOutcome {
+    let workers = cfg.workers.max(1);
+    match cfg.scheduler {
+        SchedulerKind::WorkSteal => {
+            let sched: WorkStealScheduler<Node<T>> =
+                WorkStealScheduler::new(workers, cfg.load_balance, cfg.queue_capacity.max(8));
+            run_with(g, initial_best, cfg, &sched)
+        }
+        SchedulerKind::Sharded => {
+            let sched: ShardedScheduler<Node<T>> = ShardedScheduler::new(workers, cfg.load_balance);
+            run_with(g, initial_best, cfg, &sched)
+        }
+    }
+}
+
+fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     g: &Graph,
     initial_best: u32,
     cfg: EngineCfg,
+    sched: &S,
 ) -> EngineOutcome {
     let n = g.num_vertices();
     let workers = cfg.workers.max(1);
     let shared = Shared::<T> {
         g,
         registry: Registry::new(cfg.stop_on_improvement),
-        worklist: Worklist::new(workers),
         best: AtomicU32::new(initial_best),
-        pending: AtomicU64::new(0),
         stop: AtomicBool::new(false),
         improved: AtomicBool::new(false),
         timed_out: AtomicBool::new(false),
-        low_water: 2 * workers,
         stats_sink: Mutex::new(EngineStats::default()),
         cfg,
+        _marker: std::marker::PhantomData,
     };
 
     // Root node over the full residual graph.
@@ -219,15 +296,13 @@ pub fn run<T: DegElem>(
     };
 
     if shared.cfg.load_balance {
-        shared.pending.store(1, Ordering::SeqCst);
-        shared.worklist.push(0, root);
-        run_workers(&shared, workers, None);
+        sched.inject(root);
     } else {
         // Static seeding (prior works [3], [4]): expand a frontier of
         // sub-trees breadth-first, then give each worker a fixed share.
         let mut seeder = WorkerCtx::<T>::new(0, n, shared.cfg.instrument);
+        let mut seed_handle = sched.handle(0);
         seeder.frontier = Some(std::collections::VecDeque::new());
-        shared.pending.store(1, Ordering::SeqCst);
         seeder.frontier.as_mut().unwrap().push_back(root);
         let target = workers * 4;
         let mut processed = 0usize;
@@ -237,25 +312,38 @@ pub fn run<T: DegElem>(
                 seeder.frontier.as_mut().unwrap().push_front(node);
                 break;
             }
-            process(&shared, &mut seeder, node);
-            shared.pending.fetch_sub(1, Ordering::SeqCst);
+            process(&shared, &mut seeder, &mut seed_handle, node);
             processed += 1;
             if shared.stop.load(Ordering::SeqCst) {
                 break;
             }
         }
         let frontier = seeder.frontier.take().unwrap();
-        seeder.timer.stop();
-        let mut sink = shared.stats_sink.lock().unwrap();
-        seeder.stats.activity = seeder.timer.totals();
-        sink.merge(&seeder.stats);
-        drop(sink);
-        run_workers(&shared, workers, Some(frontier));
+        let seed_counters = seed_handle.counters();
+        drop(seed_handle); // release worker 0's handle slot for the real worker
+        seeder.finish(&shared, seed_counters);
+        for (i, node) in frontier.into_iter().enumerate() {
+            sched.seed(i % workers, node);
+        }
     }
 
+    std::thread::scope(|s| {
+        for worker in 0..workers {
+            let shared = &shared;
+            s.spawn(move || {
+                let mut ctx = WorkerCtx::<T>::new(worker, n, shared.cfg.instrument);
+                let mut handle = sched.handle(worker);
+                worker_loop(shared, &mut ctx, &mut handle);
+                let counters = handle.counters();
+                drop(handle);
+                ctx.finish(shared, counters);
+            });
+        }
+    });
+
     let mut stats = shared.stats_sink.into_inner().unwrap();
-    stats.worklist_pushes = shared.worklist.total_pushes() as u64;
-    stats.worklist_steals = shared.worklist.total_steals() as u64;
+    stats.worklist_pushes = stats.sched_workers.iter().map(|c| c.offloaded).sum();
+    stats.worklist_steals = stats.sched_workers.iter().map(|c| c.steals).sum();
     stats.registry_entries = shared.registry.len() as u64;
     let timed_out = shared.timed_out.load(Ordering::SeqCst);
     if cfg!(debug_assertions) && !timed_out && !shared.stop.load(Ordering::SeqCst) {
@@ -269,66 +357,28 @@ pub fn run<T: DegElem>(
     }
 }
 
-fn run_workers<T: DegElem>(
+fn worker_loop<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
-    workers: usize,
-    seed: Option<std::collections::VecDeque<Node<T>>>,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
 ) {
-    let n = shared.g.num_vertices();
-    let mut seeds: Vec<Vec<Node<T>>> = (0..workers).map(|_| Vec::new()).collect();
-    if let Some(frontier) = seed {
-        for (i, node) in frontier.into_iter().enumerate() {
-            seeds[i % workers].push(node);
-        }
-    }
-    std::thread::scope(|s| {
-        for (id, seed_nodes) in seeds.into_iter().enumerate() {
-            let shared = &*shared;
-            s.spawn(move || {
-                let mut ctx = WorkerCtx::<T>::new(id, n, shared.cfg.instrument);
-                ctx.stack = seed_nodes;
-                worker_loop(shared, &mut ctx);
-                ctx.timer.stop();
-                ctx.stats.activity = ctx.timer.totals();
-                shared.stats_sink.lock().unwrap().merge(&ctx.stats);
-            });
-        }
-    });
-}
-
-fn worker_loop<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
-    let mut idle_spins = 0u32;
     loop {
         if shared.stop.load(Ordering::Relaxed) {
             return;
         }
         ctx.timer.switch(Activity::Queue);
-        let node = ctx.stack.pop().or_else(|| {
-            if shared.cfg.load_balance {
-                shared.worklist.pop(ctx.id)
-            } else {
-                None
-            }
-        });
-        match node {
+        match handle.pop() {
             Some(node) => {
-                idle_spins = 0;
-                process(shared, ctx, node);
-                shared.pending.fetch_sub(1, Ordering::SeqCst);
+                process(shared, ctx, handle, node);
+                handle.on_node_done();
                 check_deadline(shared, ctx);
             }
             None => {
-                if shared.pending.load(Ordering::SeqCst) == 0 {
+                ctx.timer.switch(Activity::Idle);
+                if let IdleOutcome::Finished = handle.idle_step() {
                     return;
                 }
-                ctx.timer.switch(Activity::Idle);
-                idle_spins += 1;
-                if idle_spins > 64 {
-                    std::thread::sleep(std::time::Duration::from_micros(50));
-                    check_deadline(shared, ctx);
-                } else {
-                    std::thread::yield_now();
-                }
+                check_deadline(shared, ctx);
             }
         }
     }
@@ -349,7 +399,12 @@ fn check_deadline<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
 }
 
 /// Process one search-tree node, descending left branches in place.
-fn process<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, mut node: Node<T>) {
+fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+    mut node: Node<T>,
+) {
     loop {
         ctx.stats.tree_nodes += 1;
 
@@ -388,7 +443,7 @@ fn process<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, mut node:
                     return;
                 }
                 Scan::Split { first_size, dmin, dmax } => {
-                    branch_on_components(shared, ctx, node, first_size, dmin, dmax);
+                    branch_on_components(shared, ctx, handle, node, first_size, dmin, dmax);
                     return;
                 }
             }
@@ -403,7 +458,7 @@ fn process<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, mut node:
         // right child: N(vmax) into S
         let right = make_right_child(shared, ctx, &node, vmax);
         shared.registry.on_branch(node.ctx);
-        push_child(shared, ctx, right);
+        push_child(ctx, handle, right);
 
         // left child: vmax into S — descend in place
         cover_vertex(shared.g, &mut node, vmax);
@@ -601,20 +656,18 @@ fn make_right_child<T: DegElem>(
     child
 }
 
-/// Push a child node to the worklist (if balancing and it is hungry) or
-/// the private stack / seed frontier.
-fn push_child<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, node: Node<T>) {
-    shared.pending.fetch_add(1, Ordering::SeqCst);
+/// Push a child node to the seed frontier (static-seeding phase) or the
+/// scheduler.
+fn push_child<T: DegElem, H: WorkerHandle<Node<T>>>(
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+    node: Node<T>,
+) {
     if let Some(front) = ctx.frontier.as_mut() {
         front.push_back(node);
         return;
     }
-    if shared.cfg.load_balance && shared.worklist.is_hungry(shared.low_water) {
-        shared.worklist.push(ctx.id, node);
-    } else {
-        ctx.stack.push(node);
-        ctx.stats.max_stack_depth = ctx.stats.max_stack_depth.max(ctx.stack.len());
-    }
+    handle.push(node);
 }
 
 fn report_leaf<T: DegElem>(shared: &Shared<'_, T>, ctx: u32, size: u32) {
@@ -678,9 +731,10 @@ fn scan_components<T: DegElem>(
 /// The split-detection BFS already discovered the first component
 /// (`ctx.queue`, visit stamps intact), so discovery resumes from there
 /// instead of re-walking it.
-fn branch_on_components<T: DegElem>(
+fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
     ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
     node: Node<T>,
     first_size: u32,
     first_dmin: u32,
@@ -692,7 +746,7 @@ fn branch_on_components<T: DegElem>(
     ctx.stats.registry_entries += 1;
 
     // Component 1: reuse the detection BFS result.
-    dispatch_component(shared, ctx, &node, parent, first_size, first_dmin, first_dmax);
+    dispatch_component(shared, ctx, handle, &node, parent, first_size, first_dmin, first_dmax);
     let mut comp_count = 1u32;
 
     // Remaining components: continue scanning under the same stamp.
@@ -713,7 +767,7 @@ fn branch_on_components<T: DegElem>(
         }
         let (size, dmin, dmax) = bfs_component_accumulate(g, &node, ctx, start);
         comp_count += 1;
-        dispatch_component(shared, ctx, &node, parent, size, dmin, dmax);
+        dispatch_component(shared, ctx, handle, &node, parent, size, dmin, dmax);
     }
 
     *ctx.stats.comp_histogram.entry(comp_count).or_insert(0) += 1;
@@ -724,9 +778,11 @@ fn branch_on_components<T: DegElem>(
 /// Handle one discovered component (vertex list in `ctx.queue`): solve
 /// cliques/chordless cycles in closed form (§III-D), otherwise register
 /// a child entry and dispatch the component node for search.
-fn dispatch_component<T: DegElem>(
+#[allow(clippy::too_many_arguments)]
+fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
     ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
     node: &Node<T>,
     parent: u32,
     size: u32,
@@ -767,17 +823,7 @@ fn dispatch_component<T: DegElem>(
         bounds: NonZeroBounds { lo, hi },
         ctx: child_ctx,
     };
-    push_child(shared, ctx, child);
-}
-
-impl<'g, T: DegElem> Shared<'g, T> {
-    /// Remaining budget for a new component: the enclosing context bound
-    /// minus what the split has already committed (`Sum` so far).
-    fn bound_of_parent(&self, node_ctx: u32, parent: u32) -> u32 {
-        let ctx_bound = self.bound_of(node_ctx);
-        let (sum_now, _, _, _) = self.registry.snapshot(parent);
-        ctx_bound.saturating_sub(sum_now)
-    }
+    push_child(ctx, handle, child);
 }
 
 /// BFS one component starting at `start` using a fresh stamp.
@@ -844,34 +890,48 @@ mod tests {
     use crate::graph::generators;
     use crate::solver::oracle;
 
-    fn run_cfg(g: &Graph, component_aware: bool, load_balance: bool, workers: usize) -> u32 {
+    const BOTH_SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+
+    fn cfg_with(
+        component_aware: bool,
+        load_balance: bool,
+        workers: usize,
+        scheduler: SchedulerKind,
+    ) -> EngineCfg {
+        EngineCfg {
+            component_aware,
+            load_balance,
+            workers,
+            scheduler,
+            ..EngineCfg::default()
+        }
+    }
+
+    fn run_cfg(
+        g: &Graph,
+        component_aware: bool,
+        load_balance: bool,
+        workers: usize,
+        scheduler: SchedulerKind,
+    ) -> u32 {
         let ub = crate::solver::greedy::greedy_bound(g);
-        let out = run::<u32>(
-            g,
-            ub,
-            EngineCfg {
-                component_aware,
-                load_balance,
-                use_bounds: true,
-                workers,
-                stop_on_improvement: false,
-                deadline: None,
-                instrument: false,
-            },
-        );
+        let out = run::<u32>(g, ub, cfg_with(component_aware, load_balance, workers, scheduler));
         assert!(!out.timed_out);
         out.best
     }
 
     #[test]
-    fn matches_oracle_all_variants() {
+    fn matches_oracle_all_variants_both_schedulers() {
         for seed in 0..15 {
             let g = generators::erdos_renyi(18, 0.18, seed);
             let opt = oracle::mvc_size(&g);
-            assert_eq!(run_cfg(&g, true, true, 4), opt, "proposed seed {seed}");
-            assert_eq!(run_cfg(&g, false, true, 4), opt, "yamout seed {seed}");
-            assert_eq!(run_cfg(&g, true, false, 4), opt, "no-lb seed {seed}");
-            assert_eq!(run_cfg(&g, true, true, 1), opt, "1-worker seed {seed}");
+            for sched in BOTH_SCHEDULERS {
+                let tag = sched.name();
+                assert_eq!(run_cfg(&g, true, true, 4, sched), opt, "proposed {tag} seed {seed}");
+                assert_eq!(run_cfg(&g, false, true, 4, sched), opt, "yamout {tag} seed {seed}");
+                assert_eq!(run_cfg(&g, true, false, 4, sched), opt, "no-lb {tag} seed {seed}");
+                assert_eq!(run_cfg(&g, true, true, 1, sched), opt, "1-worker {tag} seed {seed}");
+            }
         }
     }
 
@@ -880,8 +940,10 @@ mod tests {
         for seed in 0..10 {
             let g = generators::union_of_random(4, 3, 6, 0.3, seed);
             let opt = oracle::mvc_size(&g);
-            assert_eq!(run_cfg(&g, true, true, 4), opt, "seed {seed}");
-            assert_eq!(run_cfg(&g, false, true, 4), opt, "seed {seed}");
+            for sched in BOTH_SCHEDULERS {
+                assert_eq!(run_cfg(&g, true, true, 4, sched), opt, "{} seed {seed}", sched.name());
+                assert_eq!(run_cfg(&g, false, true, 4, sched), opt, "{} seed {seed}", sched.name());
+            }
         }
     }
 
@@ -894,7 +956,9 @@ mod tests {
             (generators::star(12), 1),
         ];
         for (g, expect) in cases {
-            assert_eq!(run_cfg(&g, true, true, 2), expect);
+            for sched in BOTH_SCHEDULERS {
+                assert_eq!(run_cfg(&g, true, true, 2, sched), expect, "{}", sched.name());
+            }
         }
     }
 
@@ -904,65 +968,40 @@ mod tests {
         // triangle-free) so the split must be handled by the registry
         let g = Graph::disjoint_union(&[generators::petersen(), generators::petersen()]);
         let ub = crate::solver::greedy::greedy_bound(&g);
-        let out = run::<u32>(
-            &g,
-            ub,
-            EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 2,
-                stop_on_improvement: false,
-                deadline: None,
-                instrument: false,
-            },
-        );
-        assert_eq!(out.best, oracle::mvc_size(&g));
-        assert!(out.stats.component_branches >= 1);
-        assert!(!out.stats.comp_histogram.is_empty());
+        for sched in BOTH_SCHEDULERS {
+            let out = run::<u32>(&g, ub, cfg_with(true, true, 2, sched));
+            assert_eq!(out.best, oracle::mvc_size(&g), "{}", sched.name());
+            assert!(out.stats.component_branches >= 1);
+            assert!(!out.stats.comp_histogram.is_empty());
+        }
     }
 
     #[test]
     fn pvc_mode_stops_early_when_found() {
         let g = generators::erdos_renyi(20, 0.2, 3);
         let opt = oracle::mvc_size(&g);
-        // k = opt: initial best = k+1, must improve and stop
-        let out = run::<u32>(
-            &g,
-            opt + 1,
-            EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 4,
-                stop_on_improvement: true,
-                deadline: None,
-                instrument: false,
-            },
-        );
-        assert!(out.improved);
-        assert!(out.best <= opt);
+        for sched in BOTH_SCHEDULERS {
+            // k = opt: initial best = k+1, must improve and stop
+            let mut cfg = cfg_with(true, true, 4, sched);
+            cfg.stop_on_improvement = true;
+            let out = run::<u32>(&g, opt + 1, cfg);
+            assert!(out.improved, "{}", sched.name());
+            assert!(out.best <= opt, "{}", sched.name());
+        }
     }
 
     #[test]
     fn pvc_mode_k_too_small_finds_nothing() {
         let g = generators::erdos_renyi(16, 0.25, 5);
         let opt = oracle::mvc_size(&g);
-        let out = run::<u32>(
-            &g,
-            opt, // searching for < opt ⇒ impossible
-            EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 4,
-                stop_on_improvement: true,
-                deadline: None,
-                instrument: false,
-            },
-        );
-        assert!(!out.improved);
-        assert_eq!(out.best, opt);
+        for sched in BOTH_SCHEDULERS {
+            let mut cfg = cfg_with(true, true, 4, sched);
+            cfg.stop_on_improvement = true;
+            // searching for < opt ⇒ impossible
+            let out = run::<u32>(&g, opt, cfg);
+            assert!(!out.improved, "{}", sched.name());
+            assert_eq!(out.best, opt, "{}", sched.name());
+        }
     }
 
     #[test]
@@ -970,15 +1009,7 @@ mod tests {
         for seed in 0..6 {
             let g = generators::erdos_renyi(20, 0.15, seed);
             let ub = crate::solver::greedy::greedy_bound(&g);
-            let cfg = EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 3,
-                stop_on_improvement: false,
-                deadline: None,
-                instrument: false,
-            };
+            let cfg = cfg_with(true, true, 3, SchedulerKind::WorkSteal);
             let a = run::<u8>(&g, ub, cfg.clone()).best;
             let b = run::<u16>(&g, ub, cfg.clone()).best;
             let c = run::<u32>(&g, ub, cfg).best;
@@ -994,13 +1025,9 @@ mod tests {
             let g = generators::union_of_random(3, 4, 7, 0.25, seed);
             let ub = crate::solver::greedy::greedy_bound(&g);
             let mk = |use_bounds| EngineCfg {
-                component_aware: true,
-                load_balance: true,
                 use_bounds,
                 workers: 2,
-                stop_on_improvement: false,
-                deadline: None,
-                instrument: false,
+                ..EngineCfg::default()
             };
             assert_eq!(
                 run::<u32>(&g, ub, mk(true)).best,
@@ -1015,40 +1042,53 @@ mod tests {
         // a dense-ish graph with an immediate deadline must report timeout
         let g = generators::p_hat(60, 0.3, 0.8, 1);
         let ub = crate::solver::greedy::greedy_bound(&g);
-        let out = run::<u32>(
-            &g,
-            ub,
-            EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 2,
-                stop_on_improvement: false,
-                deadline: Some(Instant::now()),
-                instrument: false,
-            },
-        );
-        assert!(out.timed_out);
+        for sched in BOTH_SCHEDULERS {
+            let mut cfg = cfg_with(true, true, 2, sched);
+            cfg.deadline = Some(Instant::now());
+            let out = run::<u32>(&g, ub, cfg);
+            assert!(out.timed_out, "{}", sched.name());
+        }
     }
 
     #[test]
     fn instrumentation_records_activity() {
         let g = generators::erdos_renyi(24, 0.2, 9);
         let ub = crate::solver::greedy::greedy_bound(&g);
-        let out = run::<u32>(
-            &g,
-            ub,
-            EngineCfg {
-                component_aware: true,
-                load_balance: true,
-                use_bounds: true,
-                workers: 2,
-                stop_on_improvement: false,
-                deadline: None,
-                instrument: true,
-            },
-        );
+        let mut cfg = cfg_with(true, true, 2, SchedulerKind::WorkSteal);
+        cfg.instrument = true;
+        let out = run::<u32>(&g, ub, cfg);
         let busy: u64 = out.stats.activity.iter().sum();
         assert!(busy > 0);
+    }
+
+    #[test]
+    fn sched_counters_reconcile_with_tree_nodes() {
+        // Every node acquired from a queue starts one `process` descent;
+        // descents stay in place for left branches, so acquisitions must
+        // equal pushes + the injected root, and tree_nodes must be at
+        // least the acquisitions.
+        let g = generators::erdos_renyi(22, 0.2, 11);
+        for sched in BOTH_SCHEDULERS {
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            let out = run::<u32>(&g, ub, cfg_with(true, true, 4, sched));
+            let c: Vec<_> = out.stats.sched_workers.clone();
+            let acquired: u64 = c.iter().map(|w| w.acquired()).sum();
+            let pushed: u64 = c.iter().map(|w| w.pushes).sum();
+            assert_eq!(acquired, pushed + 1, "{}: root + pushes", sched.name());
+            assert!(out.stats.tree_nodes >= acquired, "{}", sched.name());
+        }
+    }
+
+    #[test]
+    fn work_steal_observes_steals_on_split_workload() {
+        // A many-component union keeps several workers busy; with the
+        // work stealer the traffic shows up in the per-worker counters.
+        let g = generators::union_of_random(8, 6, 10, 0.3, 21);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(&g, ub, cfg_with(true, true, 4, SchedulerKind::WorkSteal));
+        assert_eq!(out.best, oracle::mvc_size(&g));
+        assert!(!out.stats.sched_workers.is_empty());
+        let pushes: u64 = out.stats.sched_workers.iter().map(|w| w.pushes).sum();
+        assert!(pushes > 0);
     }
 }

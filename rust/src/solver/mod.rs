@@ -1,6 +1,12 @@
 //! Vertex-cover solvers: public pipeline over the parallel engine and the
 //! sequential baseline.
 //!
+//! The parallel engine runs on a pluggable scheduling runtime (see
+//! [`sched`]): lock-free Chase–Lev work stealing by default, or the
+//! mutex-sharded worklist baseline via
+//! [`SolverConfig::with_scheduler`] — orthogonal to the variant presets
+//! below, so schedulers can be compared on identical searches.
+//!
 //! Variant presets mirror the paper's Table I columns:
 //! * [`SolverConfig::proposed`] — component-aware + load-balanced + all
 //!   degree-array optimizations (the paper's contribution);
@@ -17,6 +23,7 @@ pub mod greedy;
 pub mod occupancy;
 pub mod oracle;
 pub mod registry;
+pub mod sched;
 pub mod sequential;
 pub mod worklist;
 
@@ -24,6 +31,7 @@ use crate::degree::Dtype;
 use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
+pub use sched::SchedulerKind;
 use std::time::{Duration, Instant};
 
 /// Which execution strategy to run.
@@ -69,6 +77,11 @@ pub struct SolverConfig {
     pub small_dtypes: bool,
     /// Worker override (default: occupancy model ∧ hardware threads).
     pub workers: Option<usize>,
+    /// Scheduling runtime for the parallel engine: lock-free work
+    /// stealing (default) or the mutex-sharded worklist baseline.
+    /// Orthogonal to the variant, so schedulers can be compared on
+    /// identical searches.
+    pub scheduler: SchedulerKind,
     /// Wall-clock budget (tables use this as the ">6hrs" stand-in).
     pub timeout: Option<Duration>,
     /// Record Figure-4 activity timings.
@@ -88,6 +101,7 @@ impl SolverConfig {
             use_bounds: true,
             small_dtypes: true,
             workers: None,
+            scheduler: SchedulerKind::default(),
             timeout: None,
             instrument: false,
             extract_cover: false,
@@ -128,6 +142,12 @@ impl SolverConfig {
     /// Set an explicit worker count.
     pub fn with_workers(mut self, w: usize) -> SolverConfig {
         self.workers = Some(w);
+        self
+    }
+
+    /// Select the scheduling runtime for the parallel engine.
+    pub fn with_scheduler(mut self, s: SchedulerKind) -> SolverConfig {
+        self.scheduler = s;
         self
     }
 }
@@ -235,6 +255,8 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
                 stop_on_improvement: false,
                 deadline,
                 instrument: cfg.instrument,
+                scheduler: cfg.scheduler,
+                queue_capacity: p.occupancy.queue_capacity(),
             };
             (run_engine(&p.residual.graph, p.dtype, initial, ecfg), None)
         }
@@ -317,6 +339,8 @@ pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
                 stop_on_improvement: true,
                 deadline,
                 instrument: cfg.instrument,
+                scheduler: cfg.scheduler,
+                queue_capacity: p.occupancy.queue_capacity(),
             };
             run_engine(&p.residual.graph, p.dtype, initial, ecfg)
         }
@@ -445,6 +469,32 @@ mod tests {
                 "{} k=opt-1",
                 cfg.variant.name()
             );
+        }
+    }
+
+    #[test]
+    fn schedulers_agree_on_all_parallel_variants() {
+        for seed in 0..6 {
+            let g = generators::union_of_random(3, 4, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            for kind in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+                for cfg in [
+                    SolverConfig::proposed(),
+                    SolverConfig::prior_work(),
+                    SolverConfig::no_load_balance(),
+                ] {
+                    let cfg = cfg.with_scheduler(kind);
+                    let r = solve_mvc(&g, &cfg);
+                    assert_eq!(
+                        r.best,
+                        opt,
+                        "{}/{} seed {seed}",
+                        cfg.variant.name(),
+                        kind.name()
+                    );
+                    assert!(solve_pvc(&g, opt, &cfg).found, "{} pvc", kind.name());
+                }
+            }
         }
     }
 

@@ -48,6 +48,16 @@ pub struct Occupancy {
     pub dtype: Dtype,
 }
 
+impl Occupancy {
+    /// Initial per-worker scheduler queue capacity derived from the
+    /// modeled stack depth: on the GPU each block's stack is preallocated
+    /// to the branching-depth bound, and the work-stealing deques reuse
+    /// that bound as their starting size so the common case never grows.
+    pub fn queue_capacity(&self) -> usize {
+        (self.stack_depth as usize).next_power_of_two().clamp(64, 4096)
+    }
+}
+
 impl OccupancyModel {
     /// Model a launch for a degree array of `n` entries of `dtype`.
     ///
@@ -113,6 +123,16 @@ mod tests {
     fn at_least_one_block() {
         let m = OccupancyModel::default();
         assert!(m.plan(10_000_000, Dtype::U32).blocks >= 1);
+    }
+
+    #[test]
+    fn queue_capacity_tracks_stack_depth() {
+        let m = OccupancyModel::default();
+        let small = m.plan(100, Dtype::U8);
+        assert_eq!(small.queue_capacity(), (small.stack_depth as usize).next_power_of_two());
+        let big = m.plan(1 << 20, Dtype::U32);
+        assert_eq!(big.queue_capacity(), 4096); // clamped at the depth cap
+        assert!(m.plan(3, Dtype::U8).queue_capacity() >= 64);
     }
 
     #[test]

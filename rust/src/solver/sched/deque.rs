@@ -1,0 +1,349 @@
+//! Chase–Lev work-stealing deque (Chase & Lev, SPAA'05; memory orderings
+//! after Lê et al., PPoPP'13).
+//!
+//! One deque per worker. The **owner** pushes and pops at the *bottom*
+//! (LIFO, so the search stays depth-first and cache-hot); **thieves**
+//! steal from the *top* (FIFO, so they take the oldest — and on a
+//! branch-and-reduce tree, largest — sub-trees). The owner's fast path is
+//! a plain load + store; only the last-item race and steals use CAS.
+//!
+//! Reclamation is deliberately simple: buffers retired by [`grow`] are
+//! kept alive until the deque drops (a thief may still hold a pointer to
+//! an old buffer). Growth is doubling, so retired memory is at most the
+//! size of the live buffer — the same bound the paper's preallocated
+//! per-block stacks accept.
+//!
+//! [`grow`]: ChaseLev::grow
+
+use std::cell::UnsafeCell;
+use std::marker::PhantomData;
+use std::mem::MaybeUninit;
+use std::sync::atomic::{fence, AtomicIsize, AtomicPtr, Ordering};
+use std::sync::Mutex;
+
+/// Result of a steal attempt.
+#[derive(Debug)]
+pub enum Steal<T> {
+    /// The deque looked empty.
+    Empty,
+    /// Lost a race with the owner or another thief; worth retrying.
+    Retry,
+    /// Stole an item.
+    Taken(T),
+}
+
+struct Buffer<T> {
+    cap: usize,
+    slots: Box<[UnsafeCell<MaybeUninit<T>>]>,
+}
+
+impl<T> Buffer<T> {
+    fn alloc(cap: usize) -> *mut Buffer<T> {
+        debug_assert!(cap.is_power_of_two());
+        let slots: Box<[UnsafeCell<MaybeUninit<T>>]> =
+            (0..cap).map(|_| UnsafeCell::new(MaybeUninit::uninit())).collect();
+        Box::into_raw(Box::new(Buffer { cap, slots }))
+    }
+
+    /// Pointer to the slot for logical index `i` (indices are monotonic;
+    /// the buffer is circular).
+    #[inline]
+    unsafe fn at(&self, i: isize) -> *mut T {
+        (*self.slots[(i as usize) & (self.cap - 1)].get()).as_mut_ptr()
+    }
+}
+
+/// A single-owner, multi-thief lock-free deque.
+///
+/// Owner operations ([`push`], [`pop`]) are `unsafe`: they must only ever
+/// be called from one thread at a time (the deque's owner). [`steal`],
+/// [`len`] and [`is_empty`] are safe from any thread.
+///
+/// [`push`]: ChaseLev::push
+/// [`pop`]: ChaseLev::pop
+/// [`steal`]: ChaseLev::steal
+/// [`len`]: ChaseLev::len
+/// [`is_empty`]: ChaseLev::is_empty
+pub struct ChaseLev<T> {
+    /// Next index thieves take from (monotonically increasing).
+    top: AtomicIsize,
+    /// Next index the owner pushes to.
+    bottom: AtomicIsize,
+    /// Current circular buffer.
+    buf: AtomicPtr<Buffer<T>>,
+    /// Buffers replaced by `grow`, freed on drop (thieves may still read
+    /// them; cold path, touched only while growing).
+    retired: Mutex<Vec<*mut Buffer<T>>>,
+    _marker: PhantomData<T>,
+}
+
+// SAFETY: items are Send; all shared mutation goes through atomics, and
+// the owner-only operations are marked unsafe with a single-caller
+// contract.
+unsafe impl<T: Send> Send for ChaseLev<T> {}
+unsafe impl<T: Send> Sync for ChaseLev<T> {}
+
+impl<T> ChaseLev<T> {
+    /// Create a deque with at least `capacity_hint` slots (rounded up to
+    /// a power of two; grows automatically beyond it).
+    pub fn with_capacity(capacity_hint: usize) -> ChaseLev<T> {
+        let cap = capacity_hint.next_power_of_two().clamp(8, 1 << 20);
+        ChaseLev {
+            top: AtomicIsize::new(0),
+            bottom: AtomicIsize::new(0),
+            buf: AtomicPtr::new(Buffer::alloc(cap)),
+            retired: Mutex::new(Vec::new()),
+            _marker: PhantomData,
+        }
+    }
+
+    /// Approximate number of queued items (exact for the owner when no
+    /// steal is in flight).
+    pub fn len(&self) -> usize {
+        let b = self.bottom.load(Ordering::SeqCst);
+        let t = self.top.load(Ordering::SeqCst);
+        (b - t).max(0) as usize
+    }
+
+    /// Approximate emptiness check (used by the termination sweep, which
+    /// revalidates against the epoch counter).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Double the buffer, copying the live range `t..b`. Owner-only.
+    #[cold]
+    unsafe fn grow(&self, t: isize, b: isize) {
+        let old = self.buf.load(Ordering::Relaxed);
+        let new = Buffer::alloc((*old).cap * 2);
+        for i in t..b {
+            // Bitwise duplication: either this copy or the old slot is
+            // consumed, never both (top only increases; slots below top
+            // are never read again).
+            std::ptr::write((*new).at(i), std::ptr::read((*old).at(i)));
+        }
+        self.buf.store(new, Ordering::Release);
+        self.retired.lock().unwrap().push(old);
+    }
+
+    /// Push at the bottom.
+    ///
+    /// # Safety
+    /// Must only be called by the deque's owner (one thread at a time,
+    /// never concurrently with [`ChaseLev::pop`]).
+    pub unsafe fn push(&self, item: T) {
+        let b = self.bottom.load(Ordering::Relaxed);
+        let t = self.top.load(Ordering::Acquire);
+        let mut buf = self.buf.load(Ordering::Relaxed);
+        if b - t >= (*buf).cap as isize {
+            self.grow(t, b);
+            buf = self.buf.load(Ordering::Relaxed);
+        }
+        std::ptr::write((*buf).at(b), item);
+        // Publish the slot before the new bottom becomes visible.
+        self.bottom.store(b + 1, Ordering::SeqCst);
+    }
+
+    /// Pop at the bottom (LIFO).
+    ///
+    /// # Safety
+    /// Must only be called by the deque's owner.
+    pub unsafe fn pop(&self) -> Option<T> {
+        let b = self.bottom.load(Ordering::Relaxed) - 1;
+        let buf = self.buf.load(Ordering::Relaxed);
+        self.bottom.store(b, Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        let t = self.top.load(Ordering::SeqCst);
+        if t > b {
+            // Empty: restore bottom.
+            self.bottom.store(b + 1, Ordering::SeqCst);
+            return None;
+        }
+        if t == b {
+            // Last item: race thieves for it via top.
+            let won = self
+                .top
+                .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::SeqCst)
+                .is_ok();
+            self.bottom.store(b + 1, Ordering::SeqCst);
+            if !won {
+                return None; // a thief took it
+            }
+            return Some(std::ptr::read((*buf).at(b)));
+        }
+        // t < b: thieves can reach at most index b-1 (they observed
+        // bottom == b at the earliest after our store above).
+        Some(std::ptr::read((*buf).at(b)))
+    }
+
+    /// Steal from the top (FIFO). Safe from any thread.
+    pub fn steal(&self) -> Steal<T> {
+        let t = self.top.load(Ordering::SeqCst);
+        fence(Ordering::SeqCst);
+        let b = self.bottom.load(Ordering::SeqCst);
+        if t >= b {
+            return Steal::Empty;
+        }
+        let buf = self.buf.load(Ordering::Acquire);
+        // Speculative read into MaybeUninit: if another thief takes slot
+        // `t` first, the owner may wrap a push onto it while we are still
+        // copying, so the bytes can be torn — which is why they must not
+        // materialize as a `T` yet. Ownership is decided by the CAS: on
+        // failure the (possibly garbage) bytes are dropped as
+        // MaybeUninit (a no-op); on success no overwrite can have
+        // happened before our read (an overwrite requires `top > t`,
+        // which would have failed the CAS), so the bytes are a valid T.
+        let item = unsafe { std::ptr::read((*buf).at(t) as *const MaybeUninit<T>) };
+        if self
+            .top
+            .compare_exchange(t, t + 1, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Steal::Retry;
+        }
+        Steal::Taken(unsafe { item.assume_init() })
+    }
+}
+
+impl<T> Drop for ChaseLev<T> {
+    fn drop(&mut self) {
+        // Exclusive access: drop live items, then free all buffers.
+        let t = *self.top.get_mut();
+        let b = *self.bottom.get_mut();
+        let buf = *self.buf.get_mut();
+        unsafe {
+            for i in t..b.max(t) {
+                std::ptr::drop_in_place((*buf).at(i));
+            }
+            drop(Box::from_raw(buf));
+        }
+        for p in self.retired.get_mut().unwrap().drain(..) {
+            unsafe { drop(Box::from_raw(p)) };
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for ChaseLev<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ChaseLev").field("len", &self.len()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn owner_lifo() {
+        let d = ChaseLev::with_capacity(4);
+        unsafe {
+            d.push(1);
+            d.push(2);
+            d.push(3);
+            assert_eq!(d.pop(), Some(3));
+            assert_eq!(d.pop(), Some(2));
+            assert_eq!(d.pop(), Some(1));
+            assert_eq!(d.pop(), None);
+            assert_eq!(d.pop(), None);
+        }
+    }
+
+    #[test]
+    fn steal_fifo_from_top() {
+        let d = ChaseLev::with_capacity(4);
+        unsafe {
+            d.push(10);
+            d.push(20);
+        }
+        match d.steal() {
+            Steal::Taken(x) => assert_eq!(x, 10),
+            s => panic!("expected Taken(10), got {s:?}"),
+        }
+        unsafe { assert_eq!(d.pop(), Some(20)) };
+        assert!(matches!(d.steal(), Steal::Empty));
+    }
+
+    #[test]
+    fn growth_preserves_items() {
+        let d = ChaseLev::with_capacity(8);
+        unsafe {
+            for i in 0..1000 {
+                d.push(i);
+            }
+            for i in (0..1000).rev() {
+                assert_eq!(d.pop(), Some(i));
+            }
+            assert_eq!(d.pop(), None);
+        }
+    }
+
+    #[test]
+    fn drop_frees_unpopped_boxes() {
+        // Box items left in the deque (and in retired buffers after
+        // growth) must be freed exactly once by Drop.
+        let d = ChaseLev::with_capacity(8);
+        unsafe {
+            for i in 0..100 {
+                d.push(Box::new(i));
+            }
+            assert_eq!(*d.pop().unwrap(), 99);
+        }
+        drop(d); // leak-checked under sanitizers / valgrind runs
+    }
+
+    #[test]
+    fn concurrent_owner_and_thieves_conserve_items() {
+        const ITEMS: usize = 20_000;
+        const THIEVES: usize = 4;
+        let d = Arc::new(ChaseLev::with_capacity(16));
+        let taken = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..THIEVES {
+                let d = Arc::clone(&d);
+                let taken = Arc::clone(&taken);
+                let sum = Arc::clone(&sum);
+                s.spawn(move || loop {
+                    match d.steal() {
+                        Steal::Taken(x) => {
+                            sum.fetch_add(x, Ordering::Relaxed);
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Steal::Retry => {}
+                        Steal::Empty => {
+                            if taken.load(Ordering::Relaxed) == ITEMS {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+            // Owner interleaves pushes and pops.
+            let d = Arc::clone(&d);
+            let taken = Arc::clone(&taken);
+            let sum = Arc::clone(&sum);
+            s.spawn(move || {
+                for i in 1..=ITEMS {
+                    unsafe { d.push(i) };
+                    if i % 3 == 0 {
+                        if let Some(x) = unsafe { d.pop() } {
+                            sum.fetch_add(x, Ordering::Relaxed);
+                            taken.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                // Drain whatever the thieves left behind.
+                while let Some(x) = unsafe { d.pop() } {
+                    sum.fetch_add(x, Ordering::Relaxed);
+                    taken.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        });
+        assert_eq!(taken.load(Ordering::Relaxed), ITEMS);
+        assert_eq!(sum.load(Ordering::Relaxed), ITEMS * (ITEMS + 1) / 2);
+        assert!(d.is_empty());
+    }
+}

@@ -1,0 +1,233 @@
+//! Global injector queue — the analog of the paper's broker queue entry
+//! point: root search-tree nodes (and any out-of-band restarts, e.g. a
+//! PVC re-launch) are injected here, and idle workers drain it before
+//! resorting to stealing from each other.
+//!
+//! A Michael–Scott MPMC FIFO queue (PODC'96) with one deliberate
+//! simplification: nodes are **never freed while the queue is live** —
+//! popped nodes stay linked (the head just advances past them) and the
+//! whole chain is reclaimed on drop. That removes the ABA/use-after-free
+//! hazard that otherwise requires hazard pointers or epochs, at the cost
+//! of retaining one small node per injected item. Injection is cold
+//! (O(components at the root), not O(tree nodes)), so the retained memory
+//! is negligible.
+
+use std::mem::MaybeUninit;
+use std::sync::atomic::{AtomicPtr, Ordering};
+
+struct Node<T> {
+    item: MaybeUninit<T>,
+    next: AtomicPtr<Node<T>>,
+}
+
+impl<T> Node<T> {
+    fn alloc(item: MaybeUninit<T>) -> *mut Node<T> {
+        Box::into_raw(Box::new(Node { item, next: AtomicPtr::new(std::ptr::null_mut()) }))
+    }
+}
+
+/// Lock-free MPMC FIFO queue for root/restart work items.
+pub struct Injector<T> {
+    head: AtomicPtr<Node<T>>,
+    tail: AtomicPtr<Node<T>>,
+    /// The original dummy node: every node ever allocated is reachable
+    /// from here via `next`, which is what drop walks.
+    first: *mut Node<T>,
+}
+
+// SAFETY: all shared state is behind atomics; items are Send.
+unsafe impl<T: Send> Send for Injector<T> {}
+unsafe impl<T: Send> Sync for Injector<T> {}
+
+impl<T> Injector<T> {
+    /// Create an empty injector.
+    pub fn new() -> Injector<T> {
+        let dummy = Node::alloc(MaybeUninit::uninit());
+        Injector { head: AtomicPtr::new(dummy), tail: AtomicPtr::new(dummy), first: dummy }
+    }
+
+    /// Enqueue an item (any thread).
+    pub fn push(&self, item: T) {
+        let n = Node::alloc(MaybeUninit::new(item));
+        loop {
+            let t = self.tail.load(Ordering::SeqCst);
+            // SAFETY: nodes are never freed while the queue is live.
+            let next = unsafe { (*t).next.load(Ordering::SeqCst) };
+            if next.is_null() {
+                if unsafe {
+                    (*t).next
+                        .compare_exchange(
+                            std::ptr::null_mut(),
+                            n,
+                            Ordering::SeqCst,
+                            Ordering::SeqCst,
+                        )
+                        .is_ok()
+                } {
+                    let _ = self.tail.compare_exchange(t, n, Ordering::SeqCst, Ordering::SeqCst);
+                    return;
+                }
+            } else {
+                // Help a lagging tail along.
+                let _ = self.tail.compare_exchange(t, next, Ordering::SeqCst, Ordering::SeqCst);
+            }
+        }
+    }
+
+    /// Dequeue an item (any thread).
+    pub fn pop(&self) -> Option<T> {
+        loop {
+            let h = self.head.load(Ordering::SeqCst);
+            let t = self.tail.load(Ordering::SeqCst);
+            // SAFETY: nodes are never freed while the queue is live.
+            let next = unsafe { (*h).next.load(Ordering::SeqCst) };
+            if next.is_null() {
+                return None;
+            }
+            if h == t {
+                // Tail lagging behind a completed push: help it.
+                let _ = self.tail.compare_exchange(t, next, Ordering::SeqCst, Ordering::SeqCst);
+                continue;
+            }
+            if self.head.compare_exchange(h, next, Ordering::SeqCst, Ordering::SeqCst).is_ok() {
+                // Exactly one winner per head value (addresses are never
+                // reused while live, so no ABA); the winner owns `next`'s
+                // item and `next` becomes the new dummy.
+                return Some(unsafe { (*next).item.as_ptr().read() });
+            }
+        }
+    }
+
+    /// True if no items are queued (validated by the termination sweep's
+    /// epoch recheck, like the deque emptiness probes).
+    pub fn is_empty(&self) -> bool {
+        let h = self.head.load(Ordering::SeqCst);
+        // SAFETY: nodes are never freed while the queue is live.
+        unsafe { (*h).next.load(Ordering::SeqCst).is_null() }
+    }
+}
+
+impl<T> Default for Injector<T> {
+    fn default() -> Self {
+        Injector::new()
+    }
+}
+
+impl<T> Drop for Injector<T> {
+    fn drop(&mut self) {
+        // Exclusive access: walk the full allocation chain from the
+        // original dummy. Nodes up to and including the current head have
+        // had their items consumed (or never held one); nodes after it
+        // hold live items that must be dropped.
+        let head = *self.head.get_mut();
+        let mut cur = self.first;
+        let mut live = false;
+        while !cur.is_null() {
+            unsafe {
+                let next = (*cur).next.load(Ordering::Relaxed);
+                if live {
+                    std::ptr::drop_in_place((*cur).item.as_mut_ptr());
+                }
+                if cur == head {
+                    live = true;
+                }
+                drop(Box::from_raw(cur));
+                cur = next;
+            }
+        }
+    }
+}
+
+impl<T> std::fmt::Debug for Injector<T> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Injector").field("is_empty", &self.is_empty()).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = Injector::new();
+        q.push(1);
+        q.push(2);
+        q.push(3);
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+        assert_eq!(q.pop(), None);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn interleaved_push_pop() {
+        let q = Injector::new();
+        q.push(10);
+        assert_eq!(q.pop(), Some(10));
+        assert_eq!(q.pop(), None);
+        q.push(20);
+        q.push(30);
+        assert_eq!(q.pop(), Some(20));
+        q.push(40);
+        assert_eq!(q.pop(), Some(30));
+        assert_eq!(q.pop(), Some(40));
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn drop_frees_live_items() {
+        let q = Injector::new();
+        for i in 0..50 {
+            q.push(Box::new(i));
+        }
+        assert_eq!(*q.pop().unwrap(), 0);
+        drop(q); // 49 live boxes reclaimed by Drop
+    }
+
+    #[test]
+    fn mpmc_conserves_items() {
+        const PRODUCERS: usize = 4;
+        const CONSUMERS: usize = 4;
+        const PER: usize = 5_000;
+        let q = Arc::new(Injector::new());
+        let got = Arc::new(AtomicUsize::new(0));
+        let sum = Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for p in 0..PRODUCERS {
+                let q = Arc::clone(&q);
+                s.spawn(move || {
+                    for i in 0..PER {
+                        q.push(p * PER + i + 1);
+                    }
+                });
+            }
+            for _ in 0..CONSUMERS {
+                let q = Arc::clone(&q);
+                let got = Arc::clone(&got);
+                let sum = Arc::clone(&sum);
+                s.spawn(move || loop {
+                    match q.pop() {
+                        Some(x) => {
+                            sum.fetch_add(x, Ordering::Relaxed);
+                            got.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => {
+                            if got.load(Ordering::Relaxed) == PRODUCERS * PER {
+                                break;
+                            }
+                            std::thread::yield_now();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(got.load(Ordering::Relaxed), PRODUCERS * PER);
+        let n = PRODUCERS * PER;
+        assert_eq!(sum.load(Ordering::Relaxed), n * (n + 1) / 2);
+        assert!(q.is_empty());
+    }
+}

@@ -1,0 +1,175 @@
+//! Pluggable scheduling runtimes for the branch-and-reduce engine.
+//!
+//! The paper's GPU maps search onto thread blocks with private stacks
+//! plus a shared broker worklist (§II-C). This module abstracts that
+//! machinery behind the [`Scheduler`] trait so the engine is generic over
+//! *how* search-tree nodes move between workers, with two
+//! implementations:
+//!
+//! * [`WorkStealScheduler`] — a lock-free work-stealing runtime: one
+//!   Chase–Lev deque per worker (the "private stack", except its top is
+//!   stealable), a global [`injector::Injector`] for root nodes and
+//!   restarts, and an epoch-validated idle-count termination detector.
+//!   GPU analogy: thread block → worker/deque owner, broker queue →
+//!   injector + the stealable tops of all deques.
+//! * [`ShardedScheduler`] — the previous runtime, kept as the comparison
+//!   baseline: worker-private `Vec` stacks that offload to mutex-sharded
+//!   FIFO queues (`solver::worklist`) when the shared queue runs hungry,
+//!   with an outstanding-node counter for termination.
+//!
+//! Both are selectable from `SolverConfig`/`EngineCfg`
+//! ([`SchedulerKind`]), which keeps the paper's three variants —
+//! proposed / prior-work / no-load-balance — expressible as a scheduler
+//! plus configuration flags, and lets the benches race the runtimes
+//! head-to-head on identical searches.
+//!
+//! ## Ownership protocol
+//!
+//! A scheduler is driven through per-worker [`WorkerHandle`]s. Exactly
+//! one live handle may exist per worker index (enforced at runtime by the
+//! work-stealing implementation); the handle's owner calls
+//! [`WorkerHandle::push`]/[`WorkerHandle::pop`] from its own thread only.
+//! [`Scheduler::inject`] is safe from any thread at any time;
+//! [`Scheduler::seed`] is a single-threaded setup-phase operation used by
+//! the static (no-load-balance) seeding path.
+//!
+//! ## Termination
+//!
+//! [`WorkerHandle::pop`] returning `None` does **not** mean the search is
+//! over — another worker may still be expanding nodes. The worker then
+//! calls [`WorkerHandle::idle_step`], which performs one bounded
+//! wait/recheck and reports [`IdleOutcome::Finished`] only once global
+//! quiescence is certain (all workers idle, every queue empty, and no
+//! state transition observed during the sweep — see
+//! `WorkStealScheduler`'s epoch protocol).
+
+pub mod deque;
+pub mod injector;
+mod sharded;
+mod work_steal;
+
+pub use sharded::ShardedScheduler;
+pub use work_steal::WorkStealScheduler;
+
+/// Which scheduling runtime the engine should use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SchedulerKind {
+    /// Lock-free Chase–Lev work stealing (the default).
+    #[default]
+    WorkSteal,
+    /// Mutex-sharded worklist with private stacks (legacy baseline).
+    Sharded,
+}
+
+impl SchedulerKind {
+    /// Short display name used in harness tables and benches.
+    pub fn name(self) -> &'static str {
+        match self {
+            SchedulerKind::WorkSteal => "steal",
+            SchedulerKind::Sharded => "sharded",
+        }
+    }
+
+    /// Parse a name as accepted by `--sched` / `CAVC_SCHED`.
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "steal" | "worksteal" | "work-steal" | "chase-lev" => Some(SchedulerKind::WorkSteal),
+            "sharded" | "worklist" | "mutex" => Some(SchedulerKind::Sharded),
+            _ => None,
+        }
+    }
+}
+
+/// Per-worker scheduling counters (Figure-4 instrumentation: the queue
+/// traffic behind the `stack/worklist` activity bar).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkerCounters {
+    /// Children this worker enqueued (any destination).
+    pub pushes: u64,
+    /// Of `pushes`, how many landed somewhere other workers can take
+    /// from (shared shard for the sharded runtime; every deque push for
+    /// the work-stealing runtime, whose whole deque is stealable).
+    pub offloaded: u64,
+    /// Nodes taken from the worker's own stack/deque.
+    pub pops: u64,
+    /// Nodes taken from the shared entry queue (injector / home shard).
+    pub shared_pops: u64,
+    /// Nodes taken from *another* worker.
+    pub steals: u64,
+    /// Steal attempts that lost a race and had to retry.
+    pub steal_retries: u64,
+    /// Deepest local queue observed (sampled every 64th push on the
+    /// work-stealing runtime to keep the probe off the hot path; exact
+    /// for the sharded runtime's private stacks).
+    pub max_depth: usize,
+}
+
+impl WorkerCounters {
+    /// Elementwise accumulate (max for depth).
+    pub fn accumulate(&mut self, other: &WorkerCounters) {
+        self.pushes += other.pushes;
+        self.offloaded += other.offloaded;
+        self.pops += other.pops;
+        self.shared_pops += other.shared_pops;
+        self.steals += other.steals;
+        self.steal_retries += other.steal_retries;
+        self.max_depth = self.max_depth.max(other.max_depth);
+    }
+
+    /// Total nodes this worker acquired from any source.
+    pub fn acquired(&self) -> u64 {
+        self.pops + self.shared_pops + self.steals
+    }
+}
+
+/// Outcome of one bounded idle step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdleOutcome {
+    /// Global quiescence: the worker can exit its loop.
+    Finished,
+    /// Work may still appear; poll again.
+    Retry,
+}
+
+/// One worker's view of a scheduler. See the module docs for the
+/// ownership protocol.
+pub trait WorkerHandle<N> {
+    /// Enqueue a child node produced by this worker.
+    fn push(&mut self, item: N);
+    /// Acquire the next node: own queue first, then the shared
+    /// injector, then (if enabled) stealing from other workers.
+    fn pop(&mut self) -> Option<N>;
+    /// Called once after each acquired node is fully processed.
+    fn on_node_done(&mut self);
+    /// One bounded wait/recheck after `pop` returned `None`.
+    fn idle_step(&mut self) -> IdleOutcome;
+    /// Counters accumulated by this worker so far.
+    fn counters(&self) -> WorkerCounters;
+}
+
+/// A scheduling runtime for `N`-typed work items.
+pub trait Scheduler<N: Send>: Sync {
+    /// The per-worker handle type.
+    type Handle<'a>: WorkerHandle<N>
+    where
+        Self: 'a,
+        N: 'a;
+
+    /// Number of workers this scheduler was built for.
+    fn workers(&self) -> usize;
+
+    /// Enqueue a root/restart item into the global entry queue. Safe
+    /// from any thread **while the pool is active** — setup phase or
+    /// while at least one worker is still processing. Items injected
+    /// after the termination detector has latched quiescence are not
+    /// picked up (debug builds assert against it).
+    fn inject(&self, item: N);
+
+    /// Statically place an item on `worker`'s local queue. Setup-phase
+    /// only: must happen single-threaded, before worker handles exist.
+    fn seed(&self, worker: usize, item: N);
+
+    /// Create the handle for `worker`. At most one live handle per
+    /// worker index.
+    fn handle(&self, worker: usize) -> Self::Handle<'_>;
+}

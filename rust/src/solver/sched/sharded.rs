@@ -1,0 +1,207 @@
+//! The mutex-sharded baseline runtime, adapted to the [`Scheduler`]
+//! trait.
+//!
+//! This is the engine's previous scheduling machinery, preserved
+//! verbatim so benches can race it against the lock-free work stealer on
+//! identical searches: worker-private `Vec` stacks (zero-cost LIFO),
+//! offload to a [`Worklist`] shard when the shared queue is *hungry*
+//! (holds fewer than `2 × workers` items), and an outstanding-node
+//! counter for termination — two sequentially-consistent RMWs per node,
+//! which is exactly the hot-path cost the work stealer eliminates.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::solver::worklist::Worklist;
+
+use super::{IdleOutcome, Scheduler, WorkerCounters, WorkerHandle};
+
+const SPINS_BEFORE_SLEEP: u32 = 64;
+const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// Sharded-worklist scheduler (legacy baseline; see module docs).
+pub struct ShardedScheduler<N: Send> {
+    worklist: Worklist<N>,
+    /// Nodes acquired but not yet fully processed, plus nodes queued
+    /// anywhere. Zero ⇒ the search is drained.
+    pending: AtomicU64,
+    /// Offload threshold: the shared queue is hungry below this length.
+    low_water: usize,
+    load_balance: bool,
+    /// Statically-assigned nodes, taken over by the worker's handle.
+    seeds: Vec<Mutex<Vec<N>>>,
+    workers: usize,
+}
+
+impl<N: Send> ShardedScheduler<N> {
+    /// Build a scheduler with one shard and one seed slot per worker.
+    pub fn new(workers: usize, load_balance: bool) -> ShardedScheduler<N> {
+        let workers = workers.max(1);
+        ShardedScheduler {
+            worklist: Worklist::new(workers),
+            pending: AtomicU64::new(0),
+            low_water: 2 * workers,
+            load_balance,
+            seeds: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
+            workers,
+        }
+    }
+}
+
+impl<N: Send> Scheduler<N> for ShardedScheduler<N> {
+    type Handle<'a>
+        = ShardedHandle<'a, N>
+    where
+        Self: 'a,
+        N: 'a;
+
+    fn workers(&self) -> usize {
+        self.workers
+    }
+
+    fn inject(&self, item: N) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.worklist.push(0, item);
+    }
+
+    fn seed(&self, worker: usize, item: N) {
+        self.pending.fetch_add(1, Ordering::SeqCst);
+        self.seeds[worker % self.workers].lock().unwrap().push(item);
+    }
+
+    fn handle(&self, worker: usize) -> ShardedHandle<'_, N> {
+        assert!(worker < self.workers, "worker {worker} out of range");
+        let stack = std::mem::take(&mut *self.seeds[worker].lock().unwrap());
+        ShardedHandle { s: self, id: worker, stack, spins: 0, c: WorkerCounters::default() }
+    }
+}
+
+/// Per-worker handle of the sharded scheduler.
+pub struct ShardedHandle<'a, N: Send> {
+    s: &'a ShardedScheduler<N>,
+    id: usize,
+    /// The worker-private LIFO stack (the GPU "private stack").
+    stack: Vec<N>,
+    spins: u32,
+    c: WorkerCounters,
+}
+
+impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
+    fn push(&mut self, item: N) {
+        self.s.pending.fetch_add(1, Ordering::SeqCst);
+        self.c.pushes += 1;
+        if self.s.load_balance && self.s.worklist.is_hungry(self.s.low_water) {
+            self.s.worklist.push(self.id, item);
+            self.c.offloaded += 1;
+        } else {
+            self.stack.push(item);
+            if self.stack.len() > self.c.max_depth {
+                self.c.max_depth = self.stack.len();
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<N> {
+        if let Some(item) = self.stack.pop() {
+            self.c.pops += 1;
+            self.spins = 0;
+            return Some(item);
+        }
+        if self.s.load_balance {
+            if let Some((item, stolen)) = self.s.worklist.pop_traced(self.id) {
+                if stolen {
+                    self.c.steals += 1;
+                } else {
+                    self.c.shared_pops += 1;
+                }
+                self.spins = 0;
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    fn on_node_done(&mut self) {
+        let prev = self.s.pending.fetch_sub(1, Ordering::SeqCst);
+        debug_assert!(prev >= 1, "pending underflow");
+    }
+
+    fn idle_step(&mut self) -> IdleOutcome {
+        if self.s.pending.load(Ordering::SeqCst) == 0 {
+            return IdleOutcome::Finished;
+        }
+        self.spins += 1;
+        if self.spins > SPINS_BEFORE_SLEEP {
+            std::thread::sleep(IDLE_SLEEP);
+        } else {
+            std::thread::yield_now();
+        }
+        IdleOutcome::Retry
+    }
+
+    fn counters(&self) -> WorkerCounters {
+        self.c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn drains_branching_workload() {
+        for workers in [1usize, 4] {
+            let s: ShardedScheduler<u32> = ShardedScheduler::new(workers, true);
+            s.inject(10);
+            let leaves = AtomicU64::new(0);
+            std::thread::scope(|scope| {
+                for w in 0..workers {
+                    let s = &s;
+                    let leaves = &leaves;
+                    scope.spawn(move || {
+                        let mut h = s.handle(w);
+                        loop {
+                            match h.pop() {
+                                Some(0) => {
+                                    leaves.fetch_add(1, Ordering::Relaxed);
+                                    h.on_node_done();
+                                }
+                                Some(x) => {
+                                    h.push(x - 1);
+                                    h.push(x - 1);
+                                    h.on_node_done();
+                                }
+                                None => {
+                                    if h.idle_step() == IdleOutcome::Finished {
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    });
+                }
+            });
+            assert_eq!(leaves.load(Ordering::Relaxed), 1 << 10, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn seeds_partition_statically() {
+        let s: ShardedScheduler<u32> = ShardedScheduler::new(2, false);
+        s.seed(0, 1);
+        s.seed(0, 2);
+        s.seed(1, 3);
+        let mut h0 = s.handle(0);
+        let mut h1 = s.handle(1);
+        assert_eq!(h0.pop(), Some(2)); // private stack is LIFO
+        assert_eq!(h0.pop(), Some(1));
+        h0.on_node_done();
+        h0.on_node_done();
+        assert_eq!(h0.pop(), None); // no balancing: cannot see worker 1's seed
+        assert_eq!(h1.pop(), Some(3));
+        h1.on_node_done();
+        assert_eq!(h0.idle_step(), IdleOutcome::Finished);
+        assert_eq!(h1.idle_step(), IdleOutcome::Finished);
+    }
+}

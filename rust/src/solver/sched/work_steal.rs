@@ -1,0 +1,408 @@
+//! The lock-free work-stealing runtime.
+//!
+//! Layout: one [`ChaseLev`] deque per worker plus one global
+//! [`Injector`]. A worker's `push`/`pop` touch only its own deque bottom
+//! (no locks, no contention on the fast path); when it runs dry it drains
+//! the injector, then sweeps the other deques' tops, stealing the oldest
+//! (= shallowest, largest) sub-trees first — the same "offload big
+//! sub-trees" policy the paper's broker queue implements with explicit
+//! donation, inverted into thief-pull form so the busy path pays nothing.
+//!
+//! ## Termination: epoch-validated idle counting
+//!
+//! The sharded runtime tracks an outstanding-node counter with two
+//! sequentially-consistent RMWs per node. Here termination costs nothing
+//! on the hot path: a worker registers in an idle count only when it has
+//! no node in hand and found nothing to take, and *deregisters before
+//! every acquisition attempt*. Both transitions bump an epoch counter.
+//! A worker that observes `idle == workers` runs a verification sweep —
+//! all deques empty, injector empty, epoch unchanged across the whole
+//! sweep, idle still full — and only then declares global quiescence.
+//!
+//! Why this is safe: work moves only via (a) an owner push, (b) an
+//! injector push, or (c) an acquisition by some worker. (a) and (c) are
+//! performed by workers that are *not* registered idle at that moment
+//! (they deregistered first, bumping the epoch), and (b) bumps the epoch
+//! directly. So if the epoch is identical at both ends of a sweep that
+//! saw every queue empty and every worker idle, no item existed or moved
+//! anywhere during the sweep — quiescence. The `done` flag then latches
+//! the decision for the remaining workers.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+
+use super::deque::{ChaseLev, Steal};
+use super::injector::Injector;
+use super::{IdleOutcome, Scheduler, WorkerCounters, WorkerHandle};
+
+/// Spins before an idle worker starts sleeping between rechecks.
+const SPINS_BEFORE_SLEEP: u32 = 64;
+/// Sleep quantum once spinning has not produced work.
+const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// Lock-free work-stealing scheduler (see module docs).
+pub struct WorkStealScheduler<N: Send> {
+    deques: Vec<ChaseLev<N>>,
+    injector: Injector<N>,
+    /// Guards the one-live-handle-per-worker protocol.
+    taken: Vec<AtomicBool>,
+    /// Stealing enabled (false reproduces the paper's no-load-balance
+    /// variant: private deques + static seeds only).
+    steal: bool,
+    /// Workers currently registered idle.
+    idle: AtomicUsize,
+    /// Bumped on every idle transition and injector push; validates
+    /// termination sweeps.
+    epoch: AtomicU64,
+    /// Latched once quiescence has been proven.
+    done: AtomicBool,
+}
+
+impl<N: Send> WorkStealScheduler<N> {
+    /// Build a scheduler for `workers` deque owners. `capacity_hint`
+    /// pre-sizes each deque (the occupancy model's stack-depth bound);
+    /// deques still grow beyond it.
+    pub fn new(workers: usize, steal: bool, capacity_hint: usize) -> WorkStealScheduler<N> {
+        let workers = workers.max(1);
+        WorkStealScheduler {
+            deques: (0..workers).map(|_| ChaseLev::with_capacity(capacity_hint)).collect(),
+            injector: Injector::new(),
+            taken: (0..workers).map(|_| AtomicBool::new(false)).collect(),
+            steal,
+            idle: AtomicUsize::new(0),
+            epoch: AtomicU64::new(0),
+            done: AtomicBool::new(false),
+        }
+    }
+
+    /// Termination verification sweep; caller observed `idle == workers`.
+    fn try_terminate(&self) -> bool {
+        let e0 = self.epoch.load(Ordering::SeqCst);
+        if self.idle.load(Ordering::SeqCst) != self.deques.len() {
+            return false;
+        }
+        if !self.injector.is_empty() {
+            return false;
+        }
+        if self.deques.iter().any(|d| !d.is_empty()) {
+            return false;
+        }
+        if self.epoch.load(Ordering::SeqCst) != e0
+            || self.idle.load(Ordering::SeqCst) != self.deques.len()
+        {
+            return false;
+        }
+        self.done.store(true, Ordering::SeqCst);
+        true
+    }
+}
+
+impl<N: Send> Scheduler<N> for WorkStealScheduler<N> {
+    type Handle<'a>
+        = StealHandle<'a, N>
+    where
+        Self: 'a,
+        N: 'a;
+
+    fn workers(&self) -> usize {
+        self.deques.len()
+    }
+
+    fn inject(&self, item: N) {
+        // Injection must happen before quiescence is declared: once every
+        // worker has exited there is no one left to run the item (see the
+        // trait docs). The epoch bump precedes the push so a termination
+        // sweep whose e0 predates this call re-reads the injector.
+        debug_assert!(
+            !self.done.load(Ordering::SeqCst),
+            "inject() after the pool reached quiescence"
+        );
+        self.epoch.fetch_add(1, Ordering::SeqCst);
+        self.injector.push(item);
+    }
+
+    fn seed(&self, worker: usize, item: N) {
+        let w = worker % self.deques.len();
+        assert!(
+            !self.taken[w].load(Ordering::SeqCst),
+            "seed() must run before worker handles exist"
+        );
+        // SAFETY: setup phase — no handle exists for `w` (asserted), so
+        // this thread is the sole owner of the deque right now.
+        unsafe { self.deques[w].push(item) };
+    }
+
+    fn handle(&self, worker: usize) -> StealHandle<'_, N> {
+        assert!(worker < self.deques.len(), "worker {worker} out of range");
+        assert!(
+            !self.taken[worker].swap(true, Ordering::SeqCst),
+            "worker {worker} already has a live handle"
+        );
+        StealHandle {
+            s: self,
+            id: worker,
+            idle_registered: false,
+            spins: 0,
+            c: WorkerCounters::default(),
+        }
+    }
+}
+
+/// Per-worker handle of the work-stealing scheduler.
+pub struct StealHandle<'a, N: Send> {
+    s: &'a WorkStealScheduler<N>,
+    id: usize,
+    idle_registered: bool,
+    spins: u32,
+    c: WorkerCounters,
+}
+
+impl<N: Send> StealHandle<'_, N> {
+    fn enter_idle(&mut self) {
+        debug_assert!(!self.idle_registered);
+        self.s.idle.fetch_add(1, Ordering::SeqCst);
+        self.s.epoch.fetch_add(1, Ordering::SeqCst);
+        self.idle_registered = true;
+    }
+
+    fn exit_idle(&mut self) {
+        debug_assert!(self.idle_registered);
+        self.s.epoch.fetch_add(1, Ordering::SeqCst);
+        self.s.idle.fetch_sub(1, Ordering::SeqCst);
+        self.idle_registered = false;
+    }
+
+    /// Sweep the other deques once, oldest-first per victim.
+    fn try_steal(&mut self) -> Option<N> {
+        let n = self.s.deques.len();
+        for k in 1..n {
+            let victim = (self.id + k) % n;
+            loop {
+                match self.s.deques[victim].steal() {
+                    Steal::Taken(item) => {
+                        self.c.steals += 1;
+                        return Some(item);
+                    }
+                    Steal::Retry => {
+                        // Lost a race — someone made progress; try again.
+                        self.c.steal_retries += 1;
+                        std::hint::spin_loop();
+                    }
+                    Steal::Empty => break,
+                }
+            }
+        }
+        None
+    }
+}
+
+impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
+    fn push(&mut self, item: N) {
+        // SAFETY: one live handle per worker (enforced in `handle()`),
+        // and handles are driven from a single thread.
+        unsafe { self.s.deques[self.id].push(item) };
+        self.c.pushes += 1;
+        self.c.offloaded += 1; // every deque slot is stealable
+        // max_depth is a sampled statistic: deque.len() reads `top`,
+        // a cache line thieves are CAS-ing, so probing it on every push
+        // would put coherence traffic on the exact path this scheduler
+        // exists to keep private. One probe per 64 pushes is plenty for
+        // a high-water mark.
+        if self.c.pushes & 63 == 0 {
+            let depth = self.s.deques[self.id].len();
+            if depth > self.c.max_depth {
+                self.c.max_depth = depth;
+            }
+        }
+    }
+
+    fn pop(&mut self) -> Option<N> {
+        // Deregister *before* any acquisition attempt so the termination
+        // detector can never certify quiescence while an item is being
+        // moved into this worker's hands (see module docs).
+        if self.idle_registered {
+            self.exit_idle();
+        }
+        // SAFETY: single live handle per worker.
+        if let Some(item) = unsafe { self.s.deques[self.id].pop() } {
+            self.c.pops += 1;
+            self.spins = 0;
+            return Some(item);
+        }
+        if let Some(item) = self.s.injector.pop() {
+            self.c.shared_pops += 1;
+            self.spins = 0;
+            return Some(item);
+        }
+        if self.s.steal {
+            if let Some(item) = self.try_steal() {
+                self.spins = 0;
+                return Some(item);
+            }
+        }
+        self.enter_idle();
+        None
+    }
+
+    fn on_node_done(&mut self) {
+        // Termination is inferred from idle registration, not from node
+        // accounting — nothing to do on the hot path.
+    }
+
+    fn idle_step(&mut self) -> IdleOutcome {
+        debug_assert!(self.idle_registered, "idle_step without a failed pop");
+        if self.s.done.load(Ordering::SeqCst) {
+            return IdleOutcome::Finished;
+        }
+        if !self.s.steal {
+            // Static partition: no other worker can feed this deque, so
+            // an empty local queue + empty injector is final.
+            if self.s.deques[self.id].is_empty() && self.s.injector.is_empty() {
+                return IdleOutcome::Finished;
+            }
+        } else if self.s.idle.load(Ordering::SeqCst) == self.s.deques.len()
+            && self.s.try_terminate()
+        {
+            return IdleOutcome::Finished;
+        }
+        self.spins += 1;
+        if self.spins > SPINS_BEFORE_SLEEP {
+            std::thread::sleep(IDLE_SLEEP);
+        } else {
+            std::thread::yield_now();
+        }
+        IdleOutcome::Retry
+    }
+
+    fn counters(&self) -> WorkerCounters {
+        self.c
+    }
+}
+
+impl<N: Send> Drop for StealHandle<'_, N> {
+    fn drop(&mut self) {
+        if self.idle_registered {
+            self.exit_idle();
+        }
+        self.s.taken[self.id].store(false, Ordering::SeqCst);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive an artificial branching workload through the scheduler from
+    /// many threads: each item of weight w expands into two children of
+    /// weight w-1 until w == 0. Total leaves = 2^w0 per root.
+    fn run_workload(workers: usize, roots: &[u32]) -> (u64, Vec<WorkerCounters>) {
+        let s: WorkStealScheduler<u32> = WorkStealScheduler::new(workers, true, 64);
+        for &r in roots {
+            s.inject(r);
+        }
+        let leaves = AtomicU64::new(0);
+        let mut counters = vec![WorkerCounters::default(); workers];
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    let s = &s;
+                    let leaves = &leaves;
+                    scope.spawn(move || {
+                        let mut h = s.handle(w);
+                        loop {
+                            match h.pop() {
+                                Some(0) => {
+                                    leaves.fetch_add(1, Ordering::Relaxed);
+                                    h.on_node_done();
+                                }
+                                Some(x) => {
+                                    h.push(x - 1);
+                                    h.push(x - 1);
+                                    h.on_node_done();
+                                }
+                                None => {
+                                    if h.idle_step() == IdleOutcome::Finished {
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                        h.counters()
+                    })
+                })
+                .collect();
+            for (w, jh) in handles.into_iter().enumerate() {
+                counters[w] = jh.join().unwrap();
+            }
+        });
+        (leaves.load(Ordering::Relaxed), counters)
+    }
+
+    #[test]
+    fn drains_and_terminates_single_worker() {
+        let (leaves, counters) = run_workload(1, &[10]);
+        assert_eq!(leaves, 1 << 10);
+        assert_eq!(counters[0].steals, 0);
+        assert_eq!(counters[0].shared_pops, 1);
+    }
+
+    #[test]
+    fn drains_and_terminates_many_workers() {
+        for workers in [2usize, 4, 8] {
+            let (leaves, counters) = run_workload(workers, &[12]);
+            assert_eq!(leaves, 1 << 12, "workers={workers}");
+            // Conservation: every acquired item was either a leaf or
+            // expanded into exactly two pushes.
+            let acquired: u64 = counters.iter().map(|c| c.acquired()).sum();
+            let pushed: u64 = counters.iter().map(|c| c.pushes).sum();
+            assert_eq!(acquired, pushed + 1, "workers={workers}"); // +1 injected root
+        }
+    }
+
+    #[test]
+    fn no_steal_mode_static_partition() {
+        let s: WorkStealScheduler<u32> = WorkStealScheduler::new(4, false, 16);
+        for i in 0..16 {
+            s.seed(i % 4, 0);
+        }
+        let done = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..4 {
+                let s = &s;
+                let done = &done;
+                scope.spawn(move || {
+                    let mut h = s.handle(w);
+                    loop {
+                        match h.pop() {
+                            Some(_) => {
+                                done.fetch_add(1, Ordering::Relaxed);
+                                h.on_node_done();
+                            }
+                            None => {
+                                if h.idle_step() == IdleOutcome::Finished {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    assert_eq!(h.counters().steals, 0, "stealing must be off");
+                });
+            }
+        });
+        assert_eq!(done.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "already has a live handle")]
+    fn double_handle_panics() {
+        let s: WorkStealScheduler<u32> = WorkStealScheduler::new(2, true, 8);
+        let _a = s.handle(0);
+        let _b = s.handle(0);
+    }
+
+    #[test]
+    fn handle_slot_released_on_drop() {
+        let s: WorkStealScheduler<u32> = WorkStealScheduler::new(1, true, 8);
+        drop(s.handle(0));
+        drop(s.handle(0)); // second acquisition succeeds after release
+    }
+}

@@ -6,6 +6,10 @@
 //! global length counter. A worker pushes to its home shard and steals
 //! round-robin from the others; the length counter implements the
 //! "is the worklist hungry?" offload heuristic without taking locks.
+//!
+//! This is the backing store of the baseline
+//! [`crate::solver::sched::ShardedScheduler`]; the engine's default
+//! runtime is the lock-free work stealer in [`crate::solver::sched`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -62,6 +66,13 @@ impl<T> Worklist<T> {
     /// Pop, scanning shards starting from `home` (so a worker drains its
     /// own shard before stealing).
     pub fn pop(&self, home: usize) -> Option<T> {
+        self.pop_traced(home).map(|(item, _)| item)
+    }
+
+    /// Like [`Worklist::pop`], but also reports whether the item came
+    /// from a foreign shard (a cross-worker steal) — the per-worker
+    /// counter feed for the scheduler statistics.
+    pub fn pop_traced(&self, home: usize) -> Option<(T, bool)> {
         if self.is_empty() {
             return None;
         }
@@ -73,7 +84,7 @@ impl<T> Worklist<T> {
                 if i > 0 {
                     self.steals.fetch_add(1, Ordering::Relaxed);
                 }
-                return Some(item);
+                return Some((item, i > 0));
             }
         }
         None

@@ -1,8 +1,10 @@
 //! Small self-contained utilities (the build is fully offline, so these
-//! replace the usual `rand` / `fixedbitset` / `clap` dependencies).
+//! replace the usual `rand` / `fixedbitset` / `clap` / `anyhow`
+//! dependencies).
 
 pub mod bitset;
 pub mod cli;
+pub mod error;
 pub mod rng;
 pub mod timer;
 

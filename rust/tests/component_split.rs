@@ -1,0 +1,167 @@
+//! The paper's §III core, under test: `graph::components` primitives and
+//! the engine's *dynamic* component split — connected graphs crafted to
+//! disconnect at branch depth k, whose totals can only come out right if
+//! the registry's last-descendant aggregation works across nesting and
+//! across racing workers.
+
+use cavc::graph::{components, generators, Graph};
+use cavc::solver::{oracle, solve_mvc, SchedulerKind, SolverConfig};
+
+/// Nested split gadget: `G(0)` is the Petersen graph (3-regular,
+/// triangle-free — immune to every reduction rule and not special);
+/// `G(d)` is a hub joined to 5 vertices of each of two `G(d-1)` copies.
+/// The hub is the unique maximum-degree vertex (degree 10), so the
+/// engine's left branch covers it first and the residual graph splits
+/// exactly at depth d, then again at depth d-1 inside each part — a
+/// split cascade that exercises nested registry parents.
+fn nested_split(depth: usize) -> Graph {
+    if depth == 0 {
+        return generators::petersen();
+    }
+    let part = nested_split(depth - 1);
+    let pn = part.num_vertices() as u32;
+    let two = Graph::disjoint_union(&[part.clone(), part]);
+    let hub = 2 * pn;
+    let mut edges: Vec<(u32, u32)> = two.edges().collect();
+    for i in 0..5u32 {
+        edges.push((hub, 2 * i)); // spread over even vertices of copy 1
+        edges.push((hub, pn + 2 * i)); // and of copy 2
+    }
+    Graph::from_edges(2 * pn as usize + 1, &edges)
+}
+
+#[test]
+fn gadget_shape_is_as_designed() {
+    let g1 = nested_split(1);
+    assert_eq!(g1.num_vertices(), 21);
+    assert_eq!(components::count(&g1), 1, "gadget must start connected");
+    let hub = 20u32;
+    assert_eq!(g1.degree(hub), 10);
+    // hub strictly dominates every other degree
+    let snd = (0..20u32).map(|v| g1.degree(v)).max().unwrap();
+    assert!(g1.degree(hub) > snd, "hub must be the unique branch vertex");
+}
+
+#[test]
+fn components_primitives_agree_on_gadgets() {
+    for depth in 0..3usize {
+        let g = nested_split(depth);
+        let (labels, k) = components::labels(&g);
+        assert_eq!(k, 1, "depth {depth}");
+        assert_eq!(labels.len(), g.num_vertices());
+        assert_eq!(components::count_union_find(&g), 1, "depth {depth}");
+        // removing the hub splits it in two
+        if depth > 0 {
+            let hub = (g.num_vertices() - 1) as u32;
+            let kept: Vec<(u32, u32)> =
+                g.edges().filter(|&(u, v)| u != hub && v != hub).collect();
+            let cut = Graph::from_edges(g.num_vertices(), &kept);
+            // hub becomes isolated, so: 2 halves + 1 singleton
+            assert_eq!(components::count(&cut), 3, "depth {depth}");
+            let sets = components::vertex_sets(&cut);
+            let total: usize = sets.iter().map(|s| s.len()).sum();
+            assert_eq!(total, g.num_vertices());
+        }
+    }
+}
+
+#[test]
+fn components_vertex_sets_partition_disconnected_unions() {
+    for seed in 0..8u64 {
+        let g = generators::union_of_random(6, 3, 8, 0.3, seed);
+        let sets = components::vertex_sets(&g);
+        assert_eq!(sets.len(), 6, "seed {seed}");
+        let mut seen = vec![false; g.num_vertices()];
+        for s in &sets {
+            for &v in s {
+                assert!(!seen[v as usize], "seed {seed}: vertex {v} in two sets");
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&b| b), "seed {seed}: vertex missing from partition");
+        // every edge stays within one set
+        let (labels, _) = components::labels(&g);
+        for (u, v) in g.edges() {
+            assert_eq!(labels[u as usize], labels[v as usize], "seed {seed}");
+        }
+    }
+}
+
+#[test]
+fn bfs_reach_stops_at_cut() {
+    let g = nested_split(1);
+    let hub = 20u32;
+    let kept: Vec<(u32, u32)> = g.edges().filter(|&(u, v)| u != hub && v != hub).collect();
+    let cut = Graph::from_edges(g.num_vertices(), &kept);
+    let reach = components::bfs_reach(&cut, 0);
+    assert_eq!(reach.count(), 10, "one Petersen half");
+    assert!(!reach.get(10), "other half unreachable");
+    assert!(!reach.get(20), "hub unreachable");
+}
+
+#[test]
+fn engine_splits_at_depth_k_and_aggregates() {
+    // depth 1 and 2 fit the 64-vertex oracle
+    for depth in 1..=2usize {
+        let g = nested_split(depth);
+        let opt = oracle::mvc_size(&g);
+        for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+            for workers in [1usize, 2, 4] {
+                let cfg = SolverConfig::proposed().with_workers(workers).with_scheduler(sched);
+                let r = solve_mvc(&g, &cfg);
+                assert_eq!(
+                    r.best,
+                    opt,
+                    "depth {depth} workers {workers} {}: aggregation broke the total",
+                    sched.name()
+                );
+                assert!(
+                    r.stats.component_branches >= 1,
+                    "depth {depth} workers {workers} {}: no dynamic split on a splitting gadget",
+                    sched.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deep_gadget_matches_sequential_reference() {
+    // depth 3 (87 vertices) is beyond the oracle; the sequential solver
+    // with component awareness is the reference.
+    let g = nested_split(3);
+    let seq = solve_mvc(&g, &SolverConfig::sequential());
+    assert!(!seq.timed_out);
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let cfg = SolverConfig::proposed().with_workers(4).with_scheduler(sched);
+        let r = solve_mvc(&g, &cfg);
+        assert_eq!(r.best, seq.best, "{}", sched.name());
+        assert!(r.stats.component_branches >= 2, "{}: nested splits expected", sched.name());
+    }
+}
+
+#[test]
+fn racy_split_aggregation_is_stable() {
+    // Re-run the same splitting search many times with many workers: a
+    // lost or double-counted last-descendant cascade shows up as a
+    // nondeterministic total.
+    let g = nested_split(2);
+    let expect = solve_mvc(&g, &SolverConfig::sequential()).best;
+    for trial in 0..25 {
+        let cfg = SolverConfig::proposed().with_workers(8);
+        let r = solve_mvc(&g, &cfg);
+        assert_eq!(r.best, expect, "trial {trial}");
+    }
+}
+
+#[test]
+fn histogram_accounts_for_every_split() {
+    let g = nested_split(2);
+    let r = solve_mvc(&g, &SolverConfig::proposed().with_workers(4));
+    let hist_total: u64 = r.stats.comp_histogram.values().sum();
+    assert_eq!(hist_total, r.stats.component_branches);
+    // splits here produce exactly 2 components at a time
+    for (&parts, &count) in &r.stats.comp_histogram {
+        assert!(parts >= 2, "split with {parts} parts recorded {count} times");
+    }
+}

@@ -1,0 +1,180 @@
+//! Differential test suite: the parallel engine must agree with the
+//! sequential solver AND the brute-force oracle on every randomized
+//! instance, for MVC and PVC, across all three paper variants and both
+//! scheduling runtimes.
+//!
+//! Property-style generation without a `proptest` dependency (the build
+//! is offline): a seeded `SplitMix64` drives a graph-family pool —
+//! Erdős–Rényi, random trees, cliques-with-bridges, and disconnected
+//! unions from `graph::generators` — so every run replays the exact same
+//! ≥200 cases per variant. A failing case prints its reproducible tag.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{oracle, sequential, solve_mvc, solve_pvc, SchedulerKind, SolverConfig};
+use cavc::util::SplitMix64;
+
+const CASES: usize = 220;
+const SEED: u64 = 0xD1FF_0001;
+
+/// Cliques chained by bridge edges: reduction-resistant dense blobs that
+/// split the moment a bridge endpoint enters the cover.
+fn cliques_with_bridges(num: usize, lo: usize, hi: usize, rng: &mut SplitMix64) -> Graph {
+    let sizes: Vec<usize> = (0..num).map(|_| rng.range(lo, hi)).collect();
+    let parts: Vec<Graph> = sizes.iter().map(|&s| generators::clique(s)).collect();
+    let mut edges: Vec<(u32, u32)> = Graph::disjoint_union(&parts).edges().collect();
+    // bridge: last vertex of part i — first vertex of part i+1
+    let mut off = 0u32;
+    for w in sizes.windows(2) {
+        let bridge_from = off + w[0] as u32 - 1;
+        let bridge_to = off + w[0] as u32;
+        edges.push((bridge_from, bridge_to));
+        off += w[0] as u32;
+    }
+    Graph::from_edges(sizes.iter().sum(), &edges)
+}
+
+/// One deterministic case from the family pool.
+fn random_case(rng: &mut SplitMix64) -> (Graph, String) {
+    let kind = rng.index(4);
+    let seed = rng.next_u64();
+    match kind {
+        0 => {
+            let n = rng.range(6, 24);
+            let p = 0.08 + rng.next_f64() * 0.32;
+            (generators::erdos_renyi(n, p, seed), format!("er({n},{p:.2},{seed})"))
+        }
+        1 => {
+            let n = rng.range(4, 32);
+            (generators::random_tree(n, seed), format!("tree({n},{seed})"))
+        }
+        2 => {
+            let num = rng.range(2, 4);
+            let g = cliques_with_bridges(num, 3, 6, rng);
+            (g, format!("cliques+bridges({num})"))
+        }
+        _ => {
+            let parts = rng.range(2, 5);
+            (
+                generators::union_of_random(parts, 3, 7, 0.3, seed),
+                format!("union({parts},{seed})"),
+            )
+        }
+    }
+}
+
+fn parallel_variants() -> Vec<SolverConfig> {
+    vec![SolverConfig::proposed(), SolverConfig::prior_work(), SolverConfig::no_load_balance()]
+}
+
+/// Sequential reference through the public solver pipeline.
+fn sequential_best(g: &Graph) -> u32 {
+    solve_mvc(g, &SolverConfig::sequential()).best
+}
+
+#[test]
+fn differential_mvc_all_variants() {
+    let mut rng = SplitMix64::new(SEED);
+    let workers = [1usize, 2, 3, 4, 8];
+    let schedulers = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+    let mut ran = 0usize;
+    for case in 0..CASES {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        assert_eq!(sequential_best(&g), opt, "case {case} {tag}: sequential");
+        let w = workers[case % workers.len()];
+        let sched = schedulers[case % schedulers.len()];
+        for cfg in parallel_variants() {
+            let cfg = cfg.with_workers(w).with_scheduler(sched);
+            let r = solve_mvc(&g, &cfg);
+            assert!(!r.timed_out, "case {case} {tag}: {} timed out", cfg.variant.name());
+            assert_eq!(
+                r.best,
+                opt,
+                "case {case} {tag}: {}({} workers, {}) != oracle",
+                cfg.variant.name(),
+                w,
+                sched.name()
+            );
+        }
+        ran += 1;
+    }
+    assert!(ran >= 200, "only {ran} cases ran; generator drift?");
+}
+
+#[test]
+fn differential_pvc_all_variants() {
+    let mut rng = SplitMix64::new(SEED ^ 0xBEEF);
+    let workers = [1usize, 2, 4];
+    let schedulers = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+    let mut ran = 0usize;
+    for case in 0..CASES {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        let w = workers[case % workers.len()];
+        let sched = schedulers[case % schedulers.len()];
+        for cfg in parallel_variants() {
+            let cfg = cfg.with_workers(w).with_scheduler(sched);
+            let at = solve_pvc(&g, opt, &cfg);
+            assert!(at.found, "case {case} {tag}: {} missed k=opt", cfg.variant.name());
+            assert!(at.size.unwrap() <= opt, "case {case} {tag}: size above k");
+            let below = solve_pvc(&g, opt.saturating_sub(1), &cfg);
+            assert!(
+                !below.found,
+                "case {case} {tag}: {} found a cover below the optimum",
+                cfg.variant.name()
+            );
+        }
+        // sequential PVC reference
+        let seq = solve_pvc(&g, opt, &SolverConfig::sequential());
+        assert!(seq.found, "case {case} {tag}: sequential missed k=opt");
+        ran += 1;
+    }
+    assert!(ran >= 200, "only {ran} cases ran; generator drift?");
+}
+
+#[test]
+fn differential_runs_are_deterministic() {
+    // The same seed must generate the same case list — the suite's
+    // reproducibility contract.
+    let mut a = SplitMix64::new(SEED);
+    let mut b = SplitMix64::new(SEED);
+    for case in 0..CASES {
+        let (ga, ta) = random_case(&mut a);
+        let (gb, tb) = random_case(&mut b);
+        assert_eq!(ta, tb, "case {case}");
+        assert_eq!(ga, gb, "case {case}");
+    }
+}
+
+#[test]
+fn differential_witnesses_on_split_graphs() {
+    // Sequential extraction yields genuine optimal covers on the
+    // families where the engine splits components.
+    let mut rng = SplitMix64::new(SEED ^ 0xC0FE);
+    let mut cfg = SolverConfig::sequential();
+    cfg.extract_cover = true;
+    for case in 0..30 {
+        let num = rng.range(2, 4);
+        let g = cliques_with_bridges(num, 3, 6, &mut rng);
+        let opt = oracle::mvc_size(&g);
+        let r = solve_mvc(&g, &cfg);
+        assert_eq!(r.best, opt, "case {case}");
+        if let Some(c) = &r.cover {
+            assert!(g.is_vertex_cover(c), "case {case}: invalid witness");
+            assert_eq!(c.len() as u32, opt, "case {case}: suboptimal witness");
+        }
+    }
+    // direct cross-check of the sequential module against the oracle
+    for seed in 0..20u64 {
+        let g = generators::erdos_renyi(14, 0.25, seed);
+        let ub = g.num_vertices() as u32 + 1;
+        let out = sequential::solve(&g, ub, true, false, None);
+        assert_eq!(out.best, oracle::mvc_size(&g), "seed {seed}");
+    }
+}

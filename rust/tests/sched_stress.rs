@@ -1,0 +1,270 @@
+//! Concurrency stress tests for the lock-free scheduling runtime: the
+//! Chase–Lev deques and the injector are hammered from many threads with
+//! totals reconciled against the per-worker counters, and the epoch
+//! termination detector must provably drain deep imbalanced trees at
+//! 1, 4, and 16 workers (more workers than this machine has cores, so
+//! preemption-heavy interleavings get exercised too).
+
+use cavc::solver::sched::deque::{ChaseLev, Steal};
+use cavc::solver::sched::injector::Injector;
+use cavc::solver::sched::{
+    IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
+    WorkerHandle,
+};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Leaves of the imbalanced recurrence: f(0) = 1, f(x) = f(x-1) + f(x/2)
+/// — one heavy child and one light child per node, so static partitions
+/// starve while work stealing keeps everyone busy.
+fn expected_leaves(x: u64) -> u64 {
+    fn go(x: u64, memo: &mut std::collections::HashMap<u64, u64>) -> u64 {
+        if x == 0 {
+            return 1;
+        }
+        if let Some(&v) = memo.get(&x) {
+            return v;
+        }
+        let v = go(x - 1, memo) + go(x / 2, memo);
+        memo.insert(x, v);
+        v
+    }
+    go(x, &mut std::collections::HashMap::new())
+}
+
+/// Drive the imbalanced-tree workload through a scheduler; returns the
+/// leaf count and each worker's counters.
+fn drain_tree<S: Scheduler<u64>>(sched: &S, workers: usize) -> (u64, Vec<WorkerCounters>) {
+    let leaves = AtomicU64::new(0);
+    let mut counters = vec![WorkerCounters::default(); workers];
+    std::thread::scope(|scope| {
+        let joins: Vec<_> = (0..workers)
+            .map(|w| {
+                let leaves = &leaves;
+                scope.spawn(move || {
+                    let mut h = sched.handle(w);
+                    loop {
+                        match h.pop() {
+                            Some(0) => {
+                                leaves.fetch_add(1, Ordering::Relaxed);
+                                h.on_node_done();
+                            }
+                            Some(x) => {
+                                h.push(x - 1); // heavy sub-tree
+                                h.push(x / 2); // light sub-tree
+                                h.on_node_done();
+                            }
+                            None => {
+                                if h.idle_step() == IdleOutcome::Finished {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    h.counters()
+                })
+            })
+            .collect();
+        for (w, j) in joins.into_iter().enumerate() {
+            counters[w] = j.join().unwrap();
+        }
+    });
+    (leaves.load(Ordering::Relaxed), counters)
+}
+
+#[test]
+fn termination_drains_deep_imbalanced_tree() {
+    let root = 100u64;
+    let want = expected_leaves(root);
+    assert!(want > 50_000, "workload too small to stress anything: {want}");
+    for workers in [1usize, 4, 16] {
+        let sched: WorkStealScheduler<u64> = WorkStealScheduler::new(workers, true, 64);
+        sched.inject(root);
+        let (leaves, counters) = drain_tree(&sched, workers);
+        assert_eq!(leaves, want, "workers={workers}: leaves lost or duplicated");
+        // Counter reconciliation: every acquisition is a push or the root.
+        let acquired: u64 = counters.iter().map(|c| c.acquired()).sum();
+        let pushed: u64 = counters.iter().map(|c| c.pushes).sum();
+        assert_eq!(acquired, pushed + 1, "workers={workers}: queue traffic leaked");
+        if workers > 1 {
+            // With this imbalance something must have been stolen or
+            // pulled from the injector by a non-owner.
+            let steals: u64 = counters.iter().map(|c| c.steals).sum();
+            let shared: u64 = counters.iter().map(|c| c.shared_pops).sum();
+            let moved = steals + shared;
+            assert!(moved >= 1, "workers={workers}: no load balancing happened");
+        }
+    }
+}
+
+#[test]
+fn termination_matches_between_schedulers() {
+    let root = 30u64;
+    let want = expected_leaves(root);
+    for workers in [1usize, 4] {
+        let ws: WorkStealScheduler<u64> = WorkStealScheduler::new(workers, true, 64);
+        ws.inject(root);
+        let (a, _) = drain_tree(&ws, workers);
+        let sh: ShardedScheduler<u64> = ShardedScheduler::new(workers, true);
+        sh.inject(root);
+        let (b, _) = drain_tree(&sh, workers);
+        assert_eq!(a, want, "worksteal workers={workers}");
+        assert_eq!(b, want, "sharded workers={workers}");
+    }
+}
+
+#[test]
+fn repeated_racy_drains_are_exact() {
+    // Many short racy runs catch interleavings a single long run misses.
+    let root = 18u64;
+    let want = expected_leaves(root);
+    for trial in 0..40 {
+        let sched: WorkStealScheduler<u64> = WorkStealScheduler::new(8, true, 16);
+        sched.inject(root);
+        let (leaves, _) = drain_tree(&sched, 8);
+        assert_eq!(leaves, want, "trial {trial}");
+    }
+}
+
+#[test]
+fn deque_hammer_with_heavy_contention() {
+    // One owner against 7 thieves on a single deque, items carrying a
+    // checksum so duplication and loss are both detectable.
+    const ITEMS: u64 = 50_000;
+    let d: ChaseLev<u64> = ChaseLev::with_capacity(8);
+    let consumed = AtomicU64::new(0);
+    let checksum = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..7 {
+            let d = &d;
+            let consumed = &consumed;
+            let checksum = &checksum;
+            s.spawn(move || loop {
+                match d.steal() {
+                    Steal::Taken(x) => {
+                        checksum.fetch_add(x, Ordering::Relaxed);
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Steal::Retry => std::hint::spin_loop(),
+                    Steal::Empty => {
+                        if consumed.load(Ordering::Relaxed) == ITEMS {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+        let d = &d;
+        let consumed = &consumed;
+        let checksum = &checksum;
+        s.spawn(move || {
+            for i in 1..=ITEMS {
+                unsafe { d.push(i) };
+                // Pop some back so the owner/thief race on the last item
+                // is exercised constantly.
+                if i % 2 == 0 {
+                    if let Some(x) = unsafe { d.pop() } {
+                        checksum.fetch_add(x, Ordering::Relaxed);
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+            while let Some(x) = unsafe { d.pop() } {
+                checksum.fetch_add(x, Ordering::Relaxed);
+                consumed.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+    });
+    assert_eq!(consumed.load(Ordering::Relaxed), ITEMS);
+    assert_eq!(checksum.load(Ordering::Relaxed), ITEMS * (ITEMS + 1) / 2);
+}
+
+#[test]
+fn injector_hammer_mpmc() {
+    const PRODUCERS: u64 = 8;
+    const PER: u64 = 10_000;
+    let q: Injector<u64> = Injector::new();
+    let consumed = AtomicU64::new(0);
+    let checksum = AtomicU64::new(0);
+    std::thread::scope(|s| {
+        for p in 0..PRODUCERS {
+            let q = &q;
+            s.spawn(move || {
+                for i in 0..PER {
+                    q.push(p * PER + i + 1);
+                }
+            });
+        }
+        for _ in 0..8 {
+            let q = &q;
+            let consumed = &consumed;
+            let checksum = &checksum;
+            s.spawn(move || loop {
+                match q.pop() {
+                    Some(x) => {
+                        checksum.fetch_add(x, Ordering::Relaxed);
+                        consumed.fetch_add(1, Ordering::Relaxed);
+                    }
+                    None => {
+                        if consumed.load(Ordering::Relaxed) == PRODUCERS * PER {
+                            break;
+                        }
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        }
+    });
+    let n = PRODUCERS * PER;
+    assert_eq!(consumed.load(Ordering::Relaxed), n);
+    assert_eq!(checksum.load(Ordering::Relaxed), n * (n + 1) / 2);
+    assert!(q.is_empty());
+}
+
+#[test]
+fn boxed_payloads_never_double_free() {
+    // Same racy drain but with heap payloads: a duplicated or leaked
+    // node corrupts the count (and crashes under a hardened allocator).
+    let sched: WorkStealScheduler<Box<u64>> = WorkStealScheduler::new(8, true, 8);
+    sched.inject(Box::new(16));
+    let leaves = AtomicU64::new(0);
+    std::thread::scope(|scope| {
+        for w in 0..8 {
+            let sched = &sched;
+            let leaves = &leaves;
+            scope.spawn(move || {
+                let mut h = sched.handle(w);
+                loop {
+                    match h.pop() {
+                        Some(x) if *x == 0 => {
+                            leaves.fetch_add(1, Ordering::Relaxed);
+                            h.on_node_done();
+                        }
+                        Some(x) => {
+                            h.push(Box::new(*x - 1));
+                            h.push(Box::new(*x / 2));
+                            h.on_node_done();
+                        }
+                        None => {
+                            if h.idle_step() == IdleOutcome::Finished {
+                                break;
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(leaves.load(Ordering::Relaxed), expected_leaves(16));
+}
+
+#[test]
+fn scheduler_kind_parse_roundtrip() {
+    assert_eq!(SchedulerKind::parse("steal"), Some(SchedulerKind::WorkSteal));
+    assert_eq!(SchedulerKind::parse("sharded"), Some(SchedulerKind::Sharded));
+    assert_eq!(SchedulerKind::parse("chase-lev"), Some(SchedulerKind::WorkSteal));
+    assert_eq!(SchedulerKind::parse("nope"), None);
+    for k in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        assert_eq!(SchedulerKind::parse(k.name()), Some(k));
+    }
+}
