@@ -1,8 +1,14 @@
 //! Micro-benchmarks of the engine hot paths (used by the §Perf pass):
 //! the scheduler queues (Chase–Lev deque, injector, sharded worklist),
-//! the registry cascade, and end-to-end solves — including the
-//! scheduler-vs-scheduler race on an imbalanced-tree workload that the
-//! work-stealing runtime exists to win.
+//! the registry cascade, component induction on a fixed split-heavy
+//! seed, and end-to-end solves — including the scheduler-vs-scheduler
+//! race on an imbalanced-tree workload that the work-stealing runtime
+//! exists to win.
+//!
+//! Every measurement is also appended to `bench_out/micro_hotpaths.csv`
+//! (metric,value,unit) so CI can archive the trajectory. Set
+//! `CAVC_SMOKE=1` to run only the fixed split-heavy seed section — the
+//! CI smoke-bench configuration (no thresholds, trajectory only).
 
 use cavc::graph::{generators, Graph};
 use cavc::solver::registry::{Registry, NONE};
@@ -12,7 +18,24 @@ use cavc::solver::worklist::Worklist;
 use cavc::solver::{solve_mvc, SchedulerKind, SolverConfig};
 use std::time::Instant;
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
+struct Csv(Vec<String>);
+
+impl Csv {
+    fn push(&mut self, metric: &str, value: f64, unit: &str) {
+        // metric labels may contain commas (e.g. "c_fat(110,8)")
+        let metric = metric.replace(',', ";");
+        self.0.push(format!("{metric},{value},{unit}"));
+    }
+
+    fn write(&self) {
+        match cavc::harness::tables::write_csv("micro_hotpaths", "metric,value,unit", &self.0) {
+            Ok(path) => println!("\ncsv: {}", path.display()),
+            Err(e) => eprintln!("csv write failed: {e}"),
+        }
+    }
+}
+
+fn bench<F: FnMut()>(name: &str, iters: usize, csv: &mut Csv, mut f: F) -> f64 {
     // warmup
     for _ in 0..iters.div_ceil(10) {
         f();
@@ -28,6 +51,7 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> f64 {
     samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let med = samples[2];
     println!("{name:<40} {med:>12.0} ns/op");
+    csv.push(name, med, "ns/op");
     med
 }
 
@@ -42,40 +66,93 @@ fn timed_solve(g: &Graph, sched: SchedulerKind, workers: usize) -> (f64, u32, bo
     (t.elapsed().as_secs_f64(), r.best, r.timed_out)
 }
 
+/// The fixed split-heavy seed section: component induction on vs off on
+/// the nested split gadget (CI smoke-bench target).
+fn split_heavy_section(csv: &mut Csv) {
+    println!("\n# component induction on the fixed split-heavy seed (s/solve)");
+    let gadget = generators::split_gadget(3); // 87 vertices, nested splits
+    println!("{:<40} {:>10} {:>10}", "workload", "induce=0", "induce=1");
+    for workers in [1usize, 4] {
+        let mut times = [0.0f64; 2];
+        let mut bests = [0u32; 2];
+        for (i, threshold) in [0.0, 1.0].into_iter().enumerate() {
+            let cfg = SolverConfig::proposed()
+                .with_workers(workers)
+                .with_induce_threshold(threshold)
+                .with_timeout(std::time::Duration::from_secs(60));
+            let t = Instant::now();
+            let r = solve_mvc(&gadget, &cfg);
+            times[i] = t.elapsed().as_secs_f64();
+            bests[i] = r.best;
+            assert!(!r.timed_out, "split gadget must finish");
+        }
+        assert_eq!(bests[0], bests[1], "induction changed the answer on split_gadget(3)");
+        println!(
+            "split_gadget(3) @ {workers:>2} workers    {:>10.4} {:>10.4}",
+            times[0], times[1]
+        );
+        csv.push(&format!("split_gadget3_w{workers}_induce_off"), times[0], "s");
+        csv.push(&format!("split_gadget3_w{workers}_induce_on"), times[1], "s");
+    }
+
+    // single-component guard: induction must not slow down a graph that
+    // never splits (the gate only fires on splits)
+    let single = generators::generalized_petersen(36, 2);
+    for (label, threshold) in [("off", 0.0), ("on", 1.0)] {
+        let cfg = SolverConfig::proposed()
+            .with_workers(2)
+            .with_induce_threshold(threshold)
+            .with_timeout(std::time::Duration::from_secs(60));
+        let t = Instant::now();
+        let r = solve_mvc(&single, &cfg);
+        let el = t.elapsed().as_secs_f64();
+        println!("gp(36,2) single-comp induce={label:<4} {el:>10.4} s (mvc={})", r.best);
+        csv.push(&format!("gp36_single_comp_induce_{label}"), el, "s");
+    }
+}
+
 fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").as_deref() == Ok("1");
+    let mut csv = Csv(Vec::new());
     println!("# micro hot paths (medians of 5 runs)");
+
+    if smoke {
+        split_heavy_section(&mut csv);
+        csv.write();
+        return;
+    }
 
     // sharded worklist push+pop round trip under no contention
     let wl: Worklist<u64> = Worklist::new(8);
-    bench("worklist push+pop (sharded)", 100_000, || {
+    bench("worklist push+pop (sharded)", 100_000, &mut csv, || {
         wl.push(3, 42);
         let _ = wl.pop(3);
     });
 
     // Chase-Lev owner push+pop round trip (the work stealer's fast path)
     let dq: ChaseLev<u64> = ChaseLev::with_capacity(256);
-    bench("deque push+pop (chase-lev owner)", 100_000, || unsafe {
+    bench("deque push+pop (chase-lev owner)", 100_000, &mut csv, || unsafe {
         dq.push(42);
         let _ = dq.pop();
     });
 
     // Chase-Lev push+steal (owner enqueues, consumer takes from the top)
     let dq2: ChaseLev<u64> = ChaseLev::with_capacity(256);
-    bench("deque push+steal (chase-lev)", 100_000, || {
+    bench("deque push+steal (chase-lev)", 100_000, &mut csv, || {
         unsafe { dq2.push(42) };
         let _ = matches!(dq2.steal(), Steal::Taken(_));
     });
 
     // injector round trip (root/restart queue; cold path in real runs)
     let inj: Injector<u64> = Injector::new();
-    bench("injector push+pop (michael-scott)", 100_000, || {
+    bench("injector push+pop (michael-scott)", 100_000, &mut csv, || {
         inj.push(42);
         let _ = inj.pop();
     });
 
     // registry split + cascade (2 components)
     let reg = Registry::new(false);
-    bench("registry split+cascade (2 comps)", 50_000, || {
+    bench("registry split+cascade (2 comps)", 50_000, &mut csv, || {
         let p = reg.new_parent(0, NONE);
         let c1 = reg.new_child(p, 3, 3);
         let c2 = reg.new_child(p, 4, 4);
@@ -84,6 +161,8 @@ fn main() {
         reg.complete_node(c1, &mut sink);
         reg.complete_node(c2, &mut sink);
     });
+
+    split_heavy_section(&mut csv);
 
     // Scheduler head-to-head on an imbalanced search tree: a banded
     // graph fragments into wildly different sub-tree sizes, so static
@@ -98,6 +177,8 @@ fn main() {
             assert_eq!(a, b, "schedulers disagree on banded(320)");
         }
         println!("banded(320,2) @ {workers:>2} workers   {sharded_s:>10.4} {steal_s:>10.4}");
+        csv.push(&format!("banded320_w{workers}_sharded"), sharded_s, "s");
+        csv.push(&format!("banded320_w{workers}_steal"), steal_s, "s");
     }
 
     // end-to-end solves of reference workloads (the real hot path)
@@ -117,6 +198,7 @@ fn main() {
             "{name:<40} {el:>10.4} s   (mvc={}, nodes={}, splits={})",
             r.best, r.stats.tree_nodes, r.stats.component_branches
         );
+        csv.push(name, el, "s");
     }
 
     // per-node throughput proxy: nodes/sec on a branching-heavy instance
@@ -131,4 +213,7 @@ fn main() {
         r.stats.tree_nodes,
         el
     );
+    csv.push("engine_node_throughput_gp36", r.stats.tree_nodes as f64 / el, "nodes/s");
+
+    csv.write();
 }

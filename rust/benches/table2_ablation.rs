@@ -1,6 +1,8 @@
 //! Table II: incremental impact of each optimization — the proposed
 //! solver with (a) component branching disabled, (b) root reduce+induce
-//! disabled, (c) non-zero bounds disabled, vs the full system.
+//! disabled, (c) tree induction disabled (`--induce-threshold 0`:
+//! full-width split children), (d) non-zero bounds disabled, vs the
+//! full system.
 
 use cavc::harness::{datasets, tables};
 
@@ -20,12 +22,14 @@ fn main() {
         eprintln!("[table2] {} ...", d.name);
         let row = tables::table2_row(d);
         csv.push(format!(
-            "{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
+            "{},{:.6},{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
             row.name,
             row.no_components.secs,
             row.no_components.timed_out,
             row.no_induce.secs,
             row.no_induce.timed_out,
+            row.no_tree_induce.secs,
+            row.no_tree_induce.timed_out,
             row.no_bounds.secs,
             row.no_bounds.timed_out,
             row.proposed.secs,
@@ -36,7 +40,7 @@ fn main() {
     tables::print_table2(&rows, std::io::stdout().lock()).unwrap();
     let path = tables::write_csv(
         "table2_ablation",
-        "graph,no_components_s,no_components_to,no_induce_s,no_induce_to,no_bounds_s,no_bounds_to,proposed_s,proposed_to",
+        "graph,no_components_s,no_components_to,no_induce_s,no_induce_to,no_tree_induce_s,no_tree_induce_to,no_bounds_s,no_bounds_to,proposed_s,proposed_to",
         &csv,
     )
     .unwrap();

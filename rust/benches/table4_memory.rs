@@ -1,7 +1,11 @@
 //! Table IV: effect of reducing the graph and inducing a subgraph on the
 //! degree array size, modeled thread-block occupancy, shared-memory fit,
-//! and degree dtype. Pure preprocessing — no search, so no budget needed.
+//! and degree dtype — plus the tree-induction extension: live per-node
+//! payload telemetry (peak live bytes, bytes/node, pool traffic) on
+//! seeded split-heavy workloads with component induction toggled, which
+//! shows post-split payloads tracking component size instead of root n.
 
+use cavc::graph::generators;
 use cavc::harness::{datasets, tables};
 
 fn main() {
@@ -32,4 +36,40 @@ fn main() {
     )
     .unwrap();
     println!("\ncsv: {}", path.display());
+
+    // ---- tree-induction extension: per-node payload bytes ----
+    println!("\n# Table IV ext — per-node payload bytes, induction off vs on");
+    let workloads: Vec<(String, cavc::graph::Graph)> = vec![
+        ("split_gadget(2)".into(), generators::split_gadget(2)),
+        ("split_gadget(3)".into(), generators::split_gadget(3)),
+        ("union_of_random(8,6,10)".into(), generators::union_of_random(8, 6, 10, 0.3, 21)),
+    ];
+    let mut nrows = Vec::new();
+    let mut ncsv = Vec::new();
+    for (name, g) in &workloads {
+        for induce in [false, true] {
+            let r = tables::node_bytes_row(name, g, induce);
+            ncsv.push(format!(
+                "{},{},{},{:.1},{},{},{},{},{:.6}",
+                r.name,
+                r.induce,
+                r.peak_live_bytes,
+                r.bytes_per_node,
+                r.pool_hits,
+                r.pool_misses,
+                r.induced_subproblems,
+                r.tree_nodes,
+                r.secs,
+            ));
+            nrows.push(r);
+        }
+    }
+    tables::print_node_bytes(&nrows, std::io::stdout().lock()).unwrap();
+    let npath = tables::write_csv(
+        "table4_node_bytes",
+        "workload,induce,peak_live_bytes,bytes_per_node,pool_hits,pool_misses,induced_subproblems,tree_nodes,secs",
+        &ncsv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", npath.display());
 }

@@ -70,12 +70,15 @@ pub fn bfs_reach(g: &Graph, source: u32) -> BitSet {
 pub struct UnionFind {
     parent: Vec<u32>,
     rank: Vec<u8>,
+    /// Disjoint sets remaining; decremented by every merging `union` so
+    /// [`UnionFind::num_sets`] is O(1) instead of n× `find`.
+    sets: usize,
 }
 
 impl UnionFind {
     /// `n` singleton sets.
     pub fn new(n: usize) -> Self {
-        Self { parent: (0..n as u32).collect(), rank: vec![0; n] }
+        Self { parent: (0..n as u32).collect(), rank: vec![0; n], sets: n }
     }
 
     /// Representative of `x`'s set (path halving).
@@ -103,13 +106,14 @@ impl UnionFind {
         if self.rank[hi as usize] == self.rank[lo as usize] {
             self.rank[hi as usize] += 1;
         }
+        self.sets -= 1;
         true
     }
 
-    /// Number of disjoint sets remaining.
-    pub fn num_sets(&mut self) -> usize {
-        let n = self.parent.len();
-        (0..n as u32).filter(|&x| self.find(x) == x).count()
+    /// Number of disjoint sets remaining (O(1): a counter maintained by
+    /// [`UnionFind::union`]).
+    pub fn num_sets(&self) -> usize {
+        self.sets
     }
 }
 
@@ -181,5 +185,24 @@ mod tests {
         assert!(!uf.union(1, 0));
         assert_eq!(uf.num_sets(), 3);
         assert_eq!(uf.find(0), uf.find(1));
+    }
+
+    #[test]
+    fn num_sets_counter_tracks_every_union() {
+        let mut uf = UnionFind::new(6);
+        assert_eq!(uf.num_sets(), 6);
+        uf.union(0, 1);
+        uf.union(2, 3);
+        assert_eq!(uf.num_sets(), 4);
+        uf.union(1, 2); // merges the two pairs
+        assert_eq!(uf.num_sets(), 3);
+        uf.union(0, 3); // already joined: no change
+        assert_eq!(uf.num_sets(), 3);
+        uf.union(4, 5);
+        uf.union(0, 5);
+        assert_eq!(uf.num_sets(), 1);
+        // cross-check against an explicit root census
+        let roots = (0..6u32).filter(|&x| uf.find(x) == x).count();
+        assert_eq!(roots, uf.num_sets());
     }
 }

@@ -52,6 +52,34 @@ impl Graph {
         Graph { row_ptr, adj }
     }
 
+    /// Assemble a graph directly from raw CSR arrays.
+    ///
+    /// `row_ptr` must have `n + 1` entries with `row_ptr[n] == adj.len()`,
+    /// every row strictly sorted ascending, and the adjacency symmetric —
+    /// exactly what the engine's component induction produces (it walks
+    /// sorted neighbor lists through a monotonic renumbering map). Debug
+    /// builds validate the row structure; release builds trust the caller
+    /// so the hot split path stays allocation-and-scan only.
+    pub fn from_csr_parts(row_ptr: Vec<u32>, adj: Vec<u32>) -> Graph {
+        debug_assert!(!row_ptr.is_empty(), "row_ptr needs the trailing sentinel");
+        debug_assert_eq!(*row_ptr.last().unwrap() as usize, adj.len());
+        #[cfg(debug_assertions)]
+        for v in 0..row_ptr.len() - 1 {
+            let (s, e) = (row_ptr[v] as usize, row_ptr[v + 1] as usize);
+            debug_assert!(s <= e, "row {v} has negative extent");
+            for i in s + 1..e {
+                debug_assert!(adj[i - 1] < adj[i], "row {v} not strictly sorted");
+            }
+        }
+        Graph { row_ptr, adj }
+    }
+
+    /// Decompose into the raw `(row_ptr, adj)` CSR arrays, e.g. so a
+    /// retired component view can return its buffers to a recycling pool.
+    pub fn into_parts(self) -> (Vec<u32>, Vec<u32>) {
+        (self.row_ptr, self.adj)
+    }
+
     /// Number of vertices.
     #[inline]
     pub fn num_vertices(&self) -> usize {
@@ -209,6 +237,27 @@ mod tests {
     fn degree_histogram_path() {
         let g = path5();
         assert_eq!(g.degree_histogram(), vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn csr_parts_roundtrip() {
+        let g = path5();
+        let (row_ptr, adj) = g.clone().into_parts();
+        assert_eq!(row_ptr.len(), 6);
+        assert_eq!(adj.len(), 8); // 4 undirected edges, stored twice
+        let g2 = Graph::from_csr_parts(row_ptr, adj);
+        assert_eq!(g2, g);
+    }
+
+    #[test]
+    fn from_csr_parts_matches_from_edges() {
+        let g = Graph::from_edges(4, &[(0, 1), (0, 2), (1, 2), (2, 3)]);
+        let (rp, adj) = g.clone().into_parts();
+        let rebuilt = Graph::from_csr_parts(rp, adj);
+        assert_eq!(rebuilt.neighbors(2), &[0, 1, 3]);
+        assert_eq!(rebuilt.num_edges(), 4);
+        assert!(rebuilt.has_edge(0, 2));
+        assert!(!rebuilt.has_edge(0, 3));
     }
 
     #[test]

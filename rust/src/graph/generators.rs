@@ -285,6 +285,33 @@ pub fn union_of_random(
     Graph::disjoint_union(&parts)
 }
 
+/// Nested split gadget (paper §III): `depth = 0` is the Petersen graph
+/// (3-regular, triangle-free — immune to every reduction rule and not a
+/// special component); depth `d` joins a fresh hub to the first `5 + d`
+/// vertices of each of two depth-`d−1` copies. The per-level attachment
+/// count makes each hub degree `2·(5 + d)` — strictly above the inner
+/// hubs (`2·(5 + d − 1)`) and every Petersen vertex (≤ `3 + d`), so the
+/// hub is the *unique* maximum-degree vertex at every nesting level:
+/// the engine branches hub-first, each covered hub disconnects its
+/// gadget into the two sub-gadgets, and the search cascades through `d`
+/// nested splits — the worst case for per-node payload memory and the
+/// split-registry machinery. `|V| = 11·2^depth − 1`.
+pub fn split_gadget(depth: usize) -> Graph {
+    if depth == 0 {
+        return petersen();
+    }
+    let part = split_gadget(depth - 1);
+    let pn = part.num_vertices() as u32;
+    let two = Graph::disjoint_union(&[part.clone(), part]);
+    let hub = 2 * pn;
+    let mut edges: Vec<(u32, u32)> = two.edges().collect();
+    for i in 0..(5 + depth as u32) {
+        edges.push((hub, i)); // first 5+d vertices of copy 1
+        edges.push((hub, pn + i)); // and of copy 2
+    }
+    Graph::from_edges(2 * pn as usize + 1, &edges)
+}
+
 /// Web-crawl analog with pendant-tree fringe: a BA core with extra
 /// degree-1/2 tendrils hanging off it (web-webbase-2001 reduces almost
 /// entirely at the root thanks to these).
@@ -396,5 +423,21 @@ mod tests {
         let g = web_crawl(100, 300, 17);
         assert_eq!(g.num_vertices(), 400);
         assert_eq!(components::count(&g), 1);
+    }
+
+    #[test]
+    fn split_gadget_shape() {
+        assert_eq!(split_gadget(0), petersen());
+        for depth in 1..=3usize {
+            let g = split_gadget(depth);
+            assert_eq!(g.num_vertices(), 11 * (1 << depth) - 1, "depth {depth}");
+            assert_eq!(components::count(&g), 1, "depth {depth}: must start connected");
+            let hub = (g.num_vertices() - 1) as u32;
+            assert_eq!(g.degree(hub), 2 * (5 + depth as u32), "depth {depth}");
+            // the hub strictly dominates every other degree — including
+            // the inner hubs — so the engine's branch vertex is unique
+            let snd = (0..hub).map(|v| g.degree(v)).max().unwrap();
+            assert!(g.degree(hub) > snd, "depth {depth}: hub must be the unique branch vertex");
+        }
     }
 }

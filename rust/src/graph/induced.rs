@@ -5,9 +5,55 @@
 //! vertices so that degree arrays are sized to the reduced graph, not the
 //! original. [`InducedSubgraph`] keeps the old→new and new→old maps so
 //! solutions can be translated back to original vertex ids.
+//!
+//! [`induce_residual_into`] is the allocation-free sibling used *inside*
+//! the search tree: when the engine splits on components it re-induces
+//! each component as a compact CSR over caller-supplied (recycled)
+//! buffers, so per-node state deep in the tree is sized to the component
+//! rather than the root graph.
 
 use super::Graph;
 use crate::util::BitSet;
+
+/// Build the CSR rows of the residual subgraph induced on `vertices`
+/// into caller-supplied buffers (cleared first; no allocation beyond
+/// their growth).
+///
+/// `vertices` must be sorted ascending and `map[v]` must hold the
+/// compact id of every `v` in `vertices` (entries for other vertices are
+/// ignored). `deg_of(v)` is the *residual* degree: nonzero means
+/// present, and for present vertices it must equal the number of present
+/// static neighbors — the count lets each row stop scanning early.
+/// `vertices` must be closed under residual adjacency (a residual
+/// component, or a union of them), so every present neighbor has a map
+/// entry. Because `vertices` is sorted, the renumbering is monotonic and
+/// the produced rows stay sorted, as [`Graph::from_csr_parts`] requires.
+pub fn induce_residual_into(
+    g: &Graph,
+    vertices: &[u32],
+    map: &[u32],
+    deg_of: impl Fn(u32) -> u32,
+    row_ptr: &mut Vec<u32>,
+    adj: &mut Vec<u32>,
+) {
+    row_ptr.clear();
+    adj.clear();
+    row_ptr.push(0);
+    for &v in vertices {
+        let mut remaining = deg_of(v);
+        for &w in g.neighbors(v) {
+            if remaining == 0 {
+                break;
+            }
+            if deg_of(w) > 0 {
+                adj.push(map[w as usize]);
+                remaining -= 1;
+            }
+        }
+        debug_assert_eq!(remaining, 0, "residual degree of {v} out of sync");
+        row_ptr.push(adj.len() as u32);
+    }
+}
 
 /// A subgraph induced on a vertex subset, with id translation maps.
 #[derive(Debug, Clone)]
@@ -97,6 +143,63 @@ mod tests {
         let keep = BitSet::new(4);
         let ind = InducedSubgraph::new(&g, &keep);
         assert_eq!(ind.graph.num_vertices(), 0);
+    }
+
+    #[test]
+    fn induce_residual_component_of_cycle() {
+        // cycle 0-1-2-3-4-5; remove 0 and 3 from the residual: two path
+        // components {1,2} and {4,5}
+        let g = generators::cycle(6);
+        let deg = [0u32, 1, 1, 0, 1, 1];
+        let mut map = vec![u32::MAX; 6];
+        let comp = [4u32, 5];
+        for (i, &v) in comp.iter().enumerate() {
+            map[v as usize] = i as u32;
+        }
+        let mut row_ptr = Vec::new();
+        let mut adj = Vec::new();
+        induce_residual_into(&g, &comp, &map, |v| deg[v as usize], &mut row_ptr, &mut adj);
+        let sub = Graph::from_csr_parts(row_ptr, adj);
+        assert_eq!(sub.num_vertices(), 2);
+        assert_eq!(sub.num_edges(), 1);
+        assert!(sub.has_edge(0, 1));
+    }
+
+    #[test]
+    fn induce_residual_matches_induced_subgraph() {
+        // With every vertex present, the residual induction over a
+        // component must agree with the set-based InducedSubgraph.
+        let g = Graph::disjoint_union(&[generators::clique(4), generators::path(3)]);
+        let deg: Vec<u32> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+        let comp: Vec<u32> = vec![0, 1, 2, 3];
+        let mut map = vec![u32::MAX; g.num_vertices()];
+        for (i, &v) in comp.iter().enumerate() {
+            map[v as usize] = i as u32;
+        }
+        let (mut row_ptr, mut adj) = (Vec::new(), Vec::new());
+        induce_residual_into(&g, &comp, &map, |v| deg[v as usize], &mut row_ptr, &mut adj);
+        let sub = Graph::from_csr_parts(row_ptr, adj);
+        let reference = InducedSubgraph::from_vertices(&g, &comp);
+        assert_eq!(sub, reference.graph);
+    }
+
+    #[test]
+    fn induce_residual_reuses_buffers() {
+        let g = generators::path(4); // 0-1-2-3, all present
+        let deg: Vec<u32> = (0..4u32).map(|v| g.degree(v)).collect();
+        let comp: Vec<u32> = vec![0, 1, 2, 3];
+        let mut map = vec![u32::MAX; 4];
+        for (i, &v) in comp.iter().enumerate() {
+            map[v as usize] = i as u32;
+        }
+        // dirty buffers must be cleared, not appended to
+        let mut row_ptr = vec![9, 9, 9];
+        let mut adj = vec![7; 10];
+        induce_residual_into(&g, &comp, &map, |v| deg[v as usize], &mut row_ptr, &mut adj);
+        assert_eq!(row_ptr.len(), 5);
+        assert_eq!(adj.len(), 6);
+        let sub = Graph::from_csr_parts(row_ptr, adj);
+        assert_eq!(sub.num_edges(), 3);
     }
 
     #[test]

@@ -170,6 +170,9 @@ pub struct Table2Row {
     pub no_components: Timed,
     /// Proposed minus root reduce+induce.
     pub no_induce: Timed,
+    /// Proposed minus *tree* induction (`--induce-threshold 0`: split
+    /// children stay full-width over the parent view).
+    pub no_tree_induce: Timed,
     /// Proposed minus non-zero bounds.
     pub no_bounds: Timed,
     /// Full proposed.
@@ -184,12 +187,14 @@ pub fn table2_row(d: &Dataset) -> Table2Row {
     let mut no_induce = SolverConfig::proposed();
     no_induce.reduce_root = false;
     no_induce.use_crown = false;
+    let no_tree_induce = SolverConfig::proposed().with_induce_threshold(0.0);
     let mut no_bounds = SolverConfig::proposed();
     no_bounds.use_bounds = false;
     Table2Row {
         name: d.name,
         no_components: run_mvc(&g, no_comp),
         no_induce: run_mvc(&g, no_induce),
+        no_tree_induce: run_mvc(&g, no_tree_induce),
         no_bounds: run_mvc(&g, no_bounds),
         proposed: run_mvc(&g, SolverConfig::proposed()),
     }
@@ -199,17 +204,18 @@ pub fn table2_row(d: &Dataset) -> Table2Row {
 pub fn print_table2(rows: &[Table2Row], mut w: impl Write) -> std::io::Result<()> {
     writeln!(
         w,
-        "| {:<22} | {:>12} | {:>12} | {:>12} | {:>10} |",
-        "Graph", "-components", "-induce", "-bounds", "Proposed"
+        "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} |",
+        "Graph", "-components", "-induce", "-tree-induce", "-bounds", "Proposed"
     )?;
-    writeln!(w, "|{}|", "-".repeat(82))?;
+    writeln!(w, "|{}|", "-".repeat(98))?;
     for r in rows {
         writeln!(
             w,
-            "| {:<22} | {:>12} | {:>12} | {:>12} | {:>10} |",
+            "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} |",
             r.name,
             cell(&r.no_components),
             cell(&r.no_induce),
+            cell(&r.no_tree_induce),
             cell(&r.no_bounds),
             cell(&r.proposed)
         )?;
@@ -368,6 +374,78 @@ fn yn(b: bool) -> &'static str {
     } else {
         "No"
     }
+}
+
+/// Table IV extension row: live per-node payload telemetry from an
+/// instrumented search, with component induction toggled. On split-heavy
+/// graphs the induced run's bytes-per-node tracks component size while
+/// the full-width run's tracks root n.
+#[derive(Debug, Clone)]
+pub struct NodeBytesRow {
+    /// Workload label.
+    pub name: String,
+    /// Whether tree induction was enabled.
+    pub induce: bool,
+    /// Peak simultaneously-live node-state bytes (degree arrays plus
+    /// live induced-view CSR buffers, so off-vs-on is unbiased).
+    pub peak_live_bytes: u64,
+    /// Average payload bytes per created node.
+    pub bytes_per_node: f64,
+    /// Buffer-pool hits (recycled payloads/CSRs).
+    pub pool_hits: u64,
+    /// Buffer-pool misses (fresh allocations).
+    pub pool_misses: u64,
+    /// Components materialized as induced subproblems.
+    pub induced_subproblems: u64,
+    /// Search-tree nodes visited.
+    pub tree_nodes: u64,
+    /// Seconds elapsed.
+    pub secs: f64,
+}
+
+/// Run one instrumented solve of `g` and report its payload telemetry.
+pub fn node_bytes_row(name: &str, g: &Graph, induce: bool) -> NodeBytesRow {
+    let mut cfg = SolverConfig::proposed()
+        .with_induce_threshold(if induce { 1.0 } else { 0.0 });
+    cfg.instrument = true;
+    cfg.timeout = Some(cell_timeout());
+    let r = solver::solve_mvc(g, &cfg);
+    NodeBytesRow {
+        name: name.to_string(),
+        induce,
+        peak_live_bytes: r.stats.peak_live_bytes,
+        bytes_per_node: r.stats.payload_bytes as f64 / r.stats.payload_nodes.max(1) as f64,
+        pool_hits: r.stats.pool_hits,
+        pool_misses: r.stats.pool_misses,
+        induced_subproblems: r.stats.induced_subproblems,
+        tree_nodes: r.stats.tree_nodes,
+        secs: r.elapsed.as_secs_f64(),
+    }
+}
+
+/// Print the Table IV node-bytes extension.
+pub fn print_node_bytes(rows: &[NodeBytesRow], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<26} | {:>7} | {:>12} | {:>10} | {:>9} | {:>9} | {:>8} | {:>10} |",
+        "Workload", "induce", "peak live B", "B/node", "pool hit", "pool miss", "induced", "nodes"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(114))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<26} | {:>7} | {:>12} | {:>10.1} | {:>9} | {:>9} | {:>8} | {:>10} |",
+            r.name,
+            yn(r.induce),
+            r.peak_live_bytes,
+            r.bytes_per_node,
+            r.pool_hits,
+            r.pool_misses,
+            r.induced_subproblems,
+            r.tree_nodes,
+        )?;
+    }
+    Ok(())
 }
 
 /// Table V row: PVC at k ∈ {min−1, min, min+1} for one variant set.

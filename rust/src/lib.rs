@@ -13,6 +13,23 @@
 //! | "is the worklist hungry?"      | thief-pull stealing (no donation heuristic) |
 //! | grid-wide quiescence           | epoch-validated idle-count termination      |
 //! | component branch registry      | lock-free atomic registry arena (§III-C)    |
+//! | subgraph induction (§IV-B)     | root induce **and** per-split component     |
+//! |                                | re-induction (`induce_threshold` gate)      |
+//! | preallocated stack slots       | per-worker size-classed buffer pools        |
+//!
+//! ## Memory model: root-induce → tree-induce
+//!
+//! The paper reduces at the root and *induces a subgraph* so degree
+//! arrays are sized to the residual graph — its answer to prior GPU
+//! solvers whose "high memory footprint limits the number of workers
+//! that can execute concurrently". This reproduction carries the same
+//! optimization into the search tree: when a node splits on components,
+//! each component becomes a compact renumbered subproblem (component-
+//! local CSR + `|C|`-sized degree array), so descendants pay O(|C|) per
+//! clone instead of O(n), and retired payloads are recycled through
+//! per-worker pools. See [`solver::engine`] for the mechanism and
+//! `Occupancy::plan_induced` for how the shrinking-payload path feeds
+//! back into the occupancy model and scheduler queue sizing.
 //!
 //! The previous mutex-sharded worklist survives as a second [`solver::sched::Scheduler`]
 //! implementation, selectable from `SolverConfig`, so the paper's

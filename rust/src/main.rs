@@ -26,7 +26,7 @@ use std::time::Duration;
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
-    "sched",
+    "sched", "induce-threshold",
 ];
 
 fn main() {
@@ -69,6 +69,7 @@ fn print_help() {
          \n\
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
         \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
+        \x20                   [--induce-threshold A]  (induce split components when |C| <= A*view; 0 = off)\n\
          pvc <graph|dataset> --k K [--variant ...]\n         mis <graph|dataset> [--variant ...]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
@@ -105,6 +106,13 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
     if let Some(s) = args.get("sched") {
         cfg.scheduler = SchedulerKind::parse(s)
             .with_context(|| format!("unknown scheduler {s:?} (use steal|sharded)"))?;
+    }
+    if let Some(t) = args.get("induce-threshold") {
+        let t: f64 = t.parse().context("--induce-threshold")?;
+        if !(0.0..=1.0).contains(&t) {
+            bail!("--induce-threshold must be in [0, 1] (0 disables tree induction)");
+        }
+        cfg.induce_threshold = t;
     }
     let t: f64 = args.get_parse("timeout", 0.0).map_err(Error::msg)?;
     if t > 0.0 {

@@ -3,10 +3,33 @@
 //! Reproduces the GPU execution model: N workers ("thread blocks"), each
 //! with a private LIFO queue of search-tree nodes, load-balanced through
 //! a pluggable [`Scheduler`] (see [`crate::solver::sched`]). A node's
-//! entire intermediate state is a degree array over the root-induced
-//! subgraph (generic dtype `T`), the committed solution size, an
-//! incremental edge count, the non-zero bounds window, and a registry
-//! context.
+//! entire intermediate state is a degree array over its *graph view*
+//! (generic dtype `T`), the committed solution size, an incremental edge
+//! count, the non-zero bounds window, and a registry context.
+//!
+//! ## Memory model: root-induce → tree-induce
+//!
+//! The paper induces a subgraph once, at the root (§IV-B), so degree
+//! arrays are sized to the reduced graph. This engine carries the same
+//! idea *into the tree*: when a node splits on components, each
+//! component is re-induced as a compact, renumbered subproblem — a
+//! component-local CSR ([`crate::graph::induced::induce_residual_into`])
+//! plus a `|C|`-sized degree array — so every descendant pays O(|C|) per
+//! clone instead of O(n). A [`Node`]'s `view` points at its component's
+//! CSR (`None` ⇒ the shared root graph); the [`crate::solver::registry`]
+//! aggregates only solution *sizes*, so no vertex un-mapping is ever
+//! needed. GPU analogy: on the device this is the difference between
+//! every thread block's stack slot being a full-width degree array in
+//! global memory and post-split blocks working on small arrays that fit
+//! shared memory — the occupancy lever of the paper's Table IV, applied
+//! at every split (`Occupancy::plan_induced` models exactly this).
+//!
+//! Under node creation sits a per-worker size-classed [`BufferPool`]:
+//! payloads of completed nodes (and the CSR arrays of fully-retired
+//! component views) are recycled instead of returned to the allocator,
+//! so the `make_right_child` clone on the hot path is a pool pop +
+//! memcpy. Induction is gated by [`EngineCfg::induce_threshold`]
+//! (`|C| ≤ α·view`) for ablation.
 //!
 //! Scheduling is split out of branching: the engine decides *what* to
 //! explore (reduce, bound, branch, split on components) and the
@@ -27,11 +50,12 @@
 //! `k + 1`, registry propagation enabled, and stop-on-first-improvement.
 
 use std::collections::BTreeMap;
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::degree::{DegElem, NonZeroBounds};
+use crate::graph::induced::induce_residual_into;
 use crate::graph::Graph;
 use crate::reduce::special::classify;
 use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
@@ -44,6 +68,10 @@ use super::sched::{
 
 /// Default per-worker queue capacity when no occupancy plan is supplied.
 pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
+
+/// Default component-induction gate: re-induce every split component
+/// (`|C| ≤ 1.0 × view` always holds — components are strict subsets).
+pub const DEFAULT_INDUCE_THRESHOLD: f64 = 1.0;
 
 /// Flattened engine configuration (see `SolverConfig` for the public
 /// pipeline-level knobs).
@@ -68,6 +96,12 @@ pub struct EngineCfg {
     /// Initial per-worker queue capacity (the occupancy model's
     /// stack-depth bound; queues grow beyond it as needed).
     pub queue_capacity: usize,
+    /// Component-local subproblem induction gate: a split component is
+    /// re-induced as a compact renumbered subproblem when
+    /// `|C| ≤ induce_threshold × view_size`. `0.0` disables tree
+    /// induction (children stay full-width over the parent's view);
+    /// `1.0` (default) induces every component.
+    pub induce_threshold: f64,
 }
 
 impl Default for EngineCfg {
@@ -82,6 +116,7 @@ impl Default for EngineCfg {
             instrument: false,
             scheduler: SchedulerKind::default(),
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
+            induce_threshold: DEFAULT_INDUCE_THRESHOLD,
         }
     }
 }
@@ -105,6 +140,24 @@ pub struct EngineStats {
     pub worklist_steals: u64,
     /// Registry entries allocated.
     pub registry_entries: u64,
+    /// Split components materialized as compact induced subproblems
+    /// (vs full-width masked children).
+    pub induced_subproblems: u64,
+    /// Node payloads (and CSR buffers) served from a worker's recycling
+    /// pool instead of the allocator.
+    pub pool_hits: u64,
+    /// Pool requests that fell through to a fresh allocation.
+    pub pool_misses: u64,
+    /// Search-tree node payloads created (root + right children +
+    /// component children; left descents mutate in place).
+    pub payload_nodes: u64,
+    /// Total bytes of those payloads — `payload_bytes / payload_nodes`
+    /// is the engine's bytes-per-node figure (Table IV extension).
+    pub payload_bytes: u64,
+    /// Peak simultaneously-live node-state bytes: degree arrays plus the
+    /// CSR buffers of live induced component views (tracked only when
+    /// `EngineCfg::instrument` is set; 0 otherwise).
+    pub peak_live_bytes: u64,
     /// Per-activity busy nanoseconds (all workers merged).
     pub activity: [u64; NUM_ACTIVITIES],
     /// Per-worker scheduler counters, indexed by worker id (Figure-4
@@ -124,6 +177,12 @@ impl EngineStats {
         self.max_stack_depth = self.max_stack_depth.max(other.max_stack_depth);
         self.worklist_pushes += other.worklist_pushes;
         self.worklist_steals += other.worklist_steals;
+        self.induced_subproblems += other.induced_subproblems;
+        self.pool_hits += other.pool_hits;
+        self.pool_misses += other.pool_misses;
+        self.payload_nodes += other.payload_nodes;
+        self.payload_bytes += other.payload_bytes;
+        self.peak_live_bytes = self.peak_live_bytes.max(other.peak_live_bytes);
         for i in 0..NUM_ACTIVITIES {
             self.activity[i] += other.activity[i];
         }
@@ -150,14 +209,27 @@ pub struct EngineOutcome {
     pub timed_out: bool,
 }
 
-/// One search-tree node. `deg` is the full degree array of the induced
-/// subgraph — exactly the paper's stack-entry payload.
+/// One search-tree node. `deg` is the degree array of the node's graph
+/// view — exactly the paper's stack-entry payload, sized to the view
+/// (the root residual graph, or a component-local induced subgraph).
 struct Node<T> {
-    deg: Box<[T]>,
+    deg: Vec<T>,
     sol: u32,
     edges: u64,
     bounds: NonZeroBounds,
     ctx: u32,
+    /// Component-local CSR this node's indices refer to; `None` ⇒ the
+    /// shared root graph. Shared by every node descended from the same
+    /// split component; the last one to retire recycles its buffers.
+    view: Option<Arc<Graph>>,
+}
+
+impl<T: DegElem> Node<T> {
+    /// Payload bytes of this node's degree array.
+    #[inline]
+    fn payload_bytes(&self) -> u64 {
+        (self.deg.len() * T::BYTES) as u64
+    }
 }
 
 struct Shared<'g, T> {
@@ -168,6 +240,10 @@ struct Shared<'g, T> {
     stop: AtomicBool,
     improved: AtomicBool,
     timed_out: AtomicBool,
+    /// Live payload bytes across all workers (instrumented runs only).
+    live_bytes: AtomicU64,
+    /// High-water mark of `live_bytes` (instrumented runs only).
+    peak_live_bytes: AtomicU64,
     stats_sink: Mutex<EngineStats>,
     _marker: std::marker::PhantomData<T>,
 }
@@ -203,6 +279,70 @@ impl<'g, T: DegElem> Shared<'g, T> {
     }
 }
 
+/// Number of size classes in a [`BufferPool`] (capacities up to 2^27
+/// elements; anything larger falls into the last class).
+const POOL_CLASSES: usize = 28;
+/// Retained buffers per size class — bounds worst-case pool memory.
+const POOL_PER_CLASS: usize = 32;
+
+/// Per-worker size-classed free list of node payload buffers.
+///
+/// Class `c` holds buffers with capacity in `[2^c, 2^{c+1})`, so an
+/// acquire for `len` entries (served from the ceil class of `len`)
+/// always pops a buffer that fits. Returned buffers are *cleared*, never
+/// zero-filled wholesale: callers rebuild contents (`extend_from_slice`
+/// / `resize`), which is both the safety argument (no stale degrees can
+/// leak between nodes) and the perf win (no redundant memset before a
+/// full overwrite).
+struct BufferPool<T> {
+    classes: Vec<Vec<Vec<T>>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl<T> BufferPool<T> {
+    fn new() -> Self {
+        BufferPool {
+            classes: (0..POOL_CLASSES).map(|_| Vec::new()).collect(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Ceil size class serving requests of `len`.
+    #[inline]
+    fn class_for_len(len: usize) -> usize {
+        (len.max(1).next_power_of_two().trailing_zeros() as usize).min(POOL_CLASSES - 1)
+    }
+
+    /// An empty buffer with capacity ≥ `len`, recycled when possible.
+    fn acquire(&mut self, len: usize) -> Vec<T> {
+        let c = Self::class_for_len(len);
+        // In the (clamped) last class capacities vary; scan for a fit.
+        // Every buffer in an unclamped class fits, so this is index 0.
+        if let Some(pos) = self.classes[c].iter().position(|b| b.capacity() >= len) {
+            let mut buf = self.classes[c].swap_remove(pos);
+            buf.clear();
+            self.hits += 1;
+            return buf;
+        }
+        self.misses += 1;
+        Vec::with_capacity(len.max(1).next_power_of_two())
+    }
+
+    /// Return a no-longer-needed buffer to its (floor) size class.
+    fn release(&mut self, buf: Vec<T>) {
+        let cap = buf.capacity();
+        if cap == 0 {
+            return;
+        }
+        let c = ((usize::BITS - 1 - cap.leading_zeros()) as usize).min(POOL_CLASSES - 1);
+        if self.classes[c].len() < POOL_PER_CLASS {
+            self.classes[c].push(buf);
+        }
+    }
+}
+
 struct WorkerCtx<T> {
     worker: usize,
     /// Seeding mode (no-load-balance): children go to this FIFO frontier
@@ -213,6 +353,13 @@ struct WorkerCtx<T> {
     stamp: u32,
     queue: Vec<u32>,
     nbuf: Vec<u32>,
+    /// view-id → component-local id scratch for subproblem induction
+    /// (entries are only read for the component just written).
+    vmap: Vec<u32>,
+    /// Recycled degree-array payloads.
+    pool: BufferPool<T>,
+    /// Recycled u32 buffers for induced-CSR `row_ptr`/`adj` arrays.
+    upool: BufferPool<u32>,
     stats: EngineStats,
     timer: ActivityTimer,
     deadline_tick: u32,
@@ -227,18 +374,23 @@ impl<T: DegElem> WorkerCtx<T> {
             stamp: 0,
             queue: Vec::new(),
             nbuf: Vec::new(),
+            vmap: vec![0; n],
+            pool: BufferPool::new(),
+            upool: BufferPool::new(),
             stats: EngineStats::default(),
             timer: if instrument { ActivityTimer::enabled() } else { ActivityTimer::disabled() },
             deadline_tick: 0,
         }
     }
 
-    /// Flush this worker's timer and scheduler counters into its stats
-    /// and merge them into the shared sink.
+    /// Flush this worker's timer, pool, and scheduler counters into its
+    /// stats and merge them into the shared sink.
     fn finish(mut self, shared: &Shared<'_, T>, counters: WorkerCounters) {
         self.timer.stop();
         self.stats.activity = self.timer.totals();
         self.stats.max_stack_depth = self.stats.max_stack_depth.max(counters.max_depth);
+        self.stats.pool_hits += self.pool.hits + self.upool.hits;
+        self.stats.pool_misses += self.pool.misses + self.upool.misses;
         let mut per_worker = vec![WorkerCounters::default(); self.worker + 1];
         per_worker[self.worker] = counters;
         self.stats.sched_workers = per_worker;
@@ -260,7 +412,8 @@ pub fn run<T: DegElem>(g: &Graph, initial_best: u32, cfg: EngineCfg) -> EngineOu
             run_with(g, initial_best, cfg, &sched)
         }
         SchedulerKind::Sharded => {
-            let sched: ShardedScheduler<Node<T>> = ShardedScheduler::new(workers, cfg.load_balance);
+            let sched: ShardedScheduler<Node<T>> =
+                ShardedScheduler::new(workers, cfg.load_balance, cfg.queue_capacity.max(8));
             run_with(g, initial_best, cfg, &sched)
         }
     }
@@ -281,6 +434,8 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
         stop: AtomicBool::new(false),
         improved: AtomicBool::new(false),
         timed_out: AtomicBool::new(false),
+        live_bytes: AtomicU64::new(0),
+        peak_live_bytes: AtomicU64::new(0),
         stats_sink: Mutex::new(EngineStats::default()),
         cfg,
         _marker: std::marker::PhantomData,
@@ -288,12 +443,18 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
 
     // Root node over the full residual graph.
     let root = Node::<T> {
-        deg: crate::degree::initial_degrees::<T>(g).into_boxed_slice(),
+        deg: crate::degree::initial_degrees::<T>(g),
         sol: 0,
         edges: g.num_edges() as u64,
         bounds: NonZeroBounds::full(n),
         ctx: NONE,
+        view: None,
     };
+    let root_bytes = root.payload_bytes();
+    if shared.cfg.instrument {
+        shared.live_bytes.store(root_bytes, Ordering::Relaxed);
+        shared.peak_live_bytes.store(root_bytes, Ordering::Relaxed);
+    }
 
     if shared.cfg.load_balance {
         sched.inject(root);
@@ -345,6 +506,11 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     stats.worklist_pushes = stats.sched_workers.iter().map(|c| c.offloaded).sum();
     stats.worklist_steals = stats.sched_workers.iter().map(|c| c.steals).sum();
     stats.registry_entries = shared.registry.len() as u64;
+    // The root payload was created outside any worker context.
+    stats.payload_nodes += 1;
+    stats.payload_bytes += root_bytes;
+    stats.peak_live_bytes =
+        stats.peak_live_bytes.max(shared.peak_live_bytes.load(Ordering::Relaxed));
     let timed_out = shared.timed_out.load(Ordering::SeqCst);
     if cfg!(debug_assertions) && !timed_out && !shared.stop.load(Ordering::SeqCst) {
         shared.registry.assert_drained();
@@ -398,53 +564,134 @@ fn check_deadline<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
     }
 }
 
-/// Process one search-tree node, descending left branches in place.
+/// Record a node payload coming live (per-node byte accounting; peak
+/// tracking only on instrumented runs to keep atomics off the hot path).
+#[inline]
+fn track_alloc<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, len: usize) {
+    let bytes = (len * T::BYTES) as u64;
+    ctx.stats.payload_nodes += 1;
+    ctx.stats.payload_bytes += bytes;
+    if shared.cfg.instrument {
+        let live = shared.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        shared.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+}
+
+/// Recycle a completed node's payload into the worker pool and hand its
+/// view `Arc` back so the caller can retire the CSR buffers once its own
+/// borrow of the view is gone (see [`process`]).
+fn retire_node<T: DegElem>(
+    shared: &Shared<'_, T>,
+    ctx: &mut WorkerCtx<T>,
+    mut node: Node<T>,
+) -> Option<Arc<Graph>> {
+    if shared.cfg.instrument {
+        shared.live_bytes.fetch_sub(node.payload_bytes(), Ordering::Relaxed);
+    }
+    ctx.pool.release(std::mem::take(&mut node.deg));
+    node.view.take()
+}
+
+/// Process one search-tree node: descend left branches in place, then
+/// retire the node — its payload returns to the worker's pool, and if it
+/// was the last node over a component view, the view's CSR buffers are
+/// recycled too.
 fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
-    mut node: Node<T>,
+    node: Node<T>,
 ) {
+    // Hold one temporary reference so `g` stays valid while `node` (and
+    // its children) move around; descend returns the completed node's
+    // view Arc, which can only be unwrapped after this clone is dropped.
+    let view = node.view.clone();
+    let spent = {
+        let g: &Graph = view.as_deref().unwrap_or(shared.g);
+        descend(shared, g, ctx, handle, node)
+    };
+    drop(view);
+    if let Some(v) = spent {
+        // `Arc::into_inner` (not `try_unwrap`) so that when two workers
+        // race to retire the last nodes of a view, exactly one of them
+        // receives the Graph — the CSR buffers are always recycled and
+        // the live-bytes decrement can never be lost to the race.
+        if let Some(graph) = Arc::into_inner(v) {
+            let (row_ptr, adj) = graph.into_parts();
+            if shared.cfg.instrument {
+                shared.live_bytes.fetch_sub(csr_bytes(&row_ptr, &adj), Ordering::Relaxed);
+            }
+            ctx.upool.release(row_ptr);
+            ctx.upool.release(adj);
+        }
+    }
+}
+
+/// Bytes of an induced view's CSR arrays (live-memory accounting).
+#[inline]
+fn csr_bytes(row_ptr: &[u32], adj: &[u32]) -> u64 {
+    ((row_ptr.len() + adj.len()) * std::mem::size_of::<u32>()) as u64
+}
+
+/// The branch-and-reduce descent over one node (Alg. 2). `g` is the
+/// node's graph view; every vertex id in the node is local to it.
+/// Returns the retired node's view for [`process`] to recycle.
+fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
+    shared: &Shared<'_, T>,
+    g: &Graph,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+    mut node: Node<T>,
+) -> Option<Arc<Graph>> {
     loop {
         ctx.stats.tree_nodes += 1;
 
         // ---- reduce (Alg. 2 line 2) ----
         ctx.timer.switch(Activity::Reduce);
-        let red = reduce_node(shared, &mut node);
+        let red = reduce_node(shared, g, &mut node);
 
         // ---- stopping conditions (lines 3-4) ----
         ctx.timer.switch(Activity::Leaf);
         let bound = shared.bound_of(node.ctx);
         if node.sol >= bound {
-            complete(shared, node.ctx);
-            return;
+            let c = node.ctx;
+            let spent = retire_node(shared, ctx, node);
+            complete(shared, c);
+            return spent;
         }
         let rem = (bound - node.sol - 1) as u64;
         if node.edges > rem * rem {
-            complete(shared, node.ctx);
-            return;
+            let c = node.ctx;
+            let spent = retire_node(shared, ctx, node);
+            complete(shared, c);
+            return spent;
         }
         // ---- leaf (lines 5-7) ----
         if node.edges == 0 {
-            report_leaf(shared, node.ctx, node.sol);
-            complete(shared, node.ctx);
-            return;
+            let (c, sol) = (node.ctx, node.sol);
+            let spent = retire_node(shared, ctx, node);
+            report_leaf(shared, c, sol);
+            complete(shared, c);
+            return spent;
         }
 
         // ---- component search (line 9) ----
         if shared.cfg.component_aware {
             ctx.timer.switch(Activity::ComponentSearch);
-            match scan_components(shared, ctx, &node, &red) {
+            match scan_components(g, ctx, &node, &red) {
                 Scan::Single => {}
                 Scan::SingleSpecial(mvc) => {
                     ctx.stats.special_solved += 1;
-                    report_leaf(shared, node.ctx, node.sol + mvc);
-                    complete(shared, node.ctx);
-                    return;
+                    let (c, total) = (node.ctx, node.sol + mvc);
+                    let spent = retire_node(shared, ctx, node);
+                    report_leaf(shared, c, total);
+                    complete(shared, c);
+                    return spent;
                 }
                 Scan::Split { first_size, dmin, dmax } => {
-                    branch_on_components(shared, ctx, handle, node, first_size, dmin, dmax);
-                    return;
+                    return branch_on_components(
+                        shared, g, ctx, handle, node, first_size, dmin, dmax,
+                    );
                 }
             }
         }
@@ -456,12 +703,12 @@ fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
         debug_assert_ne!(vmax, u32::MAX);
 
         // right child: N(vmax) into S
-        let right = make_right_child(shared, ctx, &node, vmax);
+        let right = make_right_child(shared, g, ctx, &node, vmax);
         shared.registry.on_branch(node.ctx);
         push_child(ctx, handle, right);
 
         // left child: vmax into S — descend in place
-        cover_vertex(shared.g, &mut node, vmax);
+        cover_vertex(g, &mut node, vmax);
         node.sol += 1;
     }
 }
@@ -480,14 +727,18 @@ struct ReduceOutcome {
 
 const NO_VERTEX: ReduceOutcome = ReduceOutcome { present: 0, first: u32::MAX, vmax: u32::MAX };
 
-/// Apply the cheap reduction rules to a fixpoint over the bounds window.
+/// Apply the cheap reduction rules to a fixpoint over the bounds window
+/// of the node's graph view `g`.
 ///
 /// The final (unchanged) sweep doubles as the census pass: it counts the
 /// present vertices, finds the first one (the component-BFS seed), and
 /// selects the maximum-degree branch vertex — so neither the component
 /// scan nor the branching step needs another pass over the window.
-fn reduce_node<T: DegElem>(shared: &Shared<'_, T>, node: &mut Node<T>) -> ReduceOutcome {
-    let g = shared.g;
+fn reduce_node<T: DegElem>(
+    shared: &Shared<'_, T>,
+    g: &Graph,
+    node: &mut Node<T>,
+) -> ReduceOutcome {
     loop {
         if shared.cfg.use_bounds {
             node.bounds = node.bounds.tighten(&node.deg);
@@ -628,24 +879,31 @@ fn max_degree_vertex<T: DegElem>(node: &Node<T>) -> u32 {
     vmax
 }
 
-/// Build the right child (`N(vmax)` into the cover).
+/// Build the right child (`N(vmax)` into the cover). The payload copy —
+/// the engine's hottest allocation — is served from the worker's
+/// recycling pool, and is O(view) rather than O(root n) once component
+/// induction has shrunk the view.
 fn make_right_child<T: DegElem>(
     shared: &Shared<'_, T>,
+    g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
     vmax: u32,
 ) -> Node<T> {
-    let g = shared.g;
     ctx.nbuf.clear();
     ctx.nbuf.extend(
         g.neighbors(vmax).iter().copied().filter(|&w| node.deg[w as usize].to_u32() > 0),
     );
+    let mut deg = ctx.pool.acquire(node.deg.len());
+    deg.extend_from_slice(&node.deg);
+    track_alloc(shared, ctx, deg.len());
     let mut child = Node {
-        deg: node.deg.clone(),
+        deg,
         sol: node.sol + ctx.nbuf.len() as u32,
         edges: node.edges,
         bounds: node.bounds,
         ctx: node.ctx,
+        view: node.view.clone(),
     };
     for &u in &ctx.nbuf {
         if child.deg[u as usize].to_u32() > 0 {
@@ -705,14 +963,14 @@ enum Scan {
 /// On `Single`, also classifies the special-component rules (§III-D).
 /// `present_total` comes for free from the reduce fixpoint's final sweep.
 fn scan_components<T: DegElem>(
-    shared: &Shared<'_, T>,
+    g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
     red: &ReduceOutcome,
 ) -> Scan {
     let start = red.first;
     debug_assert!(start != u32::MAX, "edges > 0 implies a present vertex");
-    let (size, dmin, dmax) = bfs_component(shared.g, node, ctx, start);
+    let (size, dmin, dmax) = bfs_component(g, node, ctx, start);
     if (size as usize) == red.present {
         if dmin == dmax {
             if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
@@ -726,27 +984,30 @@ fn scan_components<T: DegElem>(
 
 /// Branch on components (Alg. 2 lines 14-20): register a parent entry,
 /// dispatch each component **eagerly** as it is found (special ones in
-/// closed form), and release the discovery reference at the end.
+/// closed form), and release the discovery reference at the end. The
+/// consumed split node is retired into the worker pool; its view `Arc`
+/// is handed back through [`process`] for CSR recycling.
 ///
 /// The split-detection BFS already discovered the first component
 /// (`ctx.queue`, visit stamps intact), so discovery resumes from there
 /// instead of re-walking it.
+#[allow(clippy::too_many_arguments)]
 fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
+    g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
     node: Node<T>,
     first_size: u32,
     first_dmin: u32,
     first_dmax: u32,
-) {
-    let g = shared.g;
+) -> Option<Arc<Graph>> {
     ctx.stats.component_branches += 1;
     let parent = shared.registry.new_parent(node.sol, node.ctx);
     ctx.stats.registry_entries += 1;
 
     // Component 1: reuse the detection BFS result.
-    dispatch_component(shared, ctx, handle, &node, parent, first_size, first_dmin, first_dmax);
+    dispatch_component(shared, g, ctx, handle, &node, parent, first_size, first_dmin, first_dmax);
     let mut comp_count = 1u32;
 
     // Remaining components: continue scanning under the same stamp.
@@ -767,20 +1028,25 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
         }
         let (size, dmin, dmax) = bfs_component_accumulate(g, &node, ctx, start);
         comp_count += 1;
-        dispatch_component(shared, ctx, handle, &node, parent, size, dmin, dmax);
+        dispatch_component(shared, g, ctx, handle, &node, parent, size, dmin, dmax);
     }
 
     *ctx.stats.comp_histogram.entry(comp_count).or_insert(0) += 1;
+    let spent = retire_node(shared, ctx, node);
     let mut on_root = |t: u32| shared.on_root_total(t);
     shared.registry.finish_scan(parent, &mut on_root);
+    spent
 }
 
 /// Handle one discovered component (vertex list in `ctx.queue`): solve
 /// cliques/chordless cycles in closed form (§III-D), otherwise register
-/// a child entry and dispatch the component node for search.
+/// a child entry and dispatch the component node for search — as a
+/// compact induced subproblem when the `induce_threshold` gate passes,
+/// or as a full-width masked copy of the parent's view otherwise.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     shared: &Shared<'_, T>,
+    g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
     node: &Node<T>,
@@ -805,25 +1071,91 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     let child_ctx = shared.registry.new_child(parent, best0, limit);
     ctx.stats.registry_entries += 1;
 
-    // Materialize the component node: degrees masked to the component.
-    let mut deg = vec![T::from_u32(0); node.deg.len()].into_boxed_slice();
+    let view_n = node.deg.len();
+    let induce = shared.cfg.induce_threshold > 0.0
+        && (size as f64) <= shared.cfg.induce_threshold * view_n as f64;
+    let child = if induce {
+        ctx.stats.induced_subproblems += 1;
+        induce_component_child(shared, g, ctx, node, child_ctx)
+    } else {
+        // Full-width fallback (ablation / `--induce-threshold 0`):
+        // degrees masked to the component over the parent's view.
+        let mut deg = ctx.pool.acquire(view_n);
+        deg.resize(view_n, T::from_u32(0));
+        let mut edges2 = 0u64;
+        let (mut lo, mut hi) = (u32::MAX, 0u32);
+        for &v in &ctx.queue {
+            let d = node.deg[v as usize];
+            deg[v as usize] = d;
+            edges2 += d.to_u32() as u64;
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        track_alloc(shared, ctx, view_n);
+        Node {
+            deg,
+            sol: 0,
+            edges: edges2 / 2,
+            bounds: NonZeroBounds { lo, hi },
+            ctx: child_ctx,
+            view: node.view.clone(),
+        }
+    };
+    push_child(ctx, handle, child);
+}
+
+/// Materialize the component in `ctx.queue` as a compact, renumbered
+/// subproblem: a component-local CSR plus a `|C|`-sized degree array,
+/// all built from recycled buffers. The paper's §IV-B subgraph induction,
+/// applied inside the tree — every descendant of this child now pays
+/// O(|C|) per clone and sweeps a |C|-wide window.
+fn induce_component_child<T: DegElem>(
+    shared: &Shared<'_, T>,
+    g: &Graph,
+    ctx: &mut WorkerCtx<T>,
+    node: &Node<T>,
+    child_ctx: u32,
+) -> Node<T> {
+    // Sorting makes the view→local map monotonic, so the induced CSR
+    // rows come out sorted (required for `has_edge` binary search).
+    ctx.queue.sort_unstable();
+    let k = ctx.queue.len();
+    for (i, &v) in ctx.queue.iter().enumerate() {
+        ctx.vmap[v as usize] = i as u32;
+    }
+    let mut deg = ctx.pool.acquire(k);
     let mut edges2 = 0u64;
-    let (mut lo, mut hi) = (u32::MAX, 0u32);
     for &v in &ctx.queue {
         let d = node.deg[v as usize];
-        deg[v as usize] = d;
         edges2 += d.to_u32() as u64;
-        lo = lo.min(v);
-        hi = hi.max(v);
+        deg.push(d);
     }
-    let child = Node {
+    let mut row_ptr = ctx.upool.acquire(k + 1);
+    let mut adj = ctx.upool.acquire(edges2 as usize);
+    induce_residual_into(
+        g,
+        &ctx.queue,
+        &ctx.vmap,
+        |w| node.deg[w as usize].to_u32(),
+        &mut row_ptr,
+        &mut adj,
+    );
+    track_alloc(shared, ctx, k);
+    if shared.cfg.instrument {
+        // The view's CSR stays live as long as any descendant holds the
+        // Arc; count it so off-vs-on peak comparisons are unbiased.
+        let bytes = csr_bytes(&row_ptr, &adj);
+        let live = shared.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        shared.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+    Node {
         deg,
         sol: 0,
         edges: edges2 / 2,
-        bounds: NonZeroBounds { lo, hi },
+        bounds: NonZeroBounds::full(k),
         ctx: child_ctx,
-    };
-    push_child(ctx, handle, child);
+        view: Some(Arc::new(Graph::from_csr_parts(row_ptr, adj))),
+    }
 }
 
 /// BFS one component starting at `start` using a fresh stamp.
@@ -1077,6 +1409,107 @@ mod tests {
             assert_eq!(acquired, pushed + 1, "{}: root + pushes", sched.name());
             assert!(out.stats.tree_nodes >= acquired, "{}", sched.name());
         }
+    }
+
+    #[test]
+    fn pool_buffers_are_cleared_and_rebuilt_on_reuse() {
+        let mut pool = BufferPool::<u32>::new();
+        let mut b = pool.acquire(8);
+        assert_eq!(pool.misses, 1);
+        b.extend_from_slice(&[7; 8]);
+        pool.release(b);
+        // a smaller request is served from the same class, cleared
+        let b2 = pool.acquire(5);
+        assert_eq!(pool.hits, 1);
+        assert!(b2.is_empty(), "recycled buffer must carry no stale entries");
+        assert!(b2.capacity() >= 5);
+        // the zero-fill path used by masked component children rebuilds
+        // every entry
+        let mut b3 = b2;
+        b3.resize(5, 0);
+        assert!(b3.iter().all(|&x| x == 0));
+        pool.release(b3);
+        // a request larger than anything pooled allocates fresh
+        let big = pool.acquire(1 << 12);
+        assert_eq!(pool.misses, 2);
+        assert!(big.capacity() >= 1 << 12);
+    }
+
+    #[test]
+    fn pool_class_always_fits_request() {
+        let mut pool = BufferPool::<u8>::new();
+        for len in [1usize, 2, 3, 7, 8, 9, 100, 1000] {
+            let b = pool.acquire(len);
+            assert!(b.capacity() >= len, "len {len}");
+            pool.release(b);
+        }
+        // re-acquire across the same lengths: recycled buffers must fit
+        for len in [1000usize, 100, 9, 8, 7, 3, 2, 1] {
+            let b = pool.acquire(len);
+            assert!(b.capacity() >= len, "len {len}");
+            pool.release(b);
+        }
+    }
+
+    #[test]
+    fn induction_on_off_agree_with_oracle() {
+        for seed in 0..8 {
+            let g = generators::union_of_random(4, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            for sched in BOTH_SCHEDULERS {
+                for threshold in [0.0, 0.5, 1.0] {
+                    let mut cfg = cfg_with(true, true, 4, sched);
+                    cfg.induce_threshold = threshold;
+                    let ub = crate::solver::greedy::greedy_bound(&g);
+                    let out = run::<u32>(&g, ub, cfg);
+                    assert_eq!(
+                        out.best,
+                        opt,
+                        "seed {seed} {} threshold {threshold}",
+                        sched.name()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn induced_subproblems_counted_and_pool_reused() {
+        let g = Graph::disjoint_union(&[generators::petersen(), generators::petersen()]);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let mut cfg = cfg_with(true, true, 2, SchedulerKind::WorkSteal);
+        cfg.instrument = true;
+        let out = run::<u32>(&g, ub, cfg.clone());
+        assert_eq!(out.best, oracle::mvc_size(&g));
+        assert!(out.stats.induced_subproblems >= 2, "both components should induce");
+        assert!(out.stats.pool_hits > 0, "right-child clones should recycle");
+        assert!(out.stats.payload_nodes > 0);
+        assert!(out.stats.peak_live_bytes > 0);
+        // with induction off, no induced subproblems are recorded
+        cfg.induce_threshold = 0.0;
+        let off = run::<u32>(&g, ub, cfg);
+        assert_eq!(off.best, out.best);
+        assert_eq!(off.stats.induced_subproblems, 0);
+    }
+
+    #[test]
+    fn induced_children_have_component_sized_payloads() {
+        // Two Petersen graphs: after the split each child payload must be
+        // 10 entries, not 20, so the total payload bytes with induction
+        // must be well below the full-width run's.
+        let g = Graph::disjoint_union(&[generators::petersen(), generators::petersen()]);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let on = run::<u32>(&g, ub, cfg_with(true, true, 1, SchedulerKind::WorkSteal));
+        let mut cfg_off = cfg_with(true, true, 1, SchedulerKind::WorkSteal);
+        cfg_off.induce_threshold = 0.0;
+        let off = run::<u32>(&g, ub, cfg_off);
+        assert_eq!(on.best, off.best);
+        let bpn_on = on.stats.payload_bytes as f64 / on.stats.payload_nodes.max(1) as f64;
+        let bpn_off = off.stats.payload_bytes as f64 / off.stats.payload_nodes.max(1) as f64;
+        assert!(
+            bpn_on < bpn_off,
+            "induced bytes/node {bpn_on} must beat full-width {bpn_off}"
+        );
     }
 
     #[test]

@@ -31,6 +31,7 @@ use crate::degree::Dtype;
 use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
+use occupancy::{Occupancy, OccupancyModel};
 pub use sched::SchedulerKind;
 use std::time::{Duration, Instant};
 
@@ -75,6 +76,12 @@ pub struct SolverConfig {
     pub use_bounds: bool,
     /// Small degree dtypes (§IV-D).
     pub small_dtypes: bool,
+    /// Component-local subproblem induction inside the tree: a split
+    /// component is re-induced as a compact renumbered subproblem when
+    /// `|C| ≤ induce_threshold × view`. `1.0` (default) induces every
+    /// component; `0.0` disables tree induction for ablation
+    /// (`--induce-threshold` on the CLI).
+    pub induce_threshold: f64,
     /// Worker override (default: occupancy model ∧ hardware threads).
     pub workers: Option<usize>,
     /// Scheduling runtime for the parallel engine: lock-free work
@@ -100,6 +107,7 @@ impl SolverConfig {
             use_crown: true,
             use_bounds: true,
             small_dtypes: true,
+            induce_threshold: engine::DEFAULT_INDUCE_THRESHOLD,
             workers: None,
             scheduler: SchedulerKind::default(),
             timeout: None,
@@ -149,6 +157,29 @@ impl SolverConfig {
     pub fn with_scheduler(mut self, s: SchedulerKind) -> SolverConfig {
         self.scheduler = s;
         self
+    }
+
+    /// Set the component-induction gate (`0.0` disables tree induction,
+    /// `1.0` induces every split component).
+    pub fn with_induce_threshold(mut self, t: f64) -> SolverConfig {
+        self.induce_threshold = t;
+        self
+    }
+}
+
+/// Occupancy plan used for scheduler sizing: with tree induction on, the
+/// memory model charges a shrinking-payload path (§IV-B applied at every
+/// split) instead of depth × full-width, which buys deeper initial
+/// queues for the same modeled stack budget.
+fn sizing_occupancy(cfg: &SolverConfig, p: &prep::Prepared) -> Occupancy {
+    if cfg.induce_threshold > 0.0 && cfg.component_aware {
+        OccupancyModel::default().plan_induced(
+            p.residual.graph.num_vertices(),
+            p.dtype,
+            cfg.induce_threshold,
+        )
+    } else {
+        p.occupancy.clone()
     }
 }
 
@@ -256,7 +287,8 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
                 deadline,
                 instrument: cfg.instrument,
                 scheduler: cfg.scheduler,
-                queue_capacity: p.occupancy.queue_capacity(),
+                queue_capacity: sizing_occupancy(cfg, &p).queue_capacity(),
+                induce_threshold: cfg.induce_threshold,
             };
             (run_engine(&p.residual.graph, p.dtype, initial, ecfg), None)
         }
@@ -340,7 +372,8 @@ pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
                 deadline,
                 instrument: cfg.instrument,
                 scheduler: cfg.scheduler,
-                queue_capacity: p.occupancy.queue_capacity(),
+                queue_capacity: sizing_occupancy(cfg, &p).queue_capacity(),
+                induce_threshold: cfg.induce_threshold,
             };
             run_engine(&p.residual.graph, p.dtype, initial, ecfg)
         }
@@ -494,6 +527,20 @@ mod tests {
                     );
                     assert!(solve_pvc(&g, opt, &cfg).found, "{} pvc", kind.name());
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn induce_threshold_knob_preserves_results() {
+        for seed in 0..6 {
+            let g = generators::union_of_random(4, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            for t in [0.0, 0.4, 1.0] {
+                let cfg = SolverConfig::proposed().with_induce_threshold(t);
+                let r = solve_mvc(&g, &cfg);
+                assert_eq!(r.best, opt, "seed {seed} threshold {t}");
+                assert!(solve_pvc(&g, opt, &cfg).found, "seed {seed} threshold {t} pvc");
             }
         }
     }

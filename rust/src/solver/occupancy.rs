@@ -38,10 +38,16 @@ impl Default for OccupancyModel {
 pub struct Occupancy {
     /// Modeled number of thread blocks the GPU could keep resident.
     pub blocks: usize,
-    /// Bytes of one degree array (stack entry payload).
+    /// Bytes of one *root-width* degree array (stack entry payload).
     pub degree_array_bytes: u64,
-    /// Modeled per-block stack depth bound.
+    /// Modeled per-block stack depth bound (node count).
     pub stack_depth: u64,
+    /// Modeled payload bytes along one root-to-leaf stack path. Without
+    /// tree induction every frame is full-width, so this is
+    /// `degree_array_bytes × stack_depth`; with component-local induction
+    /// ([`OccupancyModel::plan_induced`]) payloads shrink at every split
+    /// and the path sum collapses to a small multiple of the root array.
+    pub path_bytes: u64,
     /// Whether one degree array fits in shared memory.
     pub fits_shared_mem: bool,
     /// Degree-array element type.
@@ -51,10 +57,20 @@ pub struct Occupancy {
 impl Occupancy {
     /// Initial per-worker scheduler queue capacity derived from the
     /// modeled stack depth: on the GPU each block's stack is preallocated
-    /// to the branching-depth bound, and the work-stealing deques reuse
-    /// that bound as their starting size so the common case never grows.
+    /// to the branching-depth bound, and both schedulers reuse that bound
+    /// as their starting size so the common case never grows.
+    ///
+    /// When tree induction shrinks the per-path payload (`path_bytes`
+    /// below `degree_array_bytes × stack_depth`), the saved stack budget
+    /// is surfaced as deeper initial queues: the same bytes now admit
+    /// more in-flight nodes per worker, which is exactly the paper's
+    /// "memory footprint limits concurrent workers" lever.
     pub fn queue_capacity(&self) -> usize {
-        (self.stack_depth as usize).next_power_of_two().clamp(64, 4096)
+        let base = (self.stack_depth as usize).next_power_of_two().clamp(64, 4096);
+        // Effective full-width frames the memory model charges per path.
+        let eff = (self.path_bytes / self.degree_array_bytes.max(1)).max(1);
+        let boost = ((self.stack_depth / eff).max(1) as usize).next_power_of_two().min(8);
+        (base * boost).clamp(64, 8192)
     }
 }
 
@@ -67,16 +83,47 @@ impl OccupancyModel {
     pub fn plan(&self, n: usize, dtype: Dtype) -> Occupancy {
         let degree_array_bytes = (n as u64) * dtype.bytes() as u64;
         let stack_depth = (n as u64 + 1).min(4096);
-        let per_block = degree_array_bytes.saturating_mul(stack_depth).max(1);
-        let blocks = (self.stack_budget_bytes / per_block)
+        let path_bytes = degree_array_bytes.saturating_mul(stack_depth).max(1);
+        let blocks = (self.stack_budget_bytes / path_bytes)
             .clamp(1, self.max_blocks as u64) as usize;
         Occupancy {
             blocks,
             degree_array_bytes,
             stack_depth,
+            path_bytes,
             fits_shared_mem: degree_array_bytes <= self.shared_mem_bytes,
             dtype,
         }
+    }
+
+    /// Model a launch when the engine re-induces each component as a
+    /// compact subproblem inside the tree (gated on `|C| ≤ alpha·n`; see
+    /// `EngineCfg::induce_threshold`). `alpha ≤ 0` means induction is off
+    /// and the plan degenerates to [`OccupancyModel::plan`].
+    ///
+    /// With induction, a node's payload after `k` enclosing splits is at
+    /// most `alpha^k · n` entries, so the payload bytes along one
+    /// root-to-leaf stack path form the geometric series
+    /// `n·(1 + α + α² + …) = n/(1−α)` instead of `n × depth`. We charge a
+    /// small constant of full-width frames for the pre-split prefix plus
+    /// the series tail, clamping `α` away from 1 (α = 1 still shrinks —
+    /// components are strict subsets of their parent — but the geometric
+    /// model needs a finite ratio). The collapsed `path_bytes` is what
+    /// lets the block count recover toward `max_blocks` on large graphs:
+    /// the paper's root-induction occupancy win, applied at every split.
+    pub fn plan_induced(&self, n: usize, dtype: Dtype, alpha: f64) -> Occupancy {
+        let base = self.plan(n, dtype);
+        if alpha <= 0.0 {
+            return base;
+        }
+        const PRE_SPLIT_FRAMES: u64 = 8;
+        let r = alpha.clamp(0.1, 0.875);
+        let series = (1.0 / (1.0 - r)).ceil() as u64;
+        let eff_depth = (PRE_SPLIT_FRAMES + series).min(base.stack_depth);
+        let path_bytes = base.degree_array_bytes.saturating_mul(eff_depth).max(1);
+        let blocks = (self.stack_budget_bytes / path_bytes)
+            .clamp(1, self.max_blocks as u64) as usize;
+        Occupancy { blocks, path_bytes, ..base }
     }
 
     /// Number of OS worker threads to actually run for a modeled launch:
@@ -133,6 +180,38 @@ mod tests {
         let big = m.plan(1 << 20, Dtype::U32);
         assert_eq!(big.queue_capacity(), 4096); // clamped at the depth cap
         assert!(m.plan(3, Dtype::U8).queue_capacity() >= 64);
+    }
+
+    #[test]
+    fn induced_plan_recovers_blocks_on_large_graphs() {
+        let m = OccupancyModel::default();
+        let flat = m.plan(90_000, Dtype::U32);
+        let induced = m.plan_induced(90_000, Dtype::U32, 1.0);
+        // the collapsed path charge admits far more resident blocks
+        assert!(induced.blocks > flat.blocks);
+        assert!(induced.path_bytes < flat.path_bytes);
+        // per-frame payload and shared-mem fit are unchanged: induction
+        // shrinks the *stack*, not the root array
+        assert_eq!(induced.degree_array_bytes, flat.degree_array_bytes);
+        assert_eq!(induced.fits_shared_mem, flat.fits_shared_mem);
+        assert_eq!(induced.stack_depth, flat.stack_depth);
+    }
+
+    #[test]
+    fn induced_plan_alpha_zero_is_flat() {
+        let m = OccupancyModel::default();
+        assert_eq!(m.plan_induced(10_000, Dtype::U16, 0.0), m.plan(10_000, Dtype::U16));
+    }
+
+    #[test]
+    fn induced_queue_capacity_is_boosted_and_bounded() {
+        let m = OccupancyModel::default();
+        let flat = m.plan(5_000, Dtype::U16);
+        let induced = m.plan_induced(5_000, Dtype::U16, 0.5);
+        assert!(induced.queue_capacity() >= flat.queue_capacity());
+        assert!(induced.queue_capacity() <= 8192);
+        // tiny graphs stay at the floor either way
+        assert_eq!(m.plan_induced(3, Dtype::U8, 1.0).queue_capacity(), 64);
     }
 
     #[test]

@@ -31,11 +31,16 @@ pub struct ShardedScheduler<N: Send> {
     /// Statically-assigned nodes, taken over by the worker's handle.
     seeds: Vec<Mutex<Vec<N>>>,
     workers: usize,
+    /// Initial private-stack capacity (the occupancy model's stack-depth
+    /// bound — induction-aware, so shrinking payloads buy deeper stacks).
+    queue_capacity: usize,
 }
 
 impl<N: Send> ShardedScheduler<N> {
     /// Build a scheduler with one shard and one seed slot per worker.
-    pub fn new(workers: usize, load_balance: bool) -> ShardedScheduler<N> {
+    /// `queue_capacity` presizes each worker's private stack (stacks
+    /// still grow beyond it as needed).
+    pub fn new(workers: usize, load_balance: bool, queue_capacity: usize) -> ShardedScheduler<N> {
         let workers = workers.max(1);
         ShardedScheduler {
             worklist: Worklist::new(workers),
@@ -44,6 +49,7 @@ impl<N: Send> ShardedScheduler<N> {
             load_balance,
             seeds: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             workers,
+            queue_capacity,
         }
     }
 }
@@ -71,7 +77,10 @@ impl<N: Send> Scheduler<N> for ShardedScheduler<N> {
 
     fn handle(&self, worker: usize) -> ShardedHandle<'_, N> {
         assert!(worker < self.workers, "worker {worker} out of range");
-        let stack = std::mem::take(&mut *self.seeds[worker].lock().unwrap());
+        let mut stack = std::mem::take(&mut *self.seeds[worker].lock().unwrap());
+        if stack.capacity() < self.queue_capacity {
+            stack.reserve(self.queue_capacity - stack.len());
+        }
         ShardedHandle { s: self, id: worker, stack, spins: 0, c: WorkerCounters::default() }
     }
 }
@@ -152,7 +161,7 @@ mod tests {
     #[test]
     fn drains_branching_workload() {
         for workers in [1usize, 4] {
-            let s: ShardedScheduler<u32> = ShardedScheduler::new(workers, true);
+            let s: ShardedScheduler<u32> = ShardedScheduler::new(workers, true, 64);
             s.inject(10);
             let leaves = AtomicU64::new(0);
             std::thread::scope(|scope| {
@@ -188,7 +197,7 @@ mod tests {
 
     #[test]
     fn seeds_partition_statically() {
-        let s: ShardedScheduler<u32> = ShardedScheduler::new(2, false);
+        let s: ShardedScheduler<u32> = ShardedScheduler::new(2, false, 64);
         s.seed(0, 1);
         s.seed(0, 2);
         s.seed(1, 3);

@@ -7,27 +7,13 @@
 use cavc::graph::{components, generators, Graph};
 use cavc::solver::{oracle, solve_mvc, SchedulerKind, SolverConfig};
 
-/// Nested split gadget: `G(0)` is the Petersen graph (3-regular,
-/// triangle-free — immune to every reduction rule and not special);
-/// `G(d)` is a hub joined to 5 vertices of each of two `G(d-1)` copies.
-/// The hub is the unique maximum-degree vertex (degree 10), so the
-/// engine's left branch covers it first and the residual graph splits
-/// exactly at depth d, then again at depth d-1 inside each part — a
-/// split cascade that exercises nested registry parents.
+/// Nested split gadget (see `generators::split_gadget`): hub-joined
+/// Petersen copies whose hubs are the unique max-degree vertices at
+/// every nesting level, so covering them cascades the residual graph
+/// through `d` nested splits — exercising nested registry parents and,
+/// since PR 2, component-local subproblem induction.
 fn nested_split(depth: usize) -> Graph {
-    if depth == 0 {
-        return generators::petersen();
-    }
-    let part = nested_split(depth - 1);
-    let pn = part.num_vertices() as u32;
-    let two = Graph::disjoint_union(&[part.clone(), part]);
-    let hub = 2 * pn;
-    let mut edges: Vec<(u32, u32)> = two.edges().collect();
-    for i in 0..5u32 {
-        edges.push((hub, 2 * i)); // spread over even vertices of copy 1
-        edges.push((hub, pn + 2 * i)); // and of copy 2
-    }
-    Graph::from_edges(2 * pn as usize + 1, &edges)
+    generators::split_gadget(depth)
 }
 
 #[test]
@@ -36,7 +22,7 @@ fn gadget_shape_is_as_designed() {
     assert_eq!(g1.num_vertices(), 21);
     assert_eq!(components::count(&g1), 1, "gadget must start connected");
     let hub = 20u32;
-    assert_eq!(g1.degree(hub), 10);
+    assert_eq!(g1.degree(hub), 12); // 2·(5 + depth) hub spokes
     // hub strictly dominates every other degree
     let snd = (0..20u32).map(|v| g1.degree(v)).max().unwrap();
     assert!(g1.degree(hub) > snd, "hub must be the unique branch vertex");
@@ -137,6 +123,42 @@ fn deep_gadget_matches_sequential_reference() {
         let r = solve_mvc(&g, &cfg);
         assert_eq!(r.best, seq.best, "{}", sched.name());
         assert!(r.stats.component_branches >= 2, "{}: nested splits expected", sched.name());
+    }
+}
+
+#[test]
+fn induction_matches_full_width_on_gadgets() {
+    // The gadget splits at depth k: the induced run must agree with the
+    // full-width run and actually materialize compact subproblems.
+    for depth in 1..=2usize {
+        let g = nested_split(depth);
+        let opt = oracle::mvc_size(&g);
+        for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+            let on = solve_mvc(
+                &g,
+                &SolverConfig::proposed().with_workers(4).with_scheduler(sched),
+            );
+            let off = solve_mvc(
+                &g,
+                &SolverConfig::proposed()
+                    .with_workers(4)
+                    .with_scheduler(sched)
+                    .with_induce_threshold(0.0),
+            );
+            assert_eq!(on.best, opt, "depth {depth} {} induced", sched.name());
+            assert_eq!(off.best, opt, "depth {depth} {} full-width", sched.name());
+            assert!(
+                on.stats.induced_subproblems >= 2,
+                "depth {depth} {}: split must induce subproblems",
+                sched.name()
+            );
+            assert_eq!(
+                off.stats.induced_subproblems,
+                0,
+                "depth {depth} {}: threshold 0 must disable induction",
+                sched.name()
+            );
+        }
     }
 }
 

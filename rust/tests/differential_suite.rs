@@ -139,6 +139,69 @@ fn differential_pvc_all_variants() {
 }
 
 #[test]
+fn differential_induction_on_off() {
+    // Component-local subproblem induction must be invisible in results:
+    // identical `best` for full-width and induced subproblems, for MVC
+    // and PVC, across both schedulers, on graphs built to split — the
+    // seeded gadget/union/bridge families plus random mixes.
+    let mut rng = SplitMix64::new(SEED ^ 0x17DC_E000);
+    let schedulers = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+    let thresholds = [0.0, 0.35, 1.0];
+    let mut cases: Vec<(Graph, String)> = vec![
+        (generators::split_gadget(1), "split_gadget(1)".into()),
+        (generators::split_gadget(2), "split_gadget(2)".into()),
+    ];
+    for case in 0..24 {
+        let (g, tag) = match case % 3 {
+            0 => {
+                let seed = rng.next_u64();
+                (generators::union_of_random(3, 3, 7, 0.3, seed), format!("union({seed})"))
+            }
+            1 => {
+                let num = rng.range(2, 4);
+                (cliques_with_bridges(num, 3, 6, &mut rng), format!("cliques+bridges({num})"))
+            }
+            _ => {
+                let n = rng.range(8, 22);
+                let p = 0.1 + rng.next_f64() * 0.25;
+                let seed = rng.next_u64();
+                (generators::erdos_renyi(n, p, seed), format!("er({n},{p:.2},{seed})"))
+            }
+        };
+        cases.push((g, tag));
+    }
+    for (case, (g, tag)) in cases.iter().enumerate() {
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(g);
+        let workers = 1 + case % 4;
+        for sched in schedulers {
+            for &t in &thresholds {
+                let cfg = SolverConfig::proposed()
+                    .with_workers(workers)
+                    .with_scheduler(sched)
+                    .with_induce_threshold(t);
+                let r = solve_mvc(g, &cfg);
+                assert!(!r.timed_out, "case {case} {tag}: timed out");
+                assert_eq!(
+                    r.best,
+                    opt,
+                    "case {case} {tag}: induce={t} ({}, {workers} workers) != oracle",
+                    sched.name()
+                );
+                let pvc = solve_pvc(g, opt, &cfg);
+                assert!(pvc.found, "case {case} {tag}: induce={t} PVC missed k=opt");
+                assert!(
+                    !solve_pvc(g, opt.saturating_sub(1), &cfg).found,
+                    "case {case} {tag}: induce={t} PVC found below optimum"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn differential_runs_are_deterministic() {
     // The same seed must generate the same case list — the suite's
     // reproducibility contract.

@@ -104,7 +104,7 @@ fn termination_matches_between_schedulers() {
         let ws: WorkStealScheduler<u64> = WorkStealScheduler::new(workers, true, 64);
         ws.inject(root);
         let (a, _) = drain_tree(&ws, workers);
-        let sh: ShardedScheduler<u64> = ShardedScheduler::new(workers, true);
+        let sh: ShardedScheduler<u64> = ShardedScheduler::new(workers, true, 64);
         sh.inject(root);
         let (b, _) = drain_tree(&sh, workers);
         assert_eq!(a, want, "worksteal workers={workers}");
