@@ -1,0 +1,70 @@
+//! Quickstart for the resident solver service ([`cavc::solver::service`]).
+//!
+//! Builds one [`VcService`] (a persistent worker pool), then shows the
+//! whole job lifecycle: fire-and-wait, a concurrent mixed MVC/PVC batch
+//! on the shared pool, a per-job deadline, and cancellation.
+//!
+//! Run with: `cargo run --release --example service_batch`
+
+use cavc::graph::generators;
+use cavc::solver::{JobOptions, Problem, SolverConfig, Termination, VcService};
+use std::time::Duration;
+
+fn main() {
+    // One pool for the whole process: construct once, submit forever.
+    let svc = VcService::builder()
+        .workers(4)
+        .config(SolverConfig::proposed())
+        .build();
+    println!("service up: {} resident workers", svc.workers());
+
+    // 1) Fire-and-wait.
+    let sol = svc.solve(Problem::mvc(generators::petersen()));
+    println!(
+        "petersen: mvc = {} ({:?}, {} tree nodes)",
+        sol.objective, sol.termination, sol.stats.tree_nodes
+    );
+
+    // 2) A concurrent batch of mixed problems: every submit returns
+    //    immediately with a JobHandle; the jobs share the pool.
+    let handles: Vec<_> = (0..8u64)
+        .map(|seed| {
+            let g = generators::erdos_renyi(18, 0.2, seed);
+            if seed % 2 == 0 {
+                svc.submit(Problem::mvc(g))
+            } else {
+                svc.submit(Problem::pvc(g, 12))
+            }
+        })
+        .collect();
+    for h in &handles {
+        let sol = h.wait();
+        println!(
+            "job {:>2}: {:?} -> objective {} (feasible: {})",
+            h.id(),
+            sol.problem,
+            sol.objective,
+            sol.feasible
+        );
+    }
+
+    // 3) Per-job deadline: a dense graph under a 50ms budget returns an
+    //    upper bound with DeadlineExpired.
+    let dense = generators::p_hat(120, 0.3, 0.8, 7);
+    let bounded = svc.submit_with(
+        Problem::mvc(dense.clone()),
+        JobOptions { timeout: Some(Duration::from_millis(50)), ..JobOptions::default() },
+    );
+    let sol = bounded.wait();
+    println!("deadline job: mvc <= {} ({:?})", sol.objective, sol.termination);
+
+    // 4) Cancellation: queued nodes of the job are dropped as they
+    //    surface; other jobs are untouched.
+    let doomed = svc.submit(Problem::mvc(dense));
+    doomed.cancel();
+    let sol = doomed.wait();
+    assert_eq!(sol.termination, Termination::Cancelled);
+    println!("cancelled job: mvc <= {} ({:?})", sol.objective, sol.termination);
+
+    // Dropping the service drains outstanding jobs and joins the pool.
+}

@@ -1,0 +1,92 @@
+//! Service throughput: jobs/sec on a batch of small graphs, resident
+//! pool vs per-call spawn.
+//!
+//! The resident [`VcService`] pays thread spawn + pool warm-up once and
+//! runs every job on shared workers with recycled per-worker scratch;
+//! the per-call baseline is the one-shot `solve_mvc` engine, which
+//! spawns and joins a full `thread::scope` worker set for every graph
+//! (forced here via an explicit `with_workers`, which bypasses the
+//! default-service shim). Three modes are timed on an identical batch:
+//!
+//! * `per-call spawn`   — a `solve_mvc` loop, one pool per call;
+//! * `resident serial`  — one service, submit → wait one job at a time
+//!   (isolates the spawn savings);
+//! * `resident batch`   — one service, all jobs in flight concurrently
+//!   (adds cross-job parallelism on the shared pool).
+//!
+//! Every mode must produce identical answers. Results go to stdout and
+//! `bench_out/throughput.csv`. `CAVC_SMOKE=1` shrinks the batch for the
+//! CI smoke job (trajectory only, no thresholds).
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{solve_mvc, Problem, SolverConfig, VcService};
+use std::time::Instant;
+
+/// A deterministic batch of small mixed-family graphs (the "many small
+/// requests" traffic shape the service exists for).
+fn batch(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| {
+            let seed = 0xBEE5_0000 + i as u64;
+            match i % 4 {
+                0 => generators::erdos_renyi(14 + i % 10, 0.2, seed),
+                1 => generators::union_of_random(3, 3, 6, 0.3, seed),
+                2 => generators::random_tree(24 + i % 16, seed),
+                _ => generators::erdos_renyi(18, 0.15, seed),
+            }
+        })
+        .collect()
+}
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let n = if smoke { 40 } else { 200 };
+    let graphs = batch(n);
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    println!("# service throughput — {n} small graphs, {workers} workers");
+
+    // Baseline: per-call spawn. The explicit worker count forces the
+    // one-shot engine (a fresh thread::scope pool per call).
+    let oneshot = SolverConfig::proposed().with_workers(workers);
+    let t = Instant::now();
+    let base: Vec<u32> = graphs.iter().map(|g| solve_mvc(g, &oneshot).best).collect();
+    let per_call_s = t.elapsed().as_secs_f64();
+
+    // Resident pool, serial submission: spawn savings only.
+    let svc = VcService::builder().workers(workers).build();
+    let t = Instant::now();
+    let serial: Vec<u32> =
+        graphs.iter().map(|g| svc.solve(Problem::mvc(g.clone())).objective).collect();
+    let serial_s = t.elapsed().as_secs_f64();
+
+    // Resident pool, everything in flight: spawn savings + cross-job
+    // parallelism.
+    let t = Instant::now();
+    let handles: Vec<_> = graphs.iter().map(|g| svc.submit(Problem::mvc(g.clone()))).collect();
+    let conc: Vec<u32> = handles.iter().map(|h| h.wait().objective).collect();
+    let conc_s = t.elapsed().as_secs_f64();
+
+    assert_eq!(base, serial, "resident serial must reproduce the one-shot answers");
+    assert_eq!(base, conc, "resident batch must reproduce the one-shot answers");
+
+    let jps = |s: f64| n as f64 / s.max(1e-12);
+    println!("{:<18} {:>10} {:>12}", "mode", "secs", "jobs/s");
+    println!("{:<18} {:>10.4} {:>12.1}", "per-call spawn", per_call_s, jps(per_call_s));
+    println!("{:<18} {:>10.4} {:>12.1}", "resident serial", serial_s, jps(serial_s));
+    println!("{:<18} {:>10.4} {:>12.1}", "resident batch", conc_s, jps(conc_s));
+    println!(
+        "resident batch vs per-call spawn: {:.2}x",
+        per_call_s / conc_s.max(1e-12)
+    );
+
+    let rows = vec![
+        format!("per-call-spawn,{n},{workers},{per_call_s},{}", jps(per_call_s)),
+        format!("resident-serial,{n},{workers},{serial_s},{}", jps(serial_s)),
+        format!("resident-batch,{n},{workers},{conc_s},{}", jps(conc_s)),
+    ];
+    let header = "mode,jobs,workers,secs,jobs_per_sec";
+    match cavc::harness::tables::write_csv("throughput", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

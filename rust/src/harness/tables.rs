@@ -46,6 +46,10 @@ pub fn cell_scheduler() -> SchedulerKind {
 pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
     cfg.timeout = Some(cell_timeout());
     cfg.scheduler = cell_scheduler();
+    // Paper tables compare engine variants, so every column must share
+    // the one-shot shape (per-call pool, occupancy-model worker sizing)
+    // rather than mixing warm resident-service runs with cold ones.
+    cfg.one_shot = true;
     let r = solver::solve_mvc(g, &cfg);
     Timed {
         secs: r.elapsed.as_secs_f64(),
@@ -59,6 +63,7 @@ pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
 pub fn run_pvc(g: &Graph, k: u32, mut cfg: SolverConfig) -> (Timed, bool) {
     cfg.timeout = Some(cell_timeout());
     cfg.scheduler = cell_scheduler();
+    cfg.one_shot = true; // variant columns share the one-shot shape
     let r = solver::solve_pvc(g, k, &cfg);
     (
         Timed {

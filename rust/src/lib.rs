@@ -39,18 +39,58 @@
 //! executed via PJRT from the Rust runtime (behind the `xla` feature;
 //! native fallbacks otherwise).
 //!
+//! ## Service layer: resident pool, unified Problem/Solution API
+//!
+//! On top of the engine sits [`solver::service`]: a
+//! [`solver::VcService`] is built once and owns a *resident* worker
+//! pool — the GPU analogy is the grid itself, which is launched once
+//! and fed work, not re-launched per request. The entry API is a
+//! unified [`solver::Problem`] (`Mvc`/`Pvc`/`Mis`) and
+//! [`solver::Solution`] (objective, optional witness, stats, prep
+//! summary, termination reason); [`solver::VcService::submit`] returns
+//! a [`solver::JobHandle`] with `wait`/`try_result`/`cancel` and a
+//! per-job deadline.
+//!
+//! **Job lifecycle.** `submit` injects a *setup* item; a worker runs
+//! the preparation pipeline (the "job setup" half of the engine) and
+//! pushes the job's root search node; branch-and-reduce node processing
+//! then fans out across the pool. Every worklist item carries an `Arc`
+//! to its job's state — registry, global best, stop flags, stats sink —
+//! which is the job-id scoping that keeps the component-branch
+//! registry's completion/pruning/last-descendant aggregation job-local
+//! while nodes of different jobs interleave on the same deques
+//! (context ids in a node index that job's private registry arena).
+//! A per-job outstanding-item count detects completion: whoever
+//! decrements it to zero finalizes the `Solution` and wakes waiters.
+//! Scheduler-side, resident pools park on quiescence instead of
+//! terminating (condvar park/unpark + shutdown drain in
+//! `solver::sched`), so many small jobs run concurrently while one
+//! large job is still branching.
+//!
+//! The classic free functions survive as thin shims: service-compatible
+//! configurations of [`solver::solve_mvc`]/[`solver::solve_pvc`] route
+//! through a lazily-built process-wide default service (no per-call
+//! thread spawn); sequential, no-load-balance, instrumented, and
+//! explicit pool-shape calls keep the one-shot engine.
+//!
 //! ## Quickstart
 //!
 //! ```no_run
 //! use cavc::graph::Graph;
-//! use cavc::solver::{solve_mvc, SolverConfig};
+//! use cavc::solver::{solve_mvc, Problem, SolverConfig, VcService};
 //!
 //! let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
 //! let res = solve_mvc(&g, &SolverConfig::proposed());
 //! assert_eq!(res.best, 2);
+//!
+//! // The same solve as a service job (resident pool, concurrent jobs):
+//! let svc = VcService::builder().workers(4).build();
+//! let sol = svc.solve(Problem::mvc(g));
+//! assert_eq!(sol.objective, 2);
 //! ```
 //!
-//! See `DESIGN.md` for the system inventory and the per-experiment index.
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `examples/service_batch.rs` for the full job lifecycle.
 
 pub mod degree;
 pub mod graph;

@@ -18,15 +18,18 @@ use cavc::bail;
 use cavc::graph::{generators, io, Graph};
 use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
-use cavc::solver::{self, SchedulerKind, SolverConfig, Variant};
+use cavc::solver::engine::EngineStats;
+use cavc::solver::{
+    self, JobHandle, Problem, SchedulerKind, SolverConfig, Termination, VcService, Variant,
+};
 
 use cavc::util::cli::Args;
 use std::path::Path;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
-    "sched", "induce-threshold",
+    "sched", "induce-threshold", "jobs",
 ];
 
 fn main() {
@@ -70,7 +73,10 @@ fn print_help() {
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
         \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
         \x20                   [--induce-threshold A]  (induce split components when |C| <= A*view; 0 = off)\n\
-         pvc <graph|dataset> --k K [--variant ...]\n         mis <graph|dataset> [--variant ...]\n\
+        \x20                   [--jobs LIST]           (batch mode: one resident service solves every\n\
+        \x20                                            graph in LIST — one spec per line, '#' comments —\n\
+        \x20                                            plus any extra positional specs, concurrently)\n\
+         pvc <graph|dataset> --k K [--variant ...] [--jobs LIST]\n         mis <graph|dataset> [--variant ...]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
          gen <er|ba|grid|cfat|phat|banded|union> --out FILE [--n N] [--p P] [--seed S]\n\
@@ -121,7 +127,99 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
     Ok(cfg)
 }
 
+/// Resolve the batch job list: the lines of `--jobs LIST` (one graph
+/// spec per line, `#` comments) plus any extra positional specs.
+fn batch_specs(args: &Args, list: &str) -> Result<Vec<String>> {
+    let text = std::fs::read_to_string(list).with_context(|| format!("reading {list}"))?;
+    let mut specs: Vec<String> = text
+        .lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(String::from)
+        .collect();
+    specs.extend(args.pos_rest(1).iter().cloned());
+    if specs.is_empty() {
+        bail!("--jobs {list}: no graph specs (one per line; '#' starts a comment)");
+    }
+    Ok(specs)
+}
+
+/// One resident service shaped by the CLI flags (workers / scheduler /
+/// per-job solver knobs all come in through the parsed config).
+fn build_service(cfg: &SolverConfig) -> VcService {
+    let mut b = VcService::builder().config(cfg.clone()).scheduler(cfg.scheduler);
+    if let Some(w) = cfg.workers {
+        b = b.workers(w);
+    }
+    b.build()
+}
+
+/// Batch mode: feed every graph spec through one resident service as
+/// concurrent jobs and print a per-job table plus aggregate throughput.
+fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
+    let specs = batch_specs(args, list)?;
+    let cfg = parse_config(args)?;
+    if cfg.variant == Variant::Sequential || cfg.variant == Variant::NoLoadBalance {
+        bail!("--jobs batch mode needs a load-balanced parallel variant (proposed|yamout)");
+    }
+    let svc = build_service(&cfg);
+    let t0 = Instant::now();
+    let mut jobs: Vec<(String, JobHandle)> = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let g = load_graph(spec)?;
+        let problem = match k {
+            Some(k) => Problem::pvc(g, k),
+            None => Problem::mvc(g),
+        };
+        jobs.push((spec.clone(), svc.submit(problem)));
+    }
+    let submitted = t0.elapsed().as_secs_f64();
+
+    let mut agg = EngineStats::default();
+    println!(
+        "{:<28} {:>10} {:>12} {:>10}  {}",
+        "graph", "answer", "tree nodes", "elapsed", "status"
+    );
+    for (spec, job) in &jobs {
+        let sol = job.wait();
+        agg.merge(&sol.stats);
+        let answer = match k {
+            Some(_) if sol.feasible => format!("<= {}", sol.objective),
+            Some(k) => format!("> {k}"),
+            None => sol.objective.to_string(),
+        };
+        let status = match sol.termination {
+            Termination::Complete => "ok",
+            Termination::DeadlineExpired => "timeout",
+            Termination::Cancelled => "cancelled",
+            Termination::Failed => "failed",
+        };
+        println!(
+            "{:<28} {:>10} {:>12} {:>9.3}s  {}",
+            spec,
+            answer,
+            sol.stats.tree_nodes,
+            sol.elapsed.as_secs_f64(),
+            status
+        );
+    }
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "-- {} jobs on {} resident workers: {:.3}s total ({:.1} jobs/s; submit {:.3}s), {} tree nodes",
+        jobs.len(),
+        svc.workers(),
+        total,
+        jobs.len() as f64 / total.max(1e-9),
+        submitted,
+        agg.tree_nodes
+    );
+    Ok(())
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
+    if let Some(list) = args.get("jobs") {
+        return cmd_batch(args, list, None);
+    }
     let spec = args.pos(1).context("solve: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
     let mut cfg = parse_config(args)?;
@@ -152,12 +250,15 @@ fn cmd_solve(args: &Args) -> Result<()> {
 }
 
 fn cmd_pvc(args: &Args) -> Result<()> {
-    let spec = args.pos(1).context("pvc: missing <graph|dataset>")?;
     let k: u32 = args
         .get("k")
         .context("pvc: missing --k")?
         .parse()
         .context("--k")?;
+    if let Some(list) = args.get("jobs") {
+        return cmd_batch(args, list, Some(k));
+    }
+    let spec = args.pos(1).context("pvc: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
     let cfg = parse_config(args)?;
     let r = solver::solve_pvc(&g, k, &cfg);

@@ -7,6 +7,23 @@
 //! (generic dtype `T`), the committed solution size, an incremental edge
 //! count, the non-zero bounds window, and a registry context.
 //!
+//! ## Job setup vs. run loop
+//!
+//! The engine is split into two halves so the same node-processing code
+//! serves both entry points:
+//!
+//! * **Job state** — [`JobCfg`] (the per-search knobs) and the crate-
+//!   internal `JobCtl` (registry, global best, stop/improved/timed-out
+//!   flags, live-byte accounting, stats sink). Everything a search
+//!   needs that is independent of *which* threads run it.
+//! * **Run loop** — `process`/`descend` drive one node at a time against
+//!   a `JobCtl` through a [`WorkerHandle`]. The one-shot [`run`] entry
+//!   spawns a `thread::scope` pool per call (the paper's benchmark
+//!   shape); the resident [`crate::solver::service::VcService`] feeds
+//!   nodes from many jobs through one persistent pool, each node
+//!   carrying its job's `JobCtl` so completion, pruning, and
+//!   last-descendant aggregation stay job-local.
+//!
 //! ## Memory model: root-induce → tree-induce
 //!
 //! The paper induces a subgraph once, at the root (§IV-B), so degree
@@ -15,7 +32,7 @@
 //! component is re-induced as a compact, renumbered subproblem — a
 //! component-local CSR ([`crate::graph::induced::induce_residual_into`])
 //! plus a `|C|`-sized degree array — so every descendant pays O(|C|) per
-//! clone instead of O(n). A [`Node`]'s `view` points at its component's
+//! clone instead of O(n). A `Node`'s `view` points at its component's
 //! CSR (`None` ⇒ the shared root graph); the [`crate::solver::registry`]
 //! aggregates only solution *sizes*, so no vertex un-mapping is ever
 //! needed. GPU analogy: on the device this is the difference between
@@ -24,7 +41,7 @@
 //! shared memory — the occupancy lever of the paper's Table IV, applied
 //! at every split (`Occupancy::plan_induced` models exactly this).
 //!
-//! Under node creation sits a per-worker size-classed [`BufferPool`]:
+//! Under node creation sits a per-worker size-classed `BufferPool`:
 //! payloads of completed nodes (and the CSR arrays of fully-retired
 //! component views) are recycled instead of returned to the allocator,
 //! so the `make_right_child` clone on the hot path is a pool pop +
@@ -74,7 +91,9 @@ pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 pub const DEFAULT_INDUCE_THRESHOLD: f64 = 1.0;
 
 /// Flattened engine configuration (see `SolverConfig` for the public
-/// pipeline-level knobs).
+/// pipeline-level knobs). Combines the per-job search semantics
+/// ([`JobCfg`]) with the pool shape (workers / scheduler / queue sizing)
+/// for the one-shot [`run`] entry point.
 #[derive(Debug, Clone)]
 pub struct EngineCfg {
     /// Detect component splits and branch on components (§III).
@@ -118,6 +137,48 @@ impl Default for EngineCfg {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             induce_threshold: DEFAULT_INDUCE_THRESHOLD,
         }
+    }
+}
+
+impl EngineCfg {
+    /// The per-job half of this configuration (everything that describes
+    /// *one search*, none of the pool shape).
+    pub fn job_cfg(&self) -> JobCfg {
+        JobCfg {
+            component_aware: self.component_aware,
+            use_bounds: self.use_bounds,
+            stop_on_improvement: self.stop_on_improvement,
+            deadline: self.deadline,
+            instrument: self.instrument,
+            induce_threshold: self.induce_threshold,
+        }
+    }
+}
+
+/// Per-job search configuration: the subset of [`EngineCfg`] that
+/// describes one search's semantics, independent of which worker pool
+/// executes it. The resident service attaches one `JobCfg` to every
+/// submitted job; the one-shot [`run`] derives it from its `EngineCfg`.
+#[derive(Debug, Clone)]
+pub struct JobCfg {
+    /// Detect component splits and branch on components (§III).
+    pub component_aware: bool,
+    /// Maintain non-zero bounds windows (§IV-C).
+    pub use_bounds: bool,
+    /// Stop on the first global improvement (PVC semantics).
+    pub stop_on_improvement: bool,
+    /// Wall-clock deadline for this job.
+    pub deadline: Option<Instant>,
+    /// Record per-activity timings and live-byte peaks.
+    pub instrument: bool,
+    /// Component-local subproblem induction gate (see
+    /// [`EngineCfg::induce_threshold`]).
+    pub induce_threshold: f64,
+}
+
+impl Default for JobCfg {
+    fn default() -> Self {
+        EngineCfg::default().job_cfg()
     }
 }
 
@@ -167,7 +228,12 @@ pub struct EngineStats {
 }
 
 impl EngineStats {
-    fn merge(&mut self, other: &EngineStats) {
+    /// Accumulate `other` into `self`: sums for counters, max for
+    /// high-water marks, elementwise merge for histograms and per-worker
+    /// scheduler counters. Used by the workers to drain into a job's
+    /// stats sink and by the service/batch layers to aggregate per-job
+    /// stats into a fleet total.
+    pub fn merge(&mut self, other: &EngineStats) {
         self.tree_nodes += other.tree_nodes;
         self.component_branches += other.component_branches;
         for (&k, &v) in &other.comp_histogram {
@@ -177,6 +243,7 @@ impl EngineStats {
         self.max_stack_depth = self.max_stack_depth.max(other.max_stack_depth);
         self.worklist_pushes += other.worklist_pushes;
         self.worklist_steals += other.worklist_steals;
+        self.registry_entries += other.registry_entries;
         self.induced_subproblems += other.induced_subproblems;
         self.pool_hits += other.pool_hits;
         self.pool_misses += other.pool_misses;
@@ -212,7 +279,7 @@ pub struct EngineOutcome {
 /// One search-tree node. `deg` is the degree array of the node's graph
 /// view — exactly the paper's stack-entry payload, sized to the view
 /// (the root residual graph, or a component-local induced subgraph).
-struct Node<T> {
+pub(crate) struct Node<T> {
     deg: Vec<T>,
     sol: u32,
     edges: u64,
@@ -227,32 +294,63 @@ struct Node<T> {
 impl<T: DegElem> Node<T> {
     /// Payload bytes of this node's degree array.
     #[inline]
-    fn payload_bytes(&self) -> u64 {
+    pub(crate) fn payload_bytes(&self) -> u64 {
         (self.deg.len() * T::BYTES) as u64
     }
 }
 
-struct Shared<'g, T> {
-    g: &'g Graph,
-    cfg: EngineCfg,
-    registry: Registry,
-    best: AtomicU32,
-    stop: AtomicBool,
-    improved: AtomicBool,
-    timed_out: AtomicBool,
-    /// Live payload bytes across all workers (instrumented runs only).
-    live_bytes: AtomicU64,
-    /// High-water mark of `live_bytes` (instrumented runs only).
-    peak_live_bytes: AtomicU64,
-    stats_sink: Mutex<EngineStats>,
-    _marker: std::marker::PhantomData<T>,
+/// The root node over a (residual) graph: full-width degree array, no
+/// registry context, no component view. Shared by the one-shot runner
+/// and the resident service's job-setup stage.
+pub(crate) fn make_root<T: DegElem>(g: &Graph) -> Node<T> {
+    Node {
+        deg: crate::degree::initial_degrees::<T>(g),
+        sol: 0,
+        edges: g.num_edges() as u64,
+        bounds: NonZeroBounds::full(g.num_vertices()),
+        ctx: NONE,
+        view: None,
+    }
 }
 
-impl<'g, T: DegElem> Shared<'g, T> {
+/// Dtype-independent state of one search job: the registry, the global
+/// best, the control flags, and the stats sink. Outlives any particular
+/// worker; nodes of the job reference it while they execute. This is the
+/// "job half" of the old monolithic engine state — the resident service
+/// keeps one per submitted job, the one-shot runner keeps one per call.
+pub(crate) struct JobCtl {
+    pub(crate) cfg: JobCfg,
+    pub(crate) registry: Registry,
+    pub(crate) best: AtomicU32,
+    pub(crate) stop: AtomicBool,
+    pub(crate) improved: AtomicBool,
+    pub(crate) timed_out: AtomicBool,
+    /// Live payload bytes across all workers (instrumented runs only).
+    pub(crate) live_bytes: AtomicU64,
+    /// High-water mark of `live_bytes` (instrumented runs only).
+    pub(crate) peak_live_bytes: AtomicU64,
+    pub(crate) stats_sink: Mutex<EngineStats>,
+}
+
+impl JobCtl {
+    pub(crate) fn new(cfg: JobCfg, initial_best: u32) -> JobCtl {
+        JobCtl {
+            registry: Registry::new(cfg.stop_on_improvement),
+            best: AtomicU32::new(initial_best),
+            stop: AtomicBool::new(false),
+            improved: AtomicBool::new(false),
+            timed_out: AtomicBool::new(false),
+            live_bytes: AtomicU64::new(0),
+            peak_live_bytes: AtomicU64::new(0),
+            stats_sink: Mutex::new(EngineStats::default()),
+            cfg,
+        }
+    }
+
     /// Prune bound for a node: global best at the root, `min(Best,
     /// Limit)` inside a component context.
     #[inline]
-    fn bound_of(&self, ctx: u32) -> u32 {
+    pub(crate) fn bound_of(&self, ctx: u32) -> u32 {
         if ctx == NONE {
             self.best.load(Ordering::SeqCst)
         } else {
@@ -261,7 +359,7 @@ impl<'g, T: DegElem> Shared<'g, T> {
     }
 
     /// Record an achievable root-level total.
-    fn on_root_total(&self, total: u32) {
+    pub(crate) fn on_root_total(&self, total: u32) {
         if cas_min(&self.best, total).is_some() {
             self.improved.store(true, Ordering::SeqCst);
             if self.cfg.stop_on_improvement {
@@ -277,6 +375,28 @@ impl<'g, T: DegElem> Shared<'g, T> {
         let (sum_now, _, _, _) = self.registry.snapshot(parent);
         ctx_bound.saturating_sub(sum_now)
     }
+
+    /// Check this job's deadline; on expiry latch `timed_out` and `stop`.
+    /// Returns true if the job is past its deadline.
+    pub(crate) fn check_deadline(&self) -> bool {
+        if let Some(d) = self.cfg.deadline {
+            if Instant::now() >= d {
+                self.timed_out.store(true, Ordering::SeqCst);
+                self.stop.store(true, Ordering::SeqCst);
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// A worker's borrowed view of one job: the job's root graph plus its
+/// control block. Cheap to construct per node, so the resident pool can
+/// interleave nodes of different jobs on the same worker.
+#[derive(Clone, Copy)]
+pub(crate) struct JobView<'g> {
+    pub(crate) g: &'g Graph,
+    pub(crate) ctl: &'g JobCtl,
 }
 
 /// Number of size classes in a [`BufferPool`] (capacities up to 2^27
@@ -343,7 +463,12 @@ impl<T> BufferPool<T> {
     }
 }
 
-struct WorkerCtx<T> {
+/// Per-worker scratch: BFS stamps, induction maps, recycling pools, and
+/// locally-accumulated stats. One-shot runs keep one per spawned thread;
+/// the resident pool keeps one per worker per dtype and grows the
+/// graph-sized scratch ([`WorkerCtx::ensure_graph`]) to the largest job
+/// seen.
+pub(crate) struct WorkerCtx<T> {
     worker: usize,
     /// Seeding mode (no-load-balance): children go to this FIFO frontier
     /// instead of the scheduler.
@@ -361,12 +486,16 @@ struct WorkerCtx<T> {
     /// Recycled u32 buffers for induced-CSR `row_ptr`/`adj` arrays.
     upool: BufferPool<u32>,
     stats: EngineStats,
+    /// Pool counter values already drained into `stats` (the pools keep
+    /// cumulative totals across jobs; flushes record deltas).
+    flushed_pool_hits: u64,
+    flushed_pool_misses: u64,
     timer: ActivityTimer,
     deadline_tick: u32,
 }
 
 impl<T: DegElem> WorkerCtx<T> {
-    fn new(worker: usize, n: usize, instrument: bool) -> Self {
+    pub(crate) fn new(worker: usize, n: usize, instrument: bool) -> Self {
         WorkerCtx {
             worker,
             frontier: None,
@@ -378,23 +507,51 @@ impl<T: DegElem> WorkerCtx<T> {
             pool: BufferPool::new(),
             upool: BufferPool::new(),
             stats: EngineStats::default(),
+            flushed_pool_hits: 0,
+            flushed_pool_misses: 0,
             timer: if instrument { ActivityTimer::enabled() } else { ActivityTimer::disabled() },
             deadline_tick: 0,
         }
     }
 
+    /// Grow the graph-sized scratch (visit stamps / induction map) to
+    /// hold a view of `n` vertices. New entries are unvisited (stamp 0 is
+    /// never a live stamp), so resizing between jobs is safe.
+    pub(crate) fn ensure_graph(&mut self, n: usize) {
+        if self.visit.len() < n {
+            self.visit.resize(n, 0);
+            self.vmap.resize(n, 0);
+        }
+    }
+
+    /// Drain the locally-accumulated stats (plus the pool-counter deltas
+    /// since the last flush) into a job's stats sink and reset them, so
+    /// a resident worker can charge each processed node to the job it
+    /// belongs to.
+    pub(crate) fn flush_stats_into(&mut self, ctl: &JobCtl) {
+        let hits = self.pool.hits + self.upool.hits;
+        let misses = self.pool.misses + self.upool.misses;
+        self.stats.pool_hits += hits - self.flushed_pool_hits;
+        self.stats.pool_misses += misses - self.flushed_pool_misses;
+        self.flushed_pool_hits = hits;
+        self.flushed_pool_misses = misses;
+        ctl.stats_sink.lock().unwrap().merge(&self.stats);
+        self.stats = EngineStats::default();
+    }
+
     /// Flush this worker's timer, pool, and scheduler counters into its
-    /// stats and merge them into the shared sink.
-    fn finish(mut self, shared: &Shared<'_, T>, counters: WorkerCounters) {
+    /// stats and merge them into the job's sink (one-shot teardown).
+    fn finish(mut self, ctl: &JobCtl, counters: WorkerCounters) {
         self.timer.stop();
         self.stats.activity = self.timer.totals();
         self.stats.max_stack_depth = self.stats.max_stack_depth.max(counters.max_depth);
-        self.stats.pool_hits += self.pool.hits + self.upool.hits;
-        self.stats.pool_misses += self.pool.misses + self.upool.misses;
+        self.stats.pool_hits += self.pool.hits + self.upool.hits - self.flushed_pool_hits;
+        self.stats.pool_misses +=
+            self.pool.misses + self.upool.misses - self.flushed_pool_misses;
         let mut per_worker = vec![WorkerCounters::default(); self.worker + 1];
         per_worker[self.worker] = counters;
         self.stats.sched_workers = per_worker;
-        shared.stats_sink.lock().unwrap().merge(&self.stats);
+        ctl.stats_sink.lock().unwrap().merge(&self.stats);
     }
 }
 
@@ -427,41 +584,23 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
 ) -> EngineOutcome {
     let n = g.num_vertices();
     let workers = cfg.workers.max(1);
-    let shared = Shared::<T> {
-        g,
-        registry: Registry::new(cfg.stop_on_improvement),
-        best: AtomicU32::new(initial_best),
-        stop: AtomicBool::new(false),
-        improved: AtomicBool::new(false),
-        timed_out: AtomicBool::new(false),
-        live_bytes: AtomicU64::new(0),
-        peak_live_bytes: AtomicU64::new(0),
-        stats_sink: Mutex::new(EngineStats::default()),
-        cfg,
-        _marker: std::marker::PhantomData,
-    };
+    let ctl = JobCtl::new(cfg.job_cfg(), initial_best);
+    let shared = JobView { g, ctl: &ctl };
 
     // Root node over the full residual graph.
-    let root = Node::<T> {
-        deg: crate::degree::initial_degrees::<T>(g),
-        sol: 0,
-        edges: g.num_edges() as u64,
-        bounds: NonZeroBounds::full(n),
-        ctx: NONE,
-        view: None,
-    };
+    let root = make_root::<T>(g);
     let root_bytes = root.payload_bytes();
-    if shared.cfg.instrument {
-        shared.live_bytes.store(root_bytes, Ordering::Relaxed);
-        shared.peak_live_bytes.store(root_bytes, Ordering::Relaxed);
+    if cfg.instrument {
+        ctl.live_bytes.store(root_bytes, Ordering::Relaxed);
+        ctl.peak_live_bytes.store(root_bytes, Ordering::Relaxed);
     }
 
-    if shared.cfg.load_balance {
+    if cfg.load_balance {
         sched.inject(root);
     } else {
         // Static seeding (prior works [3], [4]): expand a frontier of
         // sub-trees breadth-first, then give each worker a fixed share.
-        let mut seeder = WorkerCtx::<T>::new(0, n, shared.cfg.instrument);
+        let mut seeder = WorkerCtx::<T>::new(0, n, cfg.instrument);
         let mut seed_handle = sched.handle(0);
         seeder.frontier = Some(std::collections::VecDeque::new());
         seeder.frontier.as_mut().unwrap().push_back(root);
@@ -475,14 +614,14 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
             }
             process(&shared, &mut seeder, &mut seed_handle, node);
             processed += 1;
-            if shared.stop.load(Ordering::SeqCst) {
+            if ctl.stop.load(Ordering::SeqCst) {
                 break;
             }
         }
         let frontier = seeder.frontier.take().unwrap();
         let seed_counters = seed_handle.counters();
         drop(seed_handle); // release worker 0's handle slot for the real worker
-        seeder.finish(&shared, seed_counters);
+        seeder.finish(&ctl, seed_counters);
         for (i, node) in frontier.into_iter().enumerate() {
             sched.seed(i % workers, node);
         }
@@ -490,46 +629,44 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
 
     std::thread::scope(|s| {
         for worker in 0..workers {
-            let shared = &shared;
+            let shared = shared;
             s.spawn(move || {
-                let mut ctx = WorkerCtx::<T>::new(worker, n, shared.cfg.instrument);
+                let mut ctx = WorkerCtx::<T>::new(worker, n, shared.ctl.cfg.instrument);
                 let mut handle = sched.handle(worker);
-                worker_loop(shared, &mut ctx, &mut handle);
+                worker_loop(&shared, &mut ctx, &mut handle);
                 let counters = handle.counters();
                 drop(handle);
-                ctx.finish(shared, counters);
+                ctx.finish(shared.ctl, counters);
             });
         }
     });
 
-    let mut stats = shared.stats_sink.into_inner().unwrap();
+    let timed_out = ctl.timed_out.load(Ordering::SeqCst);
+    if cfg!(debug_assertions) && !timed_out && !ctl.stop.load(Ordering::SeqCst) {
+        ctl.registry.assert_drained();
+    }
+    let best = ctl.best.load(Ordering::SeqCst);
+    let improved = ctl.improved.load(Ordering::SeqCst);
+    let peak = ctl.peak_live_bytes.load(Ordering::Relaxed);
+    let registry_len = ctl.registry.len() as u64;
+    let mut stats = ctl.stats_sink.into_inner().unwrap();
     stats.worklist_pushes = stats.sched_workers.iter().map(|c| c.offloaded).sum();
     stats.worklist_steals = stats.sched_workers.iter().map(|c| c.steals).sum();
-    stats.registry_entries = shared.registry.len() as u64;
+    stats.registry_entries = registry_len;
     // The root payload was created outside any worker context.
     stats.payload_nodes += 1;
     stats.payload_bytes += root_bytes;
-    stats.peak_live_bytes =
-        stats.peak_live_bytes.max(shared.peak_live_bytes.load(Ordering::Relaxed));
-    let timed_out = shared.timed_out.load(Ordering::SeqCst);
-    if cfg!(debug_assertions) && !timed_out && !shared.stop.load(Ordering::SeqCst) {
-        shared.registry.assert_drained();
-    }
-    EngineOutcome {
-        best: shared.best.load(Ordering::SeqCst),
-        improved: shared.improved.load(Ordering::SeqCst),
-        stats,
-        timed_out,
-    }
+    stats.peak_live_bytes = stats.peak_live_bytes.max(peak);
+    EngineOutcome { best, improved, stats, timed_out }
 }
 
 fn worker_loop<T: DegElem, H: WorkerHandle<Node<T>>>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
 ) {
     loop {
-        if shared.stop.load(Ordering::Relaxed) {
+        if shared.ctl.stop.load(Ordering::Relaxed) {
             return;
         }
         ctx.timer.switch(Activity::Queue);
@@ -551,29 +688,24 @@ fn worker_loop<T: DegElem, H: WorkerHandle<Node<T>>>(
 }
 
 #[inline]
-fn check_deadline<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>) {
+fn check_deadline<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>) {
     ctx.deadline_tick = ctx.deadline_tick.wrapping_add(1);
     if ctx.deadline_tick % 64 != 0 {
         return;
     }
-    if let Some(d) = shared.cfg.deadline {
-        if Instant::now() >= d {
-            shared.timed_out.store(true, Ordering::SeqCst);
-            shared.stop.store(true, Ordering::SeqCst);
-        }
-    }
+    shared.ctl.check_deadline();
 }
 
 /// Record a node payload coming live (per-node byte accounting; peak
 /// tracking only on instrumented runs to keep atomics off the hot path).
 #[inline]
-fn track_alloc<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, len: usize) {
+fn track_alloc<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, len: usize) {
     let bytes = (len * T::BYTES) as u64;
     ctx.stats.payload_nodes += 1;
     ctx.stats.payload_bytes += bytes;
-    if shared.cfg.instrument {
-        let live = shared.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
-        shared.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    if shared.ctl.cfg.instrument {
+        let live = shared.ctl.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
     }
 }
 
@@ -581,12 +713,12 @@ fn track_alloc<T: DegElem>(shared: &Shared<'_, T>, ctx: &mut WorkerCtx<T>, len: 
 /// view `Arc` back so the caller can retire the CSR buffers once its own
 /// borrow of the view is gone (see [`process`]).
 fn retire_node<T: DegElem>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     mut node: Node<T>,
 ) -> Option<Arc<Graph>> {
-    if shared.cfg.instrument {
-        shared.live_bytes.fetch_sub(node.payload_bytes(), Ordering::Relaxed);
+    if shared.ctl.cfg.instrument {
+        shared.ctl.live_bytes.fetch_sub(node.payload_bytes(), Ordering::Relaxed);
     }
     ctx.pool.release(std::mem::take(&mut node.deg));
     node.view.take()
@@ -596,8 +728,8 @@ fn retire_node<T: DegElem>(
 /// retire the node — its payload returns to the worker's pool, and if it
 /// was the last node over a component view, the view's CSR buffers are
 /// recycled too.
-fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
-    shared: &Shared<'_, T>,
+pub(crate) fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
+    shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
     node: Node<T>,
@@ -618,8 +750,8 @@ fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
         // the live-bytes decrement can never be lost to the race.
         if let Some(graph) = Arc::into_inner(v) {
             let (row_ptr, adj) = graph.into_parts();
-            if shared.cfg.instrument {
-                shared.live_bytes.fetch_sub(csr_bytes(&row_ptr, &adj), Ordering::Relaxed);
+            if shared.ctl.cfg.instrument {
+                shared.ctl.live_bytes.fetch_sub(csr_bytes(&row_ptr, &adj), Ordering::Relaxed);
             }
             ctx.upool.release(row_ptr);
             ctx.upool.release(adj);
@@ -637,7 +769,7 @@ fn csr_bytes(row_ptr: &[u32], adj: &[u32]) -> u64 {
 /// node's graph view; every vertex id in the node is local to it.
 /// Returns the retired node's view for [`process`] to recycle.
 fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
@@ -652,31 +784,31 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
 
         // ---- stopping conditions (lines 3-4) ----
         ctx.timer.switch(Activity::Leaf);
-        let bound = shared.bound_of(node.ctx);
+        let bound = shared.ctl.bound_of(node.ctx);
         if node.sol >= bound {
             let c = node.ctx;
             let spent = retire_node(shared, ctx, node);
-            complete(shared, c);
+            complete(shared.ctl, c);
             return spent;
         }
         let rem = (bound - node.sol - 1) as u64;
         if node.edges > rem * rem {
             let c = node.ctx;
             let spent = retire_node(shared, ctx, node);
-            complete(shared, c);
+            complete(shared.ctl, c);
             return spent;
         }
         // ---- leaf (lines 5-7) ----
         if node.edges == 0 {
             let (c, sol) = (node.ctx, node.sol);
             let spent = retire_node(shared, ctx, node);
-            report_leaf(shared, c, sol);
-            complete(shared, c);
+            report_leaf(shared.ctl, c, sol);
+            complete(shared.ctl, c);
             return spent;
         }
 
         // ---- component search (line 9) ----
-        if shared.cfg.component_aware {
+        if shared.ctl.cfg.component_aware {
             ctx.timer.switch(Activity::ComponentSearch);
             match scan_components(g, ctx, &node, &red) {
                 Scan::Single => {}
@@ -684,8 +816,8 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
                     ctx.stats.special_solved += 1;
                     let (c, total) = (node.ctx, node.sol + mvc);
                     let spent = retire_node(shared, ctx, node);
-                    report_leaf(shared, c, total);
-                    complete(shared, c);
+                    report_leaf(shared.ctl, c, total);
+                    complete(shared.ctl, c);
                     return spent;
                 }
                 Scan::Split { first_size, dmin, dmax } => {
@@ -704,7 +836,7 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
 
         // right child: N(vmax) into S
         let right = make_right_child(shared, g, ctx, &node, vmax);
-        shared.registry.on_branch(node.ctx);
+        shared.ctl.registry.on_branch(node.ctx);
         push_child(ctx, handle, right);
 
         // left child: vmax into S — descend in place
@@ -735,12 +867,12 @@ const NO_VERTEX: ReduceOutcome = ReduceOutcome { present: 0, first: u32::MAX, vm
 /// selects the maximum-degree branch vertex — so neither the component
 /// scan nor the branching step needs another pass over the window.
 fn reduce_node<T: DegElem>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     node: &mut Node<T>,
 ) -> ReduceOutcome {
     loop {
-        if shared.cfg.use_bounds {
+        if shared.ctl.cfg.use_bounds {
             node.bounds = node.bounds.tighten(&node.deg);
         } else {
             node.bounds = NonZeroBounds::full(node.deg.len());
@@ -748,7 +880,7 @@ fn reduce_node<T: DegElem>(
         if node.edges == 0 || node.bounds.is_empty() {
             return NO_VERTEX;
         }
-        let bound = shared.bound_of(node.ctx);
+        let bound = shared.ctl.bound_of(node.ctx);
         if node.sol >= bound {
             return NO_VERTEX; // stopping condition will fire
         }
@@ -884,7 +1016,7 @@ fn max_degree_vertex<T: DegElem>(node: &Node<T>) -> u32 {
 /// recycling pool, and is O(view) rather than O(root n) once component
 /// induction has shrunk the view.
 fn make_right_child<T: DegElem>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
@@ -928,18 +1060,18 @@ fn push_child<T: DegElem, H: WorkerHandle<Node<T>>>(
     handle.push(node);
 }
 
-fn report_leaf<T: DegElem>(shared: &Shared<'_, T>, ctx: u32, size: u32) {
+fn report_leaf(ctl: &JobCtl, ctx: u32, size: u32) {
     if ctx == NONE {
-        shared.on_root_total(size);
+        ctl.on_root_total(size);
     } else {
-        let mut on_root = |t: u32| shared.on_root_total(t);
-        shared.registry.report_solution(ctx, size, &mut on_root);
+        let mut on_root = |t: u32| ctl.on_root_total(t);
+        ctl.registry.report_solution(ctx, size, &mut on_root);
     }
 }
 
-fn complete<T: DegElem>(shared: &Shared<'_, T>, ctx: u32) {
-    let mut on_root = |t: u32| shared.on_root_total(t);
-    shared.registry.complete_node(ctx, &mut on_root);
+fn complete(ctl: &JobCtl, ctx: u32) {
+    let mut on_root = |t: u32| ctl.on_root_total(t);
+    ctl.registry.complete_node(ctx, &mut on_root);
 }
 
 enum Scan {
@@ -993,7 +1125,7 @@ fn scan_components<T: DegElem>(
 /// instead of re-walking it.
 #[allow(clippy::too_many_arguments)]
 fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
@@ -1003,7 +1135,7 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
     first_dmax: u32,
 ) -> Option<Arc<Graph>> {
     ctx.stats.component_branches += 1;
-    let parent = shared.registry.new_parent(node.sol, node.ctx);
+    let parent = shared.ctl.registry.new_parent(node.sol, node.ctx);
     ctx.stats.registry_entries += 1;
 
     // Component 1: reuse the detection BFS result.
@@ -1033,8 +1165,8 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
 
     *ctx.stats.comp_histogram.entry(comp_count).or_insert(0) += 1;
     let spent = retire_node(shared, ctx, node);
-    let mut on_root = |t: u32| shared.on_root_total(t);
-    shared.registry.finish_scan(parent, &mut on_root);
+    let mut on_root = |t: u32| shared.ctl.on_root_total(t);
+    shared.ctl.registry.finish_scan(parent, &mut on_root);
     spent
 }
 
@@ -1045,7 +1177,7 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
 /// or as a full-width masked copy of the parent's view otherwise.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
@@ -1058,22 +1190,22 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     if dmin == dmax {
         if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
             ctx.stats.special_solved += 1;
-            shared.registry.add_solved_component(parent, sp.mvc_size());
+            shared.ctl.registry.add_solved_component(parent, sp.mvc_size());
             return;
         }
     }
 
     // Register the component child: Best starts at the achievable
     // |V_i|-1; Limit adds the parent's remaining budget.
-    let parent_bound = shared.bound_of_parent(node.ctx, parent);
+    let parent_bound = shared.ctl.bound_of_parent(node.ctx, parent);
     let best0 = size - 1;
     let limit = best0.min(parent_bound);
-    let child_ctx = shared.registry.new_child(parent, best0, limit);
+    let child_ctx = shared.ctl.registry.new_child(parent, best0, limit);
     ctx.stats.registry_entries += 1;
 
     let view_n = node.deg.len();
-    let induce = shared.cfg.induce_threshold > 0.0
-        && (size as f64) <= shared.cfg.induce_threshold * view_n as f64;
+    let induce = shared.ctl.cfg.induce_threshold > 0.0
+        && (size as f64) <= shared.ctl.cfg.induce_threshold * view_n as f64;
     let child = if induce {
         ctx.stats.induced_subproblems += 1;
         induce_component_child(shared, g, ctx, node, child_ctx)
@@ -1110,7 +1242,7 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
 /// applied inside the tree — every descendant of this child now pays
 /// O(|C|) per clone and sweeps a |C|-wide window.
 fn induce_component_child<T: DegElem>(
-    shared: &Shared<'_, T>,
+    shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
@@ -1141,12 +1273,12 @@ fn induce_component_child<T: DegElem>(
         &mut adj,
     );
     track_alloc(shared, ctx, k);
-    if shared.cfg.instrument {
+    if shared.ctl.cfg.instrument {
         // The view's CSR stays live as long as any descendant holds the
         // Arc; count it so off-vs-on peak comparisons are unbiased.
         let bytes = csr_bytes(&row_ptr, &adj);
-        let live = shared.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
-        shared.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+        let live = shared.ctl.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
     }
     Node {
         deg,

@@ -25,6 +25,7 @@ pub mod oracle;
 pub mod registry;
 pub mod sched;
 pub mod sequential;
+pub mod service;
 pub mod worklist;
 
 use crate::degree::Dtype;
@@ -33,6 +34,10 @@ use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
 use occupancy::{Occupancy, OccupancyModel};
 pub use sched::SchedulerKind;
+pub use service::{
+    default_service, JobHandle, JobOptions, Problem, ProblemKind, Solution, Termination,
+    VcService,
+};
 use std::time::{Duration, Instant};
 
 /// Which execution strategy to run.
@@ -95,6 +100,11 @@ pub struct SolverConfig {
     pub instrument: bool,
     /// Extract a witness cover (sequential variant only).
     pub extract_cover: bool,
+    /// Force the one-shot engine even for service-compatible configs
+    /// (per-call `thread::scope` pool, occupancy-model worker sizing).
+    /// The harness tables set this so variant comparisons share the
+    /// same cold-start shape and per-graph pool sizing.
+    pub one_shot: bool,
 }
 
 impl SolverConfig {
@@ -113,6 +123,7 @@ impl SolverConfig {
             timeout: None,
             instrument: false,
             extract_cover: false,
+            one_shot: false,
         }
     }
 
@@ -165,6 +176,46 @@ impl SolverConfig {
         self.induce_threshold = t;
         self
     }
+
+    /// Force the one-shot engine (per-call pool, occupancy-sized) even
+    /// for service-compatible configurations.
+    pub fn with_one_shot(mut self) -> SolverConfig {
+        self.one_shot = true;
+        self
+    }
+
+    /// The preparation-stage half of this configuration (§IV-B knobs).
+    /// Shared by the MVC/PVC one-shot entry points and the service's
+    /// job-setup stage, so the prep flags can never drift between them.
+    pub fn prep_cfg(&self) -> PrepConfig {
+        PrepConfig {
+            reduce_root: self.reduce_root,
+            use_crown: self.use_crown,
+            small_dtypes: self.small_dtypes,
+        }
+    }
+}
+
+/// True when a call can be served by the shared resident service: a
+/// parallel load-balanced variant with the default pool shape. Explicit
+/// `workers`/`scheduler` overrides, instrumented runs, witness
+/// extraction, and the static-seeding variant keep the one-shot engine
+/// (benches rely on those to race pool shapes per call). Setting
+/// `CAVC_ONESHOT=1` forces the one-shot path everywhere.
+fn service_compatible(cfg: &SolverConfig) -> bool {
+    matches!(cfg.variant, Variant::Proposed | Variant::PriorWork)
+        && !cfg.one_shot
+        && cfg.workers.is_none()
+        && cfg.scheduler == SchedulerKind::default()
+        && !cfg.instrument
+        && !cfg.extract_cover
+        && std::env::var_os("CAVC_ONESHOT").is_none()
+}
+
+/// Lift a sequential outcome's counters into the unified stats type
+/// (merged rather than field-by-field copied at the call sites).
+fn sequential_stats(tree_nodes: u64, component_branches: u64) -> EngineStats {
+    EngineStats { tree_nodes, component_branches, ..EngineStats::default() }
 }
 
 /// Occupancy plan used for scheduler sizing: with tree induction on, the
@@ -237,16 +288,47 @@ pub struct PvcResult {
     pub timed_out: bool,
 }
 
+/// Map a service job's outcome back onto the legacy one-shot contract:
+/// the one-shot engine propagated worker panics to the caller, so a
+/// `Failed` job (a worker panicked mid-search) must not return silently.
+fn expect_not_failed(sol: &Solution) {
+    assert!(
+        sol.termination != Termination::Failed,
+        "resident service job failed (worker panic); rerun with CAVC_ONESHOT=1 for a direct backtrace"
+    );
+}
+
 /// Solve Minimum Vertex Cover.
+///
+/// Service-compatible configurations (see [`VcService`]) are routed
+/// through the lazily-built process-wide resident pool — repeated calls
+/// pay no thread spawn, but each call copies the graph into the job
+/// (workers outlive the borrow); callers looping over one very large
+/// graph should submit `Problem::mvc(Arc<Graph>)` to a [`VcService`]
+/// directly, or force [`SolverConfig::with_one_shot`]. Sequential /
+/// no-load-balance variants, explicit `workers`/`scheduler` overrides,
+/// and instrumented runs keep the one-shot engine.
 pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
+    if service_compatible(cfg) {
+        let sol = default_service()
+            .submit_with(
+                Problem::mvc(g.clone()),
+                JobOptions { timeout: cfg.timeout, config: Some(cfg.clone()) },
+            )
+            .wait();
+        expect_not_failed(&sol);
+        return SolveResult {
+            best: sol.objective,
+            cover: None,
+            stats: sol.stats,
+            prep: sol.prep,
+            elapsed: sol.elapsed,
+            timed_out: sol.timed_out(),
+        };
+    }
     let start = Instant::now();
     let deadline = cfg.timeout.map(|t| start + t);
-    let prep_cfg = PrepConfig {
-        reduce_root: cfg.reduce_root,
-        use_crown: cfg.use_crown,
-        small_dtypes: cfg.small_dtypes,
-    };
-    let p = prep::prepare(g, &prep_cfg, None);
+    let p = prep::prepare(g, &cfg.prep_cfg(), None);
     let workers = resolve_workers(cfg, &p);
 
     let initial = p.residual_ub;
@@ -260,8 +342,7 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
                 deadline,
             );
             let mut stats = EngineStats::default();
-            stats.tree_nodes = out.tree_nodes;
-            stats.component_branches = out.component_branches;
+            stats.merge(&sequential_stats(out.tree_nodes, out.component_branches));
             let cover = out.cover.map(|c| {
                 let mut full = p.forced_cover.clone();
                 full.extend(p.residual.translate_cover(&c));
@@ -311,16 +392,30 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
 }
 
 /// Solve Parameterized Vertex Cover: is there a cover of size ≤ k?
+///
+/// Service-compatible configurations run on the shared resident pool
+/// (see [`solve_mvc`]).
 pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
+    if service_compatible(cfg) {
+        let sol = default_service()
+            .submit_with(
+                Problem::pvc(g.clone(), k),
+                JobOptions { timeout: cfg.timeout, config: Some(cfg.clone()) },
+            )
+            .wait();
+        expect_not_failed(&sol);
+        return PvcResult {
+            found: sol.feasible,
+            size: sol.feasible.then_some(sol.objective),
+            stats: sol.stats,
+            elapsed: sol.elapsed,
+            timed_out: sol.timed_out(),
+        };
+    }
     let start = Instant::now();
     let deadline = cfg.timeout.map(|t| start + t);
-    let prep_cfg = PrepConfig {
-        reduce_root: cfg.reduce_root,
-        use_crown: cfg.use_crown,
-        small_dtypes: cfg.small_dtypes,
-    };
     // ub = k+1 keeps the high-degree rule sound for covers ≤ k.
-    let p = prep::prepare(g, &prep_cfg, Some(k.saturating_add(1)));
+    let p = prep::prepare(g, &cfg.prep_cfg(), Some(k.saturating_add(1)));
 
     // The greedy bound may already satisfy k.
     if p.greedy_ub <= k {
@@ -353,12 +448,7 @@ pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
             engine::EngineOutcome {
                 best: o.best,
                 improved: o.best < initial,
-                stats: {
-                    let mut s = EngineStats::default();
-                    s.tree_nodes = o.tree_nodes;
-                    s.component_branches = o.component_branches;
-                    s
-                },
+                stats: sequential_stats(o.tree_nodes, o.component_branches),
                 timed_out: o.timed_out,
             }
         }

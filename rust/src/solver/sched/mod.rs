@@ -42,6 +42,17 @@
 //! quiescence is certain (all workers idle, every queue empty, and no
 //! state transition observed during the sweep — see
 //! `WorkStealScheduler`'s epoch protocol).
+//!
+//! ## Resident pools
+//!
+//! Both runtimes can also be built *resident*
+//! (`new_resident`) for the [`crate::solver::service`] layer: proven
+//! quiescence then **parks** the workers on a condvar instead of
+//! finishing them, a later [`Scheduler::inject`] (the next job — a new
+//! work epoch) wakes the pool, and `idle_step` reports `Finished` only
+//! after `request_shutdown` once every queue has drained. Handles also
+//! poll the shared entry queue every 64th pop so a newly injected job is
+//! picked up even while deep local queues keep every worker busy.
 
 pub mod deque;
 pub mod injector;
@@ -50,6 +61,81 @@ mod work_steal;
 
 pub use sharded::ShardedScheduler;
 pub use work_steal::WorkStealScheduler;
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Park/unpark state for **resident** pools (see
+/// [`crate::solver::service`]): a one-shot run ends with scope-join
+/// termination, but a resident pool's workers must outlive any single
+/// job — when the queues drain they *park* on a condvar instead of
+/// exiting, and a later `inject` (the next job's root — a new "epoch" of
+/// work) wakes them. Shutdown is a request flag: workers drain every
+/// queue first and only then exit, so jobs submitted before shutdown
+/// still complete.
+pub(crate) struct ResidentCtl {
+    lock: Mutex<()>,
+    cv: Condvar,
+    /// Workers currently blocked in [`ResidentCtl::park`].
+    parked: AtomicUsize,
+    shutdown: AtomicBool,
+}
+
+impl ResidentCtl {
+    pub(crate) fn new() -> ResidentCtl {
+        ResidentCtl {
+            lock: Mutex::new(()),
+            cv: Condvar::new(),
+            parked: AtomicUsize::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    pub(crate) fn shutdown_requested(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Ask the pool to drain and exit; wakes every parked worker.
+    pub(crate) fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Block until notified or `timeout`. `work_visible` is re-checked
+    /// after registering as parked (both under the lock and with SeqCst
+    /// ordering against the registration), which closes the
+    /// check-then-park race with [`ResidentCtl::unpark_one_if_parked`]:
+    /// a producer that misses our registration published its work before
+    /// our re-check, and a producer that sees it will notify.
+    pub(crate) fn park(&self, timeout: Duration, work_visible: impl Fn() -> bool) {
+        let guard = self.lock.lock().unwrap();
+        self.parked.fetch_add(1, Ordering::SeqCst);
+        if work_visible() || self.shutdown.load(Ordering::SeqCst) {
+            self.parked.fetch_sub(1, Ordering::SeqCst);
+            return;
+        }
+        let _ = self.cv.wait_timeout(guard, timeout);
+        self.parked.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Wake every parked worker (new-job injection).
+    pub(crate) fn unpark_all(&self) {
+        let _g = self.lock.lock().unwrap();
+        self.cv.notify_all();
+    }
+
+    /// Wake one parked worker if any (stealable/shared work appeared
+    /// while the pool was partly asleep). The unlocked fast-path load
+    /// keeps this off the busy path when nobody is parked.
+    pub(crate) fn unpark_one_if_parked(&self) {
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            let _g = self.lock.lock().unwrap();
+            self.cv.notify_one();
+        }
+    }
+}
 
 /// Which scheduling runtime the engine should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]

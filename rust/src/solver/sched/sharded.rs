@@ -14,10 +14,12 @@ use std::sync::Mutex;
 
 use crate::solver::worklist::Worklist;
 
-use super::{IdleOutcome, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 const SPINS_BEFORE_SLEEP: u32 = 64;
 const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
+const PARK_BASE: std::time::Duration = std::time::Duration::from_micros(100);
+const PARK_MAX_EXP: u32 = 8;
 
 /// Sharded-worklist scheduler (legacy baseline; see module docs).
 pub struct ShardedScheduler<N: Send> {
@@ -34,6 +36,8 @@ pub struct ShardedScheduler<N: Send> {
     /// Initial private-stack capacity (the occupancy model's stack-depth
     /// bound — induction-aware, so shrinking payloads buy deeper stacks).
     queue_capacity: usize,
+    /// Present in resident pools: park/unpark + shutdown protocol.
+    resident: Option<ResidentCtl>,
 }
 
 impl<N: Send> ShardedScheduler<N> {
@@ -50,6 +54,27 @@ impl<N: Send> ShardedScheduler<N> {
             seeds: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             workers,
             queue_capacity,
+            resident: None,
+        }
+    }
+
+    /// Build a **resident** scheduler: a drained pool (`pending == 0`)
+    /// parks its workers instead of terminating them; a later `inject`
+    /// wakes the pool; termination requires an explicit
+    /// [`ShardedScheduler::request_shutdown`]. Load balancing is always
+    /// on — a resident pool exists to share its workers across jobs.
+    pub fn new_resident(workers: usize, queue_capacity: usize) -> ShardedScheduler<N> {
+        ShardedScheduler {
+            resident: Some(ResidentCtl::new()),
+            ..ShardedScheduler::new(workers, true, queue_capacity)
+        }
+    }
+
+    /// Ask a resident pool to drain its queues and exit its workers.
+    /// No-op on non-resident schedulers.
+    pub fn request_shutdown(&self) {
+        if let Some(r) = &self.resident {
+            r.request_shutdown();
         }
     }
 }
@@ -68,6 +93,9 @@ impl<N: Send> Scheduler<N> for ShardedScheduler<N> {
     fn inject(&self, item: N) {
         self.pending.fetch_add(1, Ordering::SeqCst);
         self.worklist.push(0, item);
+        if let Some(r) = &self.resident {
+            r.unpark_all();
+        }
     }
 
     fn seed(&self, worker: usize, item: N) {
@@ -81,7 +109,14 @@ impl<N: Send> Scheduler<N> for ShardedScheduler<N> {
         if stack.capacity() < self.queue_capacity {
             stack.reserve(self.queue_capacity - stack.len());
         }
-        ShardedHandle { s: self, id: worker, stack, spins: 0, c: WorkerCounters::default() }
+        ShardedHandle {
+            s: self,
+            id: worker,
+            stack,
+            spins: 0,
+            polls: 0,
+            c: WorkerCounters::default(),
+        }
     }
 }
 
@@ -92,6 +127,8 @@ pub struct ShardedHandle<'a, N: Send> {
     /// The worker-private LIFO stack (the GPU "private stack").
     stack: Vec<N>,
     spins: u32,
+    /// Pop counter driving the periodic shared-queue fairness poll.
+    polls: u64,
     c: WorkerCounters,
 }
 
@@ -102,6 +139,11 @@ impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
         if self.s.load_balance && self.s.worklist.is_hungry(self.s.low_water) {
             self.s.worklist.push(self.id, item);
             self.c.offloaded += 1;
+            if let Some(r) = &self.s.resident {
+                // The offloaded node is visible to every worker: hand it
+                // to a parked one.
+                r.unpark_one_if_parked();
+            }
         } else {
             self.stack.push(item);
             if self.stack.len() > self.c.max_depth {
@@ -111,6 +153,21 @@ impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
     }
 
     fn pop(&mut self) -> Option<N> {
+        // Fairness: take from the shared worklist periodically even
+        // while the private stack holds work, so injected items (new
+        // jobs on a resident pool) are never starved behind it.
+        self.polls = self.polls.wrapping_add(1);
+        if self.s.load_balance && self.polls & 63 == 0 {
+            if let Some((item, stolen)) = self.s.worklist.pop_traced(self.id) {
+                if stolen {
+                    self.c.steals += 1;
+                } else {
+                    self.c.shared_pops += 1;
+                }
+                self.spins = 0;
+                return Some(item);
+            }
+        }
         if let Some(item) = self.stack.pop() {
             self.c.pops += 1;
             self.spins = 0;
@@ -136,8 +193,29 @@ impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
     }
 
     fn idle_step(&mut self) -> IdleOutcome {
-        if self.s.pending.load(Ordering::SeqCst) == 0 {
-            return IdleOutcome::Finished;
+        let drained = self.s.pending.load(Ordering::SeqCst) == 0;
+        match &self.s.resident {
+            None => {
+                if drained {
+                    return IdleOutcome::Finished;
+                }
+            }
+            Some(r) => {
+                // Resident pool: a drained pool parks until the next job
+                // is injected; only shutdown + drained terminates.
+                if drained && r.shutdown_requested() {
+                    return IdleOutcome::Finished;
+                }
+                self.spins += 1;
+                if self.spins > SPINS_BEFORE_SLEEP {
+                    let exp = (self.spins - SPINS_BEFORE_SLEEP).min(PARK_MAX_EXP);
+                    let s = self.s;
+                    r.park(PARK_BASE * (1u32 << exp), || !s.worklist.is_empty());
+                } else {
+                    std::thread::yield_now();
+                }
+                return IdleOutcome::Retry;
+            }
         }
         self.spins += 1;
         if self.spins > SPINS_BEFORE_SLEEP {

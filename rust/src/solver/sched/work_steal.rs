@@ -32,12 +32,18 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use super::deque::{ChaseLev, Steal};
 use super::injector::Injector;
-use super::{IdleOutcome, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 /// Spins before an idle worker starts sleeping between rechecks.
 const SPINS_BEFORE_SLEEP: u32 = 64;
 /// Sleep quantum once spinning has not produced work.
 const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
+/// First park timeout of a resident worker (doubles up to the cap; the
+/// timeout is only a backstop — injects and visible-work pushes notify).
+const PARK_BASE: std::time::Duration = std::time::Duration::from_micros(100);
+/// Cap on the park-timeout exponent (100µs << 8 ≈ 25.6ms): an idle
+/// resident pool costs a handful of wakeups per second per worker.
+const PARK_MAX_EXP: u32 = 8;
 
 /// Lock-free work-stealing scheduler (see module docs).
 pub struct WorkStealScheduler<N: Send> {
@@ -55,6 +61,9 @@ pub struct WorkStealScheduler<N: Send> {
     epoch: AtomicU64,
     /// Latched once quiescence has been proven.
     done: AtomicBool,
+    /// Present in resident pools: park/unpark + shutdown protocol
+    /// (multi-job epochs instead of scope-join termination).
+    resident: Option<ResidentCtl>,
 }
 
 impl<N: Send> WorkStealScheduler<N> {
@@ -71,6 +80,28 @@ impl<N: Send> WorkStealScheduler<N> {
             idle: AtomicUsize::new(0),
             epoch: AtomicU64::new(0),
             done: AtomicBool::new(false),
+            resident: None,
+        }
+    }
+
+    /// Build a **resident** scheduler: quiescence parks the workers
+    /// instead of terminating them, a later `inject` (the next job)
+    /// wakes the pool, and termination happens only after
+    /// [`WorkStealScheduler::request_shutdown`] once every queue has
+    /// drained. Stealing is always on — a resident pool exists to share
+    /// its workers across jobs.
+    pub fn new_resident(workers: usize, capacity_hint: usize) -> WorkStealScheduler<N> {
+        WorkStealScheduler {
+            resident: Some(ResidentCtl::new()),
+            ..WorkStealScheduler::new(workers, true, capacity_hint)
+        }
+    }
+
+    /// Ask a resident pool to drain its queues and exit its workers.
+    /// No-op on non-resident schedulers (scope-join terminates those).
+    pub fn request_shutdown(&self) {
+        if let Some(r) = &self.resident {
+            r.request_shutdown();
         }
     }
 
@@ -118,6 +149,11 @@ impl<N: Send> Scheduler<N> for WorkStealScheduler<N> {
         );
         self.epoch.fetch_add(1, Ordering::SeqCst);
         self.injector.push(item);
+        if let Some(r) = &self.resident {
+            // New job epoch: wake the whole pool, not just one worker —
+            // the injected root usually fans out immediately.
+            r.unpark_all();
+        }
     }
 
     fn seed(&self, worker: usize, item: N) {
@@ -142,6 +178,7 @@ impl<N: Send> Scheduler<N> for WorkStealScheduler<N> {
             id: worker,
             idle_registered: false,
             spins: 0,
+            polls: 0,
             c: WorkerCounters::default(),
         }
     }
@@ -153,6 +190,8 @@ pub struct StealHandle<'a, N: Send> {
     id: usize,
     idle_registered: bool,
     spins: u32,
+    /// Pop counter driving the periodic injector fairness poll.
+    polls: u64,
     c: WorkerCounters,
 }
 
@@ -202,6 +241,11 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
         unsafe { self.s.deques[self.id].push(item) };
         self.c.pushes += 1;
         self.c.offloaded += 1; // every deque slot is stealable
+        if let Some(r) = &self.s.resident {
+            // The new deque slot is stealable: hand it to a parked
+            // thief. The fast path is one uncontended atomic load.
+            r.unpark_one_if_parked();
+        }
         // max_depth is a sampled statistic: deque.len() reads `top`,
         // a cache line thieves are CAS-ing, so probing it on every push
         // would put coherence traffic on the exact path this scheduler
@@ -221,6 +265,19 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
         // moved into this worker's hands (see module docs).
         if self.idle_registered {
             self.exit_idle();
+        }
+        // Fairness: drain the shared entry queue periodically even while
+        // local work remains, so injected items (new jobs on a resident
+        // pool) are never starved behind a deep deque. In one-shot runs
+        // the injector is empty after the root, so this costs a few
+        // atomic loads every 64th pop.
+        self.polls = self.polls.wrapping_add(1);
+        if self.polls & 63 == 0 {
+            if let Some(item) = self.s.injector.pop() {
+                self.c.shared_pops += 1;
+                self.spins = 0;
+                return Some(item);
+            }
         }
         // SAFETY: single live handle per worker.
         if let Some(item) = unsafe { self.s.deques[self.id].pop() } {
@@ -252,6 +309,30 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
         debug_assert!(self.idle_registered, "idle_step without a failed pop");
         if self.s.done.load(Ordering::SeqCst) {
             return IdleOutcome::Finished;
+        }
+        if let Some(r) = &self.s.resident {
+            // Resident pool: quiescence is not termination — only a
+            // drained pool with shutdown requested may exit (same epoch
+            // sweep as one-shot mode, so the `done` latch still fans the
+            // decision out to the remaining workers).
+            if r.shutdown_requested()
+                && self.s.idle.load(Ordering::SeqCst) == self.s.deques.len()
+                && self.s.try_terminate()
+            {
+                return IdleOutcome::Finished;
+            }
+            self.spins += 1;
+            if self.spins > SPINS_BEFORE_SLEEP {
+                let exp = (self.spins - SPINS_BEFORE_SLEEP).min(PARK_MAX_EXP);
+                let timeout = PARK_BASE * (1u32 << exp);
+                let s = self.s;
+                r.park(timeout, || {
+                    !s.injector.is_empty() || s.deques.iter().any(|d| !d.is_empty())
+                });
+            } else {
+                std::thread::yield_now();
+            }
+            return IdleOutcome::Retry;
         }
         if !self.s.steal {
             // Static partition: no other worker can feed this deque, so
@@ -404,5 +485,51 @@ mod tests {
         let s: WorkStealScheduler<u32> = WorkStealScheduler::new(1, true, 8);
         drop(s.handle(0));
         drop(s.handle(0)); // second acquisition succeeds after release
+    }
+
+    #[test]
+    fn resident_pool_survives_quiescence_between_epochs() {
+        // A resident pool must park (not terminate) when drained, pick
+        // up a second injected epoch, and exit only on shutdown.
+        let s: WorkStealScheduler<u32> = WorkStealScheduler::new_resident(2, 8);
+        let leaves = AtomicU64::new(0);
+        std::thread::scope(|scope| {
+            for w in 0..2 {
+                let s = &s;
+                let leaves = &leaves;
+                scope.spawn(move || {
+                    let mut h = s.handle(w);
+                    loop {
+                        match h.pop() {
+                            Some(0) => {
+                                leaves.fetch_add(1, Ordering::SeqCst);
+                                h.on_node_done();
+                            }
+                            Some(x) => {
+                                h.push(x - 1);
+                                h.on_node_done();
+                            }
+                            None => {
+                                if h.idle_step() == IdleOutcome::Finished {
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            s.inject(3); // epoch 1: one chain, one leaf
+            while leaves.load(Ordering::SeqCst) < 1 {
+                std::thread::yield_now();
+            }
+            // give the pool time to go fully quiescent and park
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            s.inject(2); // epoch 2 must still be picked up
+            while leaves.load(Ordering::SeqCst) < 2 {
+                std::thread::yield_now();
+            }
+            s.request_shutdown();
+        });
+        assert_eq!(leaves.load(Ordering::SeqCst), 2);
     }
 }

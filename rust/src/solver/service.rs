@@ -1,0 +1,986 @@
+//! The resident solver service: a persistent worker pool that jobs are
+//! *injected into*, instead of a thread pool reconstructed around every
+//! call.
+//!
+//! The paper (and Yamout et al.) treat the GPU workers as a resident
+//! grid fed by a shared worklist; this module gives the host API the
+//! same shape. A [`VcService`] is built once
+//! (`VcService::builder().workers(n).scheduler(kind).build()`) and owns:
+//!
+//! * a **resident scheduler** (work-stealing by default) whose workers
+//!   park on quiescence instead of terminating — see
+//!   `sched::ResidentCtl`;
+//! * one OS thread per worker, each with per-dtype [`WorkerCtx`] scratch
+//!   (BFS stamps, buffer pools) that is *shared across jobs* — a small
+//!   graph solved after a big one reuses the big one's recycled buffers;
+//! * a monotonically increasing job-id counter.
+//!
+//! ## Job lifecycle
+//!
+//! [`VcService::submit`] wraps a [`Problem`] into a job and injects a
+//! single `Setup` work item. A worker pops it, runs the preparation
+//! pipeline (greedy bound → root reduction → induction → dtype/occupancy
+//! selection — the "job setup" half of the old engine), and pushes the
+//! job's root search node. From there the ordinary branch-and-reduce
+//! node processing takes over; every node in the shared worklist carries
+//! an `Arc` to its job's state (`JobCtl`: registry, global best, stop
+//! flags, stats sink), which is what keeps completion, pruning, and
+//! last-descendant aggregation **job-local** — the registry context ids
+//! inside a node index that job's private registry, so two jobs'
+//! component cascades can never interleave even though their nodes share
+//! deques.
+//!
+//! Completion detection is a per-job outstanding-node count: every
+//! pushed item increments it *before* entering the worklist, every
+//! processed (or dropped) item decrements it after; the worker that
+//! drives it to zero finalizes the [`Solution`] and wakes the waiters.
+//! Cancellation ([`JobHandle::cancel`]) and the per-job deadline
+//! ([`JobOptions::timeout`]) latch the job's `stop` flag: queued nodes
+//! of a stopped job are dropped on pop, so a cancelled job drains at
+//! pop speed without touching other jobs.
+//!
+//! Many small jobs therefore run concurrently with one large branching
+//! job on the same pool: the large job's nodes fill the deques, a small
+//! job's setup + nodes interleave via the shared injector, and idle
+//! workers steal whatever is oldest.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::degree::{DegElem, Dtype};
+use crate::graph::Graph;
+use crate::prep::{self, PrepConfig};
+
+use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, Node, WorkerCtx};
+use super::sched::{
+    IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
+    WorkerHandle,
+};
+use super::{PrepSummary, SolverConfig};
+
+/// A problem submitted to the service. Graphs are `Arc`-shared so a
+/// batch driver can submit the same graph under several parameters
+/// without copying it.
+#[derive(Debug, Clone)]
+pub enum Problem {
+    /// Minimum vertex cover.
+    Mvc {
+        /// The input graph.
+        g: Arc<Graph>,
+    },
+    /// Parameterized vertex cover: is there a cover of size ≤ `k`?
+    Pvc {
+        /// The input graph.
+        g: Arc<Graph>,
+        /// The cover-size budget.
+        k: u32,
+    },
+    /// Maximum independent set (solved as `|V| − MVC`).
+    Mis {
+        /// The input graph.
+        g: Arc<Graph>,
+    },
+}
+
+impl Problem {
+    /// A minimum-vertex-cover problem.
+    pub fn mvc(g: impl Into<Arc<Graph>>) -> Problem {
+        Problem::Mvc { g: g.into() }
+    }
+
+    /// A parameterized-vertex-cover problem (`∃ cover ≤ k?`).
+    pub fn pvc(g: impl Into<Arc<Graph>>, k: u32) -> Problem {
+        Problem::Pvc { g: g.into(), k }
+    }
+
+    /// A maximum-independent-set problem.
+    pub fn mis(g: impl Into<Arc<Graph>>) -> Problem {
+        Problem::Mis { g: g.into() }
+    }
+
+    /// The input graph.
+    pub fn graph(&self) -> &Arc<Graph> {
+        match self {
+            Problem::Mvc { g } | Problem::Pvc { g, .. } | Problem::Mis { g } => g,
+        }
+    }
+
+    /// The problem kind tag.
+    pub fn kind(&self) -> ProblemKind {
+        match self {
+            Problem::Mvc { .. } => ProblemKind::Mvc,
+            Problem::Pvc { .. } => ProblemKind::Pvc,
+            Problem::Mis { .. } => ProblemKind::Mis,
+        }
+    }
+}
+
+/// Which problem a [`Solution`] answers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProblemKind {
+    /// Minimum vertex cover.
+    Mvc,
+    /// Parameterized vertex cover.
+    Pvc,
+    /// Maximum independent set.
+    Mis,
+}
+
+/// Why a job stopped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Termination {
+    /// The search ran to completion (for PVC this includes stopping at
+    /// the first cover ≤ k, which answers the decision problem).
+    Complete,
+    /// The per-job deadline fired; the reported objective is only a
+    /// bound (upper for MVC, lower for MIS; PVC may report infeasible
+    /// without proof).
+    DeadlineExpired,
+    /// [`JobHandle::cancel`] was called before the search finished.
+    Cancelled,
+    /// A worker panicked while running this job (internal error). The
+    /// panic is contained — the pool and other jobs are unaffected, and
+    /// `wait` still returns — but this job's objective/stats are not
+    /// trustworthy. The one-shot shims turn this back into a panic to
+    /// preserve the old loud-failure contract.
+    Failed,
+}
+
+/// Unified result of any [`Problem`] — replaces the old
+/// `SolveResult`/`PvcResult`/`MisResult` triplet at the service layer
+/// (the one-shot shims still expose the legacy structs).
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// Which problem this answers.
+    pub problem: ProblemKind,
+    /// MVC: cover size (an upper bound if not [`Termination::Complete`]).
+    /// MIS: independence number (lower bound if not complete).
+    /// PVC: size of the found cover when `feasible`, else `k + 1`.
+    pub objective: u32,
+    /// PVC: whether a cover of size ≤ k was found (`false` under
+    /// deadline/cancel means "unknown", mirroring `PvcResult::found`).
+    /// Always `true` for MVC/MIS.
+    pub feasible: bool,
+    /// Witness vertex set. The parallel service does not extract
+    /// witnesses (the sequential one-shot path does); reserved so the
+    /// unified type covers both.
+    pub witness: Option<Vec<u32>>,
+    /// Engine counters for this job only.
+    pub stats: EngineStats,
+    /// Preparation summary (root reduction, dtype, occupancy).
+    pub prep: PrepSummary,
+    /// Wall-clock time from submission to finalization.
+    pub elapsed: Duration,
+    /// Why the job stopped.
+    pub termination: Termination,
+}
+
+impl Solution {
+    /// True if the job's deadline fired (legacy `timed_out` spelling).
+    pub fn timed_out(&self) -> bool {
+        self.termination == Termination::DeadlineExpired
+    }
+}
+
+/// Per-job submission options.
+#[derive(Debug, Clone, Default)]
+pub struct JobOptions {
+    /// Per-job wall-clock budget (falls back to the service config's
+    /// timeout when `None`).
+    pub timeout: Option<Duration>,
+    /// Per-job solver knobs (component awareness, root reduction,
+    /// bounds, dtypes, induce threshold) overriding the service
+    /// defaults. The pool-shape fields (`variant`, `workers`,
+    /// `scheduler`) are ignored — the resident pool is fixed at build.
+    pub config: Option<SolverConfig>,
+}
+
+/// A submitted job: await it, poll it, or cancel it. Cloning the handle
+/// is cheap; all clones observe the same job.
+#[derive(Clone)]
+pub struct JobHandle {
+    job: Arc<JobInner>,
+}
+
+impl JobHandle {
+    /// The service-unique job id.
+    pub fn id(&self) -> u64 {
+        self.job.id
+    }
+
+    /// Block until the job finalizes and return its solution.
+    pub fn wait(&self) -> Solution {
+        let mut out = self.job.outcome.lock().unwrap();
+        loop {
+            if let Some(sol) = out.as_ref() {
+                return sol.clone();
+            }
+            out = self.job.done_cv.wait(out).unwrap();
+        }
+    }
+
+    /// Non-blocking poll: the solution if the job already finalized.
+    pub fn try_result(&self) -> Option<Solution> {
+        self.job.outcome.lock().unwrap().as_ref().cloned()
+    }
+
+    /// Request cancellation. Queued nodes of the job are dropped as they
+    /// surface; `wait` then returns with [`Termination::Cancelled`].
+    /// Cancelling a finished job is a no-op.
+    pub fn cancel(&self) {
+        // Order matters: the flag that *labels* the stop must be set
+        // before the flag that *causes* it, so finalization can't read
+        // a stop with no recorded reason.
+        self.job.cancelled.store(true, Ordering::SeqCst);
+        self.job.ctl.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl std::fmt::Debug for JobHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobHandle")
+            .field("id", &self.job.id)
+            .field("done", &self.try_result().is_some())
+            .finish()
+    }
+}
+
+/// Job-prep results published by the `Setup` work item (read by every
+/// subsequent node of the job).
+struct JobPrep {
+    /// The residual (root-reduced, induced) graph the search runs on.
+    graph: Arc<Graph>,
+    /// Residual-relative initial upper bound handed to the engine.
+    initial: u32,
+    /// Vertices forced into the cover at the root.
+    forced: u32,
+    /// Greedy upper bound on the original graph.
+    greedy_ub: u32,
+    /// PVC: residual budget `k − forced` (when the search ran).
+    k_resid: Option<u32>,
+    /// Prep summary for the solution.
+    summary: PrepSummary,
+    /// Payload bytes of the root node (charged at finalization, like the
+    /// one-shot runner charges its out-of-worker root).
+    root_bytes: u64,
+    /// Whether a root node entered the worklist (false for jobs decided
+    /// at prep: trivial PVC answers, pre-expired deadlines, cancels).
+    root_pushed: bool,
+    /// PVC decided during prep, before any search node existed.
+    decided: Option<PvcDecided>,
+}
+
+/// PVC answers that fall out of the preparation stage.
+enum PvcDecided {
+    /// The greedy bound already satisfies k.
+    FoundGreedy(u32),
+    /// More than k vertices are forced at the root: no cover ≤ k.
+    Infeasible,
+}
+
+/// Shared state of one job. Nodes in the worklist hold an `Arc` to this
+/// — that Arc *is* the job id the issue's registry scoping refers to:
+/// each job owns a private registry (inside `ctl`), so context ids in a
+/// node are meaningful only together with the job pointer riding next to
+/// them.
+struct JobInner {
+    id: u64,
+    problem: Problem,
+    /// Registry, global best, stop/improved/timed-out flags, stats sink.
+    ctl: JobCtl,
+    prep_cfg: PrepConfig,
+    /// Outstanding work items (setup + queued/executing nodes). The
+    /// decrement-to-zero owner finalizes the job.
+    live_nodes: AtomicU64,
+    cancelled: AtomicBool,
+    /// A worker panicked while running this job's setup or a node.
+    failed: AtomicBool,
+    prepared: OnceLock<JobPrep>,
+    outcome: Mutex<Option<Solution>>,
+    done_cv: Condvar,
+    started: Instant,
+    pool_workers: usize,
+}
+
+/// One unit of service work: either a job's setup stage or one search
+/// node (dtype-erased so jobs of different degree dtypes share queues).
+struct WorkItem {
+    job: Arc<JobInner>,
+    work: Work,
+}
+
+enum Work {
+    Setup,
+    Node(AnyNode),
+}
+
+/// Dtype-erased search node (§IV-D: each job picks the smallest dtype
+/// that fits its max degree; the shared worklist must carry them all).
+enum AnyNode {
+    U8(Node<u8>),
+    U16(Node<u16>),
+    U32(Node<u32>),
+}
+
+impl From<Node<u8>> for AnyNode {
+    fn from(n: Node<u8>) -> AnyNode {
+        AnyNode::U8(n)
+    }
+}
+impl From<Node<u16>> for AnyNode {
+    fn from(n: Node<u16>) -> AnyNode {
+        AnyNode::U16(n)
+    }
+}
+impl From<Node<u32>> for AnyNode {
+    fn from(n: Node<u32>) -> AnyNode {
+        AnyNode::U32(n)
+    }
+}
+
+/// The resident scheduler, selected at build time.
+enum ResidentSched {
+    Steal(WorkStealScheduler<WorkItem>),
+    Sharded(ShardedScheduler<WorkItem>),
+}
+
+impl ResidentSched {
+    fn inject(&self, item: WorkItem) {
+        match self {
+            ResidentSched::Steal(s) => s.inject(item),
+            ResidentSched::Sharded(s) => s.inject(item),
+        }
+    }
+
+    fn request_shutdown(&self) {
+        match self {
+            ResidentSched::Steal(s) => s.request_shutdown(),
+            ResidentSched::Sharded(s) => s.request_shutdown(),
+        }
+    }
+}
+
+struct ServiceInner {
+    sched: ResidentSched,
+    defaults: SolverConfig,
+    workers: usize,
+    next_job: AtomicU64,
+}
+
+/// Builder for [`VcService`].
+pub struct VcServiceBuilder {
+    workers: Option<usize>,
+    scheduler: SchedulerKind,
+    queue_capacity: usize,
+    defaults: SolverConfig,
+}
+
+impl VcServiceBuilder {
+    /// Number of resident worker threads (default: hardware threads).
+    pub fn workers(mut self, n: usize) -> VcServiceBuilder {
+        self.workers = Some(n.max(1));
+        self
+    }
+
+    /// Scheduling runtime for the shared pool (default: work stealing).
+    pub fn scheduler(mut self, kind: SchedulerKind) -> VcServiceBuilder {
+        self.scheduler = kind;
+        self
+    }
+
+    /// Initial per-worker queue capacity.
+    pub fn queue_capacity(mut self, cap: usize) -> VcServiceBuilder {
+        self.queue_capacity = cap.max(8);
+        self
+    }
+
+    /// Default solver knobs applied to every job (component awareness,
+    /// root reduction, bounds, dtypes, induce threshold, default
+    /// timeout). The `variant`/`workers`/`scheduler` fields of the
+    /// config are ignored — the pool shape is the builder's business.
+    pub fn config(mut self, cfg: SolverConfig) -> VcServiceBuilder {
+        self.defaults = cfg;
+        self
+    }
+
+    /// Spawn the worker pool and return the service.
+    pub fn build(self) -> VcService {
+        let workers = self.workers.unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4)
+        });
+        let sched = match self.scheduler {
+            SchedulerKind::WorkSteal => {
+                ResidentSched::Steal(WorkStealScheduler::new_resident(workers, self.queue_capacity))
+            }
+            SchedulerKind::Sharded => ResidentSched::Sharded(ShardedScheduler::new_resident(
+                workers,
+                self.queue_capacity,
+            )),
+        };
+        let inner = Arc::new(ServiceInner {
+            sched,
+            defaults: self.defaults,
+            workers,
+            next_job: AtomicU64::new(0),
+        });
+        let threads = (0..workers)
+            .map(|w| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("cavc-svc-{w}"))
+                    .spawn(move || match &inner.sched {
+                        ResidentSched::Steal(s) => resident_loop(s, w),
+                        ResidentSched::Sharded(s) => resident_loop(s, w),
+                    })
+                    .expect("spawn service worker")
+            })
+            .collect();
+        VcService { inner, threads }
+    }
+}
+
+/// A resident vertex-cover solver service (see the module docs).
+///
+/// Dropping the service requests shutdown and joins the workers after
+/// they drain every outstanding job — held [`JobHandle`]s stay valid and
+/// their `wait` calls return.
+pub struct VcService {
+    inner: Arc<ServiceInner>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl VcService {
+    /// Start building a service.
+    pub fn builder() -> VcServiceBuilder {
+        VcServiceBuilder {
+            workers: None,
+            scheduler: SchedulerKind::default(),
+            queue_capacity: engine::DEFAULT_QUEUE_CAPACITY,
+            defaults: SolverConfig::proposed(),
+        }
+    }
+
+    /// Number of resident worker threads.
+    pub fn workers(&self) -> usize {
+        self.inner.workers
+    }
+
+    /// Submit a problem with the service's default options.
+    pub fn submit(&self, problem: Problem) -> JobHandle {
+        self.submit_with(problem, JobOptions::default())
+    }
+
+    /// Submit a problem with per-job options.
+    pub fn submit_with(&self, problem: Problem, opts: JobOptions) -> JobHandle {
+        let cfg = opts.config.as_ref().unwrap_or(&self.inner.defaults);
+        let job_cfg = JobCfg {
+            component_aware: cfg.component_aware,
+            use_bounds: cfg.use_bounds,
+            stop_on_improvement: matches!(problem, Problem::Pvc { .. }),
+            deadline: opts.timeout.or(cfg.timeout).map(|t| Instant::now() + t),
+            // Per-activity timers are per-worker, not per-job; resident
+            // jobs track counters (incl. byte accounting) only.
+            instrument: false,
+            induce_threshold: cfg.induce_threshold,
+        };
+        let job = Arc::new(JobInner {
+            id: self.inner.next_job.fetch_add(1, Ordering::SeqCst),
+            ctl: JobCtl::new(job_cfg, u32::MAX),
+            prep_cfg: cfg.prep_cfg(),
+            live_nodes: AtomicU64::new(1), // the Setup item
+            cancelled: AtomicBool::new(false),
+            failed: AtomicBool::new(false),
+            prepared: OnceLock::new(),
+            outcome: Mutex::new(None),
+            done_cv: Condvar::new(),
+            started: Instant::now(),
+            pool_workers: self.inner.workers,
+            problem,
+        });
+        self.inner.sched.inject(WorkItem { job: Arc::clone(&job), work: Work::Setup });
+        JobHandle { job }
+    }
+
+    /// Submit-and-wait convenience for one problem.
+    pub fn solve(&self, problem: Problem) -> Solution {
+        self.submit(problem).wait()
+    }
+}
+
+impl Drop for VcService {
+    fn drop(&mut self) {
+        self.inner.sched.request_shutdown();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for VcService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VcService").field("workers", &self.inner.workers).finish()
+    }
+}
+
+/// The process-wide default service used by the `solve_mvc`/`solve_pvc`
+/// one-shot shims for service-compatible configurations. Built lazily on
+/// first use with hardware-thread workers; lives for the process (idle
+/// cost is a few parked-timeout wakeups per second).
+pub fn default_service() -> &'static VcService {
+    static DEFAULT: OnceLock<VcService> = OnceLock::new();
+    DEFAULT.get_or_init(|| VcService::builder().build())
+}
+
+// ---------------------------------------------------------------------
+// Resident worker loop
+// ---------------------------------------------------------------------
+
+/// Per-worker, per-dtype engine scratch, persistent across jobs.
+struct Scratch {
+    u8: WorkerCtx<u8>,
+    u16: WorkerCtx<u16>,
+    u32: WorkerCtx<u32>,
+}
+
+impl Scratch {
+    fn new(worker: usize) -> Scratch {
+        Scratch {
+            u8: WorkerCtx::new(worker, 0, false),
+            u16: WorkerCtx::new(worker, 0, false),
+            u32: WorkerCtx::new(worker, 0, false),
+        }
+    }
+}
+
+fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize) {
+    let mut scratch = Scratch::new(worker);
+    let mut handle = sched.handle(worker);
+    loop {
+        match handle.pop() {
+            Some(item) => {
+                process_item(item, &mut scratch, &mut handle);
+                handle.on_node_done();
+            }
+            None => {
+                if let IdleOutcome::Finished = handle.idle_step() {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+fn process_item<H: WorkerHandle<WorkItem>>(item: WorkItem, scratch: &mut Scratch, handle: &mut H) {
+    let WorkItem { job, work } = item;
+    // Contain panics (debug assertions, engine bugs): the one-shot
+    // engine propagates them through `thread::scope`, but a resident
+    // worker must survive — an escaped panic here would kill the thread
+    // with the live-count decrement below unexecuted, hanging every
+    // `wait` on the job. The scratch stays structurally valid across an
+    // unwind (plain buffers and counters), so it may keep serving other
+    // jobs.
+    let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match work {
+        Work::Setup => setup_job(&job, handle),
+        Work::Node(node) => {
+            job.ctl.check_deadline();
+            // A stopped job (cancelled, past-deadline, or PVC already
+            // answered) drops its node here; the decrement below still
+            // counts it, so the job drains to finalization at pop speed.
+            if !job.ctl.stop.load(Ordering::SeqCst) {
+                let p = job.prepared.get().expect("node processed before its job's setup");
+                match node {
+                    AnyNode::U8(n) => run_node(&job, p, n, &mut scratch.u8, handle),
+                    AnyNode::U16(n) => run_node(&job, p, n, &mut scratch.u16, handle),
+                    AnyNode::U32(n) => run_node(&job, p, n, &mut scratch.u32, handle),
+                }
+            }
+        }
+    }));
+    if run.is_err() {
+        // Label first, then stop (same ordering argument as `cancel`):
+        // the job's remaining nodes drain as drops and the normal
+        // completion count finalizes it with `Termination::Failed`.
+        job.failed.store(true, Ordering::SeqCst);
+        job.ctl.stop.store(true, Ordering::SeqCst);
+    }
+    if job.live_nodes.fetch_sub(1, Ordering::SeqCst) == 1 {
+        // `finalize` itself can assert (debug registry invariants); a
+        // panic there must not leave waiters hanging either.
+        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finalize(&job))).is_err() {
+            job.failed.store(true, Ordering::SeqCst);
+            store_outcome(&job, failed_solution(&job));
+        }
+    }
+}
+
+/// Run one search node of a job through the engine's node processor,
+/// wrapping the pool handle so children are re-tagged with the job.
+fn run_node<T: DegElem, H: WorkerHandle<WorkItem>>(
+    job: &Arc<JobInner>,
+    p: &JobPrep,
+    node: Node<T>,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+) where
+    AnyNode: From<Node<T>>,
+{
+    ctx.ensure_graph(p.graph.num_vertices());
+    let view = JobView { g: p.graph.as_ref(), ctl: &job.ctl };
+    let mut push = JobPush { job, inner: handle };
+    engine::process(&view, ctx, &mut push, node);
+    // Flush per item, not per job-switch: any decrement of the job's
+    // live count may be the final one, and the finalizing worker must
+    // observe complete stats in the sink. The lock is per *descent*
+    // (one pop may expand a whole left spine), so it amortizes over
+    // many tree nodes — cheaper than the sharded runtime's two RMWs
+    // per node, which the benches accept as the baseline.
+    ctx.flush_stats_into(&job.ctl);
+}
+
+/// Push-only [`WorkerHandle`] adapter: the engine's node processor sees
+/// a typed handle, the pool sees job-tagged [`WorkItem`]s.
+struct JobPush<'a, H> {
+    job: &'a Arc<JobInner>,
+    inner: &'a mut H,
+}
+
+impl<T: DegElem, H: WorkerHandle<WorkItem>> WorkerHandle<Node<T>> for JobPush<'_, H>
+where
+    AnyNode: From<Node<T>>,
+{
+    fn push(&mut self, item: Node<T>) {
+        // Increment before the item becomes visible so the job's live
+        // count can never reach zero while a node sits in a queue.
+        self.job.live_nodes.fetch_add(1, Ordering::SeqCst);
+        self.inner
+            .push(WorkItem { job: Arc::clone(self.job), work: Work::Node(AnyNode::from(item)) });
+    }
+
+    fn pop(&mut self) -> Option<Node<T>> {
+        unreachable!("job adapter is push-only; the resident loop owns pops")
+    }
+
+    fn on_node_done(&mut self) {
+        unreachable!("job adapter is push-only; the resident loop owns node accounting")
+    }
+
+    fn idle_step(&mut self) -> IdleOutcome {
+        unreachable!("job adapter is push-only; the resident loop owns idling")
+    }
+
+    fn counters(&self) -> WorkerCounters {
+        WorkerCounters::default()
+    }
+}
+
+/// The job-setup stage, run on a worker: preparation pipeline, initial
+/// bound, trivial answers, and the root-node push.
+fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
+    let g: &Graph = job.problem.graph();
+    let (p, k) = match &job.problem {
+        // ub = k+1 keeps the high-degree rule sound for covers ≤ k.
+        Problem::Pvc { k, .. } => {
+            (prep::prepare(g, &job.prep_cfg, Some(k.saturating_add(1))), Some(*k))
+        }
+        _ => (prep::prepare(g, &job.prep_cfg, None), None),
+    };
+    let forced = p.forced_cover.len() as u32;
+    let n_resid = p.residual.graph.num_vertices();
+    let summary = PrepSummary {
+        n_original: g.num_vertices(),
+        n_residual: n_resid,
+        forced: forced as usize,
+        greedy_ub: p.greedy_ub,
+        dtype: p.dtype,
+        blocks: p.occupancy.blocks,
+        fits_shared_mem: p.occupancy.fits_shared_mem,
+        workers: job.pool_workers,
+    };
+
+    let (initial, k_resid, decided) = match k {
+        None => (p.residual_ub, None, None),
+        Some(k) => {
+            if p.greedy_ub <= k {
+                (0, None, Some(PvcDecided::FoundGreedy(p.greedy_ub)))
+            } else if forced > k {
+                (0, None, Some(PvcDecided::Infeasible))
+            } else {
+                let k_resid = k - forced;
+                ((k_resid + 1).min(n_resid as u32 + 1), Some(k_resid), None)
+            }
+        }
+    };
+
+    let graph = Arc::new(p.residual.graph);
+    // Publish the bound before any node can observe it (the root is
+    // pushed below, after the store).
+    job.ctl.best.store(initial, Ordering::SeqCst);
+
+    // A job stopped before its search begins (trivial PVC answer,
+    // pre-expired deadline, early cancel) pushes no root.
+    job.ctl.check_deadline();
+    let start_search = decided.is_none() && !job.ctl.stop.load(Ordering::SeqCst);
+    let (root, root_bytes) = if start_search {
+        let root = match p.dtype {
+            Dtype::U8 => AnyNode::U8(engine::make_root::<u8>(&graph)),
+            Dtype::U16 => AnyNode::U16(engine::make_root::<u16>(&graph)),
+            Dtype::U32 => AnyNode::U32(engine::make_root::<u32>(&graph)),
+        };
+        let bytes = match &root {
+            AnyNode::U8(n) => n.payload_bytes(),
+            AnyNode::U16(n) => n.payload_bytes(),
+            AnyNode::U32(n) => n.payload_bytes(),
+        };
+        (Some(root), bytes)
+    } else {
+        (None, 0)
+    };
+
+    let prep_record = JobPrep {
+        graph,
+        initial,
+        forced,
+        greedy_ub: p.greedy_ub,
+        k_resid,
+        summary,
+        root_bytes,
+        root_pushed: root.is_some(),
+        decided,
+    };
+    // Publish prep before the root enters the worklist: any worker that
+    // pops a node of this job must see it.
+    let _ = job.prepared.set(prep_record);
+
+    if let Some(root) = root {
+        job.live_nodes.fetch_add(1, Ordering::SeqCst);
+        handle.push(WorkItem { job: Arc::clone(job), work: Work::Node(root) });
+    }
+}
+
+/// Publish a finished job's solution (first writer wins) and wake the
+/// waiters.
+fn store_outcome(job: &Arc<JobInner>, solution: Solution) {
+    let mut out = job.outcome.lock().unwrap();
+    if out.is_none() {
+        *out = Some(solution);
+    }
+    job.done_cv.notify_all();
+}
+
+/// Degenerate outcome for a job whose setup or finalization panicked:
+/// no trustworthy objective, but `wait` must still return.
+fn failed_solution(job: &Arc<JobInner>) -> Solution {
+    let g = job.problem.graph();
+    let prep = match job.prepared.get() {
+        Some(p) => p.summary.clone(),
+        None => PrepSummary {
+            n_original: g.num_vertices(),
+            n_residual: 0,
+            forced: 0,
+            greedy_ub: 0,
+            dtype: Dtype::U32,
+            blocks: 0,
+            fits_shared_mem: false,
+            workers: job.pool_workers,
+        },
+    };
+    Solution {
+        problem: job.problem.kind(),
+        objective: 0,
+        feasible: false,
+        witness: None,
+        stats: EngineStats::default(),
+        prep,
+        elapsed: job.started.elapsed(),
+        termination: Termination::Failed,
+    }
+}
+
+/// Assemble the [`Solution`] once the job's last work item retired; the
+/// caller observed `live_nodes` hit zero, so it owns the continuation.
+fn finalize(job: &Arc<JobInner>) {
+    let termination = if job.failed.load(Ordering::SeqCst) {
+        Termination::Failed
+    } else if job.cancelled.load(Ordering::SeqCst) {
+        Termination::Cancelled
+    } else if job.ctl.timed_out.load(Ordering::SeqCst) {
+        Termination::DeadlineExpired
+    } else {
+        Termination::Complete
+    };
+    let Some(p) = job.prepared.get() else {
+        // Setup panicked before publishing prep: degenerate outcome.
+        store_outcome(job, failed_solution(job));
+        return;
+    };
+
+    #[cfg(debug_assertions)]
+    {
+        // A fully-explored search must have drained its registry (PVC
+        // early stop and cancelled/timed-out jobs legitimately leave
+        // live entries behind).
+        if termination == Termination::Complete && !job.ctl.stop.load(Ordering::SeqCst) {
+            job.ctl.registry.assert_drained();
+        }
+    }
+
+    let mut stats = job.ctl.stats_sink.lock().unwrap().clone();
+    stats.registry_entries = job.ctl.registry.len() as u64;
+    if p.root_pushed {
+        // The root payload was created in setup, outside any descent.
+        stats.payload_nodes += 1;
+        stats.payload_bytes += p.root_bytes;
+    }
+
+    let best_resid = job.ctl.best.load(Ordering::SeqCst);
+    let improved = job.ctl.improved.load(Ordering::SeqCst);
+    let (objective, feasible) = match (&job.problem, &p.decided) {
+        (Problem::Pvc { .. }, Some(PvcDecided::FoundGreedy(s))) => (*s, true),
+        (Problem::Pvc { k, .. }, Some(PvcDecided::Infeasible)) => (k.saturating_add(1), false),
+        (Problem::Pvc { k, .. }, None) => {
+            let k_resid = p.k_resid.expect("searched PVC has a residual budget");
+            let found = improved && best_resid <= k_resid;
+            if found {
+                (p.forced + best_resid, true)
+            } else {
+                (k.saturating_add(1), false)
+            }
+        }
+        (Problem::Mvc { .. }, _) => {
+            let total = p.forced + best_resid.min(p.initial);
+            (total.min(p.greedy_ub), true)
+        }
+        (Problem::Mis { g }, _) => {
+            let total = p.forced + best_resid.min(p.initial);
+            let mvc = total.min(p.greedy_ub);
+            (g.num_vertices() as u32 - mvc, true)
+        }
+    };
+
+    store_outcome(
+        job,
+        Solution {
+            problem: job.problem.kind(),
+            objective,
+            feasible,
+            witness: None,
+            stats,
+            prep: p.summary.clone(),
+            elapsed: job.started.elapsed(),
+            termination,
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::solver::oracle;
+
+    #[test]
+    fn single_mvc_job_matches_oracle() {
+        let svc = VcService::builder().workers(2).build();
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(18, 0.2, seed);
+            let opt = oracle::mvc_size(&g);
+            let sol = svc.solve(Problem::mvc(g));
+            assert_eq!(sol.objective, opt, "seed {seed}");
+            assert_eq!(sol.termination, Termination::Complete);
+            assert!(sol.feasible);
+            assert!(sol.stats.tree_nodes > 0 || sol.prep.n_residual == 0, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn pvc_jobs_answer_both_sides() {
+        let svc = VcService::builder().workers(3).build();
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(16, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            let yes = svc.solve(Problem::pvc(g.clone(), opt));
+            assert!(yes.feasible, "seed {seed} k=opt");
+            assert!(yes.objective <= opt, "seed {seed}");
+            let no = svc.solve(Problem::pvc(g, opt.saturating_sub(1)));
+            assert!(!no.feasible, "seed {seed} k=opt-1");
+            assert_eq!(no.objective, opt, "infeasible reports k+1");
+        }
+    }
+
+    #[test]
+    fn mis_job_complements_mvc() {
+        let svc = VcService::builder().workers(2).build();
+        let g = generators::petersen();
+        let sol = svc.solve(Problem::mis(g));
+        assert_eq!(sol.objective, 4); // α(Petersen) = 4
+        assert_eq!(sol.problem, ProblemKind::Mis);
+    }
+
+    #[test]
+    fn many_concurrent_jobs_all_resolve() {
+        let svc = VcService::builder().workers(4).build();
+        let handles: Vec<(JobHandle, u32)> = (0..24u64)
+            .map(|seed| {
+                let g = generators::erdos_renyi(14 + (seed as usize % 6), 0.2, seed);
+                let opt = oracle::mvc_size(&g);
+                (svc.submit(Problem::mvc(g)), opt)
+            })
+            .collect();
+        for (i, (h, opt)) in handles.iter().enumerate() {
+            let sol = h.wait();
+            assert_eq!(sol.objective, *opt, "job {i}");
+            assert_eq!(sol.termination, Termination::Complete, "job {i}");
+        }
+    }
+
+    #[test]
+    fn service_drop_drains_outstanding_jobs() {
+        let svc = VcService::builder().workers(2).build();
+        let pairs: Vec<(JobHandle, u32)> = (0..8u64)
+            .map(|seed| {
+                let g = generators::union_of_random(3, 3, 6, 0.3, seed);
+                let opt = oracle::mvc_size(&g);
+                (svc.submit(Problem::mvc(g)), opt)
+            })
+            .collect();
+        drop(svc); // graceful shutdown must drain, not abandon
+        for (h, opt) in pairs {
+            let sol = h.wait();
+            assert_eq!(sol.objective, opt);
+        }
+    }
+
+    #[test]
+    fn empty_and_trivial_graphs_through_service() {
+        let svc = VcService::builder().workers(1).build();
+        let empty = Graph::from_edges(5, &[]);
+        assert_eq!(svc.solve(Problem::mvc(empty)).objective, 0);
+        let single = Graph::from_edges(2, &[(0, 1)]);
+        assert_eq!(svc.solve(Problem::mvc(single.clone())).objective, 1);
+        assert!(svc.solve(Problem::pvc(single.clone(), 1)).feasible);
+        assert!(!svc.solve(Problem::pvc(single, 0)).feasible);
+    }
+
+    #[test]
+    fn sharded_resident_pool_agrees() {
+        let svc =
+            VcService::builder().workers(3).scheduler(SchedulerKind::Sharded).build();
+        for seed in 0..5 {
+            let g = generators::union_of_random(3, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(svc.solve(Problem::mvc(g)).objective, opt, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn job_ids_are_unique_and_monotonic() {
+        let svc = VcService::builder().workers(1).build();
+        let a = svc.submit(Problem::mvc(generators::path(4)));
+        let b = svc.submit(Problem::mvc(generators::path(5)));
+        assert!(b.id() > a.id());
+        a.wait();
+        b.wait();
+    }
+}

@@ -51,6 +51,13 @@ impl Args {
         &self.positional
     }
 
+    /// Positional arguments from index `i` on — the tail a batch verb
+    /// treats as "one job per argument" (`cavc solve --jobs list.txt
+    /// extra.gr ...`).
+    pub fn pos_rest(&self, i: usize) -> &[String] {
+        self.positional.get(i..).unwrap_or(&[])
+    }
+
     /// String option.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.options.get(key).map(|s| s.as_str())
@@ -114,5 +121,14 @@ mod tests {
     fn defaults_apply() {
         let a = Args::parse(v(&[]), &[]).unwrap();
         assert_eq!(a.get_parse::<u32>("k", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn pos_rest_returns_tail() {
+        let a = Args::parse(v(&["solve", "a.gr", "b.gr", "c.gr"]), &[]).unwrap();
+        assert_eq!(a.pos_rest(1), &["a.gr".to_string(), "b.gr".into(), "c.gr".into()]);
+        assert_eq!(a.pos_rest(3), &["c.gr".to_string()]);
+        assert!(a.pos_rest(4).is_empty());
+        assert!(a.pos_rest(99).is_empty());
     }
 }

@@ -10,7 +10,10 @@
 //! ≥200 cases per variant. A failing case prints its reproducible tag.
 
 use cavc::graph::{generators, Graph};
-use cavc::solver::{oracle, sequential, solve_mvc, solve_pvc, SchedulerKind, SolverConfig};
+use cavc::solver::{
+    oracle, sequential, solve_mvc, solve_pvc, Problem, SchedulerKind, SolverConfig, Termination,
+    VcService,
+};
 use cavc::util::SplitMix64;
 
 const CASES: usize = 220;
@@ -196,6 +199,62 @@ fn differential_induction_on_off() {
                     !solve_pvc(g, opt.saturating_sub(1), &cfg).found,
                     "case {case} {tag}: induce={t} PVC found below optimum"
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn differential_concurrent_service_mixed_jobs() {
+    // Concurrent submission of mixed MVC/PVC jobs to one resident pool
+    // must equal the sequential oracle answers — the jobs interleave on
+    // shared deques, so this exercises job-local registry scoping,
+    // per-job completion counting, and the setup/run split, on both
+    // resident runtimes.
+    let mut rng = SplitMix64::new(SEED ^ 0x5E41_11CE);
+    let mut cases: Vec<(Graph, u32, String)> = Vec::new();
+    for case in 0..80 {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        cases.push((g, opt, format!("case {case} {tag}")));
+    }
+    assert!(cases.len() >= 40, "generator drift: only {} cases", cases.len());
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(4).scheduler(sched).build();
+        // submit everything before waiting on anything: all jobs in
+        // flight at once
+        let handles: Vec<_> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (g, opt, _))| match i % 3 {
+                0 => svc.submit(Problem::mvc(g.clone())),
+                1 => svc.submit(Problem::pvc(g.clone(), *opt)),
+                _ => svc.submit(Problem::pvc(g.clone(), opt - 1)),
+            })
+            .collect();
+        for (i, h) in handles.iter().enumerate() {
+            let (_, opt, tag) = &cases[i];
+            let sol = h.wait();
+            assert_eq!(
+                sol.termination,
+                Termination::Complete,
+                "{tag} ({}) did not complete",
+                sched.name()
+            );
+            match i % 3 {
+                0 => assert_eq!(sol.objective, *opt, "{tag} ({}): mvc != oracle", sched.name()),
+                1 => {
+                    assert!(sol.feasible, "{tag} ({}): pvc missed k=opt", sched.name());
+                    assert!(sol.objective <= *opt, "{tag}: pvc size above k");
+                }
+                _ => assert!(
+                    !sol.feasible,
+                    "{tag} ({}): pvc found a cover below the optimum",
+                    sched.name()
+                ),
             }
         }
     }

@@ -1,0 +1,160 @@
+//! Job-lifecycle tests for the resident solver service: cancellation,
+//! per-job deadlines, concurrent submitters, and small jobs making
+//! progress while a large job saturates the pool.
+
+use cavc::graph::generators;
+use cavc::solver::{
+    oracle, JobOptions, Problem, SchedulerKind, Termination, VcService,
+};
+use std::time::{Duration, Instant};
+
+/// A dense graph whose exact MVC search runs far longer than any of
+/// these tests wait (p_hat blobs are reduction-resistant).
+fn long_running_graph() -> cavc::graph::Graph {
+    generators::p_hat(180, 0.35, 0.85, 11)
+}
+
+#[test]
+fn cancellation_stops_a_running_job_and_pool_stays_usable() {
+    let svc = VcService::builder().workers(2).build();
+    let big = svc.submit(Problem::mvc(long_running_graph()));
+    // let it get past setup and into real branching
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(big.try_result().is_none(), "dense search cannot finish in 30ms");
+    big.cancel();
+    let t = Instant::now();
+    let sol = big.wait();
+    assert_eq!(sol.termination, Termination::Cancelled);
+    // queued nodes drain at pop speed — seconds would mean cancel leaks
+    assert!(t.elapsed() < Duration::from_secs(20), "cancel drain took {:?}", t.elapsed());
+    // the pool must still serve fresh jobs correctly
+    let g = generators::erdos_renyi(16, 0.2, 5);
+    let opt = oracle::mvc_size(&g);
+    assert_eq!(svc.solve(Problem::mvc(g)).objective, opt);
+}
+
+#[test]
+fn cancelling_a_finished_job_is_a_noop() {
+    let svc = VcService::builder().workers(1).build();
+    let g = generators::path(6);
+    let h = svc.submit(Problem::mvc(g));
+    let first = h.wait();
+    assert_eq!(first.termination, Termination::Complete);
+    h.cancel(); // after completion: must not rewrite the outcome
+    let again = h.wait();
+    assert_eq!(again.termination, Termination::Complete);
+    assert_eq!(again.objective, first.objective);
+}
+
+#[test]
+fn per_job_deadline_expires_and_reports_a_bound() {
+    let svc = VcService::builder().workers(2).build();
+    let h = svc.submit_with(
+        Problem::mvc(long_running_graph()),
+        JobOptions { timeout: Some(Duration::from_millis(25)), ..JobOptions::default() },
+    );
+    let sol = h.wait();
+    assert_eq!(sol.termination, Termination::DeadlineExpired);
+    assert!(sol.timed_out());
+    // the objective is still a sound upper bound (greedy at worst)
+    assert!(sol.objective >= 1);
+    assert!(sol.objective <= 180);
+}
+
+#[test]
+fn deadline_on_pvc_reports_unknown_infeasible() {
+    let svc = VcService::builder().workers(2).build();
+    // k=1 on a dense graph: provably infeasible, but the proof needs a
+    // search the deadline cuts short — found must come back false.
+    let h = svc.submit_with(
+        Problem::pvc(long_running_graph(), 1),
+        JobOptions { timeout: Some(Duration::from_millis(25)), ..JobOptions::default() },
+    );
+    let sol = h.wait();
+    assert!(!sol.feasible);
+}
+
+#[test]
+fn deadlines_do_not_leak_across_jobs() {
+    // A deadline on job A must not stop job B sharing the pool.
+    let svc = VcService::builder().workers(3).build();
+    let bounded = svc.submit_with(
+        Problem::mvc(long_running_graph()),
+        JobOptions { timeout: Some(Duration::from_millis(20)), ..JobOptions::default() },
+    );
+    let g = generators::union_of_random(3, 3, 6, 0.3, 9);
+    let opt = oracle::mvc_size(&g);
+    let free = svc.submit(Problem::mvc(g));
+    assert_eq!(bounded.wait().termination, Termination::DeadlineExpired);
+    let sol = free.wait();
+    assert_eq!(sol.termination, Termination::Complete);
+    assert_eq!(sol.objective, opt);
+}
+
+#[test]
+fn small_jobs_complete_while_a_large_job_is_branching() {
+    // The headline property: one large graph keeps branching while many
+    // small graphs stream through the same pool.
+    let svc = VcService::builder().workers(2).build();
+    let big = svc.submit(Problem::mvc(long_running_graph()));
+    let mut pending: Vec<(cavc::solver::JobHandle, u32)> = Vec::new();
+    for seed in 0..12u64 {
+        let g = generators::erdos_renyi(15, 0.2, seed);
+        let opt = oracle::mvc_size(&g);
+        pending.push((svc.submit(Problem::mvc(g)), opt));
+    }
+    for (i, (h, opt)) in pending.iter().enumerate() {
+        let sol = h.wait();
+        assert_eq!(sol.termination, Termination::Complete, "small job {i}");
+        assert_eq!(sol.objective, *opt, "small job {i}");
+    }
+    // the big job is still running — the small jobs did not wait for it
+    assert!(big.try_result().is_none(), "dense search finished implausibly fast");
+    big.cancel();
+    assert_eq!(big.wait().termination, Termination::Cancelled);
+}
+
+#[test]
+fn concurrent_submitters_share_one_service() {
+    let svc = VcService::builder().workers(4).build();
+    std::thread::scope(|s| {
+        for t in 0..4u64 {
+            let svc = &svc;
+            s.spawn(move || {
+                for i in 0..6u64 {
+                    let seed = t * 100 + i;
+                    let g = generators::erdos_renyi(14, 0.22, seed);
+                    let opt = oracle::mvc_size(&g);
+                    let sol = svc.solve(Problem::mvc(g));
+                    assert_eq!(sol.objective, opt, "submitter {t} job {i}");
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn both_resident_runtimes_run_the_lifecycle() {
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(2).scheduler(sched).build();
+        // normal job
+        let g = generators::union_of_random(3, 3, 6, 0.3, 17);
+        let opt = oracle::mvc_size(&g);
+        assert_eq!(svc.solve(Problem::mvc(g)).objective, opt, "{}", sched.name());
+        // cancelled job
+        let doomed = svc.submit(Problem::mvc(long_running_graph()));
+        doomed.cancel();
+        assert_eq!(doomed.wait().termination, Termination::Cancelled, "{}", sched.name());
+        // deadline job
+        let bounded = svc.submit_with(
+            Problem::mvc(long_running_graph()),
+            JobOptions { timeout: Some(Duration::from_millis(20)), ..JobOptions::default() },
+        );
+        assert_eq!(
+            bounded.wait().termination,
+            Termination::DeadlineExpired,
+            "{}",
+            sched.name()
+        );
+    }
+}
