@@ -62,6 +62,40 @@ fn main() {
         &sched_csv,
     )
     .unwrap();
+
+    // Witness-cost companion pass: the same suite with extraction on,
+    // so the choice-log memory cost sits next to the bytes-per-node
+    // telemetry of the breakdown runs.
+    println!("\n# witness extraction cost (choice logs vs node payloads)");
+    let mut wrows = Vec::new();
+    for d in &suite {
+        eprintln!("[fig4:witness] {} ...", d.name);
+        wrows.push(tables::witness_cost_row(d));
+    }
+    tables::print_witness_cost(&wrows, std::io::stdout().lock()).unwrap();
+    let witness_csv: Vec<String> = wrows
+        .iter()
+        .map(|r| {
+            format!(
+                "{},{},{},{},{},{},{}",
+                r.name,
+                r.best,
+                r.verified,
+                r.witness_log_bytes,
+                r.logs_recycled,
+                r.payload_bytes,
+                r.payload_nodes
+            )
+        })
+        .collect();
+    let witness_path = tables::write_csv(
+        "fig4_witness_cost",
+        "graph,mvc,verified,witness_log_bytes,logs_recycled,payload_bytes,payload_nodes",
+        &witness_csv,
+    )
+    .unwrap();
+
     println!("\ncsv: {}", path.display());
     println!("csv: {}", sched_path.display());
+    println!("csv: {}", witness_path.display());
 }

@@ -629,6 +629,81 @@ pub fn fig4_row(d: &Dataset) -> Fig4Row {
     }
 }
 
+/// Witness-extraction memory cost for one dataset (the Figure 4
+/// companion table): choice-log bytes and recycled-log counts next to
+/// the PR 2 payload bytes-per-node telemetry, so the price of carrying
+/// witnesses is visible in the same units.
+#[derive(Debug, Clone)]
+pub struct WitnessCostRow {
+    /// Dataset analog.
+    pub name: &'static str,
+    /// Cover size of the extracting run.
+    pub best: u32,
+    /// Whether the extracted witness verified against the input.
+    pub verified: bool,
+    /// Total choice-log bytes retired over the run.
+    pub witness_log_bytes: u64,
+    /// Log buffers recycled through the worker pools.
+    pub logs_recycled: u64,
+    /// Node payload bytes (the baseline the log cost compares against).
+    pub payload_bytes: u64,
+    /// Node payloads created.
+    pub payload_nodes: u64,
+}
+
+/// Run one witness-cost row: the proposed solver with extraction on.
+pub fn witness_cost_row(d: &Dataset) -> WitnessCostRow {
+    let g = d.build();
+    let mut cfg = SolverConfig::proposed();
+    cfg.timeout = Some(cell_timeout());
+    cfg.scheduler = cell_scheduler();
+    cfg.extract_cover = true;
+    cfg.one_shot = true;
+    let r = solver::solve_mvc(&g, &cfg);
+    let verified = r
+        .cover
+        .as_ref()
+        .is_some_and(|c| crate::solver::witness::verify_cover(&g, c).is_ok());
+    WitnessCostRow {
+        name: d.name,
+        best: r.best,
+        verified,
+        witness_log_bytes: r.stats.witness_log_bytes,
+        logs_recycled: r.stats.logs_recycled,
+        payload_bytes: r.stats.payload_bytes,
+        payload_nodes: r.stats.payload_nodes,
+    }
+}
+
+/// Print the witness-cost companion table.
+pub fn print_witness_cost(rows: &[WitnessCostRow], mut w: impl Write) -> std::io::Result<()> {
+    let header = format!(
+        "| {:<22} | {:>8} | {:>8} | {:>14} | {:>13} | {:>12} | {:>11} |",
+        "Graph", "mvc", "verified", "log bytes", "logs recycled", "payload B", "log/payload"
+    );
+    writeln!(w, "{header}")?;
+    writeln!(w, "|{}|", "-".repeat(header.len() - 2))?;
+    for r in rows {
+        let ratio = if r.payload_bytes > 0 {
+            r.witness_log_bytes as f64 / r.payload_bytes as f64
+        } else {
+            0.0
+        };
+        writeln!(
+            w,
+            "| {:<22} | {:>8} | {:>8} | {:>14} | {:>13} | {:>12} | {:>10.3}% |",
+            r.name,
+            r.best,
+            r.verified,
+            r.witness_log_bytes,
+            r.logs_recycled,
+            r.payload_bytes,
+            100.0 * ratio
+        )?;
+    }
+    Ok(())
+}
+
 /// Print Figure 4 as a percentage table.
 pub fn print_fig4(rows: &[Fig4Row], mut w: impl Write) -> std::io::Result<()> {
     use crate::util::timer::{Activity, ALL_ACTIVITIES};

@@ -73,6 +73,23 @@
 //! thread spawn); sequential, no-load-balance, instrumented, and
 //! explicit pool-shape calls keep the one-shot engine.
 //!
+//! ## Witnesses: every engine path hands back a verifiable cover
+//!
+//! All solver paths — sequential, one-shot parallel, and service jobs
+//! ([`solver::service::JobOptions::extract_witness`]) — can return the
+//! actual solution vertex set, not just its size. The parallel engine
+//! carries a per-node **choice log** (the covered-vertex delta since the
+//! node's component context, in root-residual ids via each induced
+//! view's back map); the component registry reassembles component-local
+//! winning logs at last-descendant aggregation, exactly where it folds
+//! sizes; and [`solver::witness`] lifts the winning cover back through
+//! the two translation layers — the §IV-B induction renumbering and the
+//! root-reduction unwind ([`reduce::UnwindLog`]) — to original vertex
+//! ids, then verifies it edge-by-edge. This upgrades the repo's
+//! strongest invariant from "parallel == sequential == oracle
+//! objective" to "…and the parallel cover itself verifies": see
+//! `tests/witness_fuzz.rs` and the CLI's `--check` flag.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

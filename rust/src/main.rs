@@ -20,7 +20,8 @@ use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
 use cavc::solver::engine::EngineStats;
 use cavc::solver::{
-    self, JobHandle, Problem, SchedulerKind, SolverConfig, Termination, VcService, Variant,
+    self, witness, JobHandle, Problem, SchedulerKind, SolverConfig, Termination, VcService,
+    Variant,
 };
 
 use cavc::util::cli::Args;
@@ -73,10 +74,12 @@ fn print_help() {
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
         \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
         \x20                   [--induce-threshold A]  (induce split components when |C| <= A*view; 0 = off)\n\
+        \x20                   [--check]               (extract a witness cover on any variant and\n\
+        \x20                                            verify it edge-by-edge against the input)\n\
         \x20                   [--jobs LIST]           (batch mode: one resident service solves every\n\
         \x20                                            graph in LIST — one spec per line, '#' comments —\n\
         \x20                                            plus any extra positional specs, concurrently)\n\
-         pvc <graph|dataset> --k K [--variant ...] [--jobs LIST]\n         mis <graph|dataset> [--variant ...]\n\
+         pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check]\n         mis <graph|dataset> [--variant ...] [--check]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
          gen <er|ba|grid|cfat|phat|banded|union> --out FILE [--n N] [--p P] [--seed S]\n\
@@ -156,8 +159,11 @@ fn build_service(cfg: &SolverConfig) -> VcService {
 
 /// Batch mode: feed every graph spec through one resident service as
 /// concurrent jobs and print a per-job table plus aggregate throughput.
+/// With `--check`, every job extracts its witness and the run fails if
+/// any witness is missing or does not verify.
 fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
     let specs = batch_specs(args, list)?;
+    let check = args.flag("check");
     let cfg = parse_config(args)?;
     if cfg.variant == Variant::Sequential || cfg.variant == Variant::NoLoadBalance {
         bail!("--jobs batch mode needs a load-balanced parallel variant (proposed|yamout)");
@@ -171,11 +177,13 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
             Some(k) => Problem::pvc(g, k),
             None => Problem::mvc(g),
         };
-        jobs.push((spec.clone(), svc.submit(problem)));
+        let opts = cavc::solver::JobOptions { extract_witness: check, ..Default::default() };
+        jobs.push((spec.clone(), svc.submit_with(problem, opts)));
     }
     let submitted = t0.elapsed().as_secs_f64();
 
     let mut agg = EngineStats::default();
+    let mut check_failures: Vec<String> = Vec::new();
     println!(
         "{:<28} {:>10} {:>12} {:>10}  {}",
         "graph", "answer", "tree nodes", "elapsed", "status"
@@ -194,13 +202,34 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
             Termination::Cancelled => "cancelled",
             Termination::Failed => "failed",
         };
+        // Witness verdict: a feasible PVC / any MVC answer must carry a
+        // verified witness under --check; infeasible PVC has nothing to
+        // witness.
+        let checked = if !check {
+            ""
+        } else if sol.witness_verified == Some(true) {
+            " witness=ok"
+        } else if k.is_some() && !sol.feasible {
+            " witness=n/a"
+        } else {
+            check_failures.push(spec.clone());
+            " witness=FAILED"
+        };
         println!(
-            "{:<28} {:>10} {:>12} {:>9.3}s  {}",
+            "{:<28} {:>10} {:>12} {:>9.3}s  {}{}",
             spec,
             answer,
             sol.stats.tree_nodes,
             sol.elapsed.as_secs_f64(),
-            status
+            status,
+            checked
+        );
+    }
+    if !check_failures.is_empty() {
+        bail!(
+            "--check: {} job(s) without a verified witness: {}",
+            check_failures.len(),
+            check_failures.join(", ")
         );
     }
     let total = t0.elapsed().as_secs_f64();
@@ -216,14 +245,31 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
     Ok(())
 }
 
+/// Report a witness verification outcome on one line; errors name the
+/// first offending edge. Returns an `Err` so `--check` failures exit
+/// non-zero.
+fn report_check(kind: &str, ok: std::result::Result<(), witness::WitnessError>) -> Result<()> {
+    match ok {
+        Ok(()) => {
+            println!("witness check   : ok ({kind} verified edge-by-edge)");
+            Ok(())
+        }
+        Err(e) => {
+            println!("witness check   : FAILED — {e}");
+            bail!("witness verification failed: {e}")
+        }
+    }
+}
+
 fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(list) = args.get("jobs") {
         return cmd_batch(args, list, None);
     }
     let spec = args.pos(1).context("solve: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
+    let check = args.flag("check");
     let mut cfg = parse_config(args)?;
-    if cfg.variant == Variant::Sequential {
+    if cfg.variant == Variant::Sequential || check {
         cfg.extract_cover = true;
     }
     let r = solver::solve_mvc(&g, &cfg);
@@ -243,8 +289,13 @@ fn cmd_solve(args: &Args) -> Result<()> {
         r.prep.blocks,
         r.prep.workers
     );
-    if let Some(c) = &r.cover {
-        println!("cover valid     : {}", g.is_vertex_cover(c));
+    match &r.cover {
+        Some(c) => {
+            println!("cover           : {} vertices extracted", c.len());
+            report_check("cover", witness::verify_cover(&g, c))?;
+        }
+        None if check => bail!("--check: no witness extracted (timeout?)"),
+        None => {}
     }
     Ok(())
 }
@@ -260,7 +311,11 @@ fn cmd_pvc(args: &Args) -> Result<()> {
     }
     let spec = args.pos(1).context("pvc: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
-    let cfg = parse_config(args)?;
+    let check = args.flag("check");
+    let mut cfg = parse_config(args)?;
+    if check {
+        cfg.extract_cover = true;
+    }
     let r = solver::solve_pvc(&g, k, &cfg);
     println!("graph   : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
     println!("variant : {}", cfg.variant.name());
@@ -271,22 +326,34 @@ fn cmd_pvc(args: &Args) -> Result<()> {
     }
     println!("elapsed : {:.3}s", r.elapsed.as_secs_f64());
     println!("nodes   : {}", r.stats.tree_nodes);
+    if let Some(c) = &r.cover {
+        println!("cover   : {} vertices (budget {k})", c.len());
+        report_check("cover", witness::verify_cover(&g, c))?;
+    } else if check && r.found {
+        bail!("--check: feasible answer carried no witness");
+    }
     Ok(())
 }
 
 fn cmd_mis(args: &Args) -> Result<()> {
     let spec = args.pos(1).context("mis: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
+    let check = args.flag("check");
     let mut cfg = parse_config(args)?;
-    if cfg.variant == Variant::Sequential {
+    if cfg.variant == Variant::Sequential || check {
         cfg.extract_cover = true;
     }
     let r = cavc::solver::mis::solve_mis(&g, &cfg);
     println!("graph   : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
     println!("alpha   : {}{}", r.alpha, if r.mvc.timed_out { " (timeout: lower bound)" } else { "" });
     println!("elapsed : {:.3}s", r.mvc.elapsed.as_secs_f64());
-    if let Some(set) = &r.set {
-        println!("witness : independent = {}", cavc::solver::mis::is_independent_set(&g, set));
+    match &r.set {
+        Some(set) => {
+            println!("witness : {} vertices", set.len());
+            report_check("independent set", witness::verify_independent_set(&g, set))?;
+        }
+        None if check => bail!("--check: no witness extracted (timeout?)"),
+        None => {}
     }
     Ok(())
 }

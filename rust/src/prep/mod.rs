@@ -7,9 +7,10 @@
 
 use crate::degree::Dtype;
 use crate::graph::{Graph, InducedSubgraph};
-use crate::reduce::{self, RootReduceStats};
+use crate::reduce::{self, RootReduceStats, UnwindLog};
 use crate::solver::greedy;
 use crate::solver::occupancy::{Occupancy, OccupancyModel};
+use crate::solver::witness::CoverLift;
 use crate::util::BitSet;
 
 /// Knobs for the preparation stage.
@@ -48,12 +49,33 @@ pub struct Prepared {
     pub occupancy: Occupancy,
     /// Root-reduction statistics.
     pub reduce_stats: RootReduceStats,
+    /// Root-reduction decision log: replayed in reverse, it lifts any
+    /// residual cover to a full-graph cover (see
+    /// [`Prepared::lift_residual_cover`]).
+    pub unwind: UnwindLog,
 }
 
 impl Prepared {
     /// Translate a residual-relative optimal size to the original graph.
     pub fn total_size(&self, residual_best: u32) -> u32 {
         self.forced_cover.len() as u32 + residual_best
+    }
+
+    /// Lift a cover over the residual graph to a cover of the original
+    /// graph: translate residual ids through the induction map, then
+    /// unwind the root reductions (restoring every forced vertex's cover
+    /// decision; crown-independent vertices stay excluded).
+    pub fn lift_residual_cover(&self, residual_cover: &[u32]) -> Vec<u32> {
+        let mut cover = self.residual.translate_cover(residual_cover);
+        self.unwind.unwind(&mut cover);
+        cover
+    }
+
+    /// An owned [`CoverLift`] (induction map + unwind log) that outlives
+    /// this preparation — the resident service keeps one per witness-
+    /// extracting job after the prep graphs are dropped.
+    pub fn cover_lift(&self) -> CoverLift {
+        CoverLift::new(self.residual.to_original.clone(), self.unwind.clone())
     }
 }
 
@@ -65,16 +87,21 @@ pub fn prepare(g: &Graph, cfg: &PrepConfig, ub_override: Option<u32>) -> Prepare
     let greedy_ub = greedy::greedy_bound(g);
     let ub_for_rules = ub_override.unwrap_or(greedy_ub);
 
-    let (residual, forced_cover, reduce_stats) = if cfg.reduce_root {
+    let (residual, forced_cover, reduce_stats, unwind) = if cfg.reduce_root {
         let red = reduce::reduce_root(g, ub_for_rules, cfg.use_crown, true);
-        (InducedSubgraph::new(g, &red.kept), red.in_cover, red.stats)
+        (InducedSubgraph::new(g, &red.kept), red.in_cover, red.stats, red.log)
     } else {
         // identity induction: degree arrays sized to the original graph
         let mut keep = BitSet::new(g.num_vertices());
         for v in 0..g.num_vertices() {
             keep.set(v);
         }
-        (InducedSubgraph::new(g, &keep), Vec::new(), RootReduceStats::default())
+        (
+            InducedSubgraph::new(g, &keep),
+            Vec::new(),
+            RootReduceStats::default(),
+            UnwindLog::default(),
+        )
     };
 
     let max_deg = residual.graph.max_degree();
@@ -95,6 +122,7 @@ pub fn prepare(g: &Graph, cfg: &PrepConfig, ub_override: Option<u32>) -> Prepare
         dtype,
         occupancy,
         reduce_stats,
+        unwind,
     }
 }
 
@@ -132,6 +160,29 @@ mod tests {
             // total is optimal when strictly better than greedy, else the
             // greedy bound is optimal
             assert_eq!(total.min(p.greedy_ub), opt, "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lift_residual_cover_is_valid_and_optimal() {
+        for seed in 0..8 {
+            let g = generators::erdos_renyi(16, 0.2, seed);
+            let opt = oracle::mvc_size(&g);
+            let p = prepare(&g, &PrepConfig::default(), None);
+            let sub = if p.residual.graph.num_vertices() == 0 {
+                Vec::new()
+            } else {
+                oracle::mvc_cover(&p.residual.graph)
+            };
+            let cover = p.lift_residual_cover(&sub);
+            assert!(g.is_vertex_cover(&cover), "seed {seed}");
+            assert_eq!(cover.len(), sub.len() + p.forced_cover.len(), "seed {seed}");
+            // total ≥ opt always; strictly beating greedy implies optimal
+            // (prep soundness: min(total, greedy) == opt)
+            assert!(cover.len() as u32 >= opt, "seed {seed}");
+            if (cover.len() as u32) < p.greedy_ub {
+                assert_eq!(cover.len() as u32, opt, "seed {seed}");
+            }
         }
     }
 

@@ -38,6 +38,112 @@ pub struct RootReduceStats {
     pub special_cover: usize,
 }
 
+/// One recorded root-reduction decision. Each rule application is logged
+/// with enough structure that [`UnwindLog::unwind`] can replay it in
+/// reverse and restore the removed vertices' cover decisions on top of a
+/// residual-graph cover — the witness counterpart of the size bookkeeping
+/// in [`RootReduction::in_cover`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum UnwindStep {
+    /// Degree-one rule: the pendant's neighbor entered the cover.
+    DegreeOne {
+        /// The covered neighbor.
+        covered: u32,
+    },
+    /// Degree-two triangle rule: both neighbors of the apex entered.
+    Triangle {
+        /// First covered neighbor.
+        a: u32,
+        /// Second covered neighbor.
+        b: u32,
+    },
+    /// High-degree rule: the vertex itself entered the cover.
+    HighDegree {
+        /// The covered vertex.
+        covered: u32,
+    },
+    /// Crown head vertex forced into the cover.
+    CrownHead {
+        /// The covered head vertex.
+        covered: u32,
+    },
+    /// Crown independent vertex removed *without* covering it (all its
+    /// edges are covered by crown heads).
+    CrownExcluded {
+        /// The excluded vertex.
+        excluded: u32,
+    },
+    /// Closed-form special component (clique / chordless cycle) solved
+    /// at the root: its canonical minimum cover.
+    Special {
+        /// The covered vertices.
+        covered: Vec<u32>,
+    },
+}
+
+/// Ordered log of every root-reduction decision, replayable in reverse
+/// to lift a residual cover to a full-graph cover (`unwind`). All the
+/// root rules commit *unconditional* decisions (the forced vertices are
+/// in every improving cover regardless of how the residual is solved),
+/// so the lift is a pure append — but the reverse replay and the
+/// per-rule structure keep the log honest if a future rule (e.g. vertex
+/// folding) needs residual-dependent unwinding.
+#[derive(Debug, Clone, Default)]
+pub struct UnwindLog {
+    steps: Vec<UnwindStep>,
+}
+
+impl UnwindLog {
+    fn push(&mut self, step: UnwindStep) {
+        self.steps.push(step);
+    }
+
+    /// Recorded steps, in application order.
+    pub fn steps(&self) -> &[UnwindStep] {
+        &self.steps
+    }
+
+    /// True when no rule fired.
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    /// Number of vertices the log forces into the cover.
+    pub fn covered_count(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| match s {
+                UnwindStep::DegreeOne { .. }
+                | UnwindStep::HighDegree { .. }
+                | UnwindStep::CrownHead { .. } => 1,
+                UnwindStep::Triangle { .. } => 2,
+                UnwindStep::CrownExcluded { .. } => 0,
+                UnwindStep::Special { covered } => covered.len(),
+            })
+            .sum()
+    }
+
+    /// Replay the log in reverse over `cover` (a valid cover of the
+    /// residual graph, original ids): every rule-covered vertex is
+    /// appended; crown-excluded vertices stay out. The result covers
+    /// the full graph with exactly `covered_count()` extra vertices.
+    pub fn unwind(&self, cover: &mut Vec<u32>) {
+        for step in self.steps.iter().rev() {
+            match step {
+                UnwindStep::DegreeOne { covered }
+                | UnwindStep::HighDegree { covered }
+                | UnwindStep::CrownHead { covered } => cover.push(*covered),
+                UnwindStep::Triangle { a, b } => {
+                    cover.push(*a);
+                    cover.push(*b);
+                }
+                UnwindStep::CrownExcluded { .. } => {}
+                UnwindStep::Special { covered } => cover.extend_from_slice(covered),
+            }
+        }
+    }
+}
+
 /// Result of the exhaustive root reduction.
 #[derive(Debug, Clone)]
 pub struct RootReduction {
@@ -49,6 +155,9 @@ pub struct RootReduction {
     pub kept: BitSet,
     /// Rule application counts.
     pub stats: RootReduceStats,
+    /// Per-rule decision log for witness unwinding (forces exactly the
+    /// `in_cover` vertices; additionally records crown exclusions).
+    pub log: UnwindLog,
 }
 
 impl RootReduction {
@@ -65,6 +174,7 @@ struct RootCtx<'g> {
     queue: std::collections::VecDeque<u32>,
     queued: BitSet,
     stats: RootReduceStats,
+    log: UnwindLog,
 }
 
 impl<'g> RootCtx<'g> {
@@ -94,7 +204,9 @@ impl<'g> RootCtx<'g> {
     }
 
     /// Remove `v` from the graph *without* covering it (crown independent
-    /// vertices). All its edges must already be covered by its neighbors.
+    /// vertices). All its edges must already be covered by its neighbors
+    /// — covering the crown head usually zeroes `v`'s degree already, so
+    /// this is defensive cleanup.
     fn discard(&mut self, v: u32) {
         if !self.present(v) {
             return;
@@ -133,6 +245,7 @@ impl<'g> RootCtx<'g> {
                 1 => {
                     let u = self.first_neighbor(v).expect("deg-1 neighbor");
                     self.cover(u);
+                    self.log.push(UnwindStep::DegreeOne { covered: u });
                     self.stats.degree_one += 1;
                 }
                 2 => {
@@ -140,6 +253,7 @@ impl<'g> RootCtx<'g> {
                     if self.g.has_edge(a, b) {
                         self.cover(a);
                         self.cover(b);
+                        self.log.push(UnwindStep::Triangle { a, b });
                         self.stats.degree_two_triangle += 1;
                     }
                 }
@@ -149,6 +263,7 @@ impl<'g> RootCtx<'g> {
                             ub.saturating_sub(self.in_cover.len() as u32).saturating_sub(1);
                         if d > budget {
                             self.cover(v);
+                            self.log.push(UnwindStep::HighDegree { covered: v });
                             self.stats.high_degree += 1;
                         }
                     }
@@ -173,6 +288,7 @@ pub fn reduce_root(g: &Graph, ub: u32, use_crown: bool, use_high_degree: bool) -
         queue: std::collections::VecDeque::new(),
         queued: BitSet::new(n),
         stats: RootReduceStats::default(),
+        log: UnwindLog::default(),
     };
     for v in 0..n as u32 {
         ctx.enqueue(v);
@@ -199,10 +315,15 @@ pub fn reduce_root(g: &Graph, ub: u32, use_crown: bool, use_high_degree: bool) -
                 for &h in &c.head {
                     if ctx.present(h) {
                         ctx.cover(h);
+                        ctx.log.push(UnwindStep::CrownHead { covered: h });
                     }
                 }
                 for &i in &c.independent {
                     ctx.discard(i);
+                    // the exclusion is a *decision* (i is in no improving
+                    // cover), recorded even though covering the heads
+                    // already removed i's edges
+                    ctx.log.push(UnwindStep::CrownExcluded { excluded: i });
                 }
             }
         }
@@ -214,11 +335,17 @@ pub fn reduce_root(g: &Graph, ub: u32, use_crown: bool, use_high_degree: bool) -
             kept.set(v);
         }
     }
+    debug_assert_eq!(
+        ctx.log.covered_count(),
+        ctx.in_cover.len(),
+        "unwind log out of sync with the forced cover"
+    );
     RootReduction {
         in_cover: ctx.in_cover,
         residual_deg: ctx.deg,
         kept,
         stats: ctx.stats,
+        log: ctx.log,
     }
 }
 
@@ -247,65 +374,26 @@ fn solve_special_components(ctx: &mut RootCtx<'_>) -> bool {
             }
         }
         let size = comp.len() as u32;
-        let special = classify(size, comp.iter().map(|&v| ctx.deg[v as usize]));
-        match special {
-            Some(SpecialComponent::Clique { .. }) => {
-                // all but one vertex into the cover
-                for &v in &comp[1..] {
-                    if ctx.present(v) {
-                        ctx.cover(v);
-                    }
+        if let Some(sp) = classify(size, comp.iter().map(|&v| ctx.deg[v as usize])) {
+            // canonical minimum cover shared with the sequential and
+            // parallel extractors (SpecialComponent::cover_into)
+            let g = ctx.g;
+            let deg = &ctx.deg;
+            let mut cover = Vec::with_capacity(sp.mvc_size() as usize);
+            sp.cover_into(g, &comp, |v| deg[v as usize] > 0, &mut cover);
+            let mut covered = Vec::with_capacity(cover.len());
+            for &v in &cover {
+                if ctx.present(v) {
+                    ctx.cover(v);
+                    covered.push(v);
                 }
-                ctx.stats.special_cover += comp.len() - 1;
-                changed = true;
             }
-            Some(SpecialComponent::ChordlessCycle { .. }) => {
-                // walk the cycle, take every other vertex (+1 if odd)
-                let cover = cycle_cover(ctx.g, &comp, &ctx.deg);
-                ctx.stats.special_cover += cover.len();
-                for v in cover {
-                    if ctx.present(v) {
-                        ctx.cover(v);
-                    }
-                }
-                changed = true;
-            }
-            None => {}
+            ctx.stats.special_cover += covered.len();
+            ctx.log.push(UnwindStep::Special { covered });
+            changed = true;
         }
     }
     changed
-}
-
-/// Canonical minimum cover of a chordless cycle: walk it and take every
-/// second vertex, plus one extra for odd cycles.
-fn cycle_cover(g: &Graph, comp: &[u32], deg: &[u32]) -> Vec<u32> {
-    let start = comp[0];
-    let mut order = vec![start];
-    let mut prev = start;
-    let mut cur = g
-        .neighbors(start)
-        .iter()
-        .copied()
-        .find(|&w| deg[w as usize] > 0)
-        .expect("cycle vertex has a neighbor");
-    while cur != start {
-        order.push(cur);
-        let next = g
-            .neighbors(cur)
-            .iter()
-            .copied()
-            .find(|&w| deg[w as usize] > 0 && w != prev)
-            .expect("cycle vertex has two neighbors");
-        prev = cur;
-        cur = next;
-    }
-    debug_assert_eq!(order.len(), comp.len(), "cycle walk must visit all vertices");
-    // take odd positions 1,3,5,...; for odd cycles also take the last
-    let mut cover: Vec<u32> = order.iter().skip(1).step_by(2).copied().collect();
-    if comp.len() % 2 == 1 {
-        cover.push(order[comp.len() - 1]);
-    }
-    cover
 }
 
 #[cfg(test)]
@@ -417,5 +505,135 @@ mod tests {
         let g = generators::path(9);
         let red = reduce_root(&g, 9, false, true);
         assert!(red.stats.degree_one > 0);
+    }
+
+    /// Round-trip: reduce, solve the residual exactly, unwind — the
+    /// lifted cover must be valid on the full graph and have exactly
+    /// `|residual cover| + covered_count()` vertices (== the optimum
+    /// whenever an optimum strictly below `ub` exists).
+    fn check_unwind_roundtrip(g: &Graph, use_crown: bool, use_high_degree: bool, ub: u32) {
+        let red = reduce_root(g, ub, use_crown, use_high_degree);
+        assert_eq!(red.log.covered_count(), red.in_cover.len(), "log/in_cover drift");
+        let ind = crate::graph::InducedSubgraph::new(g, &red.kept);
+        let sub_cover = if ind.graph.num_vertices() == 0 {
+            Vec::new()
+        } else {
+            crate::solver::oracle::mvc_cover(&ind.graph)
+        };
+        let mut cover = ind.translate_cover(&sub_cover);
+        red.log.unwind(&mut cover);
+        assert!(g.is_vertex_cover(&cover), "unwound cover invalid");
+        assert_eq!(cover.len(), sub_cover.len() + red.in_cover.len(), "unwound size drift");
+        let opt = crate::solver::oracle::mvc_size(g);
+        if opt < ub {
+            assert_eq!(cover.len() as u32, opt, "unwound cover not optimal");
+        }
+        // crown-excluded vertices must never re-enter the cover
+        for step in red.log.steps() {
+            if let UnwindStep::CrownExcluded { excluded } = step {
+                assert!(!cover.contains(excluded), "excluded vertex {excluded} in cover");
+            }
+        }
+    }
+
+    #[test]
+    fn unwind_degree_one_rule() {
+        // paths reduce entirely through degree-one cascades
+        for n in [3usize, 5, 8, 11] {
+            check_unwind_roundtrip(&generators::path(n), false, false, n as u32 + 1);
+        }
+    }
+
+    #[test]
+    fn unwind_triangle_rule() {
+        // triangle with a pendant: degree-one forces the pendant's
+        // neighbor, the triangle rule takes the rest
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (0, 2), (2, 3)]);
+        check_unwind_roundtrip(&g, false, false, 5);
+        let red = reduce_root(&g, 5, false, false);
+        assert!(red.stats.degree_one + red.stats.degree_two_triangle > 0);
+    }
+
+    #[test]
+    fn unwind_high_degree_rule() {
+        // hub-heavy graphs with a tight greedy ub make the rule fire
+        for seed in 0..6 {
+            let g = generators::barabasi_albert(16, 2, seed);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            let red = reduce_root(&g, ub, false, true);
+            // the lift must stay sound whether or not the rule fired
+            let ind = crate::graph::InducedSubgraph::new(&g, &red.kept);
+            let sub = if ind.graph.num_vertices() == 0 {
+                Vec::new()
+            } else {
+                crate::solver::oracle::mvc_cover(&ind.graph)
+            };
+            let mut cover = ind.translate_cover(&sub);
+            red.log.unwind(&mut cover);
+            assert!(g.is_vertex_cover(&cover), "seed {seed}");
+            let opt = crate::solver::oracle::mvc_size(&g);
+            assert!(cover.len() as u32 >= opt, "seed {seed}");
+            if opt < ub {
+                assert_eq!(cover.len() as u32, opt, "seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn unwind_crown_rule() {
+        // K2,5: right vertices have degree 2 with non-adjacent
+        // neighbors, so no cheap rule fires and only the crown
+        // decomposition (greedy + Hopcroft–Karp matchings) can reduce
+        // it — heads {0,1} covered, the independent side excluded.
+        let g = Graph::from_edges(
+            7,
+            &[
+                (0, 2),
+                (0, 3),
+                (0, 4),
+                (0, 5),
+                (0, 6),
+                (1, 2),
+                (1, 3),
+                (1, 4),
+                (1, 5),
+                (1, 6),
+            ],
+        );
+        check_unwind_roundtrip(&g, true, false, g.num_vertices() as u32);
+        let red = reduce_root(&g, g.num_vertices() as u32, true, false);
+        assert!(red.stats.crown_rounds > 0, "crown must fire on K2,5");
+        assert!(red.log.steps().iter().any(|s| matches!(s, UnwindStep::CrownHead { .. })));
+        assert!(red.log.steps().iter().any(|s| matches!(s, UnwindStep::CrownExcluded { .. })));
+        // a crown-reduced K2,5 must land on the optimal cover {0, 1}
+        let mut cover = Vec::new();
+        red.log.unwind(&mut cover);
+        cover.sort_unstable();
+        assert_eq!(cover, vec![0, 1]);
+    }
+
+    #[test]
+    fn unwind_special_components() {
+        // cliques and chordless cycles solved in closed form at the root
+        let g = Graph::disjoint_union(&[
+            generators::clique(5),
+            generators::cycle(7),
+            generators::cycle(6),
+        ]);
+        check_unwind_roundtrip(&g, false, false, g.num_vertices() as u32);
+        let red = reduce_root(&g, g.num_vertices() as u32, false, false);
+        assert!(red.log.steps().iter().any(|s| matches!(s, UnwindStep::Special { .. })));
+    }
+
+    #[test]
+    fn unwind_mixed_rules_random_graphs() {
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(15, 0.18, seed);
+            check_unwind_roundtrip(&g, true, false, g.num_vertices() as u32 + 1);
+        }
+        for seed in 0..6 {
+            let g = generators::union_of_random(3, 3, 6, 0.3, seed);
+            check_unwind_roundtrip(&g, true, false, g.num_vertices() as u32 + 1);
+        }
     }
 }

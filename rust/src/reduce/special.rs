@@ -5,7 +5,11 @@
 //! These helpers are representation-agnostic (they take a degree lookup)
 //! so both the root reducer (u32 degrees over the original graph) and the
 //! generic engine (u8/u16/u32 degree arrays over the induced subgraph)
-//! share them.
+//! share them. [`SpecialComponent::cover_into`] produces the canonical
+//! witness cover of a classified component, shared by the root reducer,
+//! the sequential extractor, and the parallel engine's choice logs.
+
+use crate::graph::Graph;
 
 /// Closed-form classification of a connected component.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +32,52 @@ impl SpecialComponent {
         match self {
             SpecialComponent::Clique { size } => size - 1,
             SpecialComponent::ChordlessCycle { size } => size.div_ceil(2),
+        }
+    }
+
+    /// Append the canonical minimum cover of this component to `out`:
+    /// all-but-one vertex of a clique; alternating vertices of a cycle
+    /// (plus one extra when odd). `comp` is the component's vertex list
+    /// and `present(v)` the residual membership test (`deg > 0`), so the
+    /// walk works over any degree representation. Exactly
+    /// [`SpecialComponent::mvc_size`] vertices are appended.
+    pub fn cover_into(
+        self,
+        g: &Graph,
+        comp: &[u32],
+        present: impl Fn(u32) -> bool,
+        out: &mut Vec<u32>,
+    ) {
+        match self {
+            SpecialComponent::Clique { .. } => out.extend(comp.iter().skip(1).copied()),
+            SpecialComponent::ChordlessCycle { .. } => {
+                // walk the cycle, take every second vertex (+1 when odd)
+                let start = comp[0];
+                let mut order = vec![start];
+                let mut prev = start;
+                let mut cur = g
+                    .neighbors(start)
+                    .iter()
+                    .copied()
+                    .find(|&w| present(w))
+                    .expect("cycle vertex has a present neighbor");
+                while cur != start {
+                    order.push(cur);
+                    let next = g
+                        .neighbors(cur)
+                        .iter()
+                        .copied()
+                        .find(|&w| present(w) && w != prev)
+                        .expect("cycle vertex has two present neighbors");
+                    prev = cur;
+                    cur = next;
+                }
+                debug_assert_eq!(order.len(), comp.len(), "cycle walk must visit all vertices");
+                out.extend(order.iter().skip(1).step_by(2).copied());
+                if order.len() % 2 == 1 {
+                    out.push(order[order.len() - 1]);
+                }
+            }
         }
     }
 }
@@ -99,6 +149,29 @@ mod tests {
     #[test]
     fn non_uniform_rejected() {
         assert!(classify(4, [1u32, 2, 2, 1].into_iter()).is_none());
+    }
+
+    #[test]
+    fn cover_into_produces_valid_minimum_covers() {
+        use crate::graph::generators;
+        for n in [3usize, 4, 5, 6, 7, 9] {
+            let g = generators::cycle(n);
+            let comp: Vec<u32> = (0..n as u32).collect();
+            let sp = classify(n as u32, comp.iter().map(|&v| g.degree(v))).unwrap();
+            let mut cover = Vec::new();
+            sp.cover_into(&g, &comp, |_| true, &mut cover);
+            assert_eq!(cover.len() as u32, sp.mvc_size(), "C{n}");
+            assert!(g.is_vertex_cover(&cover), "C{n}");
+        }
+        for n in [2usize, 4, 6] {
+            let g = generators::clique(n);
+            let comp: Vec<u32> = (0..n as u32).collect();
+            let sp = classify(n as u32, comp.iter().map(|&v| g.degree(v))).unwrap();
+            let mut cover = Vec::new();
+            sp.cover_into(&g, &comp, |_| true, &mut cover);
+            assert_eq!(cover.len() as u32, sp.mvc_size(), "K{n}");
+            assert!(g.is_vertex_cover(&cover), "K{n}");
+        }
     }
 
     #[test]

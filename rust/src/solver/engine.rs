@@ -34,8 +34,13 @@
 //! plus a `|C|`-sized degree array — so every descendant pays O(|C|) per
 //! clone instead of O(n). A `Node`'s `view` points at its component's
 //! CSR (`None` ⇒ the shared root graph); the [`crate::solver::registry`]
-//! aggregates only solution *sizes*, so no vertex un-mapping is ever
-//! needed. GPU analogy: on the device this is the difference between
+//! aggregates solution *sizes* on every run, and under
+//! [`EngineCfg::extract_witness`] also the covers behind them — each
+//! node carries a choice log of covered vertices in root-residual ids
+//! (induced views keep a pre-composed `back` map, so renumbering is
+//! undone at log-append time), and the last-descendant cascade
+//! concatenates component-local winning logs exactly where it folds
+//! sizes. GPU analogy: on the device this is the difference between
 //! every thread block's stack slot being a full-width degree array in
 //! global memory and post-split blocks working on small arrays that fit
 //! shared memory — the occupancy lever of the paper's Table IV, applied
@@ -74,7 +79,7 @@ use std::time::Instant;
 use crate::degree::{DegElem, NonZeroBounds};
 use crate::graph::induced::induce_residual_into;
 use crate::graph::Graph;
-use crate::reduce::special::classify;
+use crate::reduce::special::{classify, SpecialComponent};
 use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
 
 use super::registry::{cas_min, Registry, NONE};
@@ -121,6 +126,10 @@ pub struct EngineCfg {
     /// induction (children stay full-width over the parent's view);
     /// `1.0` (default) induces every component.
     pub induce_threshold: f64,
+    /// Carry per-node choice logs and reassemble a witness cover at the
+    /// registry's last-descendant aggregation (residual-graph ids; lift
+    /// to original ids via `Prepared::lift_residual_cover`).
+    pub extract_witness: bool,
 }
 
 impl Default for EngineCfg {
@@ -136,6 +145,7 @@ impl Default for EngineCfg {
             scheduler: SchedulerKind::default(),
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             induce_threshold: DEFAULT_INDUCE_THRESHOLD,
+            extract_witness: false,
         }
     }
 }
@@ -151,6 +161,7 @@ impl EngineCfg {
             deadline: self.deadline,
             instrument: self.instrument,
             induce_threshold: self.induce_threshold,
+            extract_witness: self.extract_witness,
         }
     }
 }
@@ -174,6 +185,11 @@ pub struct JobCfg {
     /// Component-local subproblem induction gate (see
     /// [`EngineCfg::induce_threshold`]).
     pub induce_threshold: f64,
+    /// Carry choice logs and reassemble a witness cover (see
+    /// [`EngineCfg::extract_witness`]). Under PVC semantics this also
+    /// gates early stopping on *assembled* root witnesses, so the
+    /// returned cover always respects the proven bound.
+    pub extract_witness: bool,
 }
 
 impl Default for JobCfg {
@@ -219,6 +235,13 @@ pub struct EngineStats {
     /// CSR buffers of live induced component views (tracked only when
     /// `EngineCfg::instrument` is set; 0 otherwise).
     pub peak_live_bytes: u64,
+    /// Bytes of witness choice-log entries retired over the run (each
+    /// log's high-water length at node retirement) — the memory cost of
+    /// witness extraction against the bytes-per-node telemetry.
+    pub witness_log_bytes: u64,
+    /// Witness log buffers recycled through the worker pools instead of
+    /// freed.
+    pub logs_recycled: u64,
     /// Per-activity busy nanoseconds (all workers merged).
     pub activity: [u64; NUM_ACTIVITIES],
     /// Per-worker scheduler counters, indexed by worker id (Figure-4
@@ -250,6 +273,8 @@ impl EngineStats {
         self.payload_nodes += other.payload_nodes;
         self.payload_bytes += other.payload_bytes;
         self.peak_live_bytes = self.peak_live_bytes.max(other.peak_live_bytes);
+        self.witness_log_bytes += other.witness_log_bytes;
+        self.logs_recycled += other.logs_recycled;
         for i in 0..NUM_ACTIVITIES {
             self.activity[i] += other.activity[i];
         }
@@ -270,10 +295,26 @@ pub struct EngineOutcome {
     pub best: u32,
     /// Whether the initial bound was improved.
     pub improved: bool,
+    /// The assembled witness cover behind `best` (residual-graph ids),
+    /// when [`EngineCfg::extract_witness`] was set and an improvement
+    /// was found. Its length equals `best` except under PVC early stop,
+    /// where it is a valid cover within the proven bound.
+    pub witness: Option<Vec<u32>>,
     /// Counters.
     pub stats: EngineStats,
     /// True if the deadline fired before exhausting the search.
     pub timed_out: bool,
+}
+
+/// A component-local graph view: the induced CSR plus (when witness
+/// extraction is on) the inverse of the induction's renumbering chain —
+/// `back[local] = root-residual id`, pre-composed through every
+/// enclosing view so a choice log can be written in root ids with one
+/// lookup per covered vertex.
+pub(crate) struct GraphView {
+    pub(crate) graph: Graph,
+    /// local id → root-residual id; empty when logging is off.
+    back: Vec<u32>,
 }
 
 /// One search-tree node. `deg` is the degree array of the node's graph
@@ -285,10 +326,14 @@ pub(crate) struct Node<T> {
     edges: u64,
     bounds: NonZeroBounds,
     ctx: u32,
-    /// Component-local CSR this node's indices refer to; `None` ⇒ the
+    /// Component-local view this node's indices refer to; `None` ⇒ the
     /// shared root graph. Shared by every node descended from the same
     /// split component; the last one to retire recycles its buffers.
-    view: Option<Arc<Graph>>,
+    view: Option<Arc<GraphView>>,
+    /// Witness choice log: the vertices (root-residual ids) this node's
+    /// lineage covered since its context root. Empty when extraction is
+    /// off. Owned by the node, so it survives steals with it.
+    log: Vec<u32>,
 }
 
 impl<T: DegElem> Node<T> {
@@ -310,6 +355,7 @@ pub(crate) fn make_root<T: DegElem>(g: &Graph) -> Node<T> {
         bounds: NonZeroBounds::full(g.num_vertices()),
         ctx: NONE,
         view: None,
+        log: Vec::new(),
     }
 }
 
@@ -322,6 +368,9 @@ pub(crate) struct JobCtl {
     pub(crate) cfg: JobCfg,
     pub(crate) registry: Registry,
     pub(crate) best: AtomicU32,
+    /// The initial (exclusive) bound the search started from — the
+    /// reference for `improved` and for the witnessed-stop gate.
+    pub(crate) initial: AtomicU32,
     pub(crate) stop: AtomicBool,
     pub(crate) improved: AtomicBool,
     pub(crate) timed_out: AtomicBool,
@@ -334,9 +383,14 @@ pub(crate) struct JobCtl {
 
 impl JobCtl {
     pub(crate) fn new(cfg: JobCfg, initial_best: u32) -> JobCtl {
+        let mut registry = Registry::new(cfg.stop_on_improvement);
+        if cfg.extract_witness {
+            registry = registry.with_witnesses();
+        }
         JobCtl {
-            registry: Registry::new(cfg.stop_on_improvement),
+            registry,
             best: AtomicU32::new(initial_best),
+            initial: AtomicU32::new(initial_best),
             stop: AtomicBool::new(false),
             improved: AtomicBool::new(false),
             timed_out: AtomicBool::new(false),
@@ -358,11 +412,25 @@ impl JobCtl {
         }
     }
 
-    /// Record an achievable root-level total.
+    /// Record an achievable root-level total. Under PVC semantics this
+    /// latches the stop flag on improvement; with witness extraction on,
+    /// the stop additionally waits for an *assembled* root witness
+    /// within the bound (est-propagated totals tighten `best` but carry
+    /// no cover — see the registry module docs), so a stopped search can
+    /// always hand back a verifiable cover.
     pub(crate) fn on_root_total(&self, total: u32) {
         if cas_min(&self.best, total).is_some() {
             self.improved.store(true, Ordering::SeqCst);
-            if self.cfg.stop_on_improvement {
+        }
+        if self.cfg.stop_on_improvement
+            && self.best.load(Ordering::SeqCst) < self.initial.load(Ordering::SeqCst)
+        {
+            let witnessed = !self.cfg.extract_witness
+                || self
+                    .registry
+                    .root_witness_len()
+                    .is_some_and(|l| (l as u32) < self.initial.load(Ordering::SeqCst));
+            if witnessed {
                 self.stop.store(true, Ordering::SeqCst);
             }
         }
@@ -647,6 +715,7 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     }
     let best = ctl.best.load(Ordering::SeqCst);
     let improved = ctl.improved.load(Ordering::SeqCst);
+    let witness = ctl.registry.take_root_witness();
     let peak = ctl.peak_live_bytes.load(Ordering::Relaxed);
     let registry_len = ctl.registry.len() as u64;
     let mut stats = ctl.stats_sink.into_inner().unwrap();
@@ -657,7 +726,7 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     stats.payload_nodes += 1;
     stats.payload_bytes += root_bytes;
     stats.peak_live_bytes = stats.peak_live_bytes.max(peak);
-    EngineOutcome { best, improved, stats, timed_out }
+    EngineOutcome { best, improved, witness, stats, timed_out }
 }
 
 fn worker_loop<T: DegElem, H: WorkerHandle<Node<T>>>(
@@ -709,18 +778,32 @@ fn track_alloc<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, len: us
     }
 }
 
-/// Recycle a completed node's payload into the worker pool and hand its
-/// view `Arc` back so the caller can retire the CSR buffers once its own
-/// borrow of the view is gone (see [`process`]).
+/// Count and recycle a retired witness log through the worker's u32
+/// pool. The log's length at retirement is its high-water mark, so the
+/// byte counter reflects what extraction actually materialized.
+fn release_log<T: DegElem>(ctx: &mut WorkerCtx<T>, log: Vec<u32>) {
+    if log.capacity() == 0 {
+        return;
+    }
+    ctx.stats.witness_log_bytes += (log.len() * std::mem::size_of::<u32>()) as u64;
+    ctx.stats.logs_recycled += 1;
+    ctx.upool.release(log);
+}
+
+/// Recycle a completed node's payload (degree array + witness log) into
+/// the worker pools and hand its view `Arc` back so the caller can
+/// retire the CSR buffers once its own borrow of the view is gone (see
+/// [`process`]).
 fn retire_node<T: DegElem>(
     shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     mut node: Node<T>,
-) -> Option<Arc<Graph>> {
+) -> Option<Arc<GraphView>> {
     if shared.ctl.cfg.instrument {
         shared.ctl.live_bytes.fetch_sub(node.payload_bytes(), Ordering::Relaxed);
     }
     ctx.pool.release(std::mem::take(&mut node.deg));
+    release_log(ctx, std::mem::take(&mut node.log));
     node.view.take()
 }
 
@@ -739,30 +822,36 @@ pub(crate) fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
     // view Arc, which can only be unwrapped after this clone is dropped.
     let view = node.view.clone();
     let spent = {
-        let g: &Graph = view.as_deref().unwrap_or(shared.g);
+        let g: &Graph = view.as_ref().map(|v| &v.graph).unwrap_or(shared.g);
         descend(shared, g, ctx, handle, node)
     };
     drop(view);
     if let Some(v) = spent {
         // `Arc::into_inner` (not `try_unwrap`) so that when two workers
         // race to retire the last nodes of a view, exactly one of them
-        // receives the Graph — the CSR buffers are always recycled and
+        // receives the view — the CSR buffers are always recycled and
         // the live-bytes decrement can never be lost to the race.
-        if let Some(graph) = Arc::into_inner(v) {
+        if let Some(gv) = Arc::into_inner(v) {
+            let GraphView { graph, back } = gv;
             let (row_ptr, adj) = graph.into_parts();
             if shared.ctl.cfg.instrument {
-                shared.ctl.live_bytes.fetch_sub(csr_bytes(&row_ptr, &adj), Ordering::Relaxed);
+                shared
+                    .ctl
+                    .live_bytes
+                    .fetch_sub(view_bytes(&row_ptr, &adj, &back), Ordering::Relaxed);
             }
             ctx.upool.release(row_ptr);
             ctx.upool.release(adj);
+            ctx.upool.release(back);
         }
     }
 }
 
-/// Bytes of an induced view's CSR arrays (live-memory accounting).
+/// Bytes of an induced view's CSR arrays plus its back map
+/// (live-memory accounting).
 #[inline]
-fn csr_bytes(row_ptr: &[u32], adj: &[u32]) -> u64 {
-    ((row_ptr.len() + adj.len()) * std::mem::size_of::<u32>()) as u64
+fn view_bytes(row_ptr: &[u32], adj: &[u32], back: &[u32]) -> u64 {
+    ((row_ptr.len() + adj.len() + back.len()) * std::mem::size_of::<u32>()) as u64
 }
 
 /// The branch-and-reduce descent over one node (Alg. 2). `g` is the
@@ -774,7 +863,8 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
     mut node: Node<T>,
-) -> Option<Arc<Graph>> {
+) -> Option<Arc<GraphView>> {
+    let extract = shared.ctl.cfg.extract_witness;
     loop {
         ctx.stats.tree_nodes += 1;
 
@@ -801,8 +891,10 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
         // ---- leaf (lines 5-7) ----
         if node.edges == 0 {
             let (c, sol) = (node.ctx, node.sol);
+            let log = std::mem::take(&mut node.log);
             let spent = retire_node(shared, ctx, node);
-            report_leaf(shared.ctl, c, sol);
+            report_leaf(shared.ctl, c, sol, &log);
+            release_log(ctx, log);
             complete(shared.ctl, c);
             return spent;
         }
@@ -812,11 +904,25 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
             ctx.timer.switch(Activity::ComponentSearch);
             match scan_components(g, ctx, &node, &red) {
                 Scan::Single => {}
-                Scan::SingleSpecial(mvc) => {
+                Scan::SingleSpecial(sp) => {
                     ctx.stats.special_solved += 1;
-                    let (c, total) = (node.ctx, node.sol + mvc);
+                    let (c, total) = (node.ctx, node.sol + sp.mvc_size());
+                    if extract {
+                        // the scan's BFS left the whole residual in
+                        // ctx.queue; append its closed-form cover
+                        let cover = special_cover_root_ids(
+                            g,
+                            &ctx.queue,
+                            &node.deg,
+                            node.view.as_deref(),
+                            sp,
+                        );
+                        node.log.extend_from_slice(&cover);
+                    }
+                    let log = std::mem::take(&mut node.log);
                     let spent = retire_node(shared, ctx, node);
-                    report_leaf(shared.ctl, c, total);
+                    report_leaf(shared.ctl, c, total, &log);
+                    release_log(ctx, log);
                     complete(shared.ctl, c);
                     return spent;
                 }
@@ -841,6 +947,7 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
 
         // left child: vmax into S — descend in place
         cover_vertex(g, &mut node, vmax);
+        log_cover(&mut node, vmax, extract);
         node.sol += 1;
     }
 }
@@ -871,6 +978,7 @@ fn reduce_node<T: DegElem>(
     g: &Graph,
     node: &mut Node<T>,
 ) -> ReduceOutcome {
+    let extract = shared.ctl.cfg.extract_witness;
     loop {
         if shared.ctl.cfg.use_bounds {
             node.bounds = node.bounds.tighten(&node.deg);
@@ -913,6 +1021,7 @@ fn reduce_node<T: DegElem>(
                     // degree-one: cover the neighbor
                     let u = first_present_neighbor(g, &node.deg, v as u32);
                     cover_vertex(g, node, u);
+                    log_cover(node, u, extract);
                     node.sol += 1;
                     changed = true;
                 }
@@ -921,7 +1030,9 @@ fn reduce_node<T: DegElem>(
                     let (a, b) = two_present_neighbors(g, &node.deg, v as u32);
                     if g.has_edge(a, b) {
                         cover_vertex(g, node, a);
+                        log_cover(node, a, extract);
                         cover_vertex(g, node, b);
+                        log_cover(node, b, extract);
                         node.sol += 2;
                         changed = true;
                     }
@@ -931,6 +1042,7 @@ fn reduce_node<T: DegElem>(
                     let budget = bound.saturating_sub(node.sol).saturating_sub(1);
                     if d > budget {
                         cover_vertex(g, node, v as u32);
+                        log_cover(node, v as u32, extract);
                         node.sol += 1;
                         changed = true;
                     }
@@ -968,6 +1080,38 @@ fn cover_vertex<T: DegElem>(g: &Graph, node: &mut Node<T>, v: u32) {
         }
     }
     debug_assert_eq!(remaining, 0, "degree count out of sync");
+}
+
+/// Append `v` (translated to a root-residual id through the node's view
+/// back map) to the node's witness choice log. Pairs with every
+/// [`cover_vertex`] call site; a no-op when extraction is off.
+#[inline]
+fn log_cover<T: DegElem>(node: &mut Node<T>, v: u32, extract: bool) {
+    if extract {
+        let rid = match &node.view {
+            Some(vw) => vw.back[v as usize],
+            None => v,
+        };
+        node.log.push(rid);
+    }
+}
+
+/// The canonical cover of a classified special component (vertex list in
+/// `comp`, view-local ids), translated to root-residual ids through the
+/// view's back map. Witness-extraction path only.
+fn special_cover_root_ids<T: DegElem>(
+    g: &Graph,
+    comp: &[u32],
+    deg: &[T],
+    view: Option<&GraphView>,
+    sp: SpecialComponent,
+) -> Vec<u32> {
+    let mut local = Vec::with_capacity(sp.mvc_size() as usize);
+    sp.cover_into(g, comp, |v| deg[v as usize].to_u32() > 0, &mut local);
+    match view {
+        Some(vw) => local.iter().map(|&v| vw.back[v as usize]).collect(),
+        None => local,
+    }
 }
 
 #[inline]
@@ -1026,9 +1170,19 @@ fn make_right_child<T: DegElem>(
     ctx.nbuf.extend(
         g.neighbors(vmax).iter().copied().filter(|&w| node.deg[w as usize].to_u32() > 0),
     );
+    let extract = shared.ctl.cfg.extract_witness;
     let mut deg = ctx.pool.acquire(node.deg.len());
     deg.extend_from_slice(&node.deg);
     track_alloc(shared, ctx, deg.len());
+    // the child owns its full choice log (prefix + the N(vmax) covers),
+    // so it can be stolen and completed by any worker
+    let log = if extract {
+        let mut log = ctx.upool.acquire(node.log.len() + ctx.nbuf.len());
+        log.extend_from_slice(&node.log);
+        log
+    } else {
+        Vec::new()
+    };
     let mut child = Node {
         deg,
         sol: node.sol + ctx.nbuf.len() as u32,
@@ -1036,13 +1190,16 @@ fn make_right_child<T: DegElem>(
         bounds: node.bounds,
         ctx: node.ctx,
         view: node.view.clone(),
+        log,
     };
     for &u in &ctx.nbuf {
         if child.deg[u as usize].to_u32() > 0 {
             cover_vertex(g, &mut child, u);
+            log_cover(&mut child, u, extract);
         }
     }
     debug_assert_eq!(child.deg[vmax as usize].to_u32(), 0);
+    debug_assert!(!extract || child.log.len() as u32 == child.sol, "log out of sync with sol");
     child
 }
 
@@ -1060,12 +1217,24 @@ fn push_child<T: DegElem, H: WorkerHandle<Node<T>>>(
     handle.push(node);
 }
 
-fn report_leaf(ctl: &JobCtl, ctx: u32, size: u32) {
+/// Report a leaf's total for its context, together with its choice log
+/// when extraction is on (`log.len() == size` relative to the context
+/// root — the cover achieving the reported size).
+fn report_leaf(ctl: &JobCtl, ctx: u32, size: u32, log: &[u32]) {
+    let extract = ctl.cfg.extract_witness;
+    debug_assert!(!extract || log.len() as u32 == size, "leaf log out of sync with size");
     if ctx == NONE {
+        if extract {
+            ctl.registry.offer_root_witness(log);
+        }
         ctl.on_root_total(size);
     } else {
         let mut on_root = |t: u32| ctl.on_root_total(t);
-        ctl.registry.report_solution(ctx, size, &mut on_root);
+        if extract {
+            ctl.registry.report_witnessed(ctx, size, log, &mut on_root);
+        } else {
+            ctl.registry.report_solution(ctx, size, &mut on_root);
+        }
     }
 }
 
@@ -1077,8 +1246,10 @@ fn complete(ctl: &JobCtl, ctx: u32) {
 enum Scan {
     /// Residual graph is one component (not special).
     Single,
-    /// One component and it is a clique / chordless cycle with this MVC.
-    SingleSpecial(u32),
+    /// One component and it is a clique / chordless cycle, solved in
+    /// closed form (the classification drives both the size and, when
+    /// extracting, the canonical witness cover).
+    SingleSpecial(SpecialComponent),
     /// Multiple components. The detection BFS's component is left in
     /// `ctx.queue` (stamp intact) so the split branch can reuse it.
     Split {
@@ -1106,7 +1277,7 @@ fn scan_components<T: DegElem>(
     if (size as usize) == red.present {
         if dmin == dmax {
             if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
-                return Scan::SingleSpecial(sp.mvc_size());
+                return Scan::SingleSpecial(sp);
             }
         }
         return Scan::Single;
@@ -1133,9 +1304,15 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
     first_size: u32,
     first_dmin: u32,
     first_dmax: u32,
-) -> Option<Arc<Graph>> {
+) -> Option<Arc<GraphView>> {
     ctx.stats.component_branches += 1;
     let parent = shared.ctl.registry.new_parent(node.sol, node.ctx);
+    if shared.ctl.cfg.extract_witness {
+        // Sum₀'s vertices: the split node's choice log seeds the
+        // parent's accumulated witness.
+        debug_assert_eq!(node.log.len() as u32, node.sol, "split log out of sync with sol");
+        shared.ctl.registry.witness_init_parent(parent, &node.log);
+    }
     ctx.stats.registry_entries += 1;
 
     // Component 1: reuse the detection BFS result.
@@ -1187,10 +1364,16 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     dmin: u32,
     dmax: u32,
 ) {
+    let extract = shared.ctl.cfg.extract_witness;
     if dmin == dmax {
         if let Some(sp) = classify(size, std::iter::repeat(dmin).take(size as usize)) {
             ctx.stats.special_solved += 1;
             shared.ctl.registry.add_solved_component(parent, sp.mvc_size());
+            if extract {
+                let cover =
+                    special_cover_root_ids(g, &ctx.queue, &node.deg, node.view.as_deref(), sp);
+                shared.ctl.registry.witness_solved_component(parent, &cover);
+            }
             return;
         }
     }
@@ -1206,9 +1389,31 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
     let view_n = node.deg.len();
     let induce = shared.ctl.cfg.induce_threshold > 0.0
         && (size as f64) <= shared.ctl.cfg.induce_threshold * view_n as f64;
+    if induce {
+        // Sorting makes the view→local map monotonic, so the induced
+        // CSR rows come out sorted (required for `has_edge` binary
+        // search) — and the back map below is the sorted component's
+        // root-id image.
+        ctx.queue.sort_unstable();
+    }
+    // The component's root-residual ids: the child's winning-witness
+    // slot starts at the achievable all-but-one fallback, and for an
+    // induced child the same list *is* its back map (local id i =
+    // position i of the sorted component).
+    let comp_root: Vec<u32> = if extract {
+        match node.view.as_deref() {
+            Some(vw) => ctx.queue.iter().map(|&v| vw.back[v as usize]).collect(),
+            None => ctx.queue.clone(),
+        }
+    } else {
+        Vec::new()
+    };
+    if extract {
+        shared.ctl.registry.witness_init_child(child_ctx, &comp_root[..comp_root.len() - 1]);
+    }
     let child = if induce {
         ctx.stats.induced_subproblems += 1;
-        induce_component_child(shared, g, ctx, node, child_ctx)
+        induce_component_child(shared, g, ctx, node, child_ctx, comp_root)
     } else {
         // Full-width fallback (ablation / `--induce-threshold 0`):
         // degrees masked to the component over the parent's view.
@@ -1231,26 +1436,29 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
             bounds: NonZeroBounds { lo, hi },
             ctx: child_ctx,
             view: node.view.clone(),
+            log: Vec::new(),
         }
     };
     push_child(ctx, handle, child);
 }
 
-/// Materialize the component in `ctx.queue` as a compact, renumbered
-/// subproblem: a component-local CSR plus a `|C|`-sized degree array,
-/// all built from recycled buffers. The paper's §IV-B subgraph induction,
-/// applied inside the tree — every descendant of this child now pays
-/// O(|C|) per clone and sweeps a |C|-wide window.
+/// Materialize the component in `ctx.queue` (already sorted by the
+/// dispatch gate) as a compact, renumbered subproblem: a component-local
+/// CSR plus a `|C|`-sized degree array, all built from recycled buffers.
+/// The paper's §IV-B subgraph induction, applied inside the tree — every
+/// descendant of this child now pays O(|C|) per clone and sweeps a
+/// |C|-wide window. `back` is the component's root-residual id list
+/// (local id `i` → `back[i]`), pre-composed through the parent view's
+/// back map; empty when witness extraction is off.
 fn induce_component_child<T: DegElem>(
     shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
     child_ctx: u32,
+    back: Vec<u32>,
 ) -> Node<T> {
-    // Sorting makes the view→local map monotonic, so the induced CSR
-    // rows come out sorted (required for `has_edge` binary search).
-    ctx.queue.sort_unstable();
+    debug_assert!(ctx.queue.windows(2).all(|w| w[0] < w[1]), "component must be sorted");
     let k = ctx.queue.len();
     for (i, &v) in ctx.queue.iter().enumerate() {
         ctx.vmap[v as usize] = i as u32;
@@ -1274,9 +1482,10 @@ fn induce_component_child<T: DegElem>(
     );
     track_alloc(shared, ctx, k);
     if shared.ctl.cfg.instrument {
-        // The view's CSR stays live as long as any descendant holds the
-        // Arc; count it so off-vs-on peak comparisons are unbiased.
-        let bytes = csr_bytes(&row_ptr, &adj);
+        // The view's CSR (and back map) stays live as long as any
+        // descendant holds the Arc; count it so off-vs-on peak
+        // comparisons are unbiased.
+        let bytes = view_bytes(&row_ptr, &adj, &back);
         let live = shared.ctl.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
         shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
     }
@@ -1286,7 +1495,8 @@ fn induce_component_child<T: DegElem>(
         edges: edges2 / 2,
         bounds: NonZeroBounds::full(k),
         ctx: child_ctx,
-        view: Some(Arc::new(Graph::from_csr_parts(row_ptr, adj))),
+        view: Some(Arc::new(GraphView { graph: Graph::from_csr_parts(row_ptr, adj), back })),
+        log: Vec::new(),
     }
 }
 
@@ -1642,6 +1852,97 @@ mod tests {
             bpn_on < bpn_off,
             "induced bytes/node {bpn_on} must beat full-width {bpn_off}"
         );
+    }
+
+    #[test]
+    fn witness_extraction_valid_and_optimal() {
+        // Splitting graphs across both schedulers, with and without tree
+        // induction: the assembled witness must be a genuine optimal
+        // cover of the searched graph.
+        for seed in 0..8 {
+            let g = generators::union_of_random(3, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            let n = g.num_vertices() as u32;
+            for sched in BOTH_SCHEDULERS {
+                for threshold in [0.0, 1.0] {
+                    let mut cfg = cfg_with(true, true, 4, sched);
+                    cfg.extract_witness = true;
+                    cfg.induce_threshold = threshold;
+                    let tag = format!("seed {seed} {} induce={threshold}", sched.name());
+                    let out = run::<u32>(&g, n + 1, cfg);
+                    assert_eq!(out.best, opt, "{tag}");
+                    let w = out.witness.expect("improvement below n+1 must be witnessed");
+                    assert_eq!(w.len() as u32, opt, "{tag}");
+                    assert!(g.is_vertex_cover(&w), "{tag}");
+                    assert!(out.stats.logs_recycled > 0, "{tag}: logs must recycle");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn witness_extraction_without_component_awareness() {
+        // The prior-work shape (no splits): every leaf reports its full
+        // choice log at the root context.
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(16, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            let n = g.num_vertices() as u32;
+            let mut cfg = cfg_with(false, true, 3, SchedulerKind::WorkSteal);
+            cfg.extract_witness = true;
+            let out = run::<u32>(&g, n + 1, cfg);
+            assert_eq!(out.best, opt, "seed {seed}");
+            let w = out.witness.expect("witness");
+            assert_eq!(w.len() as u32, opt, "seed {seed}");
+            assert!(g.is_vertex_cover(&w), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn witness_small_dtypes_agree() {
+        let g = generators::union_of_random(3, 3, 6, 0.3, 11);
+        let opt = oracle::mvc_size(&g);
+        let n = g.num_vertices() as u32;
+        let mut cfg = cfg_with(true, true, 2, SchedulerKind::WorkSteal);
+        cfg.extract_witness = true;
+        let a = run::<u8>(&g, n + 1, cfg.clone());
+        let b = run::<u16>(&g, n + 1, cfg);
+        for out in [a, b] {
+            assert_eq!(out.best, opt);
+            let w = out.witness.expect("witness");
+            assert_eq!(w.len() as u32, opt);
+            assert!(g.is_vertex_cover(&w));
+        }
+    }
+
+    #[test]
+    fn pvc_witness_respects_bound() {
+        // PVC + extraction: early stop waits for an *assembled* witness,
+        // so a stopped search always hands back a cover within k.
+        for seed in [3u64, 5, 9] {
+            let g = generators::erdos_renyi(18, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            for sched in BOTH_SCHEDULERS {
+                let mut cfg = cfg_with(true, true, 4, sched);
+                cfg.stop_on_improvement = true;
+                cfg.extract_witness = true;
+                let out = run::<u32>(&g, opt + 1, cfg);
+                assert!(out.improved, "seed {seed} {}", sched.name());
+                let w = out.witness.expect("stopped search must carry a witness");
+                assert!(w.len() as u32 <= opt, "seed {seed} {}", sched.name());
+                assert!(g.is_vertex_cover(&w), "seed {seed} {}", sched.name());
+            }
+        }
+    }
+
+    #[test]
+    fn witness_off_costs_nothing() {
+        let g = generators::union_of_random(3, 3, 6, 0.3, 7);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(&g, ub, cfg_with(true, true, 2, SchedulerKind::WorkSteal));
+        assert!(out.witness.is_none());
+        assert_eq!(out.stats.witness_log_bytes, 0);
+        assert_eq!(out.stats.logs_recycled, 0);
     }
 
     #[test]

@@ -7,14 +7,15 @@
 //! exposes that dual directly on top of the solver pipeline.
 
 use crate::graph::Graph;
-use crate::solver::{solve_mvc, SolveResult, SolverConfig};
+use crate::solver::{solve_mvc, witness, SolveResult, SolverConfig};
 
 /// Result of a maximum independent set computation.
 #[derive(Debug, Clone)]
 pub struct MisResult {
     /// Independence number α(G) (lower bound if the MVC search timed out).
     pub alpha: u32,
-    /// A witness independent set (sequential variant with extraction).
+    /// A witness independent set (any variant with
+    /// [`SolverConfig::extract_cover`]).
     pub set: Option<Vec<u32>>,
     /// The underlying MVC solve.
     pub mvc: SolveResult,
@@ -24,23 +25,15 @@ pub struct MisResult {
 pub fn solve_mis(g: &Graph, cfg: &SolverConfig) -> MisResult {
     let mvc = solve_mvc(g, cfg);
     let alpha = g.num_vertices() as u32 - mvc.best;
-    let set = mvc.cover.as_ref().map(|cover| {
-        let mut in_cover = vec![false; g.num_vertices()];
-        for &v in cover {
-            in_cover[v as usize] = true;
-        }
-        (0..g.num_vertices() as u32).filter(|&v| !in_cover[v as usize]).collect()
-    });
+    let set = mvc.cover.as_ref().map(|cover| witness::complement(g, cover));
     MisResult { alpha, set, mvc }
 }
 
-/// Check that a vertex set is independent (no internal edges).
+/// Check that a vertex set is independent (no internal edges). Thin
+/// wrapper over [`witness::verify_independent_set`], kept for callers
+/// that only need the boolean.
 pub fn is_independent_set(g: &Graph, set: &[u32]) -> bool {
-    let mut inset = vec![false; g.num_vertices()];
-    for &v in set {
-        inset[v as usize] = true;
-    }
-    g.edges().all(|(u, v)| !(inset[u as usize] && inset[v as usize]))
+    witness::verify_independent_set(g, set).is_ok()
 }
 
 #[cfg(test)]
@@ -70,6 +63,20 @@ mod tests {
                 assert!(is_independent_set(&g, set), "seed {seed}");
                 assert_eq!(set.len() as u32, r.alpha, "seed {seed}");
             }
+        }
+    }
+
+    #[test]
+    fn parallel_witness_is_independent_and_maximum() {
+        for seed in 0..6 {
+            let g = generators::erdos_renyi(16, 0.2, seed);
+            let mut cfg = SolverConfig::proposed();
+            cfg.extract_cover = true;
+            let r = solve_mis(&g, &cfg);
+            assert_eq!(r.alpha, 16 - oracle::mvc_size(&g), "seed {seed}");
+            let set = r.set.expect("parallel extraction must produce a witness");
+            assert!(is_independent_set(&g, &set), "seed {seed}");
+            assert_eq!(set.len() as u32, r.alpha, "seed {seed}");
         }
     }
 

@@ -51,7 +51,9 @@ pub fn mvc_cover(g: &Graph) -> Vec<u32> {
         cover.push(v as u32);
         present &= !(1u64 << v);
     }
-    debug_assert!(g.is_vertex_cover(&cover));
+    // shared witness verifier: the oracle's covers go through the same
+    // edge-by-edge check as every production extraction path
+    debug_assert!(crate::solver::witness::verify_cover(g, &cover).is_ok());
     cover
 }
 

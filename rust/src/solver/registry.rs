@@ -32,6 +32,24 @@
 //! through `Est` while discovery-complete. The paper conflates `Best`
 //! with the prune bound; we split `Best` (achievable) from `Limit`
 //! (prune-only) so the propagated totals are always sound.
+//!
+//! ### Witness reassembly (opt-in)
+//! With [`Registry::with_witnesses`], every entry gets a side slot for
+//! the vertex list behind its value: a child slot holds the *winning*
+//! component cover (initialized to the achievable all-but-one fallback,
+//! replaced by any strictly shorter leaf report or nested-split total),
+//! a parent slot *accumulates* (the split node's choice-log prefix, the
+//! closed-form special covers, then each finished component's winning
+//! cover as the last-descendant cascade folds it). When a parent
+//! finishes, its accumulated list is the assembled cover for the whole
+//! split and travels up the same cascade; root-level totals land in a
+//! root slot that keeps the shortest assembled cover seen. In MVC mode
+//! every root-reported total is assembled, so the final root witness
+//! length always equals the final best; in PVC mode `Est` propagation
+//! reports *unassembled* achievable totals, so the engine gates early
+//! stopping on the root slot instead (the witness may transiently be
+//! longer than the bound, never invalid). Slots live in a mutexed side
+//! table — witness extraction is opt-in and off the default hot path.
 
 use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -86,6 +104,69 @@ pub struct Registry {
     grow: Mutex<()>,
     /// PVC mode: maintain `Est` and propagate improvements upward.
     propagate: bool,
+    /// Witness side table (enabled by [`Registry::with_witnesses`]).
+    witness: Option<WitnessStore>,
+}
+
+/// Side table of witness vertex lists, indexed by entry id, plus the
+/// root slot. Entries are only touched when extraction is on; the mutex
+/// is uncontended relative to the search work behind each update.
+struct WitnessStore {
+    slots: Mutex<Vec<Option<Vec<u32>>>>,
+    root: Mutex<Option<Vec<u32>>>,
+}
+
+impl WitnessStore {
+    fn new() -> WitnessStore {
+        WitnessStore { slots: Mutex::new(Vec::new()), root: Mutex::new(None) }
+    }
+
+    /// The slot for entry `idx`, growing the table as needed (all slot
+    /// mutations go through here so the growth policy lives once).
+    fn slot_mut(slots: &mut Vec<Option<Vec<u32>>>, idx: u32) -> &mut Option<Vec<u32>> {
+        if slots.len() <= idx as usize {
+            slots.resize(idx as usize + 1, None);
+        }
+        &mut slots[idx as usize]
+    }
+
+    /// Set a slot unconditionally (entry initialization).
+    fn put(&self, idx: u32, w: Vec<u32>) {
+        let mut slots = self.slots.lock().unwrap();
+        *Self::slot_mut(&mut slots, idx) = Some(w);
+    }
+
+    /// Append vertices to a parent's accumulated list.
+    fn append(&self, idx: u32, extra: &[u32]) {
+        let mut slots = self.slots.lock().unwrap();
+        match Self::slot_mut(&mut slots, idx) {
+            Some(acc) => acc.extend_from_slice(extra),
+            none => *none = Some(extra.to_vec()),
+        }
+    }
+
+    /// Replace a child's winning list if `w` is strictly shorter.
+    fn improve(&self, idx: u32, w: &[u32]) {
+        let mut slots = self.slots.lock().unwrap();
+        let slot = Self::slot_mut(&mut slots, idx);
+        if slot.as_ref().is_none_or(|cur| w.len() < cur.len()) {
+            *slot = Some(w.to_vec());
+        }
+    }
+
+    /// Take a slot's list (entry finished; no further reads).
+    fn take(&self, idx: u32) -> Option<Vec<u32>> {
+        let mut slots = self.slots.lock().unwrap();
+        slots.get_mut(idx as usize).and_then(Option::take)
+    }
+
+    /// Keep the shorter of the current root witness and `w`.
+    fn offer_root(&self, w: &[u32]) {
+        let mut root = self.root.lock().unwrap();
+        if root.as_ref().is_none_or(|cur| w.len() < cur.len()) {
+            *root = Some(w.to_vec());
+        }
+    }
 }
 
 impl std::fmt::Debug for Registry {
@@ -112,7 +193,20 @@ impl Registry {
     pub fn new(propagate: bool) -> Registry {
         let mut chunks = Vec::with_capacity(MAX_CHUNKS);
         chunks.resize_with(MAX_CHUNKS, || AtomicPtr::new(std::ptr::null_mut()));
-        Registry { chunks, next: AtomicU64::new(0), grow: Mutex::new(()), propagate }
+        Registry { chunks, next: AtomicU64::new(0), grow: Mutex::new(()), propagate, witness: None }
+    }
+
+    /// Enable witness reassembly: every entry gains a side slot for the
+    /// vertex list behind its value, and the completion cascade
+    /// concatenates component witnesses as it folds sizes (module docs).
+    pub fn with_witnesses(mut self) -> Registry {
+        self.witness = Some(WitnessStore::new());
+        self
+    }
+
+    /// True when witness reassembly is enabled.
+    pub fn extracting(&self) -> bool {
+        self.witness.is_some()
     }
 
     /// Number of entries ever allocated.
@@ -245,6 +339,67 @@ impl Registry {
         }
     }
 
+    /// [`Registry::report_solution`] with the leaf's witness (the
+    /// covered-vertex list achieving `size`): the child's winning slot
+    /// keeps the shortest report, so the last-descendant fold hands the
+    /// matching cover up with the folded size.
+    pub fn report_witnessed(
+        &self,
+        ctx: u32,
+        size: u32,
+        witness: &[u32],
+        on_root: &mut dyn FnMut(u32),
+    ) {
+        debug_assert_eq!(witness.len() as u32, size, "witness length must match its size");
+        if let Some(ws) = &self.witness {
+            ws.improve(ctx, witness);
+        }
+        self.report_solution(ctx, size, on_root);
+    }
+
+    /// Seed a new parent's accumulated witness with the split node's
+    /// choice-log prefix (the `Sum₀` vertices).
+    pub fn witness_init_parent(&self, parent: u32, prefix: &[u32]) {
+        if let Some(ws) = &self.witness {
+            ws.put(parent, prefix.to_vec());
+        }
+    }
+
+    /// Seed a new child's winning witness with the achievable
+    /// all-but-one fallback (length must equal the child's `best0`).
+    pub fn witness_init_child(&self, child: u32, fallback: &[u32]) {
+        if let Some(ws) = &self.witness {
+            ws.put(child, fallback.to_vec());
+        }
+    }
+
+    /// Fold a closed-form special component's canonical cover into the
+    /// parent's accumulated witness (the vertex-list counterpart of
+    /// [`Registry::add_solved_component`]).
+    pub fn witness_solved_component(&self, parent: u32, cover: &[u32]) {
+        if let Some(ws) = &self.witness {
+            ws.append(parent, cover);
+        }
+    }
+
+    /// A root-context leaf's assembled cover: keep it if it is the
+    /// shortest seen. Callers pair this with the root-total report.
+    pub fn offer_root_witness(&self, witness: &[u32]) {
+        if let Some(ws) = &self.witness {
+            ws.offer_root(witness);
+        }
+    }
+
+    /// Length of the best assembled root witness so far, if any.
+    pub fn root_witness_len(&self) -> Option<usize> {
+        self.witness.as_ref().and_then(|ws| ws.root.lock().unwrap().as_ref().map(Vec::len))
+    }
+
+    /// Take the best assembled root witness (end of the run).
+    pub fn take_root_witness(&self) -> Option<Vec<u32>> {
+        self.witness.as_ref().and_then(|ws| ws.root.lock().unwrap().take())
+    }
+
     /// Component discovery at parent `p` finished: release the discovery
     /// reference (may trigger the completion cascade if every component
     /// already finished) and enable PVC propagation through `p`.
@@ -252,7 +407,9 @@ impl Registry {
         let e = self.entry(p);
         e.flags.fetch_or(FLAG_SCAN_DONE, Ordering::SeqCst);
         if self.propagate {
-            // One propagation now that Est covers all components.
+            // One propagation now that Est covers all components. The
+            // est total is achievable but not assembled, so it carries
+            // no witness (module docs: witness reassembly under PVC).
             let est = e.aux.load(Ordering::SeqCst);
             let anc = e.link.load(Ordering::SeqCst);
             if anc == NONE {
@@ -275,21 +432,31 @@ impl Registry {
             if prev != 1 {
                 return; // other descendants still running
             }
-            // Last descendant of component `ctx`: fold Best into parent Sum.
+            // Last descendant of component `ctx`: fold Best into parent
+            // Sum, and the winning witness into the parent's accumulated
+            // list (all reports for `ctx` happened-before this fold).
             let parent = e.link.load(Ordering::SeqCst);
             let best = e.val.load(Ordering::SeqCst);
+            if let Some(ws) = &self.witness {
+                if let Some(cw) = ws.take(ctx) {
+                    ws.append(parent, &cw);
+                }
+            }
             let p = self.entry(parent);
             p.val.fetch_add(best, Ordering::SeqCst);
             match self.release_parent_ref(parent) {
                 ParentState::StillLive => return,
-                ParentState::Finished { total, ancestor } => {
+                ParentState::Finished { total, ancestor, witness } => {
                     if ancestor == NONE {
+                        if let Some(w) = &witness {
+                            self.offer_root_witness(w);
+                        }
                         on_root(total);
                         return;
                     }
                     // Fold the completed split into the enclosing component
                     // and continue the cascade there.
-                    self.improve_child_value(ancestor, total, on_root);
+                    self.improve_child_value(ancestor, total, witness.as_deref(), on_root);
                     ctx = ancestor;
                 }
             }
@@ -297,6 +464,7 @@ impl Registry {
     }
 
     /// Decrement a parent's `LiveComps` due to `complete_node` folding.
+    /// On the last reference, hand back the assembled witness too.
     fn release_parent_ref(&self, p_idx: u32) -> ParentState {
         let p = self.entry(p_idx);
         let prev = p.live.fetch_sub(1, Ordering::SeqCst);
@@ -304,10 +472,19 @@ impl Registry {
         if prev != 1 {
             return ParentState::StillLive;
         }
-        ParentState::Finished {
-            total: p.val.load(Ordering::SeqCst),
-            ancestor: p.link.load(Ordering::SeqCst),
+        let total = p.val.load(Ordering::SeqCst);
+        let witness = self.witness.as_ref().and_then(|ws| ws.take(p_idx));
+        if let Some(w) = &witness {
+            // In MVC mode every fold is assembled, so lengths are exact;
+            // PVC est propagation can leave the witness transiently
+            // longer than the folded total (never shorter, never wrong).
+            debug_assert!(
+                self.propagate || w.len() as u32 == total,
+                "assembled witness length {} != folded total {total}",
+                w.len()
+            );
         }
+        ParentState::Finished { total, ancestor: p.link.load(Ordering::SeqCst), witness }
     }
 
     /// Release the discovery reference and, if that finished the parent,
@@ -315,19 +492,32 @@ impl Registry {
     fn complete_parent_ref(&self, p_idx: u32, on_root: &mut dyn FnMut(u32)) {
         match self.release_parent_ref(p_idx) {
             ParentState::StillLive => {}
-            ParentState::Finished { total, ancestor } => {
+            ParentState::Finished { total, ancestor, witness } => {
                 if ancestor == NONE {
+                    if let Some(w) = &witness {
+                        self.offer_root_witness(w);
+                    }
                     on_root(total);
                 } else {
-                    self.improve_child_value(ancestor, total, on_root);
+                    self.improve_child_value(ancestor, total, witness.as_deref(), on_root);
                     self.complete_node(ancestor, on_root);
                 }
             }
         }
     }
 
-    /// CAS-min a child's `Best` and keep parent `Est` consistent (PVC).
-    fn improve_child_value(&self, ctx: u32, val: u32, on_root: &mut dyn FnMut(u32)) {
+    /// CAS-min a child's `Best` and keep parent `Est` consistent (PVC);
+    /// `witness` is the assembled cover behind `val`, when one exists.
+    fn improve_child_value(
+        &self,
+        ctx: u32,
+        val: u32,
+        witness: Option<&[u32]>,
+        on_root: &mut dyn FnMut(u32),
+    ) {
+        if let (Some(ws), Some(w)) = (&self.witness, witness) {
+            ws.improve(ctx, w);
+        }
         if self.propagate {
             self.propagate_improvement(ctx, val, on_root);
         } else {
@@ -383,7 +573,7 @@ impl Registry {
 
 enum ParentState {
     StillLive,
-    Finished { total: u32, ancestor: u32 },
+    Finished { total: u32, ancestor: u32, witness: Option<Vec<u32>> },
 }
 
 /// Atomic CAS-min; returns the displaced larger value if it decreased.
@@ -541,6 +731,118 @@ mod tests {
         reg.complete_node(c, &mut sink);
         reg.complete_node(c, &mut sink);
         assert_eq!(reg.snapshot(c).1, 1);
+    }
+
+    /// Witnesses are reassembled exactly as sizes are folded: prefix +
+    /// special covers + per-component winning witnesses.
+    #[test]
+    fn witness_reassembled_across_split() {
+        let reg = Registry::new(false).with_witnesses();
+        let root_totals = std::cell::RefCell::new(Vec::<u32>::new());
+        let mut on_root = |t: u32| root_totals.borrow_mut().push(t);
+
+        let p = reg.new_parent(2, NONE);
+        reg.witness_init_parent(p, &[100, 101]); // split node's choice log
+        reg.add_solved_component(p, 1);
+        reg.witness_solved_component(p, &[50]); // a closed-form K2
+        let c1 = reg.new_child(p, 4, 4);
+        reg.witness_init_child(c1, &[10, 11, 12, 13]); // all-but-one fallback
+        let c2 = reg.new_child(p, 2, 2);
+        reg.witness_init_child(c2, &[20, 21]);
+        reg.finish_scan(p, &mut on_root);
+
+        // component 1 improves to 2 with a real cover; component 2 keeps
+        // its fallback (fully pruned)
+        reg.report_witnessed(c1, 2, &[10, 12], &mut on_root);
+        reg.complete_node(c1, &mut on_root);
+        reg.complete_node(c2, &mut on_root);
+
+        assert_eq!(*root_totals.borrow(), vec![2 + 1 + 2 + 2]);
+        let mut w = reg.take_root_witness().expect("assembled root witness");
+        w.sort_unstable();
+        assert_eq!(w, vec![10, 12, 20, 21, 50, 100, 101]);
+        reg.assert_drained();
+    }
+
+    /// Nested splits assemble recursively: the inner split's total
+    /// witness becomes the enclosing component's winning witness.
+    #[test]
+    fn witness_nested_splits_assemble() {
+        let reg = Registry::new(false).with_witnesses();
+        let mut on_root = |_t: u32| {};
+
+        let p1 = reg.new_parent(0, NONE);
+        reg.witness_init_parent(p1, &[]);
+        let c2 = reg.new_child(p1, 2, 2);
+        reg.witness_init_child(c2, &[1, 2]);
+        let c3 = reg.new_child(p1, 9, 9);
+        reg.witness_init_child(c3, &[10, 11, 12, 13, 14, 15, 16, 17, 18]);
+        reg.finish_scan(p1, &mut on_root);
+
+        // a descendant of c3 splits after committing vertex 10
+        let p12 = reg.new_parent(1, c3);
+        reg.witness_init_parent(p12, &[10]);
+        let c13 = reg.new_child(p12, 3, 3);
+        reg.witness_init_child(c13, &[11, 12, 13]);
+        let c14 = reg.new_child(p12, 2, 2);
+        reg.witness_init_child(c14, &[15, 16]);
+        reg.on_branch(c3); // the splitting node branched from c3's tree
+        reg.finish_scan(p12, &mut on_root);
+
+        reg.report_witnessed(c13, 2, &[11, 13], &mut on_root);
+        reg.complete_node(c13, &mut on_root);
+        reg.report_witnessed(c14, 1, &[15], &mut on_root);
+        reg.complete_node(c14, &mut on_root);
+        // p12 finished with total 1+2+1 = 4 < 9: c3's witness is now the
+        // assembled nested cover
+        let (c3_best, _, _, _) = reg.snapshot(c3);
+        assert_eq!(c3_best, 4);
+
+        reg.complete_node(c3, &mut on_root);
+        reg.complete_node(c2, &mut on_root);
+        let mut w = reg.take_root_witness().expect("root witness");
+        w.sort_unstable();
+        assert_eq!(w, vec![1, 2, 10, 11, 13, 15]);
+        reg.assert_drained();
+    }
+
+    /// The root slot keeps the shortest assembled witness.
+    #[test]
+    fn root_witness_keeps_shortest() {
+        let reg = Registry::new(false).with_witnesses();
+        reg.offer_root_witness(&[1, 2, 3]);
+        reg.offer_root_witness(&[4, 5, 6, 7]);
+        assert_eq!(reg.root_witness_len(), Some(3));
+        reg.offer_root_witness(&[8]);
+        assert_eq!(reg.take_root_witness(), Some(vec![8]));
+        assert_eq!(reg.take_root_witness(), None);
+    }
+
+    /// A longer witnessed report never displaces a shorter one.
+    #[test]
+    fn child_witness_keeps_minimum() {
+        let reg = Registry::new(false).with_witnesses();
+        let mut sink = |_t: u32| {};
+        let p = reg.new_parent(0, NONE);
+        reg.witness_init_parent(p, &[]);
+        let c = reg.new_child(p, 3, 3);
+        reg.witness_init_child(c, &[1, 2, 3]);
+        reg.report_witnessed(c, 2, &[4, 5], &mut sink);
+        reg.report_witnessed(c, 3, &[6, 7, 8], &mut sink); // ignored: longer
+        reg.finish_scan(p, &mut sink);
+        reg.complete_node(c, &mut sink);
+        let mut w = reg.take_root_witness().unwrap();
+        w.sort_unstable();
+        assert_eq!(w, vec![4, 5]);
+    }
+
+    #[test]
+    fn witness_disabled_is_free_and_absent() {
+        let reg = Registry::new(false);
+        assert!(!reg.extracting());
+        reg.offer_root_witness(&[1, 2]);
+        assert_eq!(reg.root_witness_len(), None);
+        assert_eq!(reg.take_root_witness(), None);
     }
 
     #[test]

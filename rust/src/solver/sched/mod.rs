@@ -33,6 +33,12 @@
 //! [`Scheduler::seed`] is a single-threaded setup-phase operation used by
 //! the static (no-load-balance) seeding path.
 //!
+//! Items move **by value** through every queue in both runtimes: a
+//! stolen search node carries its entire payload — degree array, view
+//! `Arc`, and (under witness extraction) its choice log — so the thief
+//! owns the node's state outright and completes it without ever touching
+//! the victim's memory.
+//!
 //! ## Termination
 //!
 //! [`WorkerHandle::pop`] returning `None` does **not** mean the search is

@@ -3,13 +3,15 @@
 //! This is the paper's "Sequential" baseline: a single-threaded CPU
 //! implementation that embodies *all* the proposed optimizations
 //! (component-awareness, clique/cycle rules, reduced + induced root,
-//! bounds) but none of the parallel machinery. It additionally supports
-//! **cover extraction** (the parallel engine tracks sizes only, as on the
-//! GPU), so it doubles as the witness producer for validity tests.
+//! bounds) but none of the parallel machinery. It supports **cover
+//! extraction**, sharing the canonical special-component covers and the
+//! verifier with the parallel engine's choice-log path
+//! ([`crate::solver::witness`]), so it doubles as the differential
+//! witness reference.
 
 use crate::degree::NonZeroBounds;
 use crate::graph::Graph;
-use crate::reduce::special::{classify, SpecialComponent};
+use crate::reduce::special::classify;
 use std::time::Instant;
 
 /// Outcome of a sequential search.
@@ -134,7 +136,9 @@ impl<'g> Seq<'g> {
                     {
                         sum += sp.mvc_size();
                         if self.extract {
-                            special_cover(self.g, comp, &deg, sp, sol);
+                            // canonical cover shared with the root
+                            // reducer and the parallel engine
+                            sp.cover_into(self.g, comp, |v| deg[v as usize] > 0, sol);
                         }
                         continue;
                     }
@@ -329,40 +333,6 @@ impl<'g> Seq<'g> {
             comps.push(comp);
         }
         comps
-    }
-}
-
-/// Append the canonical cover of a special component to `sol`.
-fn special_cover(g: &Graph, comp: &[u32], deg: &[u32], sp: SpecialComponent, sol: &mut Vec<u32>) {
-    match sp {
-        SpecialComponent::Clique { .. } => sol.extend(comp.iter().skip(1).copied()),
-        SpecialComponent::ChordlessCycle { .. } => {
-            // walk the cycle, take alternating vertices (+1 when odd)
-            let start = comp[0];
-            let mut order = vec![start];
-            let mut prev = start;
-            let mut cur = g
-                .neighbors(start)
-                .iter()
-                .copied()
-                .find(|&w| deg[w as usize] > 0)
-                .unwrap();
-            while cur != start {
-                order.push(cur);
-                let next = g
-                    .neighbors(cur)
-                    .iter()
-                    .copied()
-                    .find(|&w| deg[w as usize] > 0 && w != prev)
-                    .unwrap();
-                prev = cur;
-                cur = next;
-            }
-            sol.extend(order.iter().skip(1).step_by(2).copied());
-            if order.len() % 2 == 1 {
-                sol.push(order[order.len() - 1]);
-            }
-        }
     }
 }
 

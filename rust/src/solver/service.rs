@@ -43,6 +43,14 @@
 //! job on the same pool: the large job's nodes fill the deques, a small
 //! job's setup + nodes interleave via the shared injector, and idle
 //! workers steal whatever is oldest.
+//!
+//! Jobs submitted with [`JobOptions::extract_witness`] additionally get
+//! an actual solution vertex set back: nodes of the job carry choice
+//! logs, the job's private registry reassembles component covers at
+//! last-descendant aggregation, and finalization lifts the winning
+//! cover to original ids (induction renumbering + reduction unwind) and
+//! verifies it against the original graph ([`Solution::witness`],
+//! [`Solution::witness_verified`]).
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -58,7 +66,8 @@ use super::sched::{
     IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
     WorkerHandle,
 };
-use super::{PrepSummary, SolverConfig};
+use super::witness::{self, CoverLift};
+use super::{greedy, PrepSummary, SolverConfig};
 
 /// A problem submitted to the service. Graphs are `Arc`-shared so a
 /// batch driver can submit the same graph under several parameters
@@ -163,10 +172,19 @@ pub struct Solution {
     /// deadline/cancel means "unknown", mirroring `PvcResult::found`).
     /// Always `true` for MVC/MIS.
     pub feasible: bool,
-    /// Witness vertex set. The parallel service does not extract
-    /// witnesses (the sequential one-shot path does); reserved so the
-    /// unified type covers both.
+    /// Witness vertex set, populated when the job was submitted with
+    /// [`JobOptions::extract_witness`]: the cover (MVC/PVC) or
+    /// independent set (MIS) in *original* vertex ids, assembled from
+    /// the engine's per-node choice logs and lifted through the
+    /// induction renumbering and root-reduction unwind. `|witness| ==
+    /// objective` for MVC/MIS; for PVC it is a cover with `|witness| ≤
+    /// k` (equal to `objective` except when an est-propagated bound
+    /// beat the assembled cover to the early stop).
     pub witness: Option<Vec<u32>>,
+    /// Whether the extracted witness verified edge-by-edge against the
+    /// original graph (`solver::witness`); `None` when no witness was
+    /// requested or produced.
+    pub witness_verified: Option<bool>,
     /// Engine counters for this job only.
     pub stats: EngineStats,
     /// Preparation summary (root reduction, dtype, occupancy).
@@ -195,6 +213,13 @@ pub struct JobOptions {
     /// defaults. The pool-shape fields (`variant`, `workers`,
     /// `scheduler`) are ignored — the resident pool is fixed at build.
     pub config: Option<SolverConfig>,
+    /// Return an actual witness in [`Solution::witness`]: the engine
+    /// carries per-node choice logs for this job and reassembles the
+    /// winning cover at last-descendant aggregation. Costs one extra
+    /// pooled buffer per node plus a lock per leaf report; off by
+    /// default. A `config` with `extract_cover` set requests the same
+    /// thing.
+    pub extract_witness: bool,
 }
 
 /// A submitted job: await it, poll it, or cancel it. Cloning the handle
@@ -260,6 +285,10 @@ struct JobPrep {
     greedy_ub: u32,
     /// PVC: residual budget `k − forced` (when the search ran).
     k_resid: Option<u32>,
+    /// Witness lift (induction map + reduction unwind), kept only for
+    /// extracting jobs so finalization can translate the assembled
+    /// residual cover back to original vertex ids.
+    lift: Option<CoverLift>,
     /// Prep summary for the solution.
     summary: PrepSummary,
     /// Payload bytes of the root node (charged at finalization, like the
@@ -484,6 +513,7 @@ impl VcService {
             // jobs track counters (incl. byte accounting) only.
             instrument: false,
             induce_threshold: cfg.induce_threshold,
+            extract_witness: opts.extract_witness || cfg.extract_cover,
         };
         let job = Arc::new(JobInner {
             id: self.inner.next_job.fetch_add(1, Ordering::SeqCst),
@@ -713,10 +743,15 @@ fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
         }
     };
 
+    // The lift must be captured before the residual graph moves into
+    // the job (it clones the induction map + reduction unwind).
+    let lift = job.ctl.cfg.extract_witness.then(|| p.cover_lift());
     let graph = Arc::new(p.residual.graph);
     // Publish the bound before any node can observe it (the root is
-    // pushed below, after the store).
+    // pushed below, after the store). `initial` doubles as the
+    // reference for the witnessed-stop gate.
     job.ctl.best.store(initial, Ordering::SeqCst);
+    job.ctl.initial.store(initial, Ordering::SeqCst);
 
     // A job stopped before its search begins (trivial PVC answer,
     // pre-expired deadline, early cancel) pushes no root.
@@ -744,6 +779,7 @@ fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
         forced,
         greedy_ub: p.greedy_ub,
         k_resid,
+        lift,
         summary,
         root_bytes,
         root_pushed: root.is_some(),
@@ -791,6 +827,7 @@ fn failed_solution(job: &Arc<JobInner>) -> Solution {
         objective: 0,
         feasible: false,
         witness: None,
+        witness_verified: None,
         stats: EngineStats::default(),
         prep,
         elapsed: job.started.elapsed(),
@@ -836,28 +873,56 @@ fn finalize(job: &Arc<JobInner>) {
 
     let best_resid = job.ctl.best.load(Ordering::SeqCst);
     let improved = job.ctl.improved.load(Ordering::SeqCst);
-    let (objective, feasible) = match (&job.problem, &p.decided) {
-        (Problem::Pvc { .. }, Some(PvcDecided::FoundGreedy(s))) => (*s, true),
-        (Problem::Pvc { k, .. }, Some(PvcDecided::Infeasible)) => (k.saturating_add(1), false),
+    // The engine's assembled residual witness, lifted to original ids
+    // (extracting jobs only; decided-at-prep jobs never searched).
+    let extract = job.ctl.cfg.extract_witness;
+    let lifted: Option<Vec<u32>> = job
+        .ctl
+        .registry
+        .take_root_witness()
+        .and_then(|w| p.lift.as_ref().map(|lift| lift.lift(&w)));
+    let g_orig = job.problem.graph();
+    let (objective, feasible, witness) = match (&job.problem, &p.decided) {
+        (Problem::Pvc { .. }, Some(PvcDecided::FoundGreedy(s))) => {
+            let w = extract.then(|| greedy::greedy_cover(g_orig));
+            (*s, true, w)
+        }
+        (Problem::Pvc { k, .. }, Some(PvcDecided::Infeasible)) => {
+            (k.saturating_add(1), false, None)
+        }
         (Problem::Pvc { k, .. }, None) => {
             let k_resid = p.k_resid.expect("searched PVC has a residual budget");
             let found = improved && best_resid <= k_resid;
             if found {
-                (p.forced + best_resid, true)
+                // The assembled cover always respects k (extraction
+                // gates early stop on assembled witnesses); it may be
+                // longer than the est-propagated objective.
+                let w = lifted.filter(|c| c.len() as u32 <= *k);
+                (p.forced + best_resid, true, w)
             } else {
-                (k.saturating_add(1), false)
+                (k.saturating_add(1), false, None)
             }
         }
-        (Problem::Mvc { .. }, _) => {
-            let total = p.forced + best_resid.min(p.initial);
-            (total.min(p.greedy_ub), true)
-        }
-        (Problem::Mis { g }, _) => {
+        (Problem::Mvc { .. }, _) | (Problem::Mis { .. }, _) => {
             let total = p.forced + best_resid.min(p.initial);
             let mvc = total.min(p.greedy_ub);
-            (g.num_vertices() as u32 - mvc, true)
+            let cover = if extract {
+                witness::cover_of_record(lifted, mvc, p.greedy_ub, g_orig)
+            } else {
+                None
+            };
+            if matches!(job.problem, Problem::Mis { .. }) {
+                let set = cover.map(|c| witness::complement(g_orig, &c));
+                (g_orig.num_vertices() as u32 - mvc, true, set)
+            } else {
+                (mvc, true, cover)
+            }
         }
     };
+    let witness_verified = witness.as_ref().map(|w| match job.problem.kind() {
+        ProblemKind::Mis => witness::verify_independent_set(g_orig, w).is_ok(),
+        ProblemKind::Mvc | ProblemKind::Pvc => witness::verify_cover(g_orig, w).is_ok(),
+    });
 
     store_outcome(
         job,
@@ -865,7 +930,8 @@ fn finalize(job: &Arc<JobInner>) {
             problem: job.problem.kind(),
             objective,
             feasible,
-            witness: None,
+            witness,
+            witness_verified,
             stats,
             prep: p.summary.clone(),
             elapsed: job.started.elapsed(),
@@ -916,6 +982,74 @@ mod tests {
         let sol = svc.solve(Problem::mis(g));
         assert_eq!(sol.objective, 4); // α(Petersen) = 4
         assert_eq!(sol.problem, ProblemKind::Mis);
+    }
+
+    fn extract_opts() -> JobOptions {
+        JobOptions { extract_witness: true, ..JobOptions::default() }
+    }
+
+    #[test]
+    fn extracting_jobs_return_verified_witnesses() {
+        let svc = VcService::builder().workers(3).build();
+        for seed in 0..6 {
+            let g = generators::union_of_random(3, 3, 6, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            let sol = svc.submit_with(Problem::mvc(g.clone()), extract_opts()).wait();
+            assert_eq!(sol.objective, opt, "seed {seed}");
+            let w = sol.witness.as_ref().expect("MVC witness");
+            assert_eq!(w.len() as u32, opt, "seed {seed}");
+            assert!(g.is_vertex_cover(w), "seed {seed}");
+            assert_eq!(sol.witness_verified, Some(true), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn extracting_pvc_and_mis_jobs() {
+        let svc = VcService::builder().workers(2).build();
+        for seed in 0..5 {
+            let g = generators::erdos_renyi(15, 0.22, seed);
+            let opt = oracle::mvc_size(&g);
+            let pvc = svc.submit_with(Problem::pvc(g.clone(), opt), extract_opts()).wait();
+            assert!(pvc.feasible, "seed {seed}");
+            let w = pvc.witness.as_ref().expect("PVC witness");
+            assert!(w.len() as u32 <= opt, "seed {seed}");
+            assert!(g.is_vertex_cover(w), "seed {seed}");
+            assert_eq!(pvc.witness_verified, Some(true), "seed {seed}");
+
+            let mis = svc.submit_with(Problem::mis(g.clone()), extract_opts()).wait();
+            let n = g.num_vertices() as u32;
+            assert_eq!(mis.objective, n - opt, "seed {seed}");
+            let set = mis.witness.as_ref().expect("MIS witness");
+            assert_eq!(set.len() as u32, mis.objective, "seed {seed}");
+            assert_eq!(mis.witness_verified, Some(true), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn config_extract_cover_requests_witness() {
+        // a per-job SolverConfig with extract_cover set is equivalent to
+        // JobOptions::extract_witness (the one-shot shims rely on it)
+        let svc = VcService::builder().workers(1).build();
+        let mut cfg = SolverConfig::proposed();
+        cfg.extract_cover = true;
+        let g = generators::petersen();
+        let opts = JobOptions { config: Some(cfg), ..JobOptions::default() };
+        let sol = svc.submit_with(Problem::mvc(g.clone()), opts).wait();
+        assert_eq!(sol.objective, 6);
+        let w = sol.witness.expect("config.extract_cover requests a witness");
+        assert_eq!(w.len(), 6);
+        assert!(g.is_vertex_cover(&w));
+        assert_eq!(sol.witness_verified, Some(true));
+    }
+
+    #[test]
+    fn non_extracting_jobs_have_no_witness() {
+        let svc = VcService::builder().workers(1).build();
+        let sol = svc.solve(Problem::mvc(generators::petersen()));
+        assert_eq!(sol.objective, 6);
+        assert!(sol.witness.is_none());
+        assert_eq!(sol.witness_verified, None);
+        assert_eq!(sol.stats.witness_log_bytes, 0);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Witness verification and lifting — the trust layer for extracted
+//! covers.
+//!
+//! Every solver path that extracts a witness (the sequential baseline,
+//! the parallel engine's choice logs, the brute-force oracle, the greedy
+//! fallback) funnels through this module: [`verify_cover`] /
+//! [`verify_independent_set`] check a claimed solution vertex-by-vertex
+//! against the *original* graph and report the first offending edge on
+//! failure, and [`CoverLift`] carries the two translation layers a
+//! residual-relative witness must cross on its way back to original
+//! vertex ids — the root-induction renumbering
+//! ([`crate::graph::InducedSubgraph`]) and the prep-phase reduction
+//! unwinding ([`crate::reduce::UnwindLog`]).
+//!
+//! Used by the differential witness fuzz suite, the CLI's `--check`
+//! flag, and the service's `witness_verified` stat.
+
+use crate::graph::Graph;
+use crate::reduce::UnwindLog;
+
+/// Why a claimed witness is not a valid solution. Carries the first
+/// offending vertex/edge so failures are directly actionable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WitnessError {
+    /// An edge `(u, v)` has neither endpoint in the claimed cover.
+    UncoveredEdge {
+        /// One endpoint of the uncovered edge.
+        u: u32,
+        /// The other endpoint.
+        v: u32,
+    },
+    /// Two vertices of the claimed independent set are adjacent.
+    AdjacentPair {
+        /// One endpoint of the internal edge.
+        u: u32,
+        /// The other endpoint.
+        v: u32,
+    },
+    /// A witness vertex is out of the graph's vertex range.
+    OutOfRange {
+        /// The offending vertex id.
+        v: u32,
+        /// The graph's vertex count.
+        n: usize,
+    },
+    /// A vertex appears more than once in the witness.
+    Duplicate {
+        /// The repeated vertex id.
+        v: u32,
+    },
+}
+
+impl std::fmt::Display for WitnessError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WitnessError::UncoveredEdge { u, v } => {
+                write!(f, "edge ({u}, {v}) is not covered by the witness")
+            }
+            WitnessError::AdjacentPair { u, v } => {
+                write!(f, "witness vertices {u} and {v} are adjacent")
+            }
+            WitnessError::OutOfRange { v, n } => {
+                write!(f, "witness vertex {v} out of range (|V| = {n})")
+            }
+            WitnessError::Duplicate { v } => write!(f, "witness vertex {v} repeated"),
+        }
+    }
+}
+
+impl std::error::Error for WitnessError {}
+
+/// Check membership bookkeeping shared by both verifiers: bounds,
+/// duplicates, and the membership mask.
+fn membership(g: &Graph, set: &[u32]) -> Result<Vec<bool>, WitnessError> {
+    let n = g.num_vertices();
+    let mut inset = vec![false; n];
+    for &v in set {
+        if v as usize >= n {
+            return Err(WitnessError::OutOfRange { v, n });
+        }
+        if inset[v as usize] {
+            return Err(WitnessError::Duplicate { v });
+        }
+        inset[v as usize] = true;
+    }
+    Ok(inset)
+}
+
+/// Verify that `cover` is a vertex cover of `g`: every edge has at least
+/// one endpoint in it. Reports the first uncovered edge on failure (plus
+/// range/duplicate defects, which would make size comparisons lie).
+pub fn verify_cover(g: &Graph, cover: &[u32]) -> Result<(), WitnessError> {
+    let inset = membership(g, cover)?;
+    for (u, v) in g.edges() {
+        if !inset[u as usize] && !inset[v as usize] {
+            return Err(WitnessError::UncoveredEdge { u, v });
+        }
+    }
+    Ok(())
+}
+
+/// Verify that `set` is an independent set of `g`: no edge joins two of
+/// its vertices. Reports the first internal edge on failure.
+pub fn verify_independent_set(g: &Graph, set: &[u32]) -> Result<(), WitnessError> {
+    let inset = membership(g, set)?;
+    for (u, v) in g.edges() {
+        if inset[u as usize] && inset[v as usize] {
+            return Err(WitnessError::AdjacentPair { u, v });
+        }
+    }
+    Ok(())
+}
+
+/// Pick the MVC witness of record for a reported best: the engine's
+/// assembled (already lifted) cover when it accounts for every vertex of
+/// `best`, else the greedy cover when `best` is the greedy bound —
+/// shared by the one-shot pipeline and the service's finalization so the
+/// two paths can never drift.
+pub fn cover_of_record(
+    lifted: Option<Vec<u32>>,
+    best: u32,
+    greedy_ub: u32,
+    g: &Graph,
+) -> Option<Vec<u32>> {
+    lifted
+        .filter(|c| c.len() as u32 == best)
+        .or_else(|| (best == greedy_ub).then(|| crate::solver::greedy::greedy_cover(g)))
+}
+
+/// The complement of a vertex set — lifts an MVC witness to the MIS
+/// witness (`α(G) = |V| − MVC(G)` duals share one extraction path).
+pub fn complement(g: &Graph, set: &[u32]) -> Vec<u32> {
+    let mut inset = vec![false; g.num_vertices()];
+    for &v in set {
+        inset[v as usize] = true;
+    }
+    (0..g.num_vertices() as u32).filter(|&v| !inset[v as usize]).collect()
+}
+
+/// The lift from a residual-relative witness to original vertex ids:
+/// translate through the root-induction renumbering, then unwind the
+/// prep-phase reductions so every root-forced vertex's cover decision is
+/// restored. Owns its maps so the service can keep it after the
+/// preparation stage's graphs are gone.
+#[derive(Debug, Clone, Default)]
+pub struct CoverLift {
+    /// residual id → original id (the induction's `to_original` map).
+    to_original: Vec<u32>,
+    /// Root-reduction decision log, replayed in reverse.
+    unwind: UnwindLog,
+}
+
+impl CoverLift {
+    /// Build a lift from the induction map and the reduction log.
+    pub fn new(to_original: Vec<u32>, unwind: UnwindLog) -> CoverLift {
+        CoverLift { to_original, unwind }
+    }
+
+    /// Number of vertices the unwind appends on top of any residual
+    /// cover (the root-forced cover size).
+    pub fn forced_count(&self) -> usize {
+        self.unwind.covered_count()
+    }
+
+    /// Lift `residual_cover` (ids over the residual graph) to a cover of
+    /// the original graph.
+    pub fn lift(&self, residual_cover: &[u32]) -> Vec<u32> {
+        let mut cover: Vec<u32> =
+            residual_cover.iter().map(|&v| self.to_original[v as usize]).collect();
+        self.unwind.unwind(&mut cover);
+        cover
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn valid_cover_accepted() {
+        let g = generators::path(5); // 0-1-2-3-4
+        assert_eq!(verify_cover(&g, &[1, 3]), Ok(()));
+        assert_eq!(verify_cover(&g, &[0, 1, 2, 3, 4]), Ok(()));
+    }
+
+    #[test]
+    fn first_uncovered_edge_reported() {
+        let g = generators::path(5);
+        assert_eq!(verify_cover(&g, &[1]), Err(WitnessError::UncoveredEdge { u: 2, v: 3 }));
+        assert_eq!(verify_cover(&g, &[]), Err(WitnessError::UncoveredEdge { u: 0, v: 1 }));
+    }
+
+    #[test]
+    fn range_and_duplicates_rejected() {
+        let g = generators::path(3);
+        assert_eq!(verify_cover(&g, &[7]), Err(WitnessError::OutOfRange { v: 7, n: 3 }));
+        assert_eq!(verify_cover(&g, &[1, 1]), Err(WitnessError::Duplicate { v: 1 }));
+    }
+
+    #[test]
+    fn independent_set_checked() {
+        let g = generators::path(4);
+        assert_eq!(verify_independent_set(&g, &[0, 2]), Ok(()));
+        assert_eq!(
+            verify_independent_set(&g, &[0, 1]),
+            Err(WitnessError::AdjacentPair { u: 0, v: 1 })
+        );
+        assert_eq!(verify_independent_set(&g, &[]), Ok(()));
+    }
+
+    #[test]
+    fn complement_of_cover_is_independent() {
+        for seed in 0..8 {
+            let g = generators::erdos_renyi(14, 0.25, seed);
+            let cover = crate::solver::oracle::mvc_cover(&g);
+            let mis = complement(&g, &cover);
+            assert_eq!(verify_independent_set(&g, &mis), Ok(()), "seed {seed}");
+            assert_eq!(mis.len(), g.num_vertices() - cover.len(), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn lift_composes_translation_and_unwind() {
+        // P5 reduces fully at the root: the lift of the empty residual
+        // cover must be the forced cover itself.
+        let g = generators::path(5);
+        let p = crate::prep::prepare(&g, &crate::prep::PrepConfig::default(), None);
+        let lift = p.cover_lift();
+        let cover = lift.lift(&[]);
+        assert_eq!(cover.len(), lift.forced_count());
+        assert_eq!(verify_cover(&g, &cover), Ok(()));
+    }
+
+    #[test]
+    fn error_messages_name_the_edge() {
+        let e = WitnessError::UncoveredEdge { u: 3, v: 9 };
+        assert!(e.to_string().contains("(3, 9)"));
+    }
+}

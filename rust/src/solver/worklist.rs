@@ -126,6 +126,25 @@ mod tests {
         assert_eq!(w.total_steals(), 1);
     }
 
+    /// Items move by value, so owned buffers (e.g. a node's witness
+    /// choice log) survive a cross-shard steal intact — the thief owns
+    /// the log, no aliasing with the victim.
+    #[test]
+    fn stolen_items_own_their_buffers() {
+        struct Item {
+            log: Vec<u32>,
+        }
+        let w = Worklist::new(3);
+        w.push(1, Item { log: vec![7, 8, 9] });
+        let (stolen, foreign) = w.pop_traced(0).expect("item present");
+        assert!(foreign, "pop from shard 0 must steal shard 1's item");
+        assert_eq!(stolen.log, vec![7, 8, 9]);
+        let mut log = stolen.log;
+        log.push(10); // the thief extends its own copy freely
+        assert_eq!(log.len(), 4);
+        assert!(w.is_empty());
+    }
+
     #[test]
     fn hungry_threshold() {
         let w = Worklist::new(2);

@@ -10,9 +10,10 @@
 //! ≥200 cases per variant. A failing case prints its reproducible tag.
 
 use cavc::graph::{generators, Graph};
+use cavc::solver::witness::verify_cover;
 use cavc::solver::{
-    oracle, sequential, solve_mvc, solve_pvc, Problem, SchedulerKind, SolverConfig, Termination,
-    VcService,
+    oracle, sequential, solve_mvc, solve_pvc, JobOptions, Problem, SchedulerKind, SolverConfig,
+    Termination, VcService,
 };
 use cavc::util::SplitMix64;
 
@@ -225,18 +226,23 @@ fn differential_concurrent_service_mixed_jobs() {
     for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
         let svc = VcService::builder().workers(4).scheduler(sched).build();
         // submit everything before waiting on anything: all jobs in
-        // flight at once
+        // flight at once; even-indexed jobs additionally extract their
+        // witness, so objectives AND covers are differentially checked
         let handles: Vec<_> = cases
             .iter()
             .enumerate()
-            .map(|(i, (g, opt, _))| match i % 3 {
-                0 => svc.submit(Problem::mvc(g.clone())),
-                1 => svc.submit(Problem::pvc(g.clone(), *opt)),
-                _ => svc.submit(Problem::pvc(g.clone(), opt - 1)),
+            .map(|(i, (g, opt, _))| {
+                let opts =
+                    JobOptions { extract_witness: i % 2 == 0, ..JobOptions::default() };
+                match i % 3 {
+                    0 => svc.submit_with(Problem::mvc(g.clone()), opts),
+                    1 => svc.submit_with(Problem::pvc(g.clone(), *opt), opts),
+                    _ => svc.submit_with(Problem::pvc(g.clone(), opt - 1), opts),
+                }
             })
             .collect();
         for (i, h) in handles.iter().enumerate() {
-            let (_, opt, tag) = &cases[i];
+            let (g, opt, tag) = &cases[i];
             let sol = h.wait();
             assert_eq!(
                 sol.termination,
@@ -244,11 +250,29 @@ fn differential_concurrent_service_mixed_jobs() {
                 "{tag} ({}) did not complete",
                 sched.name()
             );
+            let extracting = i % 2 == 0;
             match i % 3 {
-                0 => assert_eq!(sol.objective, *opt, "{tag} ({}): mvc != oracle", sched.name()),
+                0 => {
+                    assert_eq!(sol.objective, *opt, "{tag} ({}): mvc != oracle", sched.name());
+                    if extracting {
+                        let w = sol.witness.as_ref().expect("mvc witness requested");
+                        assert_eq!(w.len() as u32, *opt, "{tag}: |witness| != objective");
+                        verify_cover(g, w)
+                            .unwrap_or_else(|e| panic!("{tag} ({}): {e}", sched.name()));
+                        assert_eq!(sol.witness_verified, Some(true), "{tag}");
+                    } else {
+                        assert!(sol.witness.is_none(), "{tag}: unrequested witness");
+                    }
+                }
                 1 => {
                     assert!(sol.feasible, "{tag} ({}): pvc missed k=opt", sched.name());
                     assert!(sol.objective <= *opt, "{tag}: pvc size above k");
+                    if extracting {
+                        let w = sol.witness.as_ref().expect("pvc witness requested");
+                        assert!(w.len() as u32 <= *opt, "{tag}: pvc witness above k");
+                        verify_cover(g, w)
+                            .unwrap_or_else(|e| panic!("{tag} ({}): {e}", sched.name()));
+                    }
                 }
                 _ => assert!(
                     !sol.feasible,

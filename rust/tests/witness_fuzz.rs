@@ -1,0 +1,244 @@
+//! Differential witness-verification fuzz suite: every extracted
+//! witness — parallel one-shot, resident service, sequential — is
+//! verified vertex-by-vertex against the *original* (pre-prep) graph,
+//! across both schedulers and multiple worker counts, on seeded random
+//! families plus the nested `split_gadget` worst cases.
+//!
+//! Deterministic seeds; `CAVC_FUZZ_CASES` scales the case count for the
+//! nightly/CI deep run (default 60 per property).
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::witness::{verify_cover, verify_independent_set};
+use cavc::solver::{
+    oracle, solve_mvc, solve_pvc, JobOptions, Problem, SchedulerKind, SolverConfig, Termination,
+    VcService,
+};
+use cavc::util::SplitMix64;
+
+const SEED: u64 = 0x717E55_0001;
+const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+const WORKER_COUNTS: [usize; 3] = [1, 4, 16];
+
+fn fuzz_cases() -> usize {
+    std::env::var("CAVC_FUZZ_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(60)
+}
+
+/// One deterministic case: random families that reduce, split, and nest.
+fn random_case(rng: &mut SplitMix64) -> (Graph, String) {
+    let kind = rng.index(5);
+    let seed = rng.next_u64();
+    match kind {
+        0 => {
+            let n = rng.range(6, 24);
+            let p = 0.08 + rng.next_f64() * 0.3;
+            (generators::erdos_renyi(n, p, seed), format!("er({n},{p:.2},{seed})"))
+        }
+        1 => {
+            let n = rng.range(4, 28);
+            (generators::random_tree(n, seed), format!("tree({n},{seed})"))
+        }
+        2 => {
+            // ≥ 3 disconnected parts: the engine must reassemble a cover
+            // across at least three component-local subproblems
+            let parts = rng.range(3, 6);
+            (
+                generators::union_of_random(parts, 3, 7, 0.3, seed),
+                format!("union({parts},{seed})"),
+            )
+        }
+        3 => {
+            let n = rng.range(8, 18);
+            let p = 0.15 + rng.next_f64() * 0.2;
+            (generators::grid(3, n / 3 + 2, p, seed), format!("grid(3x{},{seed})", n / 3 + 2))
+        }
+        _ => {
+            let n = rng.range(10, 22);
+            (generators::barabasi_albert(n, 2, seed), format!("ba({n},{seed})"))
+        }
+    }
+}
+
+fn extract_cfg(workers: usize, sched: SchedulerKind) -> SolverConfig {
+    let mut cfg = SolverConfig::proposed().with_workers(workers).with_scheduler(sched);
+    cfg.extract_cover = true;
+    cfg
+}
+
+/// MVC one-shot: witness valid, |witness| == objective == oracle.
+#[test]
+fn fuzz_mvc_witnesses_match_oracle() {
+    let mut rng = SplitMix64::new(SEED);
+    let mut ran = 0usize;
+    for case in 0..fuzz_cases() {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        let workers = WORKER_COUNTS[case % WORKER_COUNTS.len()];
+        let sched = SCHEDULERS[case % SCHEDULERS.len()];
+        let cfg = extract_cfg(workers, sched);
+        let r = solve_mvc(&g, &cfg);
+        assert!(!r.timed_out, "case {case} {tag}: timed out");
+        assert_eq!(r.best, opt, "case {case} {tag} ({workers}w {})", sched.name());
+        let c = r.cover.expect("extraction must produce a witness");
+        assert_eq!(c.len() as u32, opt, "case {case} {tag}: |witness| != objective");
+        verify_cover(&g, &c)
+            .unwrap_or_else(|e| panic!("case {case} {tag} ({workers}w {}): {e}", sched.name()));
+        ran += 1;
+    }
+    assert!(ran * 2 >= fuzz_cases(), "only {ran} cases ran; generator drift?");
+}
+
+/// PVC: found covers respect the bound k and verify; k below the
+/// optimum stays infeasible.
+#[test]
+fn fuzz_pvc_witnesses_respect_k() {
+    let mut rng = SplitMix64::new(SEED ^ 0xBEEF);
+    for case in 0..fuzz_cases() {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        let workers = WORKER_COUNTS[case % WORKER_COUNTS.len()];
+        let sched = SCHEDULERS[case % SCHEDULERS.len()];
+        let cfg = extract_cfg(workers, sched);
+        for k in [opt, opt + 1] {
+            let r = solve_pvc(&g, k, &cfg);
+            assert!(r.found, "case {case} {tag}: missed k={k}");
+            let c = r.cover.unwrap_or_else(|| panic!("case {case} {tag}: no cover at k={k}"));
+            assert!(c.len() as u32 <= k, "case {case} {tag}: |cover| > k");
+            verify_cover(&g, &c).unwrap_or_else(|e| panic!("case {case} {tag} k={k}: {e}"));
+        }
+        assert!(
+            !solve_pvc(&g, opt.saturating_sub(1), &cfg).found,
+            "case {case} {tag}: found below optimum"
+        );
+    }
+}
+
+/// Service jobs with `extract_witness`: MVC/PVC/MIS all return verified
+/// witnesses, concurrently, on both resident runtimes.
+#[test]
+fn fuzz_service_jobs_return_verified_witnesses() {
+    let mut rng = SplitMix64::new(SEED ^ 0x5E41);
+    let mut cases: Vec<(Graph, u32, String)> = Vec::new();
+    for case in 0..fuzz_cases() {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 || g.num_edges() == 0 {
+            continue;
+        }
+        let opt = oracle::mvc_size(&g);
+        cases.push((g, opt, format!("case {case} {tag}")));
+    }
+    assert!(cases.len() * 2 >= fuzz_cases(), "generator drift");
+    let opts = || JobOptions { extract_witness: true, ..JobOptions::default() };
+    for sched in SCHEDULERS {
+        let svc = VcService::builder().workers(4).scheduler(sched).build();
+        let handles: Vec<_> = cases
+            .iter()
+            .enumerate()
+            .map(|(i, (g, opt, _))| match i % 3 {
+                0 => svc.submit_with(Problem::mvc(g.clone()), opts()),
+                1 => svc.submit_with(Problem::pvc(g.clone(), *opt), opts()),
+                _ => svc.submit_with(Problem::mis(g.clone()), opts()),
+            })
+            .collect();
+        for (i, h) in handles.iter().enumerate() {
+            let (g, opt, tag) = &cases[i];
+            let sol = h.wait();
+            assert_eq!(sol.termination, Termination::Complete, "{tag} ({})", sched.name());
+            let w = sol
+                .witness
+                .as_ref()
+                .unwrap_or_else(|| panic!("{tag} ({}): no witness", sched.name()));
+            assert_eq!(
+                sol.witness_verified,
+                Some(true),
+                "{tag} ({}): witness_verified",
+                sched.name()
+            );
+            match i % 3 {
+                0 => {
+                    assert_eq!(sol.objective, *opt, "{tag}: mvc objective");
+                    assert_eq!(w.len() as u32, *opt, "{tag}: |witness| != objective");
+                    verify_cover(g, w).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                }
+                1 => {
+                    assert!(sol.feasible, "{tag}: pvc missed k=opt");
+                    assert!(w.len() as u32 <= *opt, "{tag}: pvc witness above k");
+                    verify_cover(g, w).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                }
+                _ => {
+                    let alpha = g.num_vertices() as u32 - *opt;
+                    assert_eq!(sol.objective, alpha, "{tag}: alpha");
+                    assert_eq!(w.len() as u32, alpha, "{tag}: |mis witness| != alpha");
+                    verify_independent_set(g, w).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// Nested split gadgets: the worst case for cover reassembly — every
+/// hub branch cascades into nested component splits whose renumbered
+/// subproblems must translate back through the whole view chain.
+#[test]
+fn fuzz_split_gadget_nested_reassembly() {
+    // depth 2 = 43 vertices, a chain of ≥ 3 nested splits during search
+    for depth in [1usize, 2] {
+        let g = generators::split_gadget(depth);
+        // sequential extraction is the reference (oracle is too slow
+        // past 64 vertices; the gadget sizes stay within it at depth ≤ 2)
+        let opt = oracle::mvc_size(&g);
+        for sched in SCHEDULERS {
+            for workers in WORKER_COUNTS {
+                for induce in [0.0, 1.0] {
+                    let cfg = extract_cfg(workers, sched).with_induce_threshold(induce);
+                    let r = solve_mvc(&g, &cfg);
+                    let tag =
+                        format!("gadget({depth}) {}w {} induce={induce}", workers, sched.name());
+                    assert_eq!(r.best, opt, "{tag}");
+                    let c = r.cover.expect("witness");
+                    assert_eq!(c.len() as u32, opt, "{tag}");
+                    verify_cover(&g, &c).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                }
+            }
+        }
+    }
+}
+
+/// MIS complements through the one-shot pipeline stay independent.
+#[test]
+fn fuzz_mis_complements_independent() {
+    let mut rng = SplitMix64::new(SEED ^ 0x1715);
+    for case in 0..fuzz_cases().min(30) {
+        let (g, tag) = random_case(&mut rng);
+        if g.num_vertices() > 64 {
+            continue;
+        }
+        let workers = WORKER_COUNTS[case % WORKER_COUNTS.len()];
+        let sched = SCHEDULERS[case % SCHEDULERS.len()];
+        let cfg = extract_cfg(workers, sched);
+        let r = cavc::solver::mis::solve_mis(&g, &cfg);
+        let alpha = g.num_vertices() as u32 - oracle::mvc_size(&g);
+        assert_eq!(r.alpha, alpha, "case {case} {tag}");
+        let set = r.set.expect("mis witness");
+        assert_eq!(set.len() as u32, alpha, "case {case} {tag}");
+        verify_independent_set(&g, &set).unwrap_or_else(|e| panic!("case {case} {tag}: {e}"));
+    }
+}
+
+/// The fuzz case generator is deterministic (reproducibility contract).
+#[test]
+fn fuzz_cases_are_deterministic() {
+    let mut a = SplitMix64::new(SEED);
+    let mut b = SplitMix64::new(SEED);
+    for case in 0..fuzz_cases() {
+        let (ga, ta) = random_case(&mut a);
+        let (gb, tb) = random_case(&mut b);
+        assert_eq!(ta, tb, "case {case}");
+        assert_eq!(ga, gb, "case {case}");
+    }
+}
