@@ -3,10 +3,14 @@
 //! and degree dtype — plus the tree-induction extension: live per-node
 //! payload telemetry (peak live bytes, bytes/node, pool traffic) on
 //! seeded split-heavy workloads with component induction toggled, which
-//! shows post-split payloads tracking component size instead of root n.
+//! shows post-split payloads tracking component size instead of root n —
+//! plus the delta-representation extension: owned vs delta bytes/node
+//! and the undo-replay cost (covers reverted on backtrack, covers
+//! replayed at steal-time materialization) the delta trade pays.
 
 use cavc::graph::generators;
 use cavc::harness::{datasets, tables};
+use cavc::solver::NodeRepr;
 
 fn main() {
     println!("# Table IV — degree array / occupancy effects of reduce+induce");
@@ -72,4 +76,46 @@ fn main() {
     )
     .unwrap();
     println!("\ncsv: {}", npath.display());
+
+    // ---- delta-representation extension: owned vs delta bytes/node ----
+    println!("\n# Table IV ext — node representation: owned copies vs delta/undo frames");
+    let dworkloads: Vec<(String, cavc::graph::Graph)> = vec![
+        ("split_gadget(2)".into(), generators::split_gadget(2)),
+        ("split_gadget(3)".into(), generators::split_gadget(3)),
+        ("er(36,0.15)".into(), generators::erdos_renyi(36, 0.15, 3)),
+        ("union_of_random(8,6,10)".into(), generators::union_of_random(8, 6, 10, 0.3, 21)),
+    ];
+    let mut drows = Vec::new();
+    let mut dcsv = Vec::new();
+    for (name, g) in &dworkloads {
+        for induce in [false, true] {
+            for repr in [NodeRepr::Owned, NodeRepr::Delta] {
+                let r = tables::delta_bytes_row(name, g, induce, repr);
+                dcsv.push(format!(
+                    "{},{},{},{:.1},{},{},{},{},{},{},{},{:.6}",
+                    r.name,
+                    r.induce,
+                    r.repr.name(),
+                    r.bytes_per_node,
+                    r.peak_live_bytes,
+                    r.delta_children,
+                    r.undo_pops,
+                    r.undo_covers,
+                    r.materializations,
+                    r.replayed_covers,
+                    r.tree_nodes,
+                    r.secs,
+                ));
+                drows.push(r);
+            }
+        }
+    }
+    tables::print_delta_bytes(&drows, std::io::stdout().lock()).unwrap();
+    let dpath = tables::write_csv(
+        "table4_delta_nodes",
+        "workload,induce,repr,bytes_per_node,peak_live_bytes,delta_children,undo_pops,undo_covers,materializations,replayed_covers,tree_nodes,secs",
+        &dcsv,
+    )
+    .unwrap();
+    println!("\ncsv: {}", dpath.display());
 }

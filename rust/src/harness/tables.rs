@@ -5,7 +5,7 @@
 use super::datasets::Dataset;
 use crate::graph::Graph;
 use crate::solver::sched::WorkerCounters;
-use crate::solver::{self, SchedulerKind, SolverConfig};
+use crate::solver::{self, NodeRepr, SchedulerKind, SolverConfig};
 use crate::util::{fmt_secs, fmt_speedup};
 use std::io::Write;
 use std::time::Duration;
@@ -448,6 +448,100 @@ pub fn print_node_bytes(rows: &[NodeBytesRow], mut w: impl Write) -> std::io::Re
             r.pool_misses,
             r.induced_subproblems,
             r.tree_nodes,
+        )?;
+    }
+    Ok(())
+}
+
+/// Table IV delta extension row: owned vs delta node representation on
+/// one workload — resident bytes/node against the undo-replay cost the
+/// delta trade buys them with (covers reverted on local backtracks,
+/// covers replayed at steal-time materialization).
+#[derive(Debug, Clone)]
+pub struct DeltaBytesRow {
+    /// Workload label.
+    pub name: String,
+    /// Whether tree induction was enabled.
+    pub induce: bool,
+    /// Node representation measured.
+    pub repr: NodeRepr,
+    /// Average resident payload bytes per created node (owned degree
+    /// arrays vs pinned suffix/base shares).
+    pub bytes_per_node: f64,
+    /// Peak simultaneously-live node-state bytes.
+    pub peak_live_bytes: u64,
+    /// Delta right children pushed.
+    pub delta_children: u64,
+    /// Delta children consumed by in-place undo.
+    pub undo_pops: u64,
+    /// Covers reverted by undo replay (the backtrack cost).
+    pub undo_covers: u64,
+    /// Delta children materialized (stolen/foreign).
+    pub materializations: u64,
+    /// Covers replayed forward during materialization (the steal cost).
+    pub replayed_covers: u64,
+    /// Search-tree nodes visited.
+    pub tree_nodes: u64,
+    /// Seconds elapsed.
+    pub secs: f64,
+}
+
+/// Run one instrumented solve of `g` under `repr` and report the
+/// bytes/node + undo-replay-cost telemetry.
+pub fn delta_bytes_row(name: &str, g: &Graph, induce: bool, repr: NodeRepr) -> DeltaBytesRow {
+    let mut cfg = SolverConfig::proposed()
+        .with_induce_threshold(if induce { 1.0 } else { 0.0 })
+        .with_node_repr(repr);
+    cfg.instrument = true;
+    cfg.timeout = Some(cell_timeout());
+    let r = solver::solve_mvc(g, &cfg);
+    DeltaBytesRow {
+        name: name.to_string(),
+        induce,
+        repr,
+        bytes_per_node: r.stats.payload_bytes as f64 / r.stats.payload_nodes.max(1) as f64,
+        peak_live_bytes: r.stats.peak_live_bytes,
+        delta_children: r.stats.delta_children,
+        undo_pops: r.stats.undo_pops,
+        undo_covers: r.stats.undo_covers,
+        materializations: r.stats.materializations,
+        replayed_covers: r.stats.replayed_covers,
+        tree_nodes: r.stats.tree_nodes,
+        secs: r.elapsed.as_secs_f64(),
+    }
+}
+
+/// Print the Table IV owned-vs-delta extension.
+pub fn print_delta_bytes(rows: &[DeltaBytesRow], mut w: impl Write) -> std::io::Result<()> {
+    writeln!(
+        w,
+        "| {:<22} | {:>6} | {:>5} | {:>10} | {:>12} | {:>8} | {:>9} | {:>9} | {:>7} | {:>9} |",
+        "Workload",
+        "induce",
+        "repr",
+        "B/node",
+        "peak live B",
+        "deltas",
+        "undo pop",
+        "undo cov",
+        "mat.",
+        "replayed"
+    )?;
+    writeln!(w, "|{}|", "-".repeat(130))?;
+    for r in rows {
+        writeln!(
+            w,
+            "| {:<22} | {:>6} | {:>5} | {:>10.1} | {:>12} | {:>8} | {:>9} | {:>9} | {:>7} | {:>9} |",
+            r.name,
+            yn(r.induce),
+            r.repr.name(),
+            r.bytes_per_node,
+            r.peak_live_bytes,
+            r.delta_children,
+            r.undo_pops,
+            r.undo_covers,
+            r.materializations,
+            r.replayed_covers,
         )?;
     }
     Ok(())

@@ -17,7 +17,7 @@
 //! |                                | re-induction (`induce_threshold` gate)      |
 //! | preallocated stack slots       | per-worker size-classed buffer pools        |
 //!
-//! ## Memory model: root-induce → tree-induce
+//! ## Memory model: root-induce → tree-induce → delta/undo
 //!
 //! The paper reduces at the root and *induces a subgraph* so degree
 //! arrays are sized to the residual graph — its answer to prior GPU
@@ -27,9 +27,26 @@
 //! each component becomes a compact renumbered subproblem (component-
 //! local CSR + `|C|`-sized degree array), so descendants pay O(|C|) per
 //! clone instead of O(n), and retired payloads are recycled through
-//! per-worker pools. See [`solver::engine`] for the mechanism and
-//! `Occupancy::plan_induced` for how the shrinking-payload path feeds
-//! back into the occupancy model and scheduler queue sizing.
+//! per-worker pools.
+//!
+//! The third stage stops copying altogether
+//! ([`solver::NodeRepr::Delta`], `--node-repr delta`): a worker
+//! branches *speculatively in place* — the left child mutates the live
+//! frame under a reversible cover journal, the right child queued for
+//! later is only a pinned parent frame plus its branch vertex, undone
+//! by reverse journal replay when it surfaces locally and materialized
+//! into an owned payload by the thief when stolen. Resident bytes per
+//! node drop from O(view) to O(delta); the price is bounded
+//! recomputation, capped by a max-pin-depth knob that periodically
+//! freezes full snapshots. GPU analogy: a thread block descending in
+//! shared memory without writing its stack slot back to global memory
+//! until another block actually claims the right sub-tree — the
+//! copy-vs-recompute trade GPU branch-and-bound (van der Zanden &
+//! Bodlaender's treewidth solver) showed wins on memory-bound search.
+//! See [`solver::engine`] for the mechanism and
+//! `Occupancy::plan_induced`/`Occupancy::plan_delta` for how the
+//! shrinking-payload path feeds back into the occupancy model and
+//! scheduler queue sizing.
 //!
 //! The previous mutex-sharded worklist survives as a second [`solver::sched::Scheduler`]
 //! implementation, selectable from `SolverConfig`, so the paper's

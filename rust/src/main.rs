@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
-    "sched", "induce-threshold", "jobs",
+    "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth",
 ];
 
 fn main() {
@@ -74,6 +74,13 @@ fn print_help() {
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
         \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
         \x20                   [--induce-threshold A]  (induce split components when |C| <= A*view; 0 = off)\n\
+        \x20                   [--node-repr owned|delta] (delta: speculative in-place branching — right\n\
+        \x20                                            children pin their parent frame + covered-vertex\n\
+        \x20                                            delta, undone on backtrack, materialized when\n\
+        \x20                                            stolen; owned copies are the ablation baseline.\n\
+        \x20                                            CAVC_NODE_REPR sets the process default)\n\
+        \x20                   [--max-pin-depth D]     (delta: chain length before a forced owned\n\
+        \x20                                            snapshot bounds undo/replay cost)\n\
         \x20                   [--check]               (extract a witness cover on any variant and\n\
         \x20                                            verify it edge-by-edge against the input)\n\
         \x20                   [--jobs LIST]           (batch mode: one resident service solves every\n\
@@ -122,6 +129,13 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
             bail!("--induce-threshold must be in [0, 1] (0 disables tree induction)");
         }
         cfg.induce_threshold = t;
+    }
+    if let Some(r) = args.get("node-repr") {
+        cfg.node_repr = solver::NodeRepr::parse(r)
+            .with_context(|| format!("unknown node representation {r:?} (use owned|delta)"))?;
+    }
+    if let Some(d) = args.get("max-pin-depth") {
+        cfg.max_pin_depth = d.parse().context("--max-pin-depth")?;
     }
     let t: f64 = args.get_parse("timeout", 0.0).map_err(Error::msg)?;
     if t > 0.0 {

@@ -53,6 +53,30 @@
 //! memcpy. Induction is gated by [`EngineCfg::induce_threshold`]
 //! (`|C| ≤ α·view`) for ablation.
 //!
+//! ## Memory model, stage 3: delta/undo nodes ([`NodeRepr::Delta`])
+//!
+//! Tree induction made payloads O(|C|); the next lever is not copying
+//! at all. Under the delta representation a worker branches
+//! *speculatively in place*: the left child mutates the live frame
+//! (every cover journaled reversibly), and the right child pushed to
+//! the queue is just `(pinned parent frame, branch vertex)` — an `Arc`
+//! chain of covered-vertex suffixes ending in an owned base snapshot,
+//! the PR-4 choice-log format reused as a state delta. When the worker
+//! pops its own delta back (the overwhelmingly common deep local-pop
+//! case — steals are rare by design), it *undoes* the journal back to
+//! the pinned branch point instead of restoring from a copy; when a
+//! thief steals one, it materializes an owned payload at steal time by
+//! replaying the chain onto a pooled copy of the base, so stolen work
+//! owns its state outright and the Chase–Lev deque contract is
+//! untouched. [`EngineCfg::max_pin_depth`] forces a fresh base every so
+//! many links so undo/replay chains stay bounded — copy bandwidth is
+//! traded for bounded recomputation, the trade GPU branch-and-bound
+//! solvers (van der Zanden & Bodlaender's treewidth solver) showed wins
+//! on memory-bound searches. GPU analogy: the left child descending in
+//! shared memory without writing its stack slot back to global memory,
+//! with the global-memory copy deferred until another thread block
+//! actually claims the right sub-tree.
+//!
 //! Scheduling is split out of branching: the engine decides *what* to
 //! explore (reduce, bound, branch, split on components) and the
 //! scheduler decides *where* child nodes run. Two runtimes implement the
@@ -84,8 +108,8 @@ use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
 
 use super::registry::{cas_min, Registry, NONE};
 use super::sched::{
-    IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
-    WorkerHandle,
+    IdleOutcome, PopSource, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler,
+    WorkerCounters, WorkerHandle,
 };
 
 /// Default per-worker queue capacity when no occupancy plan is supplied.
@@ -94,6 +118,59 @@ pub const DEFAULT_QUEUE_CAPACITY: usize = 256;
 /// Default component-induction gate: re-induce every split component
 /// (`|C| ≤ 1.0 × view` always holds — components are strict subsets).
 pub const DEFAULT_INDUCE_THRESHOLD: f64 = 1.0;
+
+/// Default bound on the delta-frame chain length before the engine
+/// forces a fresh owned base snapshot (see [`NodeRepr::Delta`]): long
+/// chains make steal-time materialization replay long cover suffixes,
+/// so periodic materialization trades one full-width copy for bounded
+/// replay cost — the same copy-vs-recompute dial the GPU treewidth
+/// literature turns.
+pub const DEFAULT_MAX_PIN_DEPTH: u32 = 24;
+
+/// How search-tree nodes are physically represented in the queues.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum NodeRepr {
+    /// Every right child owns a full pooled copy of its degree array
+    /// (the ablation baseline — PR-2 behavior).
+    #[default]
+    Owned,
+    /// Speculative in-place branching: the left child mutates the live
+    /// frame, right children are (pinned parent frame + covered-vertex
+    /// delta) and cost O(delta) resident bytes. A locally popped delta
+    /// is *undone* onto the live frame by replaying the worker's choice
+    /// journal in reverse; a stolen delta is materialized into an owned
+    /// payload by the thief at steal time.
+    Delta,
+}
+
+impl NodeRepr {
+    /// Short display name used by tables and the CLI.
+    pub fn name(self) -> &'static str {
+        match self {
+            NodeRepr::Owned => "owned",
+            NodeRepr::Delta => "delta",
+        }
+    }
+
+    /// Parse a name as accepted by `--node-repr` / `CAVC_NODE_REPR`.
+    pub fn parse(s: &str) -> Option<NodeRepr> {
+        match s {
+            "owned" | "copy" => Some(NodeRepr::Owned),
+            "delta" | "undo" => Some(NodeRepr::Delta),
+            _ => None,
+        }
+    }
+
+    /// The process default: `CAVC_NODE_REPR` when set (so test suites
+    /// and CI matrix legs can flip every solver config at once),
+    /// otherwise [`NodeRepr::Owned`].
+    pub fn from_env() -> NodeRepr {
+        std::env::var("CAVC_NODE_REPR")
+            .ok()
+            .and_then(|s| NodeRepr::parse(&s))
+            .unwrap_or_default()
+    }
+}
 
 /// Flattened engine configuration (see `SolverConfig` for the public
 /// pipeline-level knobs). Combines the per-job search semantics
@@ -130,6 +207,12 @@ pub struct EngineCfg {
     /// registry's last-descendant aggregation (residual-graph ids; lift
     /// to original ids via `Prepared::lift_residual_cover`).
     pub extract_witness: bool,
+    /// Physical node representation (owned payload copies vs delta/undo
+    /// frames — see [`NodeRepr`]).
+    pub node_repr: NodeRepr,
+    /// Delta mode: maximum delta-frame chain length before a branch
+    /// freezes a fresh owned base snapshot (bounds undo-replay cost).
+    pub max_pin_depth: u32,
 }
 
 impl Default for EngineCfg {
@@ -146,6 +229,8 @@ impl Default for EngineCfg {
             queue_capacity: DEFAULT_QUEUE_CAPACITY,
             induce_threshold: DEFAULT_INDUCE_THRESHOLD,
             extract_witness: false,
+            node_repr: NodeRepr::from_env(),
+            max_pin_depth: DEFAULT_MAX_PIN_DEPTH,
         }
     }
 }
@@ -162,6 +247,8 @@ impl EngineCfg {
             instrument: self.instrument,
             induce_threshold: self.induce_threshold,
             extract_witness: self.extract_witness,
+            node_repr: self.node_repr,
+            max_pin_depth: self.max_pin_depth,
         }
     }
 }
@@ -190,6 +277,10 @@ pub struct JobCfg {
     /// gates early stopping on *assembled* root witnesses, so the
     /// returned cover always respects the proven bound.
     pub extract_witness: bool,
+    /// Physical node representation (see [`NodeRepr`]).
+    pub node_repr: NodeRepr,
+    /// Delta mode: chain-length bound forcing periodic materialization.
+    pub max_pin_depth: u32,
 }
 
 impl Default for JobCfg {
@@ -235,6 +326,26 @@ pub struct EngineStats {
     /// CSR buffers of live induced component views (tracked only when
     /// `EngineCfg::instrument` is set; 0 otherwise).
     pub peak_live_bytes: u64,
+    /// Delta-representation right children pushed (parent-frame pin +
+    /// branch vertex instead of an owned payload copy).
+    pub delta_children: u64,
+    /// Delta nodes consumed on the in-place undo fast path (the worker's
+    /// live frame was rewound by reverse journal replay — no copy).
+    pub undo_pops: u64,
+    /// Covered vertices reverted by undo replay.
+    pub undo_covers: u64,
+    /// Delta nodes materialized into owned payloads (stolen or foreign
+    /// nodes whose pinned frame is not the worker's live descent).
+    pub materializations: u64,
+    /// Covered vertices replayed forward while materializing delta
+    /// nodes (the recompute cost paid for not copying).
+    pub replayed_covers: u64,
+    /// Owned base snapshots frozen for delta chains (first branch of a
+    /// descent + periodic `max_pin_depth` materialization points).
+    pub frame_bases: u64,
+    /// Bytes frozen into pinned delta frames (base snapshots + cover
+    /// suffixes) over the run.
+    pub pinned_frame_bytes: u64,
     /// Bytes of witness choice-log entries retired over the run (each
     /// log's high-water length at node retirement) — the memory cost of
     /// witness extraction against the bytes-per-node telemetry.
@@ -273,6 +384,13 @@ impl EngineStats {
         self.payload_nodes += other.payload_nodes;
         self.payload_bytes += other.payload_bytes;
         self.peak_live_bytes = self.peak_live_bytes.max(other.peak_live_bytes);
+        self.delta_children += other.delta_children;
+        self.undo_pops += other.undo_pops;
+        self.undo_covers += other.undo_covers;
+        self.materializations += other.materializations;
+        self.replayed_covers += other.replayed_covers;
+        self.frame_bases += other.frame_bases;
+        self.pinned_frame_bytes += other.pinned_frame_bytes;
         self.witness_log_bytes += other.witness_log_bytes;
         self.logs_recycled += other.logs_recycled;
         for i in 0..NUM_ACTIVITIES {
@@ -317,9 +435,11 @@ pub(crate) struct GraphView {
     back: Vec<u32>,
 }
 
-/// One search-tree node. `deg` is the degree array of the node's graph
-/// view — exactly the paper's stack-entry payload, sized to the view
-/// (the root residual graph, or a component-local induced subgraph).
+/// One *owned* search-tree node. `deg` is the degree array of the node's
+/// graph view — exactly the paper's stack-entry payload, sized to the
+/// view (the root residual graph, or a component-local induced
+/// subgraph). Under [`NodeRepr::Delta`] this is also the live frame a
+/// worker descends with in place.
 pub(crate) struct Node<T> {
     deg: Vec<T>,
     sol: u32,
@@ -341,6 +461,111 @@ impl<T: DegElem> Node<T> {
     #[inline]
     pub(crate) fn payload_bytes(&self) -> u64 {
         (self.deg.len() * T::BYTES) as u64
+    }
+}
+
+/// A queued search-tree node: either a self-contained owned payload, or
+/// — under [`NodeRepr::Delta`] — a speculative right child represented
+/// as a pinned parent frame plus its branch vertex.
+pub(crate) enum NodePayload<T> {
+    /// Full owned payload (always used for roots and split-component
+    /// children; the only representation under [`NodeRepr::Owned`]).
+    Owned(Node<T>),
+    /// Delta right child: "on the pinned parent state, move `N(branch)`
+    /// into the cover". Costs O(1) + its share of the pinned chain
+    /// instead of an O(view) payload copy.
+    Delta(DeltaNode<T>),
+}
+
+impl<T: DegElem> NodePayload<T> {
+    /// Payload bytes of the queued representation (owned degree array,
+    /// or the delta node's constant footprint).
+    pub(crate) fn payload_bytes(&self) -> u64 {
+        match self {
+            NodePayload::Owned(n) => n.payload_bytes(),
+            NodePayload::Delta(_) => std::mem::size_of::<DeltaNode<T>>() as u64,
+        }
+    }
+}
+
+/// A delta right child (see [`NodePayload::Delta`]).
+pub(crate) struct DeltaNode<T> {
+    /// The pinned parent frame: an immutable snapshot chain ending in an
+    /// owned base. Shared with the producing worker's anchor stack, so a
+    /// locally popped delta can be *undone* onto the live frame instead
+    /// of materialized.
+    parent: Arc<FrameState<T>>,
+    /// Branch vertex: the child covers every present neighbor of it.
+    branch: u32,
+    /// Cover size after applying the branch — lets a popper prune
+    /// against the current bound *before* paying for materialization.
+    sol_after: u32,
+    /// Registry context (same as the parent frame's spine).
+    ctx: u32,
+    /// Graph view of the parent frame.
+    view: Option<Arc<GraphView>>,
+}
+
+/// An immutable pinned frame: either a full owned snapshot of a branch
+/// point (`Base`), or a chain link recording the covered-vertex delta
+/// from its parent frame (`Link`). Thieves materialize a delta node by
+/// copying the base onto a pooled buffer and replaying every suffix
+/// outward; `depth` bounds that replay (see
+/// [`EngineCfg::max_pin_depth`]). Buffers are recycled through the
+/// worker pools when the last `Arc` holder drops a chain — the frame
+/// refcount is what decides recycle eligibility.
+pub(crate) struct FrameState<T> {
+    /// Chain length to the owned base (`Base` = 0).
+    depth: u32,
+    link: FrameLink<T>,
+}
+
+enum FrameLink<T> {
+    /// Owned snapshot of the frame at a branch point. `log` is the
+    /// witness choice-log prefix (root-residual ids; empty when
+    /// extraction is off) — delta descendants share it instead of each
+    /// owning a copy.
+    Base { deg: Vec<T>, sol: u32, edges: u64, bounds: NonZeroBounds, log: Vec<u32> },
+    /// Covered-vertex delta from `parent` (view-local ids, in cover
+    /// order) — exactly the PR-4 choice-log format, replayable forward.
+    Link { parent: Arc<FrameState<T>>, suffix: Vec<u32> },
+}
+
+/// Tag bit marking an undo-journal entry as "neighbor zeroed by this
+/// cover" (vs the covered vertex itself, which ends each op). View-local
+/// vertex ids stay below this bit for any graph the engine can hold.
+const UNDO_TAG: u32 = 1 << 31;
+
+/// One worker-local descent: the live in-place frame, the reversible
+/// cover journal, and the anchor stack of frozen branch points. The
+/// journal records every cover applied to the frame (tagged entries
+/// remember neighbors that hit degree zero, which backward replay could
+/// not otherwise distinguish from already-covered ones); anchors pin the
+/// `Arc` frame chain so a locally popped delta child can be matched by
+/// pointer identity and undone instead of materialized.
+pub(crate) struct Descent<T> {
+    node: Node<T>,
+    journal: Vec<u32>,
+    anchors: Vec<Anchor<T>>,
+    /// Whether covers on this frame are journaled (delta mode).
+    track: bool,
+}
+
+/// A frozen branch point of a descent.
+struct Anchor<T> {
+    state: Arc<FrameState<T>>,
+    /// Journal length at the freeze — undo target position.
+    jpos: usize,
+    sol: u32,
+    edges: u64,
+    bounds: NonZeroBounds,
+    /// Witness-log length at the freeze.
+    log_len: usize,
+}
+
+impl<T: DegElem> Descent<T> {
+    fn new(node: Node<T>, track: bool) -> Descent<T> {
+        Descent { node, journal: Vec::new(), anchors: Vec::new(), track }
     }
 }
 
@@ -472,6 +697,10 @@ pub(crate) struct JobView<'g> {
 const POOL_CLASSES: usize = 28;
 /// Retained buffers per size class — bounds worst-case pool memory.
 const POOL_PER_CLASS: usize = 32;
+/// Delta mode: suspended descents kept per worker (each holds one
+/// view-sized live frame + journal so its queued delta children can
+/// still take the undo fast path after e.g. a component split).
+const MAX_SUSPENDED_DESCENTS: usize = 6;
 
 /// Per-worker size-classed free list of node payload buffers.
 ///
@@ -540,7 +769,12 @@ pub(crate) struct WorkerCtx<T> {
     worker: usize,
     /// Seeding mode (no-load-balance): children go to this FIFO frontier
     /// instead of the scheduler.
-    frontier: Option<std::collections::VecDeque<Node<T>>>,
+    frontier: Option<std::collections::VecDeque<NodePayload<T>>>,
+    /// Delta mode: the current descent (last entry) plus suspended ones
+    /// whose queued delta children may still surface locally. Capped at
+    /// [`MAX_SUSPENDED_DESCENTS`]; an evicted descent only costs later
+    /// deltas a materialization, never correctness.
+    descents: Vec<Descent<T>>,
     /// BFS scratch: visit stamps (avoids clearing between searches).
     visit: Vec<u32>,
     stamp: u32,
@@ -567,6 +801,7 @@ impl<T: DegElem> WorkerCtx<T> {
         WorkerCtx {
             worker,
             frontier: None,
+            descents: Vec::new(),
             visit: vec![0; n],
             stamp: 0,
             queue: Vec::new(),
@@ -589,6 +824,28 @@ impl<T: DegElem> WorkerCtx<T> {
         if self.visit.len() < n {
             self.visit.resize(n, 0);
             self.vmap.resize(n, 0);
+        }
+    }
+
+    /// Drop every suspended descent, recycling its buffers into the
+    /// worker pools. Resident workers call this on idle transitions: an
+    /// idle worker found nothing in its own queue, the shared queue, or
+    /// any victim, so no queued item can still match its anchors — its
+    /// suspended frames are unreachable undo caches (stolen deltas
+    /// materialize at the thief and never come back). Pure pool
+    /// recycling, no live-byte accounting: resident jobs never run
+    /// instrumented, and one-shot runs retire through
+    /// [`retire_descent`] instead.
+    pub(crate) fn drain_descents(&mut self) {
+        while let Some(d) = self.descents.pop() {
+            let Descent { mut node, journal, anchors, .. } = d;
+            self.upool.release(journal);
+            for a in anchors {
+                release_chain_buffers(self, a.state);
+            }
+            self.pool.release(std::mem::take(&mut node.deg));
+            self.upool.release(std::mem::take(&mut node.log));
+            recycle_view_buffers(self, node.view.take());
         }
     }
 
@@ -632,19 +889,19 @@ pub fn run<T: DegElem>(g: &Graph, initial_best: u32, cfg: EngineCfg) -> EngineOu
     let workers = cfg.workers.max(1);
     match cfg.scheduler {
         SchedulerKind::WorkSteal => {
-            let sched: WorkStealScheduler<Node<T>> =
+            let sched: WorkStealScheduler<NodePayload<T>> =
                 WorkStealScheduler::new(workers, cfg.load_balance, cfg.queue_capacity.max(8));
             run_with(g, initial_best, cfg, &sched)
         }
         SchedulerKind::Sharded => {
-            let sched: ShardedScheduler<Node<T>> =
+            let sched: ShardedScheduler<NodePayload<T>> =
                 ShardedScheduler::new(workers, cfg.load_balance, cfg.queue_capacity.max(8));
             run_with(g, initial_best, cfg, &sched)
         }
     }
 }
 
-fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
+fn run_with<T: DegElem, S: Scheduler<NodePayload<T>>>(
     g: &Graph,
     initial_best: u32,
     cfg: EngineCfg,
@@ -664,14 +921,14 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     }
 
     if cfg.load_balance {
-        sched.inject(root);
+        sched.inject(NodePayload::Owned(root));
     } else {
         // Static seeding (prior works [3], [4]): expand a frontier of
         // sub-trees breadth-first, then give each worker a fixed share.
         let mut seeder = WorkerCtx::<T>::new(0, n, cfg.instrument);
         let mut seed_handle = sched.handle(0);
         seeder.frontier = Some(std::collections::VecDeque::new());
-        seeder.frontier.as_mut().unwrap().push_back(root);
+        seeder.frontier.as_mut().unwrap().push_back(NodePayload::Owned(root));
         let target = workers * 4;
         let mut processed = 0usize;
         while processed < 4096 {
@@ -680,7 +937,7 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
                 seeder.frontier.as_mut().unwrap().push_front(node);
                 break;
             }
-            process(&shared, &mut seeder, &mut seed_handle, node);
+            process(&shared, &mut seeder, &mut seed_handle, node, PopSource::Local);
             processed += 1;
             if ctl.stop.load(Ordering::SeqCst) {
                 break;
@@ -729,30 +986,35 @@ fn run_with<T: DegElem, S: Scheduler<Node<T>>>(
     EngineOutcome { best, improved, witness, stats, timed_out }
 }
 
-fn worker_loop<T: DegElem, H: WorkerHandle<Node<T>>>(
+fn worker_loop<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
 ) {
     loop {
         if shared.ctl.stop.load(Ordering::Relaxed) {
-            return;
+            break;
         }
         ctx.timer.switch(Activity::Queue);
-        match handle.pop() {
-            Some(node) => {
-                process(shared, ctx, handle, node);
+        match handle.pop_traced() {
+            Some((node, src)) => {
+                process(shared, ctx, handle, node, src);
                 handle.on_node_done();
                 check_deadline(shared, ctx);
             }
             None => {
                 ctx.timer.switch(Activity::Idle);
                 if let IdleOutcome::Finished = handle.idle_step() {
-                    return;
+                    break;
                 }
                 check_deadline(shared, ctx);
             }
         }
+    }
+    // Delta mode keeps live frames across pops; hand their buffers back
+    // to the pools (and recycle last-holder views) on the way out.
+    while let Some(d) = ctx.descents.pop() {
+        retire_descent(shared, ctx, d);
     }
 }
 
@@ -807,43 +1069,394 @@ fn retire_node<T: DegElem>(
     node.view.take()
 }
 
-/// Process one search-tree node: descend left branches in place, then
-/// retire the node — its payload returns to the worker's pool, and if it
-/// was the last node over a component view, the view's CSR buffers are
-/// recycled too.
-pub(crate) fn process<T: DegElem, H: WorkerHandle<Node<T>>>(
+/// Process one queued work item (see [`NodePayload`]): owned nodes open
+/// a new descent; delta nodes are pruned without reconstruction, undone
+/// onto a matching live frame (reverse journal replay — the deep
+/// local-pop fast path), or materialized into an owned frame (the
+/// thief-side half of speculative in-place branching).
+pub(crate) fn process<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     shared: &JobView<'_>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
-    node: Node<T>,
+    item: NodePayload<T>,
+    src: PopSource,
 ) {
-    // Hold one temporary reference so `g` stays valid while `node` (and
-    // its children) move around; descend returns the completed node's
-    // view Arc, which can only be unwrapped after this clone is dropped.
-    let view = node.view.clone();
-    let spent = {
-        let g: &Graph = view.as_ref().map(|v| &v.graph).unwrap_or(shared.g);
-        descend(shared, g, ctx, handle, node)
-    };
-    drop(view);
-    if let Some(v) = spent {
-        // `Arc::into_inner` (not `try_unwrap`) so that when two workers
-        // race to retire the last nodes of a view, exactly one of them
-        // receives the view — the CSR buffers are always recycled and
-        // the live-bytes decrement can never be lost to the race.
-        if let Some(gv) = Arc::into_inner(v) {
-            let GraphView { graph, back } = gv;
-            let (row_ptr, adj) = graph.into_parts();
-            if shared.ctl.cfg.instrument {
-                shared
-                    .ctl
-                    .live_bytes
-                    .fetch_sub(view_bytes(&row_ptr, &adj, &back), Ordering::Relaxed);
+    match item {
+        NodePayload::Owned(node) => {
+            let track = shared.ctl.cfg.node_repr == NodeRepr::Delta && ctx.frontier.is_none();
+            let mut d = Descent::new(node, track);
+            if track {
+                d.journal = ctx.upool.acquire(64);
             }
-            ctx.upool.release(row_ptr);
-            ctx.upool.release(adj);
-            ctx.upool.release(back);
+            drive(shared, ctx, handle, d);
         }
+        NodePayload::Delta(dn) => {
+            // Prune against the current bound before paying for any
+            // state reconstruction (mirrors the owned right child's
+            // stopping condition; registry completion must still run).
+            let bound = shared.ctl.bound_of(dn.ctx);
+            if dn.sol_after >= bound {
+                ctx.stats.tree_nodes += 1;
+                let c = dn.ctx;
+                release_delta(shared, ctx, dn);
+                complete(shared.ctl, c);
+                return;
+            }
+            // Stolen nodes can never pin this worker's live descents;
+            // locally (or shared-queue) popped ones are matched by frame
+            // pointer identity for the undo fast path.
+            let resume = if src == PopSource::Stolen {
+                None
+            } else {
+                find_anchor(&ctx.descents, &dn.parent)
+            };
+            match resume {
+                Some((di, ai)) => {
+                    // Resume the matched descent and keep the others
+                    // suspended: the sharded runtime's offload + fairness
+                    // poll can surface a worker's own deltas out of LIFO
+                    // order, so descents above the match may still have
+                    // resumable children queued locally. Unreachable
+                    // frames are bounded by the suspension cap and
+                    // reclaimed on eviction or idle.
+                    let mut d = ctx.descents.remove(di);
+                    resume_delta(shared, ctx, handle, &mut d, ai, dn);
+                    ctx.descents.push(d);
+                }
+                None => {
+                    let d = materialize(shared, ctx, dn);
+                    drive(shared, ctx, handle, d);
+                }
+            }
+        }
+    }
+}
+
+/// Run [`descend`] over a descent, then either retire it (owned repr) or
+/// keep it as the worker's live frame so queued delta children can be
+/// undone onto it (delta repr; bounded suspended stack).
+fn drive<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+    mut d: Descent<T>,
+) {
+    // Hold one temporary view reference so `g` stays valid while the
+    // frame and its children move around.
+    let view = d.node.view.clone();
+    {
+        let g: &Graph = view.as_ref().map(|v| &v.graph).unwrap_or(shared.g);
+        descend(shared, g, ctx, handle, &mut d);
+    }
+    drop(view);
+    if d.track && !shared.ctl.stop.load(Ordering::Relaxed) {
+        if ctx.descents.len() >= MAX_SUSPENDED_DESCENTS {
+            let old = ctx.descents.remove(0);
+            retire_descent(shared, ctx, old);
+        }
+        ctx.descents.push(d);
+    } else {
+        retire_descent(shared, ctx, d);
+    }
+}
+
+/// Consume a locally surfaced delta child on the undo fast path: rewind
+/// the live frame to the pinned anchor by reverse journal replay, apply
+/// the right branch in place, and continue descending — zero payload
+/// copies on the overwhelmingly common local-pop case.
+fn resume_delta<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    handle: &mut H,
+    d: &mut Descent<T>,
+    ai: usize,
+    dn: DeltaNode<T>,
+) {
+    let view = d.node.view.clone();
+    {
+        let g: &Graph = view.as_ref().map(|v| &v.graph).unwrap_or(shared.g);
+        undo_to_anchor(shared, g, ctx, d, ai);
+        debug_assert_eq!(d.node.ctx, dn.ctx, "delta child crossed registry contexts");
+        apply_branch(shared, g, ctx, d, dn.branch);
+        debug_assert_eq!(d.node.sol, dn.sol_after, "undo replay out of sync with branch");
+        // The matched anchor still pins `dn`'s chain (and the frame its
+        // view), so this drop never recycles — it only releases the
+        // child's own references.
+        drop(dn);
+        descend(shared, g, ctx, handle, d);
+    }
+    drop(view);
+}
+
+/// Locate the anchor a delta child's pinned frame points at, searching
+/// the current descent first (pure LIFO pops match its top anchor), then
+/// suspended ones.
+fn find_anchor<T>(descents: &[Descent<T>], parent: &Arc<FrameState<T>>) -> Option<(usize, usize)> {
+    for (di, d) in descents.iter().enumerate().rev() {
+        for (ai, a) in d.anchors.iter().enumerate().rev() {
+            if Arc::ptr_eq(&a.state, parent) {
+                return Some((di, ai));
+            }
+        }
+    }
+    None
+}
+
+/// Rewind the live frame to anchor `ai`: pop journal entries above the
+/// anchor, reverting each cover (neighbors with a positive degree were
+/// present pre-cover and get re-incremented; tagged entries name the
+/// neighbors this cover zeroed, which backward replay could not
+/// otherwise tell apart from already-covered ones), then restore the
+/// anchor's scalars and truncate the witness log to its prefix.
+fn undo_to_anchor<T: DegElem>(
+    shared: &JobView<'_>,
+    g: &Graph,
+    ctx: &mut WorkerCtx<T>,
+    d: &mut Descent<T>,
+    ai: usize,
+) {
+    while d.anchors.len() > ai + 1 {
+        let a = d.anchors.pop().expect("anchors above the target");
+        release_frame_chain(shared, ctx, a.state);
+    }
+    let a = d.anchors.last().expect("undo target anchor");
+    let jpos = a.jpos;
+    let (sol, edges, bounds, log_len) = (a.sol, a.edges, a.bounds, a.log_len);
+    ctx.stats.undo_pops += 1;
+    while d.journal.len() > jpos {
+        let v = d.journal.pop().expect("journal entry");
+        debug_assert_eq!(v & UNDO_TAG, 0, "cover ops end with the covered vertex");
+        let mut cnt = 0u32;
+        for &w in g.neighbors(v) {
+            let dw = d.node.deg[w as usize].to_u32();
+            if dw > 0 {
+                d.node.deg[w as usize] = T::from_u32(dw + 1);
+                cnt += 1;
+            }
+        }
+        while d.journal.len() > jpos && d.journal.last().is_some_and(|&e| e & UNDO_TAG != 0) {
+            let w = d.journal.pop().expect("tagged entry") & !UNDO_TAG;
+            d.node.deg[w as usize] = T::from_u32(1);
+            cnt += 1;
+        }
+        d.node.deg[v as usize] = T::from_u32(cnt);
+        ctx.stats.undo_covers += 1;
+    }
+    d.node.sol = sol;
+    d.node.edges = edges;
+    d.node.bounds = bounds;
+    d.node.log.truncate(log_len);
+}
+
+/// Apply a delta child's right branch onto the live frame: move every
+/// present neighbor of `branch` into the cover (journaled + witness-
+/// logged), exactly what [`make_right_child`] bakes into an owned copy.
+fn apply_branch<T: DegElem>(
+    shared: &JobView<'_>,
+    g: &Graph,
+    ctx: &mut WorkerCtx<T>,
+    d: &mut Descent<T>,
+    branch: u32,
+) {
+    let extract = shared.ctl.cfg.extract_witness;
+    ctx.nbuf.clear();
+    ctx.nbuf.extend(
+        g.neighbors(branch).iter().copied().filter(|&w| d.node.deg[w as usize].to_u32() > 0),
+    );
+    for &u in &ctx.nbuf {
+        if d.node.deg[u as usize].to_u32() > 0 {
+            cover_vertex_tracked(g, &mut d.node, Some(&mut d.journal), u);
+            log_cover(&mut d.node, u, extract);
+            d.node.sol += 1;
+        }
+    }
+    debug_assert_eq!(d.node.deg[branch as usize].to_u32(), 0);
+}
+
+/// Materialize a delta child whose pinned frame is not this worker's
+/// live descent (it was stolen, or the producer moved on): copy the
+/// chain's owned base onto a pooled buffer, replay every suffix outward
+/// (recompute-over-copy), then apply the branch. The new descent anchors
+/// directly on the pinned chain, so the thief's own first branch links
+/// instead of freezing another base.
+fn materialize<T: DegElem>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    dn: DeltaNode<T>,
+) -> Descent<T> {
+    ctx.stats.materializations += 1;
+    let DeltaNode { parent, branch, sol_after, ctx: rctx, view } = dn;
+    let extract = shared.ctl.cfg.extract_witness;
+    let gview = view.clone();
+
+    // Walk to the owned base, keeping the links for forward replay.
+    let mut links: Vec<&FrameState<T>> = Vec::new();
+    let mut cur: &FrameState<T> = parent.as_ref();
+    loop {
+        links.push(cur);
+        match &cur.link {
+            FrameLink::Base { .. } => break,
+            FrameLink::Link { parent, .. } => cur = parent.as_ref(),
+        }
+    }
+    let FrameLink::Base { deg: bdeg, sol, edges, bounds, log: blog } =
+        &links.last().expect("chain has a base").link
+    else {
+        unreachable!("chain walk ends at the base")
+    };
+    let mut deg = ctx.pool.acquire(bdeg.len());
+    deg.extend_from_slice(bdeg);
+    let log = if extract {
+        let mut log = ctx.upool.acquire(blog.len());
+        log.extend_from_slice(blog);
+        log
+    } else {
+        Vec::new()
+    };
+    if shared.ctl.cfg.instrument {
+        let bytes = (deg.len() * T::BYTES) as u64;
+        let live = shared.ctl.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+    let node = Node {
+        deg,
+        sol: *sol,
+        edges: *edges,
+        bounds: *bounds,
+        ctx: rctx,
+        view,
+        log,
+    };
+    let mut d = Descent { node, journal: ctx.upool.acquire(64), anchors: Vec::new(), track: true };
+    {
+        let g: &Graph = gview.as_ref().map(|v| &v.graph).unwrap_or(shared.g);
+        for fs in links.iter().rev() {
+            if let FrameLink::Link { suffix, .. } = &fs.link {
+                for &v in suffix.iter() {
+                    cover_vertex(g, &mut d.node, v);
+                    log_cover(&mut d.node, v, extract);
+                    d.node.sol += 1;
+                    ctx.stats.replayed_covers += 1;
+                }
+            }
+        }
+        drop(links);
+        // Anchor on the pinned chain tip (= the reconstructed state), so
+        // deeper branches of this descent extend the shared chain.
+        d.anchors.push(Anchor {
+            state: Arc::clone(&parent),
+            jpos: 0,
+            sol: d.node.sol,
+            edges: d.node.edges,
+            bounds: d.node.bounds,
+            log_len: d.node.log.len(),
+        });
+        apply_branch(shared, g, ctx, &mut d, branch);
+        debug_assert_eq!(d.node.sol, sol_after, "materialized replay out of sync");
+    }
+    drop(gview);
+    drop(parent);
+    d
+}
+
+/// Accounting-free core of [`release_frame_chain`]: recycle the buffers
+/// of every chain segment this worker holds the last reference to (the
+/// refcount decides eligibility, so chains shared with queued delta
+/// children or other descents are left intact and the eventual last
+/// holder recycles them). Returns the bytes released so callers with a
+/// job context can settle the live-byte accounting.
+fn release_chain_buffers<T: DegElem>(
+    ctx: &mut WorkerCtx<T>,
+    mut state: Arc<FrameState<T>>,
+) -> u64 {
+    let mut bytes = 0u64;
+    loop {
+        let Some(fs) = Arc::into_inner(state) else { return bytes };
+        match fs.link {
+            FrameLink::Base { deg, log, .. } => {
+                bytes += (deg.len() * T::BYTES + log.len() * 4) as u64;
+                ctx.pool.release(deg);
+                ctx.upool.release(log);
+                return bytes;
+            }
+            FrameLink::Link { parent, suffix } => {
+                bytes += (suffix.len() * 4) as u64;
+                ctx.upool.release(suffix);
+                state = parent;
+            }
+        }
+    }
+}
+
+/// [`release_chain_buffers`] plus instrumented live-byte settlement.
+fn release_frame_chain<T: DegElem>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    state: Arc<FrameState<T>>,
+) {
+    let bytes = release_chain_buffers(ctx, state);
+    if shared.ctl.cfg.instrument && bytes > 0 {
+        shared.ctl.live_bytes.fetch_sub(bytes, Ordering::Relaxed);
+    }
+}
+
+/// Release a delta child without running it (pruned, or dropped on a
+/// stopped job): chain + view go back through the recycling paths.
+fn release_delta<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, dn: DeltaNode<T>) {
+    let DeltaNode { parent, view, .. } = dn;
+    release_frame_chain(shared, ctx, parent);
+    recycle_view(shared, ctx, view);
+}
+
+/// Retire a whole descent: journal and anchor chains back to the pools,
+/// then the live frame itself (payload, witness log, view).
+///
+/// On a resident pool this can run while the worker is processing a
+/// *different* job's item (suspended-descent eviction), in which case
+/// the retirement telemetry (log bytes, pool traffic) is charged to the
+/// job currently being processed — a bounded cross-job smear on those
+/// counters only; correctness counters (tree nodes, materializations,
+/// undo/replay) are always attributed at processing time.
+fn retire_descent<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, d: Descent<T>) {
+    let Descent { node, journal, anchors, .. } = d;
+    ctx.upool.release(journal);
+    for a in anchors {
+        release_frame_chain(shared, ctx, a.state);
+    }
+    let view = retire_node(shared, ctx, node);
+    recycle_view(shared, ctx, view);
+}
+
+/// Accounting-free core of [`recycle_view`]: recycle a component view's
+/// CSR buffers if this was the last holder, returning the bytes
+/// released. `Arc::into_inner` (not `try_unwrap`) so that when two
+/// workers race to retire the last nodes of a view, exactly one of them
+/// receives it — the buffers are always recycled and the live-bytes
+/// decrement can never be lost to the race.
+fn recycle_view_buffers<T: DegElem>(
+    ctx: &mut WorkerCtx<T>,
+    view: Option<Arc<GraphView>>,
+) -> u64 {
+    let Some(v) = view else { return 0 };
+    let Some(gv) = Arc::into_inner(v) else { return 0 };
+    let GraphView { graph, back } = gv;
+    let (row_ptr, adj) = graph.into_parts();
+    let bytes = view_bytes(&row_ptr, &adj, &back);
+    ctx.upool.release(row_ptr);
+    ctx.upool.release(adj);
+    ctx.upool.release(back);
+    bytes
+}
+
+/// [`recycle_view_buffers`] plus instrumented live-byte settlement.
+fn recycle_view<T: DegElem>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    view: Option<Arc<GraphView>>,
+) {
+    let bytes = recycle_view_buffers(ctx, view);
+    if shared.ctl.cfg.instrument && bytes > 0 {
+        shared.ctl.live_bytes.fetch_sub(bytes, Ordering::Relaxed);
     }
 }
 
@@ -854,82 +1467,72 @@ fn view_bytes(row_ptr: &[u32], adj: &[u32], back: &[u32]) -> u64 {
     ((row_ptr.len() + adj.len() + back.len()) * std::mem::size_of::<u32>()) as u64
 }
 
-/// The branch-and-reduce descent over one node (Alg. 2). `g` is the
-/// node's graph view; every vertex id in the node is local to it.
-/// Returns the retired node's view for [`process`] to recycle.
-fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
+/// The branch-and-reduce descent over one live frame (Alg. 2). `g` is
+/// the frame's graph view; every vertex id in it is local to that view.
+/// The frame is left in its terminal state — the caller retires it
+/// (owned repr) or keeps it live for delta undo.
+fn descend<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
-    mut node: Node<T>,
-) -> Option<Arc<GraphView>> {
+    d: &mut Descent<T>,
+) {
     let extract = shared.ctl.cfg.extract_witness;
     loop {
         ctx.stats.tree_nodes += 1;
 
         // ---- reduce (Alg. 2 line 2) ----
         ctx.timer.switch(Activity::Reduce);
-        let red = reduce_node(shared, g, &mut node);
+        let red = reduce_node(shared, g, d);
 
         // ---- stopping conditions (lines 3-4) ----
         ctx.timer.switch(Activity::Leaf);
-        let bound = shared.ctl.bound_of(node.ctx);
-        if node.sol >= bound {
-            let c = node.ctx;
-            let spent = retire_node(shared, ctx, node);
-            complete(shared.ctl, c);
-            return spent;
+        let bound = shared.ctl.bound_of(d.node.ctx);
+        if d.node.sol >= bound {
+            complete(shared.ctl, d.node.ctx);
+            return;
         }
-        let rem = (bound - node.sol - 1) as u64;
-        if node.edges > rem * rem {
-            let c = node.ctx;
-            let spent = retire_node(shared, ctx, node);
-            complete(shared.ctl, c);
-            return spent;
+        let rem = (bound - d.node.sol - 1) as u64;
+        if d.node.edges > rem * rem {
+            complete(shared.ctl, d.node.ctx);
+            return;
         }
         // ---- leaf (lines 5-7) ----
-        if node.edges == 0 {
-            let (c, sol) = (node.ctx, node.sol);
-            let log = std::mem::take(&mut node.log);
-            let spent = retire_node(shared, ctx, node);
-            report_leaf(shared.ctl, c, sol, &log);
-            release_log(ctx, log);
-            complete(shared.ctl, c);
-            return spent;
+        if d.node.edges == 0 {
+            report_leaf(shared.ctl, d.node.ctx, d.node.sol, &d.node.log);
+            complete(shared.ctl, d.node.ctx);
+            return;
         }
 
         // ---- component search (line 9) ----
         if shared.ctl.cfg.component_aware {
             ctx.timer.switch(Activity::ComponentSearch);
-            match scan_components(g, ctx, &node, &red) {
+            match scan_components(g, ctx, &d.node, &red) {
                 Scan::Single => {}
                 Scan::SingleSpecial(sp) => {
                     ctx.stats.special_solved += 1;
-                    let (c, total) = (node.ctx, node.sol + sp.mvc_size());
+                    let total = d.node.sol + sp.mvc_size();
                     if extract {
                         // the scan's BFS left the whole residual in
-                        // ctx.queue; append its closed-form cover
+                        // ctx.queue; append its closed-form cover (a
+                        // later undo truncates it back off the live log)
                         let cover = special_cover_root_ids(
                             g,
                             &ctx.queue,
-                            &node.deg,
-                            node.view.as_deref(),
+                            &d.node.deg,
+                            d.node.view.as_deref(),
                             sp,
                         );
-                        node.log.extend_from_slice(&cover);
+                        d.node.log.extend_from_slice(&cover);
                     }
-                    let log = std::mem::take(&mut node.log);
-                    let spent = retire_node(shared, ctx, node);
-                    report_leaf(shared.ctl, c, total, &log);
-                    release_log(ctx, log);
-                    complete(shared.ctl, c);
-                    return spent;
+                    report_leaf(shared.ctl, d.node.ctx, total, &d.node.log);
+                    complete(shared.ctl, d.node.ctx);
+                    return;
                 }
                 Scan::Split { first_size, dmin, dmax } => {
-                    return branch_on_components(
-                        shared, g, ctx, handle, node, first_size, dmin, dmax,
-                    );
+                    branch_on_components(shared, g, ctx, handle, d, first_size, dmin, dmax);
+                    return;
                 }
             }
         }
@@ -937,18 +1540,133 @@ fn descend<T: DegElem, H: WorkerHandle<Node<T>>>(
         // ---- single-component branch (lines 11-13) ----
         ctx.timer.switch(Activity::Branch);
         let vmax = red.vmax;
-        debug_assert_eq!(vmax, max_degree_vertex(&node), "fused argmax out of sync");
+        debug_assert_eq!(vmax, max_degree_vertex(&d.node), "fused argmax out of sync");
         debug_assert_ne!(vmax, u32::MAX);
 
-        // right child: N(vmax) into S
-        let right = make_right_child(shared, g, ctx, &node, vmax);
-        shared.ctl.registry.on_branch(node.ctx);
-        push_child(ctx, handle, right);
+        // right child: N(vmax) into S — an owned payload copy, or a
+        // pinned-frame delta under NodeRepr::Delta
+        if d.track {
+            let right = make_delta_child(shared, g, ctx, d, vmax);
+            shared.ctl.registry.on_branch(d.node.ctx);
+            push_child(ctx, handle, NodePayload::Delta(right));
+        } else {
+            let right = make_right_child(shared, g, ctx, &d.node, vmax);
+            shared.ctl.registry.on_branch(d.node.ctx);
+            push_child(ctx, handle, NodePayload::Owned(right));
+        }
 
         // left child: vmax into S — descend in place
-        cover_vertex(g, &mut node, vmax);
-        log_cover(&mut node, vmax, extract);
-        node.sol += 1;
+        let journal = d.track.then_some(&mut d.journal);
+        cover_vertex_tracked(g, &mut d.node, journal, vmax);
+        log_cover(&mut d.node, vmax, extract);
+        d.node.sol += 1;
+    }
+}
+
+/// Freeze the live frame's current state into an immutable pinned
+/// [`FrameState`]: a cheap chain link carrying only the covered-vertex
+/// suffix since the previous anchor, or — on the first branch of a
+/// descent and every `max_pin_depth` links — a full owned base snapshot
+/// that bounds later replay. Also pushes the matching anchor.
+fn freeze_frame<T: DegElem>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    d: &mut Descent<T>,
+) -> Arc<FrameState<T>> {
+    let jlen = d.journal.len();
+    if let Some(a) = d.anchors.last() {
+        if a.jpos == jlen {
+            // no covers since the previous freeze: same state
+            return Arc::clone(&a.state);
+        }
+    }
+    let node = &d.node;
+    let link_depth = d.anchors.last().map(|a| a.state.depth + 1);
+    let frozen_bytes;
+    let state = match link_depth {
+        Some(depth) if depth <= shared.ctl.cfg.max_pin_depth => {
+            let prev = d.anchors.last().expect("link freeze has a previous anchor");
+            let mut suffix = ctx.upool.acquire(jlen - prev.jpos);
+            suffix.extend(
+                d.journal[prev.jpos..].iter().copied().filter(|&e| e & UNDO_TAG == 0),
+            );
+            frozen_bytes = (suffix.len() * 4) as u64;
+            Arc::new(FrameState {
+                depth,
+                link: FrameLink::Link { parent: Arc::clone(&prev.state), suffix },
+            })
+        }
+        _ => {
+            // first branch of the descent, or pin-depth overflow:
+            // periodic materialization keeps undo chains bounded
+            let mut deg = ctx.pool.acquire(node.deg.len());
+            deg.extend_from_slice(&node.deg);
+            let log = if shared.ctl.cfg.extract_witness {
+                let mut log = ctx.upool.acquire(node.log.len().max(1));
+                log.extend_from_slice(&node.log);
+                log
+            } else {
+                Vec::new()
+            };
+            frozen_bytes = (deg.len() * T::BYTES + log.len() * 4) as u64;
+            ctx.stats.frame_bases += 1;
+            Arc::new(FrameState {
+                depth: 0,
+                link: FrameLink::Base {
+                    deg,
+                    sol: node.sol,
+                    edges: node.edges,
+                    bounds: node.bounds,
+                    log,
+                },
+            })
+        }
+    };
+    ctx.stats.pinned_frame_bytes += frozen_bytes;
+    ctx.stats.payload_bytes += frozen_bytes;
+    if shared.ctl.cfg.instrument {
+        let live = shared.ctl.live_bytes.fetch_add(frozen_bytes, Ordering::Relaxed) + frozen_bytes;
+        shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
+    }
+    d.anchors.push(Anchor {
+        state: Arc::clone(&state),
+        jpos: jlen,
+        sol: node.sol,
+        edges: node.edges,
+        bounds: node.bounds,
+        log_len: node.log.len(),
+    });
+    state
+}
+
+/// Build the delta right child for a branch at `vmax`: pin the current
+/// frame and record the branch vertex — O(delta since the last branch)
+/// resident bytes instead of an O(view) payload copy.
+fn make_delta_child<T: DegElem>(
+    shared: &JobView<'_>,
+    g: &Graph,
+    ctx: &mut WorkerCtx<T>,
+    d: &mut Descent<T>,
+    vmax: u32,
+) -> DeltaNode<T> {
+    let state = freeze_frame(shared, ctx, d);
+    let cnt = g
+        .neighbors(vmax)
+        .iter()
+        .filter(|&&w| d.node.deg[w as usize].to_u32() > 0)
+        .count() as u32;
+    // Payload accounting parity with `track_alloc`: owned nodes charge
+    // their heap payload (degree-array bytes), a delta child charges
+    // the chain bytes frozen for it (suffix or base — added by
+    // `freeze_frame`); neither charges the queue-item struct itself.
+    ctx.stats.delta_children += 1;
+    ctx.stats.payload_nodes += 1;
+    DeltaNode {
+        parent: state,
+        branch: vmax,
+        sol_after: d.node.sol + cnt,
+        ctx: d.node.ctx,
+        view: d.node.view.clone(),
     }
 }
 
@@ -976,9 +1694,11 @@ const NO_VERTEX: ReduceOutcome = ReduceOutcome { present: 0, first: u32::MAX, vm
 fn reduce_node<T: DegElem>(
     shared: &JobView<'_>,
     g: &Graph,
-    node: &mut Node<T>,
+    dsc: &mut Descent<T>,
 ) -> ReduceOutcome {
     let extract = shared.ctl.cfg.extract_witness;
+    let track = dsc.track;
+    let (node, journal) = (&mut dsc.node, &mut dsc.journal);
     loop {
         if shared.ctl.cfg.use_bounds {
             node.bounds = node.bounds.tighten(&node.deg);
@@ -1020,7 +1740,7 @@ fn reduce_node<T: DegElem>(
                 1 => {
                     // degree-one: cover the neighbor
                     let u = first_present_neighbor(g, &node.deg, v as u32);
-                    cover_vertex(g, node, u);
+                    cover_vertex_tracked(g, node, track.then_some(&mut *journal), u);
                     log_cover(node, u, extract);
                     node.sol += 1;
                     changed = true;
@@ -1029,9 +1749,9 @@ fn reduce_node<T: DegElem>(
                     // degree-two triangle: cover both neighbors
                     let (a, b) = two_present_neighbors(g, &node.deg, v as u32);
                     if g.has_edge(a, b) {
-                        cover_vertex(g, node, a);
+                        cover_vertex_tracked(g, node, track.then_some(&mut *journal), a);
                         log_cover(node, a, extract);
-                        cover_vertex(g, node, b);
+                        cover_vertex_tracked(g, node, track.then_some(&mut *journal), b);
                         log_cover(node, b, extract);
                         node.sol += 2;
                         changed = true;
@@ -1041,7 +1761,7 @@ fn reduce_node<T: DegElem>(
                     // high-degree rule
                     let budget = bound.saturating_sub(node.sol).saturating_sub(1);
                     if d > budget {
-                        cover_vertex(g, node, v as u32);
+                        cover_vertex_tracked(g, node, track.then_some(&mut *journal), v as u32);
                         log_cover(node, v as u32, extract);
                         node.sol += 1;
                         changed = true;
@@ -1064,19 +1784,54 @@ fn reduce_node<T: DegElem>(
 /// neighbors, maintain the edge count. (Does not touch `sol`.)
 #[inline]
 fn cover_vertex<T: DegElem>(g: &Graph, node: &mut Node<T>, v: u32) {
+    cover_vertex_tracked(g, node, None, v)
+}
+
+/// [`cover_vertex`] with optional undo journaling (delta mode's live
+/// frame): records neighbors this cover zeroed (tagged) followed by `v`
+/// itself, so reverse replay can reconstruct the exact pre-cover
+/// degrees — see [`undo_to_anchor`] for the inverse.
+#[inline]
+fn cover_vertex_tracked<T: DegElem>(
+    g: &Graph,
+    node: &mut Node<T>,
+    journal: Option<&mut Vec<u32>>,
+    v: u32,
+) {
     let d = node.deg[v as usize].to_u32();
     debug_assert!(d > 0);
     node.deg[v as usize] = T::from_u32(0);
     node.edges -= d as u64;
     let mut remaining = d;
-    for &w in g.neighbors(v) {
-        let dw = node.deg[w as usize].to_u32();
-        if dw > 0 {
-            node.deg[w as usize] = T::from_u32(dw - 1);
-            remaining -= 1;
-            if remaining == 0 {
-                break;
+    match journal {
+        None => {
+            for &w in g.neighbors(v) {
+                let dw = node.deg[w as usize].to_u32();
+                if dw > 0 {
+                    node.deg[w as usize] = T::from_u32(dw - 1);
+                    remaining -= 1;
+                    if remaining == 0 {
+                        break;
+                    }
+                }
             }
+        }
+        Some(j) => {
+            debug_assert_eq!(v & UNDO_TAG, 0, "vertex id collides with the undo tag");
+            for &w in g.neighbors(v) {
+                let dw = node.deg[w as usize].to_u32();
+                if dw > 0 {
+                    node.deg[w as usize] = T::from_u32(dw - 1);
+                    if dw == 1 {
+                        j.push(w | UNDO_TAG);
+                    }
+                    remaining -= 1;
+                    if remaining == 0 {
+                        break;
+                    }
+                }
+            }
+            j.push(v);
         }
     }
     debug_assert_eq!(remaining, 0, "degree count out of sync");
@@ -1205,10 +1960,10 @@ fn make_right_child<T: DegElem>(
 
 /// Push a child node to the seed frontier (static-seeding phase) or the
 /// scheduler.
-fn push_child<T: DegElem, H: WorkerHandle<Node<T>>>(
+fn push_child<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
-    node: Node<T>,
+    node: NodePayload<T>,
 ) {
     if let Some(front) = ctx.frontier.as_mut() {
         front.push_back(node);
@@ -1288,23 +2043,24 @@ fn scan_components<T: DegElem>(
 /// Branch on components (Alg. 2 lines 14-20): register a parent entry,
 /// dispatch each component **eagerly** as it is found (special ones in
 /// closed form), and release the discovery reference at the end. The
-/// consumed split node is retired into the worker pool; its view `Arc`
-/// is handed back through [`process`] for CSR recycling.
+/// split frame itself stays with the caller — retired into the worker
+/// pool under the owned representation, kept live for delta undo.
 ///
 /// The split-detection BFS already discovered the first component
 /// (`ctx.queue`, visit stamps intact), so discovery resumes from there
 /// instead of re-walking it.
 #[allow(clippy::too_many_arguments)]
-fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
+fn branch_on_components<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
-    node: Node<T>,
+    d: &Descent<T>,
     first_size: u32,
     first_dmin: u32,
     first_dmax: u32,
-) -> Option<Arc<GraphView>> {
+) {
+    let node = &d.node;
     ctx.stats.component_branches += 1;
     let parent = shared.ctl.registry.new_parent(node.sol, node.ctx);
     if shared.ctl.cfg.extract_witness {
@@ -1316,7 +2072,7 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
     ctx.stats.registry_entries += 1;
 
     // Component 1: reuse the detection BFS result.
-    dispatch_component(shared, g, ctx, handle, &node, parent, first_size, first_dmin, first_dmax);
+    dispatch_component(shared, g, ctx, handle, node, parent, first_size, first_dmin, first_dmax);
     let mut comp_count = 1u32;
 
     // Remaining components: continue scanning under the same stamp.
@@ -1335,16 +2091,14 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
         if start == u32::MAX {
             break;
         }
-        let (size, dmin, dmax) = bfs_component_accumulate(g, &node, ctx, start);
+        let (size, dmin, dmax) = bfs_component_accumulate(g, node, ctx, start);
         comp_count += 1;
-        dispatch_component(shared, g, ctx, handle, &node, parent, size, dmin, dmax);
+        dispatch_component(shared, g, ctx, handle, node, parent, size, dmin, dmax);
     }
 
     *ctx.stats.comp_histogram.entry(comp_count).or_insert(0) += 1;
-    let spent = retire_node(shared, ctx, node);
     let mut on_root = |t: u32| shared.ctl.on_root_total(t);
     shared.ctl.registry.finish_scan(parent, &mut on_root);
-    spent
 }
 
 /// Handle one discovered component (vertex list in `ctx.queue`): solve
@@ -1353,7 +2107,7 @@ fn branch_on_components<T: DegElem, H: WorkerHandle<Node<T>>>(
 /// compact induced subproblem when the `induce_threshold` gate passes,
 /// or as a full-width masked copy of the parent's view otherwise.
 #[allow(clippy::too_many_arguments)]
-fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
+fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     shared: &JobView<'_>,
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
@@ -1439,7 +2193,7 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<Node<T>>>(
             log: Vec::new(),
         }
     };
-    push_child(ctx, handle, child);
+    push_child(ctx, handle, NodePayload::Owned(child));
 }
 
 /// Materialize the component in `ctx.queue` (already sorted by the
@@ -1943,6 +2697,158 @@ mod tests {
         assert!(out.witness.is_none());
         assert_eq!(out.stats.witness_log_bytes, 0);
         assert_eq!(out.stats.logs_recycled, 0);
+    }
+
+    fn delta_cfg(workers: usize, scheduler: SchedulerKind) -> EngineCfg {
+        EngineCfg {
+            node_repr: NodeRepr::Delta,
+            ..cfg_with(true, true, workers, scheduler)
+        }
+    }
+
+    #[test]
+    fn delta_repr_matches_oracle_both_schedulers() {
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(18, 0.18, seed);
+            let opt = oracle::mvc_size(&g);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            for sched in BOTH_SCHEDULERS {
+                for workers in [1usize, 4] {
+                    let out = run::<u32>(&g, ub, delta_cfg(workers, sched));
+                    assert_eq!(out.best, opt, "{} w={workers} seed {seed}", sched.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn delta_repr_matches_oracle_on_splits_and_dtypes() {
+        for seed in 0..6 {
+            let g = generators::union_of_random(4, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            for threshold in [0.0, 1.0] {
+                let mut cfg = delta_cfg(4, SchedulerKind::WorkSteal);
+                cfg.induce_threshold = threshold;
+                assert_eq!(run::<u8>(&g, ub, cfg.clone()).best, opt, "u8 seed {seed}");
+                assert_eq!(run::<u16>(&g, ub, cfg.clone()).best, opt, "u16 seed {seed}");
+                assert_eq!(run::<u32>(&g, ub, cfg).best, opt, "u32 seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn delta_single_worker_undoes_and_never_materializes() {
+        // One worker, one connected component: after the root every
+        // queued node is a delta child, every pop is local, and every
+        // anchor match must hit — the pure in-place undo regime.
+        let g = generators::erdos_renyi(22, 0.25, 7);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let out = run::<u32>(&g, ub, delta_cfg(1, SchedulerKind::WorkSteal));
+        assert_eq!(out.best, oracle::mvc_size(&g));
+        assert!(out.stats.delta_children > 0, "branches must push delta children");
+        assert!(out.stats.undo_pops > 0, "local pops must take the undo path");
+        assert!(out.stats.undo_covers > 0, "undo must revert covers");
+        assert_eq!(out.stats.materializations, 0, "single local worker never materializes");
+        assert!(out.stats.frame_bases > 0, "descents freeze owned bases");
+    }
+
+    #[test]
+    fn delta_undo_path_preserves_witnesses() {
+        for seed in 0..6 {
+            let g = generators::union_of_random(3, 3, 7, 0.3, seed);
+            let opt = oracle::mvc_size(&g);
+            let n = g.num_vertices() as u32;
+            for sched in BOTH_SCHEDULERS {
+                let mut cfg = delta_cfg(4, sched);
+                cfg.extract_witness = true;
+                let out = run::<u32>(&g, n + 1, cfg);
+                assert_eq!(out.best, opt, "seed {seed} {}", sched.name());
+                let w = out.witness.expect("delta run must assemble a witness");
+                assert_eq!(w.len() as u32, opt, "seed {seed} {}", sched.name());
+                assert!(g.is_vertex_cover(&w), "seed {seed} {}", sched.name());
+            }
+        }
+    }
+
+    #[test]
+    fn delta_pvc_stops_early_with_witness() {
+        let g = generators::erdos_renyi(18, 0.22, 5);
+        let opt = oracle::mvc_size(&g);
+        for sched in BOTH_SCHEDULERS {
+            let mut cfg = delta_cfg(4, sched);
+            cfg.stop_on_improvement = true;
+            cfg.extract_witness = true;
+            let out = run::<u32>(&g, opt + 1, cfg);
+            assert!(out.improved, "{}", sched.name());
+            let w = out.witness.expect("stopped delta search must carry a witness");
+            assert!(w.len() as u32 <= opt, "{}", sched.name());
+            assert!(g.is_vertex_cover(&w), "{}", sched.name());
+        }
+    }
+
+    #[test]
+    fn delta_max_pin_depth_forces_periodic_bases() {
+        // A tiny pin bound must freeze many more owned bases than the
+        // default on the same search, while agreeing on the optimum.
+        let g = generators::erdos_renyi(20, 0.25, 11);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let mut tight = delta_cfg(1, SchedulerKind::WorkSteal);
+        tight.max_pin_depth = 0;
+        let loose = delta_cfg(1, SchedulerKind::WorkSteal);
+        let a = run::<u32>(&g, ub, tight);
+        let b = run::<u32>(&g, ub, loose);
+        assert_eq!(a.best, b.best);
+        assert!(
+            a.stats.frame_bases > b.stats.frame_bases,
+            "pin depth 0 must snapshot every branch ({} vs {})",
+            a.stats.frame_bases,
+            b.stats.frame_bases
+        );
+    }
+
+    #[test]
+    fn delta_reduces_payload_bytes_on_wide_views() {
+        // A single wide component (no splits, induction irrelevant):
+        // owned right children each copy the full-width degree array,
+        // delta children freeze only cover suffixes. The baseline pins
+        // NodeRepr::Owned explicitly so the comparison survives a
+        // CAVC_NODE_REPR=delta environment.
+        let g = generators::erdos_renyi(36, 0.15, 3);
+        let ub = crate::solver::greedy::greedy_bound(&g);
+        let owned_cfg = EngineCfg {
+            node_repr: NodeRepr::Owned,
+            ..cfg_with(true, true, 1, SchedulerKind::WorkSteal)
+        };
+        let owned = run::<u32>(&g, ub, owned_cfg);
+        let delta = run::<u32>(&g, ub, delta_cfg(1, SchedulerKind::WorkSteal));
+        assert_eq!(owned.best, delta.best);
+        let bpn_owned = owned.stats.payload_bytes as f64 / owned.stats.payload_nodes.max(1) as f64;
+        let bpn_delta = delta.stats.payload_bytes as f64 / delta.stats.payload_nodes.max(1) as f64;
+        assert!(
+            bpn_delta < bpn_owned,
+            "delta bytes/node {bpn_delta:.1} must beat owned {bpn_owned:.1}"
+        );
+    }
+
+    #[test]
+    fn delta_stolen_children_materialize() {
+        // Many workers on one connected component: every queued node is
+        // a delta child, so any steal must materialize. Retry a few
+        // seeds — steals are probabilistic, but 8 workers on a deep
+        // search virtually always steal at least once.
+        let mut saw_materialization = false;
+        for seed in 0..10 {
+            let g = generators::erdos_renyi(26, 0.25, seed);
+            let ub = crate::solver::greedy::greedy_bound(&g);
+            let out = run::<u32>(&g, ub, delta_cfg(8, SchedulerKind::WorkSteal));
+            assert_eq!(out.best, oracle::mvc_size(&g), "seed {seed}");
+            if out.stats.worklist_steals > 0 && out.stats.materializations > 0 {
+                saw_materialization = true;
+                break;
+            }
+        }
+        assert!(saw_materialization, "no steal materialized across 10 seeds");
     }
 
     #[test]

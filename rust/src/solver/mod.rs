@@ -40,11 +40,12 @@ use crate::degree::Dtype;
 use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
+pub use engine::NodeRepr;
 use occupancy::{Occupancy, OccupancyModel};
 pub use sched::SchedulerKind;
 pub use service::{
-    default_service, JobHandle, JobOptions, Problem, ProblemKind, Solution, Termination,
-    VcService,
+    default_service, JobHandle, JobOptions, Problem, ProblemKind, ServiceStats, Solution,
+    Termination, VcService,
 };
 use std::time::{Duration, Instant};
 
@@ -118,6 +119,15 @@ pub struct SolverConfig {
     /// The harness tables set this so variant comparisons share the
     /// same cold-start shape and per-graph pool sizing.
     pub one_shot: bool,
+    /// Physical node representation for the parallel engine: `Owned`
+    /// payload copies (the ablation baseline) or `Delta` speculative
+    /// in-place branching with steal-time materialization
+    /// (`--node-repr` on the CLI; `CAVC_NODE_REPR` sets the process
+    /// default).
+    pub node_repr: NodeRepr,
+    /// Delta mode: pinned-chain length bound forcing periodic
+    /// materialization (see `EngineCfg::max_pin_depth`).
+    pub max_pin_depth: u32,
 }
 
 impl SolverConfig {
@@ -137,6 +147,8 @@ impl SolverConfig {
             instrument: false,
             extract_cover: false,
             one_shot: false,
+            node_repr: NodeRepr::from_env(),
+            max_pin_depth: engine::DEFAULT_MAX_PIN_DEPTH,
         }
     }
 
@@ -197,6 +209,20 @@ impl SolverConfig {
         self
     }
 
+    /// Select the physical node representation (`Owned` payload copies
+    /// vs `Delta` speculative in-place branching).
+    pub fn with_node_repr(mut self, r: NodeRepr) -> SolverConfig {
+        self.node_repr = r;
+        self
+    }
+
+    /// Delta mode: bound the pinned-frame chain length (forces periodic
+    /// materialization so undo chains stay bounded).
+    pub fn with_max_pin_depth(mut self, d: u32) -> SolverConfig {
+        self.max_pin_depth = d;
+        self
+    }
+
     /// The preparation-stage half of this configuration (§IV-B knobs).
     /// Shared by the MVC/PVC one-shot entry points and the service's
     /// job-setup stage, so the prep flags can never drift between them.
@@ -234,14 +260,16 @@ fn sequential_stats(tree_nodes: u64, component_branches: u64) -> EngineStats {
 /// Occupancy plan used for scheduler sizing: with tree induction on, the
 /// memory model charges a shrinking-payload path (§IV-B applied at every
 /// split) instead of depth × full-width, which buys deeper initial
-/// queues for the same modeled stack budget.
+/// queues for the same modeled stack budget. Under the delta node
+/// representation the per-node charge collapses to O(delta) plus the
+/// pinned base frames the `max_pin_depth` knob forces.
 fn sizing_occupancy(cfg: &SolverConfig, p: &prep::Prepared) -> Occupancy {
-    if cfg.induce_threshold > 0.0 && cfg.component_aware {
-        OccupancyModel::default().plan_induced(
-            p.residual.graph.num_vertices(),
-            p.dtype,
-            cfg.induce_threshold,
-        )
+    let n = p.residual.graph.num_vertices();
+    let alpha = if cfg.component_aware { cfg.induce_threshold } else { 0.0 };
+    if cfg.node_repr == NodeRepr::Delta {
+        OccupancyModel::default().plan_delta(n, p.dtype, alpha, cfg.max_pin_depth)
+    } else if alpha > 0.0 {
+        OccupancyModel::default().plan_induced(n, p.dtype, alpha)
     } else {
         p.occupancy.clone()
     }
@@ -388,6 +416,8 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
                 queue_capacity: sizing_occupancy(cfg, &p).queue_capacity(),
                 induce_threshold: cfg.induce_threshold,
                 extract_witness: cfg.extract_cover,
+                node_repr: cfg.node_repr,
+                max_pin_depth: cfg.max_pin_depth,
             };
             let mut out = run_engine(&p.residual.graph, p.dtype, initial, ecfg);
             let cover = out.witness.take().map(|w| p.lift_residual_cover(&w));
@@ -506,6 +536,8 @@ pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
                 queue_capacity: sizing_occupancy(cfg, &p).queue_capacity(),
                 induce_threshold: cfg.induce_threshold,
                 extract_witness: cfg.extract_cover,
+                node_repr: cfg.node_repr,
+                max_pin_depth: cfg.max_pin_depth,
             };
             let mut out = run_engine(&p.residual.graph, p.dtype, initial, ecfg);
             let cover = out.witness.take().map(|w| p.lift_residual_cover(&w));

@@ -47,7 +47,17 @@ pub struct Occupancy {
     /// `degree_array_bytes × stack_depth`; with component-local induction
     /// ([`OccupancyModel::plan_induced`]) payloads shrink at every split
     /// and the path sum collapses to a small multiple of the root array.
+    /// Under the delta node representation
+    /// ([`OccupancyModel::plan_delta`]) this charges only the O(delta)
+    /// queued payloads; the pinned snapshots are `pinned_bytes`.
     pub path_bytes: u64,
+    /// Delta mode only: modeled bytes of pinned base frames along one
+    /// path — one full-width snapshot per `max_pin_depth` chain links
+    /// (the periodic-materialization knob). *Not* included in
+    /// `path_bytes`: consumers charge `path_bytes + pinned_bytes`, so
+    /// the budget those frames still occupy is never double-counted as
+    /// savings. 0 for owned-representation plans.
+    pub pinned_bytes: u64,
     /// Whether one degree array fits in shared memory.
     pub fits_shared_mem: bool,
     /// Degree-array element type.
@@ -65,10 +75,17 @@ impl Occupancy {
     /// is surfaced as deeper initial queues: the same bytes now admit
     /// more in-flight nodes per worker, which is exactly the paper's
     /// "memory footprint limits concurrent workers" lever.
+    ///
+    /// Delta-mode plans charge almost nothing per node, but their pinned
+    /// base frames (`pinned_bytes`) still occupy the stack budget — they
+    /// are added to the effective charge so the boost never re-spends
+    /// budget that the pinned snapshots already consume.
     pub fn queue_capacity(&self) -> usize {
         let base = (self.stack_depth as usize).next_power_of_two().clamp(64, 4096);
-        // Effective full-width frames the memory model charges per path.
-        let eff = (self.path_bytes / self.degree_array_bytes.max(1)).max(1);
+        // Effective full-width frames the memory model charges per path:
+        // queued payloads plus (delta mode) the pinned snapshots.
+        let charged = self.path_bytes.saturating_add(self.pinned_bytes);
+        let eff = (charged / self.degree_array_bytes.max(1)).max(1);
         let boost = ((self.stack_depth / eff).max(1) as usize).next_power_of_two().min(8);
         (base * boost).clamp(64, 8192)
     }
@@ -91,6 +108,7 @@ impl OccupancyModel {
             degree_array_bytes,
             stack_depth,
             path_bytes,
+            pinned_bytes: 0,
             fits_shared_mem: degree_array_bytes <= self.shared_mem_bytes,
             dtype,
         }
@@ -124,6 +142,36 @@ impl OccupancyModel {
         let blocks = (self.stack_budget_bytes / path_bytes)
             .clamp(1, self.max_blocks as u64) as usize;
         Occupancy { blocks, path_bytes, ..base }
+    }
+
+    /// Model a launch under the delta/undo node representation: right
+    /// children are (pinned parent frame + covered-vertex delta), so the
+    /// per-node stack charge collapses to a small constant, and the
+    /// dominant memory term becomes the pinned base frames — one
+    /// full-width snapshot per `max_pin_depth` chain links, the knob
+    /// that forces periodic materialization so undo/replay chains stay
+    /// bounded. Builds on [`OccupancyModel::plan_induced`], so the
+    /// geometric payload shrink of tree induction composes with the
+    /// delta charge.
+    pub fn plan_delta(&self, n: usize, dtype: Dtype, alpha: f64, max_pin_depth: u32) -> Occupancy {
+        /// Modeled resident bytes of one queued delta node (fixed part;
+        /// suffixes are charged through the pinned chain).
+        const DELTA_NODE_BYTES: u64 = 48;
+        let base = self.plan_induced(n, dtype, alpha);
+        // Full-width frames the induced model charges per path — the
+        // frames that still exist as *undo substrates* in delta mode,
+        // now pinned once per max_pin_depth links instead of per node.
+        let frames = (base.path_bytes / base.degree_array_bytes.max(1)).max(1);
+        let pin = max_pin_depth.max(1) as u64;
+        let bases = frames.div_ceil(pin).max(1);
+        let pinned_bytes = base.degree_array_bytes.saturating_mul(bases);
+        // Queued payloads are O(delta); the pinned snapshots are kept in
+        // their own field and both terms are charged against the budget.
+        let path_bytes = DELTA_NODE_BYTES.saturating_mul(base.stack_depth).max(1);
+        let charged = path_bytes.saturating_add(pinned_bytes);
+        let blocks =
+            (self.stack_budget_bytes / charged).clamp(1, self.max_blocks as u64) as usize;
+        Occupancy { blocks, path_bytes, pinned_bytes, ..base }
     }
 
     /// Number of OS worker threads to actually run for a modeled launch:
@@ -212,6 +260,56 @@ mod tests {
         assert!(induced.queue_capacity() <= 8192);
         // tiny graphs stay at the floor either way
         assert_eq!(m.plan_induced(3, Dtype::U8, 1.0).queue_capacity(), 64);
+    }
+
+    #[test]
+    fn delta_plan_charges_pinned_frames_and_recovers_blocks() {
+        let m = OccupancyModel::default();
+        let induced = m.plan_induced(90_000, Dtype::U32, 1.0);
+        let delta = m.plan_delta(90_000, Dtype::U32, 1.0, 24);
+        // the per-node charge collapses below even the induced model,
+        // and the total (payloads + pinned snapshots) still admits more
+        // resident blocks
+        assert!(delta.path_bytes < induced.path_bytes);
+        assert!(delta.blocks >= induced.blocks);
+        // the pinned base frames are modeled and non-zero
+        assert!(delta.pinned_bytes > 0);
+        assert_eq!(induced.pinned_bytes, 0);
+        // per-frame payload and shared-mem fit are representation-free
+        assert_eq!(delta.degree_array_bytes, induced.degree_array_bytes);
+        assert_eq!(delta.fits_shared_mem, induced.fits_shared_mem);
+    }
+
+    #[test]
+    fn delta_plan_smaller_pin_depth_pins_more() {
+        let m = OccupancyModel::default();
+        let tight = m.plan_delta(50_000, Dtype::U16, 1.0, 2);
+        let loose = m.plan_delta(50_000, Dtype::U16, 1.0, 64);
+        assert!(tight.pinned_bytes >= loose.pinned_bytes);
+        // more pinned bytes ⇒ a bigger total charge ⇒ no more blocks
+        assert!(tight.blocks <= loose.blocks);
+    }
+
+    #[test]
+    fn queue_capacity_not_double_counted_under_delta() {
+        // The delta plan's tiny per-node path charge must not explode
+        // the queue boost as if the whole stack budget were freed: the
+        // pinned-frame bytes are added to the effective charge, so the
+        // boost can never exceed what ignoring the snapshots would
+        // grant, and it stays within the model's global cap.
+        let m = OccupancyModel::default();
+        for pin in [1u32, 24] {
+            let delta = m.plan_delta(5_000, Dtype::U16, 0.5, pin);
+            let mut unpinned = delta.clone();
+            unpinned.pinned_bytes = 0;
+            assert!(delta.queue_capacity() <= unpinned.queue_capacity(), "pin {pin}");
+            assert!(delta.queue_capacity() <= 8192, "pin {pin}");
+        }
+        // pinned-dominant shape: frequent snapshots on a wide u32 plan
+        // outweigh the per-node delta payloads, and the charge follows
+        let tight = m.plan_delta(200_000, Dtype::U32, 1.0, 1);
+        assert!(tight.pinned_bytes > tight.path_bytes);
+        assert!(tight.queue_capacity() <= 8192);
     }
 
     #[test]

@@ -50,6 +50,14 @@
 //! stopping on the root slot instead (the witness may transiently be
 //! longer than the bound, never invalid). Slots live in a mutexed side
 //! table — witness extraction is opt-in and off the default hot path.
+//!
+//! Under the engine's delta node representation the registry contract
+//! is unchanged: a delta right child reports the same leaf logs once it
+//! runs, because its choice-log prefix is *shared with its pinned
+//! parent frame* (the frame chain's base snapshot stores the log
+//! prefix; undo truncates the live log back to it, materialization
+//! re-extends a copy of it) rather than owned per queued node — the
+//! log-concatenation algebra here never observes the difference.
 
 use std::sync::atomic::{AtomicPtr, AtomicU32, AtomicU64, Ordering};
 use std::sync::Mutex;

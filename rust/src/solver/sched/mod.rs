@@ -37,7 +37,12 @@
 //! stolen search node carries its entire payload — degree array, view
 //! `Arc`, and (under witness extraction) its choice log — so the thief
 //! owns the node's state outright and completes it without ever touching
-//! the victim's memory.
+//! the victim's memory. The delta node representation keeps this
+//! contract without the copies: a delta child moves by value too, but
+//! its payload is an `Arc`-pinned *immutable* frame chain, and
+//! [`WorkerHandle::pop_traced`] reports where an item came from
+//! ([`PopSource`]) so the engine materializes stolen deltas into owned
+//! payloads at steal time while local pops take the in-place undo path.
 //!
 //! ## Termination
 //!
@@ -68,7 +73,7 @@ mod work_steal;
 pub use sharded::ShardedScheduler;
 pub use work_steal::WorkStealScheduler;
 
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
@@ -85,6 +90,9 @@ pub(crate) struct ResidentCtl {
     cv: Condvar,
     /// Workers currently blocked in [`ResidentCtl::park`].
     parked: AtomicUsize,
+    /// Cumulative park events over the pool's lifetime (service QoS
+    /// telemetry: an idle pool parks, a saturated one never does).
+    parks: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -94,8 +102,14 @@ impl ResidentCtl {
             lock: Mutex::new(()),
             cv: Condvar::new(),
             parked: AtomicUsize::new(0),
+            parks: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    /// Total park events so far.
+    pub(crate) fn total_parks(&self) -> u64 {
+        self.parks.load(Ordering::Relaxed)
     }
 
     pub(crate) fn shutdown_requested(&self) -> bool {
@@ -122,6 +136,7 @@ impl ResidentCtl {
             self.parked.fetch_sub(1, Ordering::SeqCst);
             return;
         }
+        self.parks.fetch_add(1, Ordering::Relaxed);
         let _ = self.cv.wait_timeout(guard, timeout);
         self.parked.fetch_sub(1, Ordering::SeqCst);
     }
@@ -223,14 +238,36 @@ pub enum IdleOutcome {
     Retry,
 }
 
+/// Where an acquired work item came from — the steal-time
+/// materialization hook on the scheduler/engine boundary. Under the
+/// delta node representation a *stolen* node cannot share the victim's
+/// live frame, so the engine uses this provenance to materialize stolen
+/// (and shared-queue) delta nodes into owned payloads at acquisition
+/// time, while locally popped nodes stay eligible for the in-place
+/// undo fast path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PopSource {
+    /// The worker's own stack/deque (LIFO fast path).
+    Local,
+    /// The shared entry queue (injector / home shard).
+    Shared,
+    /// Another worker's queue — a cross-worker steal.
+    Stolen,
+}
+
 /// One worker's view of a scheduler. See the module docs for the
 /// ownership protocol.
 pub trait WorkerHandle<N> {
     /// Enqueue a child node produced by this worker.
     fn push(&mut self, item: N);
-    /// Acquire the next node: own queue first, then the shared
-    /// injector, then (if enabled) stealing from other workers.
-    fn pop(&mut self) -> Option<N>;
+    /// Acquire the next node together with its provenance: own queue
+    /// first, then the shared injector, then (if enabled) stealing from
+    /// other workers.
+    fn pop_traced(&mut self) -> Option<(N, PopSource)>;
+    /// Acquire the next node, discarding provenance.
+    fn pop(&mut self) -> Option<N> {
+        self.pop_traced().map(|(n, _)| n)
+    }
     /// Called once after each acquired node is fully processed.
     fn on_node_done(&mut self);
     /// One bounded wait/recheck after `pop` returned `None`.

@@ -14,7 +14,7 @@ use std::sync::Mutex;
 
 use crate::solver::worklist::Worklist;
 
-use super::{IdleOutcome, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 const SPINS_BEFORE_SLEEP: u32 = 64;
 const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
@@ -76,6 +76,11 @@ impl<N: Send> ShardedScheduler<N> {
         if let Some(r) = &self.resident {
             r.request_shutdown();
         }
+    }
+
+    /// Cumulative worker park events (resident pools; 0 otherwise).
+    pub fn parks(&self) -> u64 {
+        self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
     }
 }
 
@@ -152,36 +157,40 @@ impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
         }
     }
 
-    fn pop(&mut self) -> Option<N> {
+    fn pop_traced(&mut self) -> Option<(N, PopSource)> {
         // Fairness: take from the shared worklist periodically even
         // while the private stack holds work, so injected items (new
         // jobs on a resident pool) are never starved behind it.
         self.polls = self.polls.wrapping_add(1);
         if self.s.load_balance && self.polls & 63 == 0 {
             if let Some((item, stolen)) = self.s.worklist.pop_traced(self.id) {
-                if stolen {
+                let src = if stolen {
                     self.c.steals += 1;
+                    PopSource::Stolen
                 } else {
                     self.c.shared_pops += 1;
-                }
+                    PopSource::Shared
+                };
                 self.spins = 0;
-                return Some(item);
+                return Some((item, src));
             }
         }
         if let Some(item) = self.stack.pop() {
             self.c.pops += 1;
             self.spins = 0;
-            return Some(item);
+            return Some((item, PopSource::Local));
         }
         if self.s.load_balance {
             if let Some((item, stolen)) = self.s.worklist.pop_traced(self.id) {
-                if stolen {
+                let src = if stolen {
                     self.c.steals += 1;
+                    PopSource::Stolen
                 } else {
                     self.c.shared_pops += 1;
-                }
+                    PopSource::Shared
+                };
                 self.spins = 0;
-                return Some(item);
+                return Some((item, src));
             }
         }
         None

@@ -32,7 +32,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
 use super::deque::{ChaseLev, Steal};
 use super::injector::Injector;
-use super::{IdleOutcome, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 /// Spins before an idle worker starts sleeping between rechecks.
 const SPINS_BEFORE_SLEEP: u32 = 64;
@@ -103,6 +103,11 @@ impl<N: Send> WorkStealScheduler<N> {
         if let Some(r) = &self.resident {
             r.request_shutdown();
         }
+    }
+
+    /// Cumulative worker park events (resident pools; 0 otherwise).
+    pub fn parks(&self) -> u64 {
+        self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
     }
 
     /// Termination verification sweep; caller observed `idle == workers`.
@@ -259,7 +264,7 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
         }
     }
 
-    fn pop(&mut self) -> Option<N> {
+    fn pop_traced(&mut self) -> Option<(N, PopSource)> {
         // Deregister *before* any acquisition attempt so the termination
         // detector can never certify quiescence while an item is being
         // moved into this worker's hands (see module docs).
@@ -276,24 +281,24 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
             if let Some(item) = self.s.injector.pop() {
                 self.c.shared_pops += 1;
                 self.spins = 0;
-                return Some(item);
+                return Some((item, PopSource::Shared));
             }
         }
         // SAFETY: single live handle per worker.
         if let Some(item) = unsafe { self.s.deques[self.id].pop() } {
             self.c.pops += 1;
             self.spins = 0;
-            return Some(item);
+            return Some((item, PopSource::Local));
         }
         if let Some(item) = self.s.injector.pop() {
             self.c.shared_pops += 1;
             self.spins = 0;
-            return Some(item);
+            return Some((item, PopSource::Shared));
         }
         if self.s.steal {
             if let Some(item) = self.try_steal() {
                 self.spins = 0;
-                return Some(item);
+                return Some((item, PopSource::Stolen));
             }
         }
         self.enter_idle();

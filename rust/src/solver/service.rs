@@ -61,10 +61,10 @@ use crate::degree::{DegElem, Dtype};
 use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 
-use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, Node, WorkerCtx};
+use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, NodePayload, WorkerCtx};
 use super::sched::{
-    IdleOutcome, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler, WorkerCounters,
-    WorkerHandle,
+    IdleOutcome, PopSource, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler,
+    WorkerCounters, WorkerHandle,
 };
 use super::witness::{self, CoverLift};
 use super::{greedy, PrepSummary, SolverConfig};
@@ -331,6 +331,9 @@ struct JobInner {
     done_cv: Condvar,
     started: Instant,
     pool_workers: usize,
+    /// The service's shared stats accumulators — finalization folds this
+    /// job's engine counters into its class slot.
+    counters: Arc<ServiceCounters>,
 }
 
 /// One unit of service work: either a job's setup stage or one search
@@ -347,24 +350,26 @@ enum Work {
 
 /// Dtype-erased search node (§IV-D: each job picks the smallest dtype
 /// that fits its max degree; the shared worklist must carry them all).
+/// Each variant is a [`NodePayload`] — an owned payload or a delta
+/// right child, per the job's `node_repr`.
 enum AnyNode {
-    U8(Node<u8>),
-    U16(Node<u16>),
-    U32(Node<u32>),
+    U8(NodePayload<u8>),
+    U16(NodePayload<u16>),
+    U32(NodePayload<u32>),
 }
 
-impl From<Node<u8>> for AnyNode {
-    fn from(n: Node<u8>) -> AnyNode {
+impl From<NodePayload<u8>> for AnyNode {
+    fn from(n: NodePayload<u8>) -> AnyNode {
         AnyNode::U8(n)
     }
 }
-impl From<Node<u16>> for AnyNode {
-    fn from(n: Node<u16>) -> AnyNode {
+impl From<NodePayload<u16>> for AnyNode {
+    fn from(n: NodePayload<u16>) -> AnyNode {
         AnyNode::U16(n)
     }
 }
-impl From<Node<u32>> for AnyNode {
-    fn from(n: Node<u32>) -> AnyNode {
+impl From<NodePayload<u32>> for AnyNode {
+    fn from(n: NodePayload<u32>) -> AnyNode {
         AnyNode::U32(n)
     }
 }
@@ -389,6 +394,136 @@ impl ResidentSched {
             ResidentSched::Sharded(s) => s.request_shutdown(),
         }
     }
+
+    fn parks(&self) -> u64 {
+        match self {
+            ResidentSched::Steal(s) => s.parks(),
+            ResidentSched::Sharded(s) => s.parks(),
+        }
+    }
+}
+
+/// Pool-level scheduler counters surfaced by [`VcService::stats`]:
+/// queue traffic and park events aggregated over every resident worker.
+/// Nodes of all job classes share the same deques, so these are
+/// pool-wide; the per-class breakdown lives in [`ClassStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Children enqueued by the pool's workers.
+    pub pushes: u64,
+    /// Nodes taken from a worker's own queue.
+    pub pops: u64,
+    /// Nodes taken from the shared entry queue.
+    pub shared_pops: u64,
+    /// Nodes taken from another worker (cross-worker steals).
+    pub steals: u64,
+    /// Steal attempts that lost a race and retried.
+    pub steal_retries: u64,
+    /// Worker park events (an idle pool parks; a saturated one never
+    /// does — the service QoS "is the pool starved or drowning" signal).
+    pub parks: u64,
+}
+
+/// Per-job-class counters surfaced by [`VcService::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ClassStats {
+    /// Jobs of this class finalized.
+    pub jobs: u64,
+    /// Work items of this class acquired via cross-worker steals.
+    pub steals: u64,
+    /// Search-tree nodes visited for this class.
+    pub tree_nodes: u64,
+    /// Delta right children pushed for this class (delta node
+    /// representation only).
+    pub delta_children: u64,
+    /// Delta nodes consumed on the in-place undo fast path.
+    pub undo_pops: u64,
+    /// Delta nodes materialized into owned payloads (stolen/foreign).
+    pub materializations: u64,
+}
+
+/// Aggregate scheduler/engine telemetry of a running service (the
+/// ROADMAP "Service QoS" counters endpoint).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceStats {
+    /// Pool-wide queue traffic and park events.
+    pub pool: PoolStats,
+    /// MVC-class jobs.
+    pub mvc: ClassStats,
+    /// PVC-class jobs.
+    pub pvc: ClassStats,
+    /// MIS-class jobs.
+    pub mis: ClassStats,
+}
+
+impl ServiceStats {
+    /// The per-class counters for `kind`.
+    pub fn class(&self, kind: ProblemKind) -> &ClassStats {
+        match kind {
+            ProblemKind::Mvc => &self.mvc,
+            ProblemKind::Pvc => &self.pvc,
+            ProblemKind::Mis => &self.mis,
+        }
+    }
+}
+
+/// Internal atomic accumulators behind [`ServiceStats`].
+#[derive(Default)]
+struct ClassAgg {
+    jobs: AtomicU64,
+    steals: AtomicU64,
+    tree_nodes: AtomicU64,
+    delta_children: AtomicU64,
+    undo_pops: AtomicU64,
+    materializations: AtomicU64,
+}
+
+impl ClassAgg {
+    fn snapshot(&self) -> ClassStats {
+        ClassStats {
+            jobs: self.jobs.load(Ordering::Relaxed),
+            steals: self.steals.load(Ordering::Relaxed),
+            tree_nodes: self.tree_nodes.load(Ordering::Relaxed),
+            delta_children: self.delta_children.load(Ordering::Relaxed),
+            undo_pops: self.undo_pops.load(Ordering::Relaxed),
+            materializations: self.materializations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Shared atomic counter block: workers flush queue-traffic deltas into
+/// the pool half, finalization folds each job's engine stats into its
+/// class half. `Arc`-shared between the service and every job so
+/// finalize (which only sees the job) can attribute per-class counts.
+#[derive(Default)]
+struct ServiceCounters {
+    pushes: AtomicU64,
+    pops: AtomicU64,
+    shared_pops: AtomicU64,
+    steals: AtomicU64,
+    steal_retries: AtomicU64,
+    classes: [ClassAgg; 3],
+}
+
+impl ServiceCounters {
+    fn class(&self, kind: ProblemKind) -> &ClassAgg {
+        match kind {
+            ProblemKind::Mvc => &self.classes[0],
+            ProblemKind::Pvc => &self.classes[1],
+            ProblemKind::Mis => &self.classes[2],
+        }
+    }
+
+    /// Fold the delta of a worker's counters since its last flush.
+    fn flush_worker(&self, now: &WorkerCounters, flushed: &mut WorkerCounters) {
+        self.pushes.fetch_add(now.pushes - flushed.pushes, Ordering::Relaxed);
+        self.pops.fetch_add(now.pops - flushed.pops, Ordering::Relaxed);
+        self.shared_pops.fetch_add(now.shared_pops - flushed.shared_pops, Ordering::Relaxed);
+        self.steals.fetch_add(now.steals - flushed.steals, Ordering::Relaxed);
+        self.steal_retries
+            .fetch_add(now.steal_retries - flushed.steal_retries, Ordering::Relaxed);
+        *flushed = *now;
+    }
 }
 
 struct ServiceInner {
@@ -396,6 +531,7 @@ struct ServiceInner {
     defaults: SolverConfig,
     workers: usize,
     next_job: AtomicU64,
+    counters: Arc<ServiceCounters>,
 }
 
 /// Builder for [`VcService`].
@@ -453,6 +589,7 @@ impl VcServiceBuilder {
             defaults: self.defaults,
             workers,
             next_job: AtomicU64::new(0),
+            counters: Arc::new(ServiceCounters::default()),
         });
         let threads = (0..workers)
             .map(|w| {
@@ -460,8 +597,8 @@ impl VcServiceBuilder {
                 std::thread::Builder::new()
                     .name(format!("cavc-svc-{w}"))
                     .spawn(move || match &inner.sched {
-                        ResidentSched::Steal(s) => resident_loop(s, w),
-                        ResidentSched::Sharded(s) => resident_loop(s, w),
+                        ResidentSched::Steal(s) => resident_loop(s, w, &inner.counters),
+                        ResidentSched::Sharded(s) => resident_loop(s, w, &inner.counters),
                     })
                     .expect("spawn service worker")
             })
@@ -514,6 +651,8 @@ impl VcService {
             instrument: false,
             induce_threshold: cfg.induce_threshold,
             extract_witness: opts.extract_witness || cfg.extract_cover,
+            node_repr: cfg.node_repr,
+            max_pin_depth: cfg.max_pin_depth,
         };
         let job = Arc::new(JobInner {
             id: self.inner.next_job.fetch_add(1, Ordering::SeqCst),
@@ -527,6 +666,7 @@ impl VcService {
             done_cv: Condvar::new(),
             started: Instant::now(),
             pool_workers: self.inner.workers,
+            counters: Arc::clone(&self.inner.counters),
             problem,
         });
         self.inner.sched.inject(WorkItem { job: Arc::clone(&job), work: Work::Setup });
@@ -536,6 +676,29 @@ impl VcService {
     /// Submit-and-wait convenience for one problem.
     pub fn solve(&self, problem: Problem) -> Solution {
         self.submit(problem).wait()
+    }
+
+    /// Snapshot the pool-level scheduler counters and the per-job-class
+    /// breakdown (steals / parks / materializations…): the ROADMAP
+    /// "Service QoS" telemetry endpoint. Pool counters are flushed by
+    /// workers on idle transitions and every 256 processed items, so a
+    /// snapshot taken mid-burst can trail the true totals slightly;
+    /// class counters for *finalized* jobs are exact.
+    pub fn stats(&self) -> ServiceStats {
+        let c = &self.inner.counters;
+        ServiceStats {
+            pool: PoolStats {
+                pushes: c.pushes.load(Ordering::Relaxed),
+                pops: c.pops.load(Ordering::Relaxed),
+                shared_pops: c.shared_pops.load(Ordering::Relaxed),
+                steals: c.steals.load(Ordering::Relaxed),
+                steal_retries: c.steal_retries.load(Ordering::Relaxed),
+                parks: self.inner.sched.parks(),
+            },
+            mvc: c.classes[0].snapshot(),
+            pvc: c.classes[1].snapshot(),
+            mis: c.classes[2].snapshot(),
+        }
     }
 }
 
@@ -584,16 +747,40 @@ impl Scratch {
     }
 }
 
-fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize) {
+fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize, counters: &ServiceCounters) {
     let mut scratch = Scratch::new(worker);
     let mut handle = sched.handle(worker);
+    let mut flushed = WorkerCounters::default();
+    let mut since_flush = 0u32;
     loop {
-        match handle.pop() {
-            Some(item) => {
-                process_item(item, &mut scratch, &mut handle);
+        match handle.pop_traced() {
+            Some((item, src)) => {
+                if src == PopSource::Stolen {
+                    // Steals *are* attributable to a class: the stolen
+                    // item carries its job.
+                    counters
+                        .class(item.job.problem.kind())
+                        .steals
+                        .fetch_add(1, Ordering::Relaxed);
+                }
+                process_item(item, &mut scratch, &mut handle, src);
                 handle.on_node_done();
+                since_flush += 1;
+                if since_flush >= 256 {
+                    counters.flush_worker(&handle.counters(), &mut flushed);
+                    since_flush = 0;
+                }
             }
             None => {
+                counters.flush_worker(&handle.counters(), &mut flushed);
+                since_flush = 0;
+                // An idle worker's suspended delta frames are
+                // unreachable (no queued item can match them anymore);
+                // recycle them so a finished big job's frames don't
+                // stay resident across unrelated later jobs.
+                scratch.u8.drain_descents();
+                scratch.u16.drain_descents();
+                scratch.u32.drain_descents();
                 if let IdleOutcome::Finished = handle.idle_step() {
                     return;
                 }
@@ -602,7 +789,12 @@ fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize) {
     }
 }
 
-fn process_item<H: WorkerHandle<WorkItem>>(item: WorkItem, scratch: &mut Scratch, handle: &mut H) {
+fn process_item<H: WorkerHandle<WorkItem>>(
+    item: WorkItem,
+    scratch: &mut Scratch,
+    handle: &mut H,
+    src: PopSource,
+) {
     let WorkItem { job, work } = item;
     // Contain panics (debug assertions, engine bugs): the one-shot
     // engine propagates them through `thread::scope`, but a resident
@@ -621,9 +813,9 @@ fn process_item<H: WorkerHandle<WorkItem>>(item: WorkItem, scratch: &mut Scratch
             if !job.ctl.stop.load(Ordering::SeqCst) {
                 let p = job.prepared.get().expect("node processed before its job's setup");
                 match node {
-                    AnyNode::U8(n) => run_node(&job, p, n, &mut scratch.u8, handle),
-                    AnyNode::U16(n) => run_node(&job, p, n, &mut scratch.u16, handle),
-                    AnyNode::U32(n) => run_node(&job, p, n, &mut scratch.u32, handle),
+                    AnyNode::U8(n) => run_node(&job, p, n, &mut scratch.u8, handle, src),
+                    AnyNode::U16(n) => run_node(&job, p, n, &mut scratch.u16, handle, src),
+                    AnyNode::U32(n) => run_node(&job, p, n, &mut scratch.u32, handle, src),
                 }
             }
         }
@@ -650,16 +842,17 @@ fn process_item<H: WorkerHandle<WorkItem>>(item: WorkItem, scratch: &mut Scratch
 fn run_node<T: DegElem, H: WorkerHandle<WorkItem>>(
     job: &Arc<JobInner>,
     p: &JobPrep,
-    node: Node<T>,
+    node: NodePayload<T>,
     ctx: &mut WorkerCtx<T>,
     handle: &mut H,
+    src: PopSource,
 ) where
-    AnyNode: From<Node<T>>,
+    AnyNode: From<NodePayload<T>>,
 {
     ctx.ensure_graph(p.graph.num_vertices());
     let view = JobView { g: p.graph.as_ref(), ctl: &job.ctl };
     let mut push = JobPush { job, inner: handle };
-    engine::process(&view, ctx, &mut push, node);
+    engine::process(&view, ctx, &mut push, node, src);
     // Flush per item, not per job-switch: any decrement of the job's
     // live count may be the final one, and the finalizing worker must
     // observe complete stats in the sink. The lock is per *descent*
@@ -676,11 +869,11 @@ struct JobPush<'a, H> {
     inner: &'a mut H,
 }
 
-impl<T: DegElem, H: WorkerHandle<WorkItem>> WorkerHandle<Node<T>> for JobPush<'_, H>
+impl<T: DegElem, H: WorkerHandle<WorkItem>> WorkerHandle<NodePayload<T>> for JobPush<'_, H>
 where
-    AnyNode: From<Node<T>>,
+    AnyNode: From<NodePayload<T>>,
 {
-    fn push(&mut self, item: Node<T>) {
+    fn push(&mut self, item: NodePayload<T>) {
         // Increment before the item becomes visible so the job's live
         // count can never reach zero while a node sits in a queue.
         self.job.live_nodes.fetch_add(1, Ordering::SeqCst);
@@ -688,7 +881,7 @@ where
             .push(WorkItem { job: Arc::clone(self.job), work: Work::Node(AnyNode::from(item)) });
     }
 
-    fn pop(&mut self) -> Option<Node<T>> {
+    fn pop_traced(&mut self) -> Option<(NodePayload<T>, PopSource)> {
         unreachable!("job adapter is push-only; the resident loop owns pops")
     }
 
@@ -759,9 +952,9 @@ fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
     let start_search = decided.is_none() && !job.ctl.stop.load(Ordering::SeqCst);
     let (root, root_bytes) = if start_search {
         let root = match p.dtype {
-            Dtype::U8 => AnyNode::U8(engine::make_root::<u8>(&graph)),
-            Dtype::U16 => AnyNode::U16(engine::make_root::<u16>(&graph)),
-            Dtype::U32 => AnyNode::U32(engine::make_root::<u32>(&graph)),
+            Dtype::U8 => AnyNode::U8(NodePayload::Owned(engine::make_root::<u8>(&graph))),
+            Dtype::U16 => AnyNode::U16(NodePayload::Owned(engine::make_root::<u16>(&graph))),
+            Dtype::U32 => AnyNode::U32(NodePayload::Owned(engine::make_root::<u32>(&graph))),
         };
         let bytes = match &root {
             AnyNode::U8(n) => n.payload_bytes(),
@@ -870,6 +1063,14 @@ fn finalize(job: &Arc<JobInner>) {
         stats.payload_nodes += 1;
         stats.payload_bytes += p.root_bytes;
     }
+    // Fold this job's engine counters into the service's per-class
+    // telemetry ([`VcService::stats`]).
+    let agg = job.counters.class(job.problem.kind());
+    agg.jobs.fetch_add(1, Ordering::Relaxed);
+    agg.tree_nodes.fetch_add(stats.tree_nodes, Ordering::Relaxed);
+    agg.delta_children.fetch_add(stats.delta_children, Ordering::Relaxed);
+    agg.undo_pops.fetch_add(stats.undo_pops, Ordering::Relaxed);
+    agg.materializations.fetch_add(stats.materializations, Ordering::Relaxed);
 
     let best_resid = job.ctl.best.load(Ordering::SeqCst);
     let improved = job.ctl.improved.load(Ordering::SeqCst);
@@ -1106,6 +1307,33 @@ mod tests {
             let opt = oracle::mvc_size(&g);
             assert_eq!(svc.solve(Problem::mvc(g)).objective, opt, "seed {seed}");
         }
+    }
+
+    #[test]
+    fn stats_endpoint_counts_classes_and_parks() {
+        let svc = VcService::builder().workers(2).build();
+        for seed in 0..3 {
+            let g = generators::erdos_renyi(14, 0.2, seed);
+            let opt = oracle::mvc_size(&g);
+            assert_eq!(svc.solve(Problem::mvc(g.clone())).objective, opt);
+            assert!(svc.solve(Problem::pvc(g, opt)).feasible);
+        }
+        let stats = svc.stats();
+        assert_eq!(stats.mvc.jobs, 3);
+        assert_eq!(stats.pvc.jobs, 3);
+        assert_eq!(stats.mis.jobs, 0);
+        assert!(stats.mvc.tree_nodes > 0);
+        assert_eq!(stats.class(ProblemKind::Pvc).jobs, 3);
+        // an idle resident pool parks its workers; give it a beat
+        let mut parks = svc.stats().pool.parks;
+        for _ in 0..400 {
+            if parks > 0 {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+            parks = svc.stats().pool.parks;
+        }
+        assert!(parks > 0, "idle pool must park");
     }
 
     #[test]

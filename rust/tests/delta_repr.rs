@@ -1,0 +1,182 @@
+//! Differential tests for the delta/undo node representation
+//! (speculative in-place branching with steal-time materialization).
+//!
+//! The owned representation copies every right child's payload, so a
+//! stolen node is trivially self-contained; the delta representation
+//! must reconstruct stolen state by replaying pinned cover suffixes.
+//! These tests force high steal rates — more workers than components,
+//! deep single-component searches at 4/16 workers on both schedulers —
+//! and differentially check objectives *and verified witnesses* against
+//! the sequential solver in both node representations.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{self, NodeRepr, SchedulerKind, SolverConfig};
+
+const SCHEDULERS: [SchedulerKind; 2] = [SchedulerKind::WorkSteal, SchedulerKind::Sharded];
+const REPRS: [NodeRepr; 2] = [NodeRepr::Owned, NodeRepr::Delta];
+const WORKERS: [usize; 2] = [4, 16];
+
+/// The seeded workload mix: single deep components (every queued node
+/// is a delta child, so any steal must materialize), component unions
+/// (splits interleave owned and delta children), and nested split
+/// gadgets (the paper's split-heavy family).
+fn workloads() -> Vec<(String, Graph)> {
+    let mut w = Vec::new();
+    for seed in 0..4u64 {
+        w.push((
+            format!("er(22,0.22,{seed})"),
+            generators::erdos_renyi(22, 0.22, seed),
+        ));
+        w.push((
+            format!("union(4,3,7,{seed})"),
+            generators::union_of_random(4, 3, 7, 0.3, seed),
+        ));
+    }
+    w.push(("split_gadget(2)".into(), generators::split_gadget(2)));
+    w.push(("split_gadget(3)".into(), generators::split_gadget(3)));
+    w
+}
+
+fn parallel_cfg(repr: NodeRepr, sched: SchedulerKind, workers: usize) -> SolverConfig {
+    let mut cfg = SolverConfig::proposed()
+        .with_node_repr(repr)
+        .with_scheduler(sched)
+        .with_workers(workers);
+    cfg.extract_cover = true;
+    cfg
+}
+
+#[test]
+fn high_steal_objectives_and_witnesses_match_sequential() {
+    for (name, g) in workloads() {
+        let mut seq_cfg = SolverConfig::sequential();
+        seq_cfg.extract_cover = true;
+        let seq = solver::solve_mvc(&g, &seq_cfg);
+        let seq_cover = seq.cover.as_ref().expect("sequential witness");
+        assert!(g.is_vertex_cover(seq_cover), "{name}: sequential cover invalid");
+        assert_eq!(seq_cover.len() as u32, seq.best, "{name}");
+
+        for repr in REPRS {
+            for sched in SCHEDULERS {
+                for workers in WORKERS {
+                    let tag = format!("{name} {} {} w={workers}", repr.name(), sched.name());
+                    let r = solver::solve_mvc(&g, &parallel_cfg(repr, sched, workers));
+                    assert!(!r.timed_out, "{tag}: must run to completion");
+                    assert_eq!(r.best, seq.best, "{tag}: objective differs from sequential");
+                    let c = r.cover.as_ref().expect("parallel witness");
+                    assert_eq!(c.len() as u32, r.best, "{tag}: witness length");
+                    assert!(g.is_vertex_cover(c), "{tag}: witness invalid");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn high_steal_pvc_decisions_match_sequential() {
+    for (name, g) in workloads().into_iter().step_by(2) {
+        let opt = solver::solve_mvc(&g, &SolverConfig::sequential()).best;
+        for repr in REPRS {
+            for sched in SCHEDULERS {
+                for workers in WORKERS {
+                    let tag = format!("{name} {} {} w={workers}", repr.name(), sched.name());
+                    let cfg = parallel_cfg(repr, sched, workers);
+                    let yes = solver::solve_pvc(&g, opt, &cfg);
+                    assert!(yes.found, "{tag}: k=opt must be feasible");
+                    let c = yes.cover.as_ref().expect("found PVC carries a cover");
+                    assert!(c.len() as u32 <= opt, "{tag}: PVC cover within k");
+                    assert!(g.is_vertex_cover(c), "{tag}: PVC cover invalid");
+                    if opt > 0 {
+                        let no = solver::solve_pvc(&g, opt - 1, &cfg);
+                        assert!(!no.found, "{tag}: k=opt-1 must be infeasible");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sixteen_workers_on_one_component_exercise_materialization() {
+    // A single connected component in delta mode queues only delta
+    // children after the root, so every cross-worker steal must
+    // materialize. Individual runs are scheduling-dependent; across the
+    // seed sweep at 16 workers the work stealer reliably steals.
+    let mut steals = 0u64;
+    let mut materializations = 0u64;
+    let mut undo_pops = 0u64;
+    for seed in 0..8u64 {
+        let g = generators::erdos_renyi(24, 0.25, seed);
+        let cfg = SolverConfig::proposed()
+            .with_node_repr(NodeRepr::Delta)
+            .with_workers(16);
+        let r = solver::solve_mvc(&g, &cfg);
+        let seq = solver::solve_mvc(&g, &SolverConfig::sequential());
+        assert_eq!(r.best, seq.best, "seed {seed}");
+        steals += r.stats.worklist_steals;
+        materializations += r.stats.materializations;
+        undo_pops += r.stats.undo_pops;
+    }
+    assert!(undo_pops > 0, "local pops must take the undo path");
+    assert!(steals > 0, "16 workers over 8 seeds must steal at least once");
+    assert!(
+        materializations > 0,
+        "stolen delta children must materialize (steals={steals})"
+    );
+}
+
+#[test]
+fn service_jobs_agree_across_reprs_and_report_class_stats() {
+    // Delta vs owned through the resident service: concurrent jobs of
+    // both classes, then the pool-level stats endpoint must account for
+    // the finished jobs per class.
+    let svc = solver::VcService::builder().workers(4).build();
+    let mut handles = Vec::new();
+    for seed in 0..6u64 {
+        // dense-enough single components so delta jobs genuinely branch
+        // (pure-reduction graphs would push no delta children)
+        let g = generators::erdos_renyi(18, 0.25, seed);
+        let opt = solver::solve_mvc(&g, &SolverConfig::sequential()).best;
+        for repr in REPRS {
+            let cfg = SolverConfig::proposed().with_node_repr(repr);
+            let opts = solver::JobOptions {
+                config: Some(cfg),
+                extract_witness: true,
+                ..Default::default()
+            };
+            handles.push((
+                seed,
+                repr,
+                opt,
+                g.clone(),
+                svc.submit_with(solver::Problem::mvc(g.clone()), opts),
+            ));
+        }
+    }
+    let jobs = handles.len() as u64;
+    for (seed, repr, opt, g, h) in handles {
+        let sol = h.wait();
+        let tag = format!("seed {seed} {}", repr.name());
+        assert_eq!(sol.objective, opt, "{tag}");
+        let w = sol.witness.as_ref().expect("service witness");
+        assert!(g.is_vertex_cover(w), "{tag}");
+        assert_eq!(sol.witness_verified, Some(true), "{tag}");
+    }
+    // Class counters are folded at finalization, so they are exact once
+    // every `wait` returned; pool counters are flushed when workers go
+    // idle, which can trail the last job by a scheduling beat.
+    let mut stats = svc.stats();
+    for _ in 0..400 {
+        if stats.pool.pushes > 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        stats = svc.stats();
+    }
+    assert_eq!(stats.mvc.jobs, jobs, "every finished job lands in its class");
+    assert!(stats.mvc.tree_nodes > 0);
+    assert!(stats.mvc.delta_children > 0, "delta jobs must push delta children");
+    assert!(stats.pool.pushes > 0, "pool counters must be flushed");
+    assert_eq!(stats.pvc.jobs, 0);
+    assert_eq!(stats.mis.jobs, 0);
+}
