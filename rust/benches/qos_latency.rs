@@ -1,0 +1,120 @@
+//! QoS latency: small-job submit→result latency while a large
+//! throughput job saturates the same resident pool, lanes on vs off.
+//!
+//! One dense p_hat hog is submitted to a small pool and left branching;
+//! a stream of small MVC jobs then flows through the same service and
+//! each job's wall-clock latency (submission to `wait` return) is
+//! measured. Two modes on identical traffic:
+//!
+//! * `lanes-off` — the small jobs ride the throughput lane like the
+//!   hog: weight-1 dispatch, roots land behind the hog's queued nodes,
+//!   pickup waits on the 64-pop fairness poll;
+//! * `lanes-on`  — the small jobs are pinned to the latency lane: 4×
+//!   deficit-round-robin weight and urgent injection (every worker
+//!   polls the shared queue on every pop until pickup).
+//!
+//! Both modes must produce identical (oracle-exact) answers — lanes may
+//! only move *when* work is picked up. Results go to stdout and
+//! `bench_out/qos_latency.csv`. `CAVC_SMOKE=1` shrinks the stream for
+//! the CI smoke job (trajectory only, no thresholds).
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{oracle, JobOptions, Lane, Problem, Termination, VcService};
+use std::time::{Duration, Instant};
+
+/// The measured traffic: a deterministic stream of small mixed graphs.
+fn stream(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| {
+            let seed = 0x0A75_0000 + i as u64;
+            match i % 3 {
+                0 => generators::erdos_renyi(14 + i % 6, 0.2, seed),
+                1 => generators::union_of_random(3, 3, 6, 0.3, seed),
+                _ => generators::random_tree(20 + i % 12, seed),
+            }
+        })
+        .collect()
+}
+
+/// The dense hog: far more search than the measured window consumes.
+fn hog_graph() -> Graph {
+    generators::p_hat(180, 0.35, 0.85, 11)
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// Run one mode: hog branching in the throughput lane, the small-job
+/// stream submitted serially in `lane`, each job's latency recorded.
+/// Returns (per-job latencies in ms, answers).
+fn run_mode(graphs: &[Graph], workers: usize, lane: Lane) -> (Vec<f64>, Vec<u32>) {
+    let svc = VcService::builder().workers(workers).build();
+    let hog = svc.submit_with(
+        Problem::mvc(hog_graph()),
+        JobOptions { priority: Some(Lane::Throughput), ..JobOptions::default() },
+    );
+    // let the hog get past setup and fill the deques
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(hog.try_result().is_none(), "hog must still be branching");
+
+    let mut lat_ms = Vec::with_capacity(graphs.len());
+    let mut answers = Vec::with_capacity(graphs.len());
+    for g in graphs {
+        let t = Instant::now();
+        let h = svc.submit_with(
+            Problem::mvc(g.clone()),
+            JobOptions { priority: Some(lane), ..JobOptions::default() },
+        );
+        let sol = h.wait();
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        answers.push(sol.objective);
+    }
+    assert!(hog.try_result().is_none(), "hog outlived the measured window");
+    hog.cancel();
+    assert_eq!(hog.wait().termination, Termination::Cancelled);
+    (lat_ms, answers)
+}
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let n = if smoke { 20 } else { 100 };
+    // A small fixed pool keeps the hog genuinely saturating: on a wide
+    // machine idle workers would absorb the small jobs in either mode.
+    let workers = 2;
+    let graphs = stream(n);
+    let expect: Vec<u32> = graphs.iter().map(oracle::mvc_size).collect();
+    println!("# qos latency — {n} small jobs racing one dense hog, {workers} workers");
+
+    let (off_ms, off_ans) = run_mode(&graphs, workers, Lane::Throughput);
+    let (on_ms, on_ans) = run_mode(&graphs, workers, Lane::Latency);
+    assert_eq!(off_ans, expect, "lanes-off answers must be oracle-exact");
+    assert_eq!(on_ans, expect, "lanes-on answers must be oracle-exact");
+
+    let mut rows = Vec::new();
+    println!("{:<10} {:>10} {:>10} {:>10}", "mode", "p50 ms", "p99 ms", "mean ms");
+    for (mode, ms) in [("lanes-off", &off_ms), ("lanes-on", &on_ms)] {
+        let mut s = ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&s, 50.0);
+        let p99 = percentile(&s, 99.0);
+        let mean = s.iter().sum::<f64>() / s.len() as f64;
+        println!("{mode:<10} {p50:>10.3} {p99:>10.3} {mean:>10.3}");
+        rows.push(format!("{mode},{n},{workers},{p50},{p99},{mean}"));
+    }
+    let mut off_sorted = off_ms.clone();
+    off_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut on_sorted = on_ms.clone();
+    on_sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!(
+        "p99 lanes-on vs lanes-off: {:.2}x",
+        percentile(&off_sorted, 99.0) / percentile(&on_sorted, 99.0).max(1e-9)
+    );
+
+    let header = "mode,jobs,workers,p50_ms,p99_ms,mean_ms";
+    match cavc::harness::tables::write_csv("qos_latency", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

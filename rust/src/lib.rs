@@ -90,6 +90,22 @@
 //! thread spawn); sequential, no-load-balance, instrumented, and
 //! explicit pool-shape calls keep the one-shot engine.
 //!
+//! **Admission & QoS.** Multi-tenant submission pressure is absorbed by
+//! a bounded, QoS-aware admission layer in front of the pool (see
+//! [`solver::service`], "Admission & QoS"): a bounded two-lane queue
+//! with explicit backpressure ([`solver::VcService::try_submit`]
+//! returns [`solver::SubmitError::QueueFull`];
+//! [`solver::VcService::submit_within`] bounds the blocking wait),
+//! per-job [`solver::Lane`] classes — small jobs ride a latency lane
+//! with 4× weighted-deficit-round-robin dispatch and *urgent* injection
+//! that preempts the schedulers' 64-pop fairness cadence, large jobs
+//! ride the throughput lane — and per-tenant admission quotas
+//! ([`solver::TenantQuota`]: concurrent jobs + outstanding live nodes).
+//! Lane scheduling moves only *when* work is picked up, never what is
+//! computed (`tests/qos_admission.rs` asserts objectives and witnesses
+//! are lane-invariant); `benches/qos_latency.rs` measures the small-job
+//! p50/p99 latency win against a concurrently branching hog.
+//!
 //! ## Witnesses: every engine path hands back a verifiable cover
 //!
 //! All solver paths — sequential, one-shot parallel, and service jobs

@@ -12,7 +12,9 @@
 //!   tables <1..6|fig4>         regenerate a paper table/figure
 //!
 //! Options: --variant proposed|yamout|no-lb|sequential, --workers N,
-//! --timeout SECS, --k K, --out FILE, --no-accel, --seed S.
+//! --timeout SECS, --k K, --out FILE, --no-accel, --seed S. Batch mode
+//! (`--jobs`) additionally takes the admission/QoS flags --lane
+//! latency|throughput, --max-queued N, --submit-timeout SECS.
 
 use cavc::bail;
 use cavc::graph::{generators, io, Graph};
@@ -20,7 +22,7 @@ use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
 use cavc::solver::engine::EngineStats;
 use cavc::solver::{
-    self, witness, JobHandle, Problem, SchedulerKind, SolverConfig, Termination, VcService,
+    self, witness, JobHandle, Lane, Problem, SchedulerKind, SolverConfig, Termination, VcService,
     Variant,
 };
 
@@ -30,7 +32,8 @@ use std::time::{Duration, Instant};
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
-    "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth",
+    "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth", "lane", "submit-timeout",
+    "max-queued",
 ];
 
 fn main() {
@@ -86,6 +89,12 @@ fn print_help() {
         \x20                   [--jobs LIST]           (batch mode: one resident service solves every\n\
         \x20                                            graph in LIST — one spec per line, '#' comments —\n\
         \x20                                            plus any extra positional specs, concurrently)\n\
+        \x20                   [--lane latency|tput]   (batch: pin every submitted job to a QoS lane;\n\
+        \x20                                            default classifies by reduced-graph size)\n\
+        \x20                   [--max-queued N]        (batch: admission-queue bound — submits past it\n\
+        \x20                                            block, exerting backpressure on the driver)\n\
+        \x20                   [--submit-timeout SECS] (batch: give up on a submit stuck behind\n\
+        \x20                                            admission backpressure after SECS)\n\
          pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check]\n         mis <graph|dataset> [--variant ...] [--check]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
@@ -162,11 +171,15 @@ fn batch_specs(args: &Args, list: &str) -> Result<Vec<String>> {
 }
 
 /// One resident service shaped by the CLI flags (workers / scheduler /
-/// per-job solver knobs all come in through the parsed config).
-fn build_service(cfg: &SolverConfig) -> VcService {
+/// per-job solver knobs all come in through the parsed config; the
+/// admission-queue bound comes in separately from `--max-queued`).
+fn build_service(cfg: &SolverConfig, max_queued: Option<usize>) -> VcService {
     let mut b = VcService::builder().config(cfg.clone()).scheduler(cfg.scheduler);
     if let Some(w) = cfg.workers {
         b = b.workers(w);
+    }
+    if let Some(q) = max_queued {
+        b = b.max_queued(q);
     }
     b.build()
 }
@@ -182,7 +195,16 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
     if cfg.variant == Variant::Sequential || cfg.variant == Variant::NoLoadBalance {
         bail!("--jobs batch mode needs a load-balanced parallel variant (proposed|yamout)");
     }
-    let svc = build_service(&cfg);
+    let lane = match args.get("lane") {
+        Some(s) => Some(
+            Lane::parse(s).with_context(|| format!("unknown lane {s:?} (use latency|throughput)"))?,
+        ),
+        None => None,
+    };
+    let submit_timeout: f64 = args.get_parse("submit-timeout", 0.0).map_err(Error::msg)?;
+    let max_queued: Option<usize> =
+        args.get("max-queued").map(str::parse).transpose().context("--max-queued")?;
+    let svc = build_service(&cfg, max_queued);
     let t0 = Instant::now();
     let mut jobs: Vec<(String, JobHandle)> = Vec::with_capacity(specs.len());
     for spec in &specs {
@@ -191,8 +213,23 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
             Some(k) => Problem::pvc(g, k),
             None => Problem::mvc(g),
         };
-        let opts = cavc::solver::JobOptions { extract_witness: check, ..Default::default() };
-        jobs.push((spec.clone(), svc.submit_with(problem, opts)));
+        let opts = cavc::solver::JobOptions {
+            extract_witness: check,
+            priority: lane,
+            ..Default::default()
+        };
+        // A submit can block on admission backpressure (bounded queue);
+        // --submit-timeout turns a stuck submit into a clean error
+        // instead of an indefinitely wedged driver.
+        let handle = if submit_timeout > 0.0 {
+            match svc.submit_within(problem, opts, Duration::from_secs_f64(submit_timeout)) {
+                Ok(h) => h,
+                Err(e) => bail!("submit {spec}: {e} (waited {submit_timeout}s)"),
+            }
+        } else {
+            svc.submit_with(problem, opts)
+        };
+        jobs.push((spec.clone(), handle));
     }
     let submitted = t0.elapsed().as_secs_f64();
 

@@ -1482,6 +1482,19 @@ fn descend<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     loop {
         ctx.stats.tree_nodes += 1;
 
+        // Stop flags (cancel / deadline) are otherwise only observed at
+        // pop time, but this loop descends in place without popping —
+        // under the delta representation a single worker can live here
+        // for the whole search. Poll every 64 in-place nodes so
+        // cancellation latency stays bounded by a few branch steps, not
+        // by the depth of the descent.
+        if ctx.stats.tree_nodes & 63 == 0
+            && (shared.ctl.stop.load(Ordering::SeqCst) || shared.ctl.check_deadline())
+        {
+            complete(shared.ctl, d.node.ctx);
+            return;
+        }
+
         // ---- reduce (Alg. 2 line 2) ----
         ctx.timer.switch(Activity::Reduce);
         let red = reduce_node(shared, g, d);

@@ -44,8 +44,8 @@ pub use engine::NodeRepr;
 use occupancy::{Occupancy, OccupancyModel};
 pub use sched::SchedulerKind;
 pub use service::{
-    default_service, JobHandle, JobOptions, Problem, ProblemKind, ServiceStats, Solution,
-    Termination, VcService,
+    default_service, AdmissionStats, JobHandle, JobOptions, Lane, Problem, ProblemKind,
+    ServiceStats, Solution, SubmitError, TenantQuota, Termination, VcService,
 };
 use std::time::{Duration, Instant};
 
@@ -361,6 +361,7 @@ pub fn solve_mvc(g: &Graph, cfg: &SolverConfig) -> SolveResult {
                     timeout: cfg.timeout,
                     config: Some(cfg.clone()),
                     extract_witness: cfg.extract_cover,
+                    ..JobOptions::default()
                 },
             )
             .wait();
@@ -457,6 +458,7 @@ pub fn solve_pvc(g: &Graph, k: u32, cfg: &SolverConfig) -> PvcResult {
                     timeout: cfg.timeout,
                     config: Some(cfg.clone()),
                     extract_witness: cfg.extract_cover,
+                    ..JobOptions::default()
                 },
             )
             .wait();

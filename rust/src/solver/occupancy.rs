@@ -9,6 +9,11 @@
 
 use crate::degree::Dtype;
 
+/// Modeled resident bytes of one admission-queue entry (job headers +
+/// amortized share of the queued problem's host-side footprint); see
+/// [`OccupancyModel::admission_capacity`].
+pub const ADMISSION_ENTRY_BYTES: u64 = 512;
+
 /// V100-derived model constants.
 #[derive(Debug, Clone)]
 pub struct OccupancyModel {
@@ -174,6 +179,17 @@ impl OccupancyModel {
         Occupancy { blocks, path_bytes, pinned_bytes, ..base }
     }
 
+    /// Default bound on the service's admission queue, charged against
+    /// the same stack budget the per-block stacks draw from: a queued
+    /// job holds its problem graph host-side, so admission depth is a
+    /// memory commitment, not a free list. We dedicate 1/256th of the
+    /// stack budget to queued submissions at a modeled
+    /// [`ADMISSION_ENTRY_BYTES`] apiece, clamped to a sane range.
+    pub fn admission_capacity(&self) -> usize {
+        let slice = (self.stack_budget_bytes >> 8).max(ADMISSION_ENTRY_BYTES);
+        ((slice / ADMISSION_ENTRY_BYTES) as usize).clamp(64, 4096)
+    }
+
     /// Number of OS worker threads to actually run for a modeled launch:
     /// the model's block count capped by the hardware parallelism.
     pub fn workers(&self, n: usize, dtype: Dtype) -> usize {
@@ -310,6 +326,18 @@ mod tests {
         let tight = m.plan_delta(200_000, Dtype::U32, 1.0, 1);
         assert!(tight.pinned_bytes > tight.path_bytes);
         assert!(tight.queue_capacity() <= 8192);
+    }
+
+    #[test]
+    fn admission_capacity_scales_with_budget_and_clamps() {
+        let m = OccupancyModel::default();
+        // default: (4 GiB >> 8) / 512 = 32768, clamped to the 4096 cap
+        assert_eq!(m.admission_capacity(), 4096);
+        let tiny = OccupancyModel { stack_budget_bytes: 1 << 20, ..m.clone() };
+        // 4 KiB slice / 512 = 8, clamped up to the 64 floor
+        assert_eq!(tiny.admission_capacity(), 64);
+        let mid = OccupancyModel { stack_budget_bytes: 64 << 20, ..m };
+        assert_eq!(mid.admission_capacity(), 512);
     }
 
     #[test]

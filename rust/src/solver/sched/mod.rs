@@ -158,6 +158,32 @@ impl ResidentCtl {
     }
 }
 
+/// Shared lane-awareness hint between a resident scheduler and the
+/// service's admission layer (the QoS "latency lane").
+///
+/// `pending` counts latency-lane work items currently sitting in the
+/// scheduler's *shared* entry queue (job setups and latency-job roots,
+/// marked by the service at injection time and cleared when the item is
+/// popped). While it is non-zero, every worker's [`WorkerHandle::pop`]
+/// polls the shared queue on **every** pop instead of every 64th — the
+/// fairness cadence that is fine for throughput jobs would otherwise add
+/// up to 63 node-expansions of latency before a small job's setup is
+/// even looked at. The busy-path cost when no latency work is queued is
+/// one relaxed load per pop.
+#[derive(Default)]
+pub struct LaneHint {
+    /// Latency-lane items currently in the shared entry queue.
+    pub(crate) pending: AtomicU64,
+}
+
+impl LaneHint {
+    /// True when a latency-lane item is waiting in the shared queue.
+    #[inline]
+    pub(crate) fn urgent(&self) -> bool {
+        self.pending.load(Ordering::Relaxed) > 0
+    }
+}
+
 /// Which scheduling runtime the engine should use.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum SchedulerKind {

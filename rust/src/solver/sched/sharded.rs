@@ -10,11 +10,11 @@
 //! which is exactly the hot-path cost the work stealer eliminates.
 
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::solver::worklist::Worklist;
 
-use super::{IdleOutcome, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, LaneHint, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 const SPINS_BEFORE_SLEEP: u32 = 64;
 const IDLE_SLEEP: std::time::Duration = std::time::Duration::from_micros(50);
@@ -38,6 +38,10 @@ pub struct ShardedScheduler<N: Send> {
     queue_capacity: usize,
     /// Present in resident pools: park/unpark + shutdown protocol.
     resident: Option<ResidentCtl>,
+    /// Latency-lane hint shared with the service's admission layer (see
+    /// [`LaneHint`]): urgent shared-queue work makes the fairness poll
+    /// fire on every pop instead of every 64th.
+    urgent: Arc<LaneHint>,
 }
 
 impl<N: Send> ShardedScheduler<N> {
@@ -55,6 +59,7 @@ impl<N: Send> ShardedScheduler<N> {
             workers,
             queue_capacity,
             resident: None,
+            urgent: Arc::new(LaneHint::default()),
         }
     }
 
@@ -81,6 +86,12 @@ impl<N: Send> ShardedScheduler<N> {
     /// Cumulative worker park events (resident pools; 0 otherwise).
     pub fn parks(&self) -> u64 {
         self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
+    }
+
+    /// The shared latency-lane hint (service admission marks urgent
+    /// injections through it; see [`LaneHint`]).
+    pub(crate) fn lane_hint(&self) -> Arc<LaneHint> {
+        Arc::clone(&self.urgent)
     }
 }
 
@@ -160,9 +171,11 @@ impl<N: Send> WorkerHandle<N> for ShardedHandle<'_, N> {
     fn pop_traced(&mut self) -> Option<(N, PopSource)> {
         // Fairness: take from the shared worklist periodically even
         // while the private stack holds work, so injected items (new
-        // jobs on a resident pool) are never starved behind it.
+        // jobs on a resident pool) are never starved behind it. While
+        // latency-lane work is pending the poll fires on every pop so
+        // small jobs preempt the 64-pop cadence.
         self.polls = self.polls.wrapping_add(1);
-        if self.s.load_balance && self.polls & 63 == 0 {
+        if self.s.load_balance && (self.polls & 63 == 0 || self.s.urgent.urgent()) {
             if let Some((item, stolen)) = self.s.worklist.pop_traced(self.id) {
                 let src = if stolen {
                     self.c.steals += 1;

@@ -30,9 +30,11 @@
 
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 
+use std::sync::Arc;
+
 use super::deque::{ChaseLev, Steal};
 use super::injector::Injector;
-use super::{IdleOutcome, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
+use super::{IdleOutcome, LaneHint, PopSource, ResidentCtl, Scheduler, WorkerCounters, WorkerHandle};
 
 /// Spins before an idle worker starts sleeping between rechecks.
 const SPINS_BEFORE_SLEEP: u32 = 64;
@@ -64,6 +66,10 @@ pub struct WorkStealScheduler<N: Send> {
     /// Present in resident pools: park/unpark + shutdown protocol
     /// (multi-job epochs instead of scope-join termination).
     resident: Option<ResidentCtl>,
+    /// Latency-lane hint shared with the service's admission layer: when
+    /// it reports urgent shared-queue work, the fairness poll fires on
+    /// every pop instead of every 64th.
+    urgent: Arc<LaneHint>,
 }
 
 impl<N: Send> WorkStealScheduler<N> {
@@ -81,6 +87,7 @@ impl<N: Send> WorkStealScheduler<N> {
             epoch: AtomicU64::new(0),
             done: AtomicBool::new(false),
             resident: None,
+            urgent: Arc::new(LaneHint::default()),
         }
     }
 
@@ -108,6 +115,12 @@ impl<N: Send> WorkStealScheduler<N> {
     /// Cumulative worker park events (resident pools; 0 otherwise).
     pub fn parks(&self) -> u64 {
         self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
+    }
+
+    /// The shared latency-lane hint (service admission marks urgent
+    /// injections through it; see [`LaneHint`]).
+    pub(crate) fn lane_hint(&self) -> Arc<LaneHint> {
+        Arc::clone(&self.urgent)
     }
 
     /// Termination verification sweep; caller observed `idle == workers`.
@@ -275,9 +288,11 @@ impl<N: Send> WorkerHandle<N> for StealHandle<'_, N> {
         // local work remains, so injected items (new jobs on a resident
         // pool) are never starved behind a deep deque. In one-shot runs
         // the injector is empty after the root, so this costs a few
-        // atomic loads every 64th pop.
+        // atomic loads every 64th pop. Lane awareness: while the service
+        // reports urgent (latency-lane) items in the injector, the poll
+        // fires on *every* pop — the latency lane preempts the cadence.
         self.polls = self.polls.wrapping_add(1);
-        if self.polls & 63 == 0 {
+        if self.polls & 63 == 0 || self.s.urgent.urgent() {
             if let Some(item) = self.s.injector.pop() {
                 self.c.shared_pops += 1;
                 self.spins = 0;

@@ -51,8 +51,47 @@
 //! cover to original ids (induction renumbering + reduction unwind) and
 //! verifies it against the original graph ([`Solution::witness`],
 //! [`Solution::witness_verified`]).
+//!
+//! ## Admission & QoS
+//!
+//! Submissions pass through a bounded, QoS-aware admission layer before
+//! they reach the pool's shared injector:
+//!
+//! * **Bounded queue / backpressure** — the admission queue holds at
+//!   most `max_queued` jobs (default: the occupancy model's
+//!   `admission_capacity`, which charges queued submissions against the
+//!   same memory budget as the per-worker stacks). A full queue
+//!   *rejects* [`VcService::try_submit`] with [`SubmitError::QueueFull`]
+//!   and *blocks* [`VcService::submit`] (bounded-wait:
+//!   [`VcService::submit_within`]), so submission pressure turns into
+//!   caller backpressure instead of unbounded queue growth.
+//! * **Lanes** — every job is classified into a [`Lane`]: explicitly
+//!   via [`JobOptions::priority`], otherwise estimated from the input
+//!   size at admission and refined from the *reduced* graph size at
+//!   prep (`latency_threshold`). A single dispatcher thread drains the
+//!   queue by weighted deficit round robin (latency 4 : throughput 1)
+//!   into the injector — admission stays single-threaded and cheap,
+//!   and the existing injector fans the work out. Latency-lane setups
+//!   and roots are injected *urgent*: a lane hint shared with both
+//!   scheduler runtimes makes every worker poll the shared queue on
+//!   every pop (instead of every 64th) until they are picked up.
+//! * **Quotas** — jobs carrying [`JobOptions::tenant`] are charged
+//!   against per-tenant quotas ([`TenantQuota`]): concurrent jobs and
+//!   outstanding live nodes, both checked at admission. Node charges
+//!   are taken when an item enters the worklist and released as it
+//!   retires; the job slot is released exactly once, when the job's
+//!   outcome is published.
+//! * **Live-jobs bound** — at most `max_live_jobs` dispatched jobs are
+//!   in flight at once; beyond it the dispatcher holds jobs back in the
+//!   admission queue, which is what lets the queue bound actually fill
+//!   and exert backpressure.
+//!
+//! Lane scheduling changes only *when* work is picked up, never what is
+//! computed: objectives and witnesses are identical with lanes on or
+//! off (asserted by `tests/qos_admission.rs`).
 
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -62,9 +101,10 @@ use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 
 use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, NodePayload, WorkerCtx};
+use super::occupancy::OccupancyModel;
 use super::sched::{
-    IdleOutcome, PopSource, Scheduler, SchedulerKind, ShardedScheduler, WorkStealScheduler,
-    WorkerCounters, WorkerHandle,
+    IdleOutcome, LaneHint, PopSource, Scheduler, SchedulerKind, ShardedScheduler,
+    WorkStealScheduler, WorkerCounters, WorkerHandle,
 };
 use super::witness::{self, CoverLift};
 use super::{greedy, PrepSummary, SolverConfig};
@@ -196,17 +236,97 @@ pub struct Solution {
 }
 
 impl Solution {
-    /// True if the job's deadline fired (legacy `timed_out` spelling).
+    /// True if the job stopped because its per-job deadline fired —
+    /// shorthand for `termination == Termination::DeadlineExpired`,
+    /// kept under the old one-shot API's `timed_out` name so callers
+    /// ported from `SolveResult`/`PvcResult` read the same way.
     pub fn timed_out(&self) -> bool {
         self.termination == Termination::DeadlineExpired
     }
+}
+
+/// QoS lane of a job: which admission queue it waits in and how eagerly
+/// the pool's fairness poll picks its items up.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lane {
+    /// Small jobs that want low queueing delay. Dispatched with a 4×
+    /// deficit-round-robin weight, and their setup/root items are
+    /// injected *urgent*: every worker polls the shared queue on every
+    /// pop (instead of every 64th) until the items are picked up.
+    Latency,
+    /// Large jobs where total throughput matters and queueing delay
+    /// does not.
+    Throughput,
+}
+
+impl Lane {
+    /// Index into the admission layer's lane arrays.
+    fn index(self) -> usize {
+        match self {
+            Lane::Latency => 0,
+            Lane::Throughput => 1,
+        }
+    }
+
+    /// Short display name (`latency` / `throughput`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Latency => "latency",
+            Lane::Throughput => "throughput",
+        }
+    }
+
+    /// Parse a CLI spelling (`latency`/`lat`, `throughput`/`tput`).
+    pub fn parse(s: &str) -> Option<Lane> {
+        match s {
+            "latency" | "lat" => Some(Lane::Latency),
+            "throughput" | "tput" => Some(Lane::Throughput),
+            _ => None,
+        }
+    }
+}
+
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded admission queue is at capacity (backpressure): retry
+    /// later, or use a blocking submit.
+    QueueFull,
+    /// The job's tenant is at its concurrent-jobs or live-nodes quota
+    /// ([`TenantQuota`]).
+    QuotaExceeded,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull => write!(f, "admission queue full"),
+            SubmitError::QuotaExceeded => write!(f, "tenant quota exceeded"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Per-tenant admission quotas ([`VcServiceBuilder::tenant_quota`]),
+/// enforced at admission for jobs submitted with [`JobOptions::tenant`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TenantQuota {
+    /// Maximum jobs of one tenant queued or running at once.
+    pub max_jobs: usize,
+    /// Maximum outstanding work items (queued + executing search nodes)
+    /// across one tenant's jobs. Checked at admission: a tenant whose
+    /// running jobs hold this many live nodes cannot admit more work
+    /// until some retire.
+    pub max_live_nodes: u64,
 }
 
 /// Per-job submission options.
 #[derive(Debug, Clone, Default)]
 pub struct JobOptions {
     /// Per-job wall-clock budget (falls back to the service config's
-    /// timeout when `None`).
+    /// timeout when `None`). The clock starts at submission, so time
+    /// blocked in admission counts against it.
     pub timeout: Option<Duration>,
     /// Per-job solver knobs (component awareness, root reduction,
     /// bounds, dtypes, induce threshold) overriding the service
@@ -220,6 +340,17 @@ pub struct JobOptions {
     /// default. A `config` with `extract_cover` set requests the same
     /// thing.
     pub extract_witness: bool,
+    /// Pin the job to a QoS [`Lane`]. `None` (default) classifies by
+    /// size: input |V| at admission, refined by the reduced-graph size
+    /// at prep (the builder's `latency_threshold`).
+    pub priority: Option<Lane>,
+    /// Tenant id for quota accounting. Jobs without a tenant are never
+    /// quota-limited.
+    pub tenant: Option<String>,
+    /// Test hook: panic inside the job's setup stage, exercising the
+    /// panic-containment path end to end.
+    #[cfg(test)]
+    pub(crate) panic_in_setup: bool,
 }
 
 /// A submitted job: await it, poll it, or cancel it. Cloning the handle
@@ -334,6 +465,43 @@ struct JobInner {
     /// The service's shared stats accumulators — finalization folds this
     /// job's engine counters into its class slot.
     counters: Arc<ServiceCounters>,
+    /// QoS lane index ([`Lane::index`]): estimated at admission from the
+    /// input size, refined at prep from the reduced-graph size unless
+    /// the submitter pinned it.
+    lane: AtomicU8,
+    /// `true` when [`JobOptions::priority`] was set — prep-time
+    /// refinement then leaves the lane alone.
+    explicit_lane: bool,
+    /// Reduced-size threshold at or below which prep classifies the job
+    /// into the latency lane (copied from the builder).
+    latency_threshold: usize,
+    /// Tenant quota bookkeeping (jobs submitted with a tenant only).
+    tenant: Option<TenantRef>,
+    /// The service's admission layer: lane hint for urgent injections,
+    /// and the exactly-once job-slot release at outcome publication.
+    admission: Arc<Admission>,
+    /// Test hook mirrored from [`JobOptions`].
+    #[cfg(test)]
+    panic_in_setup: bool,
+}
+
+impl JobInner {
+    /// The job's current QoS lane.
+    fn lane(&self) -> Lane {
+        if self.lane.load(Ordering::Relaxed) == Lane::Latency.index() as u8 {
+            Lane::Latency
+        } else {
+            Lane::Throughput
+        }
+    }
+}
+
+/// A job's share of its tenant's quota accounting: the live-node counter
+/// is shared by every job of the tenant and mirrors each job's
+/// `live_nodes` (+1 on every enqueue, −1 on every retire).
+struct TenantRef {
+    name: String,
+    nodes: Arc<AtomicU64>,
 }
 
 /// One unit of service work: either a job's setup stage or one search
@@ -341,6 +509,9 @@ struct JobInner {
 struct WorkItem {
     job: Arc<JobInner>,
     work: Work,
+    /// Latency-lane item injected through the shared queue with the
+    /// lane hint raised; the popping worker lowers the hint again.
+    urgent: bool,
 }
 
 enum Work {
@@ -401,6 +572,13 @@ impl ResidentSched {
             ResidentSched::Sharded(s) => s.parks(),
         }
     }
+
+    fn lane_hint(&self) -> Arc<LaneHint> {
+        match self {
+            ResidentSched::Steal(s) => s.lane_hint(),
+            ResidentSched::Sharded(s) => s.lane_hint(),
+        }
+    }
 }
 
 /// Pool-level scheduler counters surfaced by [`VcService::stats`]:
@@ -411,6 +589,11 @@ impl ResidentSched {
 pub struct PoolStats {
     /// Children enqueued by the pool's workers.
     pub pushes: u64,
+    /// Service-side injections into the shared queue (dispatched setups
+    /// + urgent latency roots) — the non-worker half of the push/pop
+    /// conservation ledger: once drained,
+    /// `pops + shared_pops + steals == pushes + injected`.
+    pub injected: u64,
     /// Nodes taken from a worker's own queue.
     pub pops: u64,
     /// Nodes taken from the shared entry queue.
@@ -422,6 +605,27 @@ pub struct PoolStats {
     /// Worker park events (an idle pool parks; a saturated one never
     /// does — the service QoS "is the pool starved or drowning" signal).
     pub parks: u64,
+}
+
+/// Admission-layer telemetry surfaced by [`VcService::stats`].
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct AdmissionStats {
+    /// Jobs currently waiting in the admission queue (both lanes).
+    pub queued: usize,
+    /// Jobs dispatched into the pool and not yet finalized.
+    pub live_jobs: usize,
+    /// Submissions rejected because the queue was full (`try_submit`,
+    /// or a bounded `submit_within` wait that expired).
+    pub rejected: u64,
+    /// Submissions rejected by a tenant quota.
+    pub quota_rejected: u64,
+    /// Cumulative wall-clock time submitters spent blocked waiting for
+    /// queue space or quota headroom.
+    pub blocked: Duration,
+    /// Jobs dispatched from the latency lane.
+    pub dispatched_latency: u64,
+    /// Jobs dispatched from the throughput lane.
+    pub dispatched_throughput: u64,
 }
 
 /// Per-job-class counters surfaced by [`VcService::stats`].
@@ -448,6 +652,9 @@ pub struct ClassStats {
 pub struct ServiceStats {
     /// Pool-wide queue traffic and park events.
     pub pool: PoolStats,
+    /// Admission-layer counters (queue depth, rejections, blocked time,
+    /// per-lane dispatches).
+    pub admission: AdmissionStats,
     /// MVC-class jobs.
     pub mvc: ClassStats,
     /// PVC-class jobs.
@@ -491,21 +698,43 @@ impl ClassAgg {
     }
 }
 
-/// Shared atomic counter block: workers flush queue-traffic deltas into
-/// the pool half, finalization folds each job's engine stats into its
-/// class half. `Arc`-shared between the service and every job so
-/// finalize (which only sees the job) can attribute per-class counts.
+/// Per-worker queue-traffic publication slot: cumulative totals stored
+/// by exactly one worker (single-writer relaxed stores), summed by
+/// [`VcService::stats`]. Publishing totals instead of batched deltas
+/// closes the old flush gap, where a worker's counters were missing
+/// from a snapshot unless that worker happened to hit a 256-item flush
+/// or an idle transition.
 #[derive(Default)]
-struct ServiceCounters {
+struct WorkerSlot {
     pushes: AtomicU64,
     pops: AtomicU64,
     shared_pops: AtomicU64,
     steals: AtomicU64,
     steal_retries: AtomicU64,
+}
+
+/// Shared counter block: workers publish queue-traffic totals into
+/// their slot, finalization folds each job's engine stats into its
+/// class half. `Arc`-shared between the service and every job so
+/// finalize (which only sees the job) can attribute per-class counts.
+struct ServiceCounters {
+    /// One publication slot per resident worker.
+    slots: Vec<WorkerSlot>,
+    /// Service-side injections into the shared queue (see
+    /// [`PoolStats::injected`]).
+    injected: AtomicU64,
     classes: [ClassAgg; 3],
 }
 
 impl ServiceCounters {
+    fn new(workers: usize) -> ServiceCounters {
+        ServiceCounters {
+            slots: (0..workers).map(|_| WorkerSlot::default()).collect(),
+            injected: AtomicU64::new(0),
+            classes: Default::default(),
+        }
+    }
+
     fn class(&self, kind: ProblemKind) -> &ClassAgg {
         match kind {
             ProblemKind::Mvc => &self.classes[0],
@@ -514,15 +743,197 @@ impl ServiceCounters {
         }
     }
 
-    /// Fold the delta of a worker's counters since its last flush.
-    fn flush_worker(&self, now: &WorkerCounters, flushed: &mut WorkerCounters) {
-        self.pushes.fetch_add(now.pushes - flushed.pushes, Ordering::Relaxed);
-        self.pops.fetch_add(now.pops - flushed.pops, Ordering::Relaxed);
-        self.shared_pops.fetch_add(now.shared_pops - flushed.shared_pops, Ordering::Relaxed);
-        self.steals.fetch_add(now.steals - flushed.steals, Ordering::Relaxed);
-        self.steal_retries
-            .fetch_add(now.steal_retries - flushed.steal_retries, Ordering::Relaxed);
-        *flushed = *now;
+    /// Publish a worker's cumulative counters into its slot (called
+    /// after every processed item and on every idle transition).
+    fn publish(&self, worker: usize, c: &WorkerCounters) {
+        let s = &self.slots[worker];
+        s.pushes.store(c.pushes, Ordering::Relaxed);
+        s.pops.store(c.pops, Ordering::Relaxed);
+        s.shared_pops.store(c.shared_pops, Ordering::Relaxed);
+        s.steals.store(c.steals, Ordering::Relaxed);
+        s.steal_retries.store(c.steal_retries, Ordering::Relaxed);
+    }
+}
+
+/// DRR dispatch weights per lane (latency : throughput). A latency job
+/// costs one deficit unit, so the latency lane drains up to 4 jobs per
+/// throughput job while both are backlogged.
+const LANE_WEIGHT: [u64; 2] = [4, 1];
+
+/// Blocking admission re-checks quota headroom on this cadence: tenant
+/// live-node counts drop as workers retire items, with no condvar to
+/// signal space.
+const ADMIT_WAIT_SLICE: Duration = Duration::from_millis(5);
+
+/// How long a submitter is willing to wait for admission.
+#[derive(Clone, Copy)]
+enum Wait {
+    /// Never block (`try_submit`).
+    No,
+    /// Block until space, up to the deadline (`None` = forever).
+    Until(Option<Instant>),
+}
+
+/// Per-tenant admission accounting (lives as long as the service; the
+/// tenant map is bounded by the number of distinct tenant ids seen).
+#[derive(Default)]
+struct TenantEntry {
+    /// Jobs queued or running (admission → outcome publication).
+    jobs: usize,
+    /// Outstanding work items across the tenant's jobs, shared with
+    /// each job as a [`TenantRef`].
+    nodes: Arc<AtomicU64>,
+}
+
+/// Mutable admission state, guarded by one mutex: touched by
+/// submitters (enqueue), the dispatcher (dequeue), and outcome
+/// publication (release) — each a few queue operations, keeping
+/// admission cheap.
+#[derive(Default)]
+struct AdmissionState {
+    /// FIFO per lane, drained by weighted deficit round robin.
+    lanes: [VecDeque<Arc<JobInner>>; 2],
+    /// DRR deficits (replenished by [`LANE_WEIGHT`], capped at 4×).
+    deficit: [u64; 2],
+    /// DRR lane cursor.
+    cursor: usize,
+    /// Total queued jobs (both lanes).
+    queued: usize,
+    /// Dispatched, not-yet-finalized jobs.
+    live_jobs: usize,
+    tenants: HashMap<String, TenantEntry>,
+}
+
+impl AdmissionState {
+    /// Pick the next lane to dispatch from by weighted deficit round
+    /// robin. Caller guarantees `queued > 0`, so some lane is
+    /// non-empty and the replenish loop terminates.
+    fn pick_lane(&mut self) -> usize {
+        loop {
+            for _ in 0..2 {
+                let l = self.cursor;
+                if self.lanes[l].is_empty() {
+                    // an empty lane forfeits its backlog credit
+                    self.deficit[l] = 0;
+                    self.cursor = (l + 1) % 2;
+                    continue;
+                }
+                if self.deficit[l] > 0 {
+                    self.deficit[l] -= 1;
+                    return l;
+                }
+                self.cursor = (l + 1) % 2;
+            }
+            for l in 0..2 {
+                if !self.lanes[l].is_empty() {
+                    self.deficit[l] = (self.deficit[l] + LANE_WEIGHT[l]).min(4 * LANE_WEIGHT[l]);
+                }
+            }
+        }
+    }
+}
+
+/// The admission layer: a bounded two-lane submit queue with per-tenant
+/// quotas, drained into the pool's injector by one dispatcher thread
+/// (see the module docs, "Admission & QoS").
+struct Admission {
+    state: Mutex<AdmissionState>,
+    /// Wakes the dispatcher: new work, a live-job release, or shutdown.
+    work_cv: Condvar,
+    /// Wakes blocked submitters: queue space or quota headroom freed.
+    space_cv: Condvar,
+    /// Latency-lane hint shared with the scheduler's fairness poll.
+    lane_hint: Arc<LaneHint>,
+    /// Admission queue bound (backpressure past it).
+    max_queued: usize,
+    /// Dispatched-jobs bound; the dispatcher holds jobs back beyond it.
+    max_live_jobs: usize,
+    /// Lane classification threshold (reduced |V| ≤ it ⇒ latency).
+    latency_threshold: usize,
+    /// Per-tenant quotas (`None` = unlimited).
+    quota: Option<TenantQuota>,
+    shutdown: AtomicBool,
+    rejected: AtomicU64,
+    quota_rejected: AtomicU64,
+    blocked_nanos: AtomicU64,
+    dispatched: [AtomicU64; 2],
+}
+
+impl Admission {
+    /// Release a finalized job's admission accounting — the live-job
+    /// slot and (tenanted jobs) the concurrent-jobs quota unit. Called
+    /// exactly once per job, from the first-writer branch of
+    /// [`store_outcome`].
+    fn on_job_finalized(&self, tenant: Option<&TenantRef>) {
+        let mut st = self.state.lock().unwrap();
+        st.live_jobs = st.live_jobs.saturating_sub(1);
+        if let Some(t) = tenant {
+            if let Some(e) = st.tenants.get_mut(&t.name) {
+                e.jobs = e.jobs.saturating_sub(1);
+            }
+        }
+        drop(st);
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        // Take the lock so a dispatcher between its check and its wait
+        // cannot miss the wakeup.
+        drop(self.state.lock().unwrap());
+        self.work_cv.notify_all();
+        self.space_cv.notify_all();
+    }
+
+    fn snapshot(&self) -> AdmissionStats {
+        let st = self.state.lock().unwrap();
+        AdmissionStats {
+            queued: st.queued,
+            live_jobs: st.live_jobs,
+            rejected: self.rejected.load(Ordering::Relaxed),
+            quota_rejected: self.quota_rejected.load(Ordering::Relaxed),
+            blocked: Duration::from_nanos(self.blocked_nanos.load(Ordering::Relaxed)),
+            dispatched_latency: self.dispatched[0].load(Ordering::Relaxed),
+            dispatched_throughput: self.dispatched[1].load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The single-consumer dispatcher: drains the admission queue into the
+/// pool's injector by DRR, gated on the live-jobs bound. Runs on its
+/// own thread (`cavc-svc-admit`); exits once shutdown is requested and
+/// the queue is drained, so held handles' `wait` calls still return.
+fn dispatcher_loop(inner: &ServiceInner) {
+    let adm = &inner.admission;
+    loop {
+        let (job, lane) = {
+            let mut st = adm.state.lock().unwrap();
+            loop {
+                let draining = adm.shutdown.load(Ordering::SeqCst);
+                if st.queued > 0 && (st.live_jobs < adm.max_live_jobs || draining) {
+                    let lane = st.pick_lane();
+                    let job = st.lanes[lane].pop_front().expect("picked lane is non-empty");
+                    st.queued -= 1;
+                    st.live_jobs += 1;
+                    break (job, lane);
+                }
+                if draining && st.queued == 0 {
+                    return;
+                }
+                st = adm.work_cv.wait(st).unwrap();
+            }
+        };
+        adm.space_cv.notify_all();
+        adm.dispatched[lane].fetch_add(1, Ordering::Relaxed);
+        let urgent = lane == Lane::Latency.index();
+        if urgent {
+            // Raise the hint before the item is visible: every worker
+            // then polls the shared queue on its next pop.
+            adm.lane_hint.pending.fetch_add(1, Ordering::Relaxed);
+        }
+        inner.counters.injected.fetch_add(1, Ordering::Relaxed);
+        inner.sched.inject(WorkItem { job, work: Work::Setup, urgent });
     }
 }
 
@@ -532,6 +943,7 @@ struct ServiceInner {
     workers: usize,
     next_job: AtomicU64,
     counters: Arc<ServiceCounters>,
+    admission: Arc<Admission>,
 }
 
 /// Builder for [`VcService`].
@@ -540,7 +952,15 @@ pub struct VcServiceBuilder {
     scheduler: SchedulerKind,
     queue_capacity: usize,
     defaults: SolverConfig,
+    max_queued: Option<usize>,
+    max_live_jobs: Option<usize>,
+    latency_threshold: usize,
+    quota: Option<TenantQuota>,
 }
+
+/// Default reduced-size cutoff for the latency lane: graphs this small
+/// prep and solve in a latency-class time frame.
+pub const DEFAULT_LATENCY_THRESHOLD: usize = 1024;
 
 impl VcServiceBuilder {
     /// Number of resident worker threads (default: hardware threads).
@@ -570,6 +990,39 @@ impl VcServiceBuilder {
         self
     }
 
+    /// Bound on the admission queue (default: the occupancy model's
+    /// `admission_capacity`, charging queued jobs against the stack
+    /// memory budget). A full queue rejects [`VcService::try_submit`]
+    /// and blocks [`VcService::submit`].
+    pub fn max_queued(mut self, n: usize) -> VcServiceBuilder {
+        self.max_queued = Some(n.max(1));
+        self
+    }
+
+    /// Bound on concurrently dispatched (not yet finalized) jobs;
+    /// default `max(8 × workers, 32)`. The dispatcher holds further
+    /// jobs in the admission queue beyond it — this is what lets the
+    /// queue bound fill and exert backpressure.
+    pub fn max_live_jobs(mut self, n: usize) -> VcServiceBuilder {
+        self.max_live_jobs = Some(n.max(1));
+        self
+    }
+
+    /// Reduced-graph size at or below which a job without an explicit
+    /// [`JobOptions::priority`] is classified into the latency lane
+    /// (default [`DEFAULT_LATENCY_THRESHOLD`]).
+    pub fn latency_threshold(mut self, n: usize) -> VcServiceBuilder {
+        self.latency_threshold = n;
+        self
+    }
+
+    /// Enforce per-tenant quotas at admission for jobs submitted with
+    /// [`JobOptions::tenant`] (default: no quotas).
+    pub fn tenant_quota(mut self, q: TenantQuota) -> VcServiceBuilder {
+        self.quota = Some(q);
+        self
+    }
+
     /// Spawn the worker pool and return the service.
     pub fn build(self) -> VcService {
         let workers = self.workers.unwrap_or_else(|| {
@@ -584,12 +1037,30 @@ impl VcServiceBuilder {
                 self.queue_capacity,
             )),
         };
+        let admission = Arc::new(Admission {
+            state: Mutex::new(AdmissionState::default()),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            lane_hint: sched.lane_hint(),
+            max_queued: self
+                .max_queued
+                .unwrap_or_else(|| OccupancyModel::default().admission_capacity()),
+            max_live_jobs: self.max_live_jobs.unwrap_or((workers * 8).max(32)),
+            latency_threshold: self.latency_threshold,
+            quota: self.quota,
+            shutdown: AtomicBool::new(false),
+            rejected: AtomicU64::new(0),
+            quota_rejected: AtomicU64::new(0),
+            blocked_nanos: AtomicU64::new(0),
+            dispatched: [AtomicU64::new(0), AtomicU64::new(0)],
+        });
         let inner = Arc::new(ServiceInner {
             sched,
             defaults: self.defaults,
             workers,
             next_job: AtomicU64::new(0),
-            counters: Arc::new(ServiceCounters::default()),
+            counters: Arc::new(ServiceCounters::new(workers)),
+            admission,
         });
         let threads = (0..workers)
             .map(|w| {
@@ -603,7 +1074,14 @@ impl VcServiceBuilder {
                     .expect("spawn service worker")
             })
             .collect();
-        VcService { inner, threads }
+        let dispatcher = {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("cavc-svc-admit".into())
+                .spawn(move || dispatcher_loop(&inner))
+                .expect("spawn admission dispatcher")
+        };
+        VcService { inner, threads, dispatcher: Some(dispatcher) }
     }
 }
 
@@ -615,6 +1093,7 @@ impl VcServiceBuilder {
 pub struct VcService {
     inner: Arc<ServiceInner>,
     threads: Vec<JoinHandle<()>>,
+    dispatcher: Option<JoinHandle<()>>,
 }
 
 impl VcService {
@@ -625,6 +1104,10 @@ impl VcService {
             scheduler: SchedulerKind::default(),
             queue_capacity: engine::DEFAULT_QUEUE_CAPACITY,
             defaults: SolverConfig::proposed(),
+            max_queued: None,
+            max_live_jobs: None,
+            latency_threshold: DEFAULT_LATENCY_THRESHOLD,
+            quota: None,
         }
     }
 
@@ -633,19 +1116,78 @@ impl VcService {
         self.inner.workers
     }
 
-    /// Submit a problem with the service's default options.
+    /// Submit a problem with the service's default options, blocking
+    /// while the admission queue is full (bounded variants:
+    /// [`VcService::try_submit`], [`VcService::submit_within`]).
     pub fn submit(&self, problem: Problem) -> JobHandle {
         self.submit_with(problem, JobOptions::default())
     }
 
-    /// Submit a problem with per-job options.
+    /// Submit a problem with per-job options, blocking while the
+    /// admission queue is full or the tenant is over quota.
     pub fn submit_with(&self, problem: Problem, opts: JobOptions) -> JobHandle {
+        match self.admit(problem, opts, Wait::Until(None)) {
+            Ok(h) => h,
+            Err(_) => unreachable!("unbounded admission wait cannot be rejected"),
+        }
+    }
+
+    /// Non-blocking submit with default options: [`SubmitError`] when
+    /// the admission queue is full or the tenant is over quota.
+    pub fn try_submit(&self, problem: Problem) -> Result<JobHandle, SubmitError> {
+        self.try_submit_with(problem, JobOptions::default())
+    }
+
+    /// Non-blocking submit with per-job options — the backpressure
+    /// primitive: never waits, never grows the queue past its bound.
+    pub fn try_submit_with(
+        &self,
+        problem: Problem,
+        opts: JobOptions,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(problem, opts, Wait::No)
+    }
+
+    /// Blocking submit that gives up after `wait`: the deadline-bounded
+    /// middle ground between [`VcService::submit`] (waits forever) and
+    /// [`VcService::try_submit_with`] (never waits).
+    pub fn submit_within(
+        &self,
+        problem: Problem,
+        opts: JobOptions,
+        wait: Duration,
+    ) -> Result<JobHandle, SubmitError> {
+        self.admit(problem, opts, Wait::Until(Some(Instant::now() + wait)))
+    }
+
+    /// The admission gate: classify the job's lane, wait for (or bounce
+    /// off) queue space and tenant quota, charge the quota, and enqueue
+    /// for the dispatcher.
+    fn admit(
+        &self,
+        problem: Problem,
+        opts: JobOptions,
+        wait: Wait,
+    ) -> Result<JobHandle, SubmitError> {
+        let adm = &self.inner.admission;
+        let started = Instant::now();
         let cfg = opts.config.as_ref().unwrap_or(&self.inner.defaults);
+        let lane = opts.priority.unwrap_or_else(|| {
+            // Admission-time estimate from the raw input size; prep
+            // refines it from the reduced size (see `setup_job`).
+            if problem.graph().num_vertices() <= adm.latency_threshold {
+                Lane::Latency
+            } else {
+                Lane::Throughput
+            }
+        });
         let job_cfg = JobCfg {
             component_aware: cfg.component_aware,
             use_bounds: cfg.use_bounds,
             stop_on_improvement: matches!(problem, Problem::Pvc { .. }),
-            deadline: opts.timeout.or(cfg.timeout).map(|t| Instant::now() + t),
+            // The clock starts now: time blocked in admission counts
+            // against the job's deadline.
+            deadline: opts.timeout.or(cfg.timeout).map(|t| started + t),
             // Per-activity timers are per-worker, not per-job; resident
             // jobs track counters (incl. byte accounting) only.
             instrument: false,
@@ -654,23 +1196,84 @@ impl VcService {
             node_repr: cfg.node_repr,
             max_pin_depth: cfg.max_pin_depth,
         };
+        let prep_cfg = cfg.prep_cfg();
+
+        let mut st = adm.state.lock().unwrap();
+        loop {
+            let full = st.queued >= adm.max_queued;
+            let over_quota = match (&opts.tenant, &adm.quota) {
+                (Some(name), Some(q)) => match st.tenants.get(name) {
+                    Some(e) => {
+                        e.jobs >= q.max_jobs
+                            || e.nodes.load(Ordering::Relaxed) >= q.max_live_nodes
+                    }
+                    None => false,
+                },
+                _ => false,
+            };
+            if !full && !over_quota {
+                break;
+            }
+            let now = Instant::now();
+            let expired = match wait {
+                Wait::No => true,
+                Wait::Until(None) => false,
+                Wait::Until(Some(d)) => now >= d,
+            };
+            if expired {
+                return Err(if over_quota && !full {
+                    adm.quota_rejected.fetch_add(1, Ordering::Relaxed);
+                    SubmitError::QuotaExceeded
+                } else {
+                    adm.rejected.fetch_add(1, Ordering::Relaxed);
+                    SubmitError::QueueFull
+                });
+            }
+            // Quota headroom (live-node counts) frees without a
+            // notifier, so cap each wait slice and re-check.
+            let slice = match wait {
+                Wait::Until(Some(d)) => (d - now).min(ADMIT_WAIT_SLICE),
+                _ => ADMIT_WAIT_SLICE,
+            };
+            st = adm.space_cv.wait_timeout(st, slice).unwrap().0;
+            adm.blocked_nanos.fetch_add(now.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        }
+        // Admitted: charge the tenant (jobs slot + the Setup item's
+        // node) and enqueue under the same lock, so concurrent admits
+        // can never overshoot the quota between check and charge.
+        let tenant = opts.tenant.as_ref().map(|name| {
+            let e = st.tenants.entry(name.clone()).or_default();
+            e.jobs += 1;
+            e.nodes.fetch_add(1, Ordering::Relaxed);
+            TenantRef { name: name.clone(), nodes: Arc::clone(&e.nodes) }
+        });
         let job = Arc::new(JobInner {
             id: self.inner.next_job.fetch_add(1, Ordering::SeqCst),
             ctl: JobCtl::new(job_cfg, u32::MAX),
-            prep_cfg: cfg.prep_cfg(),
+            prep_cfg,
             live_nodes: AtomicU64::new(1), // the Setup item
             cancelled: AtomicBool::new(false),
             failed: AtomicBool::new(false),
             prepared: OnceLock::new(),
             outcome: Mutex::new(None),
             done_cv: Condvar::new(),
-            started: Instant::now(),
+            started,
             pool_workers: self.inner.workers,
             counters: Arc::clone(&self.inner.counters),
+            lane: AtomicU8::new(lane.index() as u8),
+            explicit_lane: opts.priority.is_some(),
+            latency_threshold: adm.latency_threshold,
+            tenant,
+            admission: Arc::clone(adm),
+            #[cfg(test)]
+            panic_in_setup: opts.panic_in_setup,
             problem,
         });
-        self.inner.sched.inject(WorkItem { job: Arc::clone(&job), work: Work::Setup });
-        JobHandle { job }
+        st.lanes[lane.index()].push_back(Arc::clone(&job));
+        st.queued += 1;
+        drop(st);
+        adm.work_cv.notify_one();
+        Ok(JobHandle { job })
     }
 
     /// Submit-and-wait convenience for one problem.
@@ -678,23 +1281,31 @@ impl VcService {
         self.submit(problem).wait()
     }
 
-    /// Snapshot the pool-level scheduler counters and the per-job-class
-    /// breakdown (steals / parks / materializations…): the ROADMAP
-    /// "Service QoS" telemetry endpoint. Pool counters are flushed by
-    /// workers on idle transitions and every 256 processed items, so a
-    /// snapshot taken mid-burst can trail the true totals slightly;
-    /// class counters for *finalized* jobs are exact.
+    /// Snapshot the pool-level scheduler counters, the admission-layer
+    /// counters, and the per-job-class breakdown (steals / parks /
+    /// materializations…): the ROADMAP "Service QoS" telemetry
+    /// endpoint. Every worker publishes its cumulative queue-traffic
+    /// counters after each processed item, so a snapshot folds all
+    /// residual deltas at read time — it can trail the true totals only
+    /// by the items currently being processed; class counters for
+    /// *finalized* jobs are exact.
     pub fn stats(&self) -> ServiceStats {
         let c = &self.inner.counters;
+        let mut pool = PoolStats {
+            injected: c.injected.load(Ordering::Relaxed),
+            parks: self.inner.sched.parks(),
+            ..PoolStats::default()
+        };
+        for s in &c.slots {
+            pool.pushes += s.pushes.load(Ordering::Relaxed);
+            pool.pops += s.pops.load(Ordering::Relaxed);
+            pool.shared_pops += s.shared_pops.load(Ordering::Relaxed);
+            pool.steals += s.steals.load(Ordering::Relaxed);
+            pool.steal_retries += s.steal_retries.load(Ordering::Relaxed);
+        }
         ServiceStats {
-            pool: PoolStats {
-                pushes: c.pushes.load(Ordering::Relaxed),
-                pops: c.pops.load(Ordering::Relaxed),
-                shared_pops: c.shared_pops.load(Ordering::Relaxed),
-                steals: c.steals.load(Ordering::Relaxed),
-                steal_retries: c.steal_retries.load(Ordering::Relaxed),
-                parks: self.inner.sched.parks(),
-            },
+            pool,
+            admission: self.inner.admission.snapshot(),
             mvc: c.classes[0].snapshot(),
             pvc: c.classes[1].snapshot(),
             mis: c.classes[2].snapshot(),
@@ -704,6 +1315,14 @@ impl VcService {
 
 impl Drop for VcService {
     fn drop(&mut self) {
+        // Order matters: the admission queue drains into the scheduler
+        // first (the dispatcher exits only once it is empty), then the
+        // pool drains and exits — held handles' `wait` calls return
+        // (the drop-drains contract).
+        self.inner.admission.request_shutdown();
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
         self.inner.sched.request_shutdown();
         for t in self.threads.drain(..) {
             let _ = t.join();
@@ -750,8 +1369,6 @@ impl Scratch {
 fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize, counters: &ServiceCounters) {
     let mut scratch = Scratch::new(worker);
     let mut handle = sched.handle(worker);
-    let mut flushed = WorkerCounters::default();
-    let mut since_flush = 0u32;
     loop {
         match handle.pop_traced() {
             Some((item, src)) => {
@@ -763,17 +1380,12 @@ fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize, counters: &Se
                         .steals
                         .fetch_add(1, Ordering::Relaxed);
                 }
-                process_item(item, &mut scratch, &mut handle, src);
+                process_item(item, &mut scratch, &mut handle, sched, src);
                 handle.on_node_done();
-                since_flush += 1;
-                if since_flush >= 256 {
-                    counters.flush_worker(&handle.counters(), &mut flushed);
-                    since_flush = 0;
-                }
+                counters.publish(worker, &handle.counters());
             }
             None => {
-                counters.flush_worker(&handle.counters(), &mut flushed);
-                since_flush = 0;
+                counters.publish(worker, &handle.counters());
                 // An idle worker's suspended delta frames are
                 // unreachable (no queued item can match them anymore);
                 // recycle them so a finished big job's frames don't
@@ -789,13 +1401,19 @@ fn resident_loop<S: Scheduler<WorkItem>>(sched: &S, worker: usize, counters: &Se
     }
 }
 
-fn process_item<H: WorkerHandle<WorkItem>>(
+fn process_item<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
     item: WorkItem,
     scratch: &mut Scratch,
     handle: &mut H,
+    sched: &S,
     src: PopSource,
 ) {
-    let WorkItem { job, work } = item;
+    let WorkItem { job, work, urgent } = item;
+    if urgent {
+        // Pairs with the pre-inject bump: the urgent item has left the
+        // shared queue, so the every-pop fairness poll can relax again.
+        job.admission.lane_hint.pending.fetch_sub(1, Ordering::Relaxed);
+    }
     // Contain panics (debug assertions, engine bugs): the one-shot
     // engine propagates them through `thread::scope`, but a resident
     // worker must survive — an escaped panic here would kill the thread
@@ -804,7 +1422,7 @@ fn process_item<H: WorkerHandle<WorkItem>>(
     // unwind (plain buffers and counters), so it may keep serving other
     // jobs.
     let run = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| match work {
-        Work::Setup => setup_job(&job, handle),
+        Work::Setup => setup_job(&job, handle, sched),
         Work::Node(node) => {
             job.ctl.check_deadline();
             // A stopped job (cancelled, past-deadline, or PVC already
@@ -826,6 +1444,12 @@ fn process_item<H: WorkerHandle<WorkItem>>(
         // completion count finalizes it with `Termination::Failed`.
         job.failed.store(true, Ordering::SeqCst);
         job.ctl.stop.store(true, Ordering::SeqCst);
+    }
+    // Release the retired item's tenant-quota charge (mirrors every
+    // `live_nodes` increment) — this is the admission layer's quota
+    // release point on the node axis.
+    if let Some(t) = &job.tenant {
+        t.nodes.fetch_sub(1, Ordering::Relaxed);
     }
     if job.live_nodes.fetch_sub(1, Ordering::SeqCst) == 1 {
         // `finalize` itself can assert (debug registry invariants); a
@@ -877,8 +1501,14 @@ where
         // Increment before the item becomes visible so the job's live
         // count can never reach zero while a node sits in a queue.
         self.job.live_nodes.fetch_add(1, Ordering::SeqCst);
-        self.inner
-            .push(WorkItem { job: Arc::clone(self.job), work: Work::Node(AnyNode::from(item)) });
+        if let Some(t) = &self.job.tenant {
+            t.nodes.fetch_add(1, Ordering::Relaxed);
+        }
+        self.inner.push(WorkItem {
+            job: Arc::clone(self.job),
+            work: Work::Node(AnyNode::from(item)),
+            urgent: false,
+        });
     }
 
     fn pop_traced(&mut self) -> Option<(NodePayload<T>, PopSource)> {
@@ -899,8 +1529,16 @@ where
 }
 
 /// The job-setup stage, run on a worker: preparation pipeline, initial
-/// bound, trivial answers, and the root-node push.
-fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
+/// bound, lane refinement, trivial answers, and the root-node push.
+fn setup_job<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
+    job: &Arc<JobInner>,
+    handle: &mut H,
+    sched: &S,
+) {
+    #[cfg(test)]
+    if job.panic_in_setup {
+        panic!("injected setup panic (test hook)");
+    }
     let g: &Graph = job.problem.graph();
     let (p, k) = match &job.problem {
         // ub = k+1 keeps the high-degree rule sound for covers ≤ k.
@@ -911,6 +1549,14 @@ fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
     };
     let forced = p.forced_cover.len() as u32;
     let n_resid = p.residual.graph.num_vertices();
+    // Prep-time QoS classification (the issue's "classified cheaply at
+    // prep time by reduced-graph size"): the admission-time estimate
+    // used the raw input size, which over-classifies reducible graphs
+    // into the throughput lane. Explicit priorities are never touched.
+    if !job.explicit_lane {
+        let lane = if n_resid <= job.latency_threshold { Lane::Latency } else { Lane::Throughput };
+        job.lane.store(lane.index() as u8, Ordering::Relaxed);
+    }
     let summary = PrepSummary {
         n_original: g.num_vertices(),
         n_residual: n_resid,
@@ -984,18 +1630,43 @@ fn setup_job<H: WorkerHandle<WorkItem>>(job: &Arc<JobInner>, handle: &mut H) {
 
     if let Some(root) = root {
         job.live_nodes.fetch_add(1, Ordering::SeqCst);
-        handle.push(WorkItem { job: Arc::clone(job), work: Work::Node(root) });
+        if let Some(t) = &job.tenant {
+            t.nodes.fetch_add(1, Ordering::Relaxed);
+        }
+        let urgent = job.lane() == Lane::Latency;
+        let item = WorkItem { job: Arc::clone(job), work: Work::Node(root), urgent };
+        if urgent {
+            // Inject latency roots through the shared queue with the
+            // lane hint raised: a handle.push would land the root on
+            // this worker's private stack (or a FIFO shard) behind
+            // whatever big job's nodes are already queued — exactly the
+            // delay the latency lane exists to avoid.
+            job.admission.lane_hint.pending.fetch_add(1, Ordering::Relaxed);
+            job.counters.injected.fetch_add(1, Ordering::Relaxed);
+            sched.inject(item);
+        } else {
+            handle.push(item);
+        }
     }
 }
 
 /// Publish a finished job's solution (first writer wins) and wake the
-/// waiters.
+/// waiters. The first writer also releases the job's admission
+/// accounting (live-job slot + tenant jobs quota) — exactly once per
+/// job, on every exit path (complete, cancelled, deadline, panic).
 fn store_outcome(job: &Arc<JobInner>, solution: Solution) {
-    let mut out = job.outcome.lock().unwrap();
-    if out.is_none() {
-        *out = Some(solution);
+    let first = {
+        let mut out = job.outcome.lock().unwrap();
+        let first = out.is_none();
+        if first {
+            *out = Some(solution);
+        }
+        job.done_cv.notify_all();
+        first
+    };
+    if first {
+        job.admission.on_job_finalized(job.tenant.as_ref());
     }
-    job.done_cv.notify_all();
 }
 
 /// Degenerate outcome for a job whose setup or finalization panicked:
@@ -1344,5 +2015,76 @@ mod tests {
         assert!(b.id() > a.id());
         a.wait();
         b.wait();
+    }
+
+    #[test]
+    fn wait_returns_under_injected_setup_panic() {
+        // Satellite: every exit path must wake the waiters. The injected
+        // panic unwinds out of setup before prep is published — the
+        // containment path must still finalize with `Failed`, and the
+        // pool must keep serving other jobs afterwards.
+        let svc = VcService::builder().workers(2).build();
+        let opts = JobOptions { panic_in_setup: true, ..JobOptions::default() };
+        let sol = svc.submit_with(Problem::mvc(generators::petersen()), opts).wait();
+        assert_eq!(sol.termination, Termination::Failed);
+        assert!(!sol.feasible);
+        // the panicking job released its admission slot and the workers
+        // survived: a normal job still runs to completion
+        let ok = svc.solve(Problem::mvc(generators::petersen()));
+        assert_eq!(ok.objective, 6);
+        assert_eq!(ok.termination, Termination::Complete);
+    }
+
+    #[test]
+    fn pre_expired_deadline_still_wakes_waiters() {
+        let svc = VcService::builder().workers(1).build();
+        let opts = JobOptions { timeout: Some(Duration::ZERO), ..JobOptions::default() };
+        let g = generators::erdos_renyi(30, 0.2, 7);
+        let sol = svc.submit_with(Problem::mvc(g), opts).wait();
+        assert_eq!(sol.termination, Termination::DeadlineExpired);
+        assert!(sol.timed_out());
+    }
+
+    #[test]
+    fn stats_reconcile_exactly_across_16_workers() {
+        // Satellite: the old 256-item flush cadence left per-worker
+        // deltas invisible to `stats()` until a worker happened to flush.
+        // With read-time folding the push/pop conservation ledger must
+        // reconcile exactly once the pool drains.
+        let svc = VcService::builder().workers(16).build();
+        let handles: Vec<JobHandle> = (0..32u64)
+            .map(|seed| svc.submit(Problem::mvc(generators::erdos_renyi(16, 0.25, seed))))
+            .collect();
+        for h in &handles {
+            h.wait();
+        }
+        // Workers publish cumulative totals after each item; the last
+        // publications can trail `wait` by an instant, so poll briefly.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        loop {
+            let s = svc.stats();
+            let consumed = s.pool.pops + s.pool.shared_pops + s.pool.steals;
+            let produced = s.pool.pushes + s.pool.injected;
+            if produced > 0
+                && consumed == produced
+                && s.admission.queued == 0
+                && s.admission.live_jobs == 0
+            {
+                assert_eq!(
+                    s.admission.dispatched_latency + s.admission.dispatched_throughput,
+                    32
+                );
+                assert_eq!(s.mvc.jobs, 32);
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "ledger failed to reconcile: consumed={consumed} produced={produced} \
+                 queued={} live_jobs={}",
+                s.admission.queued,
+                s.admission.live_jobs
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
     }
 }

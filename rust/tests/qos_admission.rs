@@ -1,0 +1,260 @@
+//! Admission & QoS tests for the resident service: bounded-queue
+//! backpressure, lane scheduling, tenant quotas, the delta-mode
+//! cancel-latency regression, and the differential guarantee that lane
+//! scheduling never changes objectives or witnesses.
+
+use cavc::graph::generators;
+use cavc::solver::{
+    oracle, JobOptions, Lane, NodeRepr, Problem, SchedulerKind, SolverConfig, SubmitError,
+    TenantQuota, Termination, VcService,
+};
+use std::time::{Duration, Instant};
+
+/// A dense graph whose exact MVC search runs far longer than any of
+/// these tests wait (p_hat blobs are reduction-resistant).
+fn long_running_graph() -> cavc::graph::Graph {
+    generators::p_hat(180, 0.35, 0.85, 11)
+}
+
+/// Poll `cond` until it holds or `deadline` elapses.
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t = Instant::now();
+    while t.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+#[test]
+fn full_admission_queue_rejects_try_submit_and_unblocks_blocked_submits() {
+    // max_live_jobs(1) holds everything behind the hog, so the bounded
+    // queue deterministically fills.
+    let svc = VcService::builder().workers(1).max_queued(2).max_live_jobs(1).build();
+    let hog = svc
+        .try_submit_with(
+            Problem::mvc(long_running_graph()),
+            JobOptions { priority: Some(Lane::Throughput), ..JobOptions::default() },
+        )
+        .expect("empty queue admits");
+    assert!(
+        wait_until(Duration::from_secs(10), || svc.stats().admission.live_jobs == 1),
+        "hog must dispatch"
+    );
+    let g1 = generators::erdos_renyi(14, 0.2, 1);
+    let g2 = generators::erdos_renyi(14, 0.2, 2);
+    let q1 = svc.try_submit(Problem::mvc(g1.clone())).expect("queue slot 1");
+    let q2 = svc.try_submit(Problem::mvc(g2.clone())).expect("queue slot 2");
+    // the queue is at its bound: backpressure, not growth
+    let err = svc.try_submit(Problem::mvc(generators::path(4))).unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull);
+    assert!(svc.stats().admission.rejected >= 1);
+    assert_eq!(svc.stats().admission.queued, 2);
+    // a bounded wait expires against the still-full queue
+    let t = Instant::now();
+    let err = svc
+        .submit_within(
+            Problem::mvc(generators::path(4)),
+            JobOptions::default(),
+            Duration::from_millis(50),
+        )
+        .unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull);
+    assert!(t.elapsed() >= Duration::from_millis(50));
+    // a blocked submit parks until the hog finalizes and frees capacity
+    let unblocked = std::thread::scope(|s| {
+        let svc = &svc;
+        let blocked = s.spawn(move || {
+            svc.submit_within(
+                Problem::mvc(generators::path(6)),
+                JobOptions::default(),
+                Duration::from_secs(30),
+            )
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert!(!blocked.is_finished(), "queue is full: the submit must block");
+        hog.cancel();
+        assert_eq!(hog.wait().termination, Termination::Cancelled);
+        blocked.join().expect("blocked submitter thread")
+    });
+    let h = unblocked.expect("freed capacity admits the blocked submit");
+    // everything held back by the hog now flows through in order
+    assert_eq!(q1.wait().objective, oracle::mvc_size(&g1));
+    assert_eq!(q2.wait().objective, oracle::mvc_size(&g2));
+    assert_eq!(h.wait().termination, Termination::Complete);
+    assert!(svc.stats().admission.blocked > Duration::ZERO);
+}
+
+#[test]
+fn latency_lane_jobs_complete_while_a_throughput_job_branches() {
+    let svc = VcService::builder().workers(2).build();
+    let big = svc.submit_with(
+        Problem::mvc(long_running_graph()),
+        JobOptions { priority: Some(Lane::Throughput), ..JobOptions::default() },
+    );
+    // let the hog get past setup and saturate both workers
+    std::thread::sleep(Duration::from_millis(20));
+    let mut small = Vec::new();
+    for seed in 0..8u64 {
+        let g = generators::erdos_renyi(15, 0.2, seed);
+        let opt = oracle::mvc_size(&g);
+        let h = svc.submit_with(
+            Problem::mvc(g),
+            JobOptions { priority: Some(Lane::Latency), ..JobOptions::default() },
+        );
+        small.push((h, opt));
+    }
+    for (i, (h, opt)) in small.iter().enumerate() {
+        let sol = h.wait();
+        assert_eq!(sol.termination, Termination::Complete, "latency job {i}");
+        assert_eq!(sol.objective, *opt, "latency job {i}");
+    }
+    assert!(big.try_result().is_none(), "throughput hog finished implausibly fast");
+    let stats = svc.stats();
+    assert_eq!(stats.admission.dispatched_latency, 8);
+    assert_eq!(stats.admission.dispatched_throughput, 1);
+    big.cancel();
+    assert_eq!(big.wait().termination, Termination::Cancelled);
+}
+
+#[test]
+fn tenant_job_quota_is_enforced_and_released() {
+    let svc = VcService::builder()
+        .workers(2)
+        .tenant_quota(TenantQuota { max_jobs: 2, max_live_nodes: u64::MAX })
+        .build();
+    let tenant = |name: &str| JobOptions {
+        priority: Some(Lane::Throughput),
+        tenant: Some(name.into()),
+        ..JobOptions::default()
+    };
+    let a = svc
+        .try_submit_with(Problem::mvc(long_running_graph()), tenant("acme"))
+        .expect("acme job 1");
+    let b = svc
+        .try_submit_with(Problem::mvc(long_running_graph()), tenant("acme"))
+        .expect("acme job 2");
+    let err =
+        svc.try_submit_with(Problem::mvc(generators::path(4)), tenant("acme")).unwrap_err();
+    assert_eq!(err, SubmitError::QuotaExceeded);
+    assert!(svc.stats().admission.quota_rejected >= 1);
+    // other tenants and untenanted jobs are unaffected
+    let other = svc
+        .try_submit_with(Problem::mvc(generators::path(5)), tenant("globex"))
+        .expect("other tenant admits");
+    let free = svc.try_submit(Problem::mvc(generators::path(6))).expect("untenanted admits");
+    // finalizing a job releases its quota slot (the release can trail
+    // `wait` by an instant, hence the bounded blocking submit)
+    a.cancel();
+    assert_eq!(a.wait().termination, Termination::Cancelled);
+    let c = svc
+        .submit_within(Problem::mvc(generators::path(7)), tenant("acme"), Duration::from_secs(30))
+        .expect("slot freed after finalization");
+    b.cancel();
+    b.wait();
+    assert_eq!(c.wait().termination, Termination::Complete);
+    other.wait();
+    free.wait();
+}
+
+#[test]
+fn tenant_live_node_quota_blocks_admission_while_a_job_runs() {
+    let svc = VcService::builder()
+        .workers(1)
+        .tenant_quota(TenantQuota { max_jobs: 100, max_live_nodes: 1 })
+        .build();
+    let opts = JobOptions {
+        priority: Some(Lane::Throughput),
+        tenant: Some("acme".into()),
+        ..JobOptions::default()
+    };
+    let big = svc
+        .try_submit_with(Problem::mvc(long_running_graph()), opts.clone())
+        .expect("first job");
+    // The job's setup item is charged against the tenant at admission
+    // and stays >= 1 while the search runs: the node quota is saturated.
+    let err = svc.try_submit_with(Problem::mvc(generators::path(4)), opts.clone()).unwrap_err();
+    assert_eq!(err, SubmitError::QuotaExceeded);
+    big.cancel();
+    assert_eq!(big.wait().termination, Termination::Cancelled);
+    // every node charge is released by the time the outcome publishes
+    let next = svc
+        .submit_within(Problem::mvc(generators::path(5)), opts, Duration::from_secs(30))
+        .expect("node charges released");
+    assert_eq!(next.wait().termination, Termination::Complete);
+}
+
+#[test]
+fn cancel_mid_descent_is_bounded_in_delta_mode_on_both_schedulers() {
+    // Regression (cancel/deadline latency): the delta representation
+    // descends in place without popping, so a 1-worker pool used to
+    // observe the stop flag only at pop time — cancelling mid-descent
+    // waited for the whole subtree. The in-descent stop poll (every 64
+    // in-place nodes) bounds it.
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(1).scheduler(sched).build();
+        let h = svc.submit_with(
+            Problem::mvc(long_running_graph()),
+            JobOptions {
+                config: Some(SolverConfig::proposed().with_node_repr(NodeRepr::Delta)),
+                priority: Some(Lane::Throughput),
+                ..JobOptions::default()
+            },
+        );
+        // let the single worker get deep into the in-place descent
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(
+            h.try_result().is_none(),
+            "{}: dense search cannot finish in 30ms",
+            sched.name()
+        );
+        let t = Instant::now();
+        h.cancel();
+        let sol = h.wait();
+        assert_eq!(sol.termination, Termination::Cancelled, "{}", sched.name());
+        assert!(
+            t.elapsed() < Duration::from_secs(10),
+            "{}: cancel-to-wait took {:?} — in-descent stop poll broken",
+            sched.name(),
+            t.elapsed()
+        );
+    }
+}
+
+#[test]
+fn lane_scheduling_never_changes_objectives_or_witnesses() {
+    // Lanes change only *when* work is picked up, never what is
+    // computed: mixed-priority submissions must produce oracle-exact
+    // objectives and verified witnesses on both schedulers and both
+    // node representations.
+    let lanes = [None, Some(Lane::Latency), Some(Lane::Throughput)];
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        for repr in [NodeRepr::Owned, NodeRepr::Delta] {
+            let svc = VcService::builder().workers(3).scheduler(sched).build();
+            let mut handles = Vec::new();
+            for seed in 0..6u64 {
+                let g = generators::erdos_renyi(18, 0.22, seed);
+                let opt = oracle::mvc_size(&g);
+                let opts = JobOptions {
+                    config: Some(SolverConfig::proposed().with_node_repr(repr)),
+                    extract_witness: true,
+                    priority: lanes[seed as usize % lanes.len()],
+                    ..JobOptions::default()
+                };
+                handles.push((seed, g.clone(), opt, svc.submit_with(Problem::mvc(g), opts)));
+            }
+            for (seed, g, opt, h) in handles {
+                let sol = h.wait();
+                let tag = format!("{} {} seed {seed}", sched.name(), repr.name());
+                assert_eq!(sol.objective, opt, "{tag}: lane changed the objective");
+                assert_eq!(sol.termination, Termination::Complete, "{tag}");
+                let w = sol.witness.as_ref().expect("witness");
+                assert_eq!(w.len() as u32, opt, "{tag}: witness length");
+                assert!(g.is_vertex_cover(w), "{tag}: witness invalid");
+                assert_eq!(sol.witness_verified, Some(true), "{tag}");
+            }
+        }
+    }
+}
