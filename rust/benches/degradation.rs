@@ -1,0 +1,131 @@
+//! Graceful degradation: throughput and small-job latency of one
+//! resident service driving an over-budget job mix, memory watchdog on
+//! vs off.
+//!
+//! The mix is a batch of medium throughput-lane MVC jobs (the ledger
+//! pressure) plus a serial stream of small latency-lane jobs (the
+//! latency probes). Two modes on identical traffic:
+//!
+//! * `watchdog-off` — the default limits (far above what the mix ever
+//!   charges): every job dispatches immediately and runs concurrently;
+//! * `watchdog-on`  — a 1-byte soft limit, so the service is over
+//!   budget whenever any job is live: throughput-lane dispatch is held
+//!   until the ledger drains (jobs serialize) and new jobs are forced
+//!   onto the delta node representation. Latency-lane probes bypass the
+//!   gate by design.
+//!
+//! Degradation must change *when* work runs, never what it computes:
+//! both modes are asserted to produce identical, oracle-exact answers.
+//! Results go to stdout and `bench_out/degradation.csv`. `CAVC_SMOKE=1`
+//! shrinks the mix for the CI smoke job (trajectory only, no
+//! thresholds).
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{oracle, JobOptions, Lane, Problem, Termination, VcService};
+use std::time::Instant;
+
+/// Medium jobs: enough search to keep the ledger charged.
+fn medium_mix(n: usize) -> Vec<Graph> {
+    (0..n).map(|i| generators::erdos_renyi(36, 0.15, 0xD15C_0000 + i as u64)).collect()
+}
+
+/// Small latency probes (oracle-checkable).
+fn probe_mix(n: usize) -> Vec<Graph> {
+    (0..n).map(|i| generators::erdos_renyi(15, 0.22, 0xBEEF_0000 + i as u64)).collect()
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    let idx = ((p / 100.0) * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx.min(sorted_ms.len() - 1)]
+}
+
+/// One mode: submit the medium batch up front, then stream the probes,
+/// then wait out the batch. Returns (wall seconds, probe latencies in
+/// ms, medium answers, probe answers).
+fn run_mode(
+    medium: &[Graph],
+    probes: &[Graph],
+    workers: usize,
+    watchdog: bool,
+) -> (f64, Vec<f64>, Vec<u32>, Vec<u32>) {
+    let mut b = VcService::builder().workers(workers);
+    if watchdog {
+        // 1 byte: over the soft limit whenever anything is live, so the
+        // run exercises the held-dispatch + forced-delta degraded mode.
+        b = b.mem_soft(1);
+    }
+    let svc = b.build();
+    let t0 = Instant::now();
+    let handles: Vec<_> = medium
+        .iter()
+        .map(|g| {
+            svc.submit_with(
+                Problem::mvc(g.clone()),
+                JobOptions { priority: Some(Lane::Throughput), ..JobOptions::default() },
+            )
+        })
+        .collect();
+    let mut lat_ms = Vec::with_capacity(probes.len());
+    let mut probe_ans = Vec::with_capacity(probes.len());
+    for g in probes {
+        let t = Instant::now();
+        let h = svc.submit_with(
+            Problem::mvc(g.clone()),
+            JobOptions { priority: Some(Lane::Latency), ..JobOptions::default() },
+        );
+        let sol = h.wait();
+        assert_eq!(sol.termination, Termination::Complete);
+        lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+        probe_ans.push(sol.objective);
+    }
+    let medium_ans: Vec<u32> = handles
+        .iter()
+        .map(|h| {
+            let sol = h.wait();
+            assert_eq!(sol.termination, Termination::Complete);
+            sol.objective
+        })
+        .collect();
+    (t0.elapsed().as_secs_f64(), lat_ms, medium_ans, probe_ans)
+}
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let (n_medium, n_probe) = if smoke { (6, 10) } else { (24, 60) };
+    let workers = 3;
+    let medium = medium_mix(n_medium);
+    let probes = probe_mix(n_probe);
+    let probe_expect: Vec<u32> = probes.iter().map(oracle::mvc_size).collect();
+    println!(
+        "# degradation — {n_medium} medium + {n_probe} probe jobs, {workers} workers, watchdog on vs off"
+    );
+
+    let mut rows = Vec::new();
+    let mut answers: Vec<(Vec<u32>, Vec<u32>)> = Vec::new();
+    println!(
+        "{:<14} {:>9} {:>10} {:>10} {:>10}",
+        "mode", "wall s", "jobs/s", "p50 ms", "p99 ms"
+    );
+    for (mode, watchdog) in [("watchdog-off", false), ("watchdog-on", true)] {
+        let (wall, lat_ms, med_ans, probe_ans) = run_mode(&medium, &probes, workers, watchdog);
+        assert_eq!(probe_ans, probe_expect, "{mode}: probe answers must be oracle-exact");
+        let mut s = lat_ms.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let p50 = percentile(&s, 50.0);
+        let p99 = percentile(&s, 99.0);
+        let jobs_s = (n_medium + n_probe) as f64 / wall.max(1e-9);
+        println!("{mode:<14} {wall:>9.3} {jobs_s:>10.1} {p50:>10.3} {p99:>10.3}");
+        rows.push(format!("{mode},{},{workers},{wall},{jobs_s},{p50},{p99}", n_medium + n_probe));
+        answers.push((med_ans, probe_ans));
+    }
+    assert_eq!(
+        answers[0], answers[1],
+        "degradation changed an answer — it may only change scheduling"
+    );
+
+    let header = "mode,jobs,workers,wall_s,jobs_per_s,p50_ms,p99_ms";
+    match cavc::harness::tables::write_csv("degradation", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

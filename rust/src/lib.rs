@@ -106,6 +106,30 @@
 //! are lane-invariant); `benches/qos_latency.rs` measures the small-job
 //! p50/p99 latency win against a concurrently branching hog.
 //!
+//! **Failure model & degradation ladder.** The service degrades in
+//! rungs rather than failing whole (full treatment in
+//! [`solver::service`], "Failure model & degradation ladder"):
+//! a job that runs out of deadline or is cancelled still returns an
+//! *anytime* result — the best objective bound seen plus, for MVC/MIS
+//! with witness extraction, a feasible verified cover of exactly that
+//! size (the registry's shortest-wins root witness slot, re-anchored at
+//! finalization, with the greedy cover as the floor);
+//! [`solver::JobHandle::progress`] exposes the live bound / nodes
+//! expanded / elapsed while the job runs. A worker panic marks the job
+//! [`solver::Termination::Failed`] with the captured panic message on
+//! the `Solution`, and under an opt-in [`solver::RetryPolicy`] the
+//! service reruns it on the sequential solver — same prep pipeline, no
+//! shared-state machinery — surfacing
+//! [`solver::Termination::Recovered`] with a trusted answer; jobs that
+//! exhaust their attempts are quarantined and counted. A pool-level
+//! memory watchdog meters queued payload + pinned bytes against
+//! soft/hard limits: past soft it parks throughput-lane dispatch and
+//! forces the delta node representation, past hard it sheds new
+//! submissions with [`solver::SubmitError::MemoryPressure`]. All of it
+//! is exercised by a deterministic, seeded fault-injection harness
+//! ([`solver::FaultPlan`], `tests/chaos.rs`) and measured by
+//! `benches/degradation.rs`.
+//!
 //! ## Witnesses: every engine path hands back a verifiable cover
 //!
 //! All solver paths — sequential, one-shot parallel, and service jobs

@@ -14,7 +14,9 @@
 //! Options: --variant proposed|yamout|no-lb|sequential, --workers N,
 //! --timeout SECS, --k K, --out FILE, --no-accel, --seed S. Batch mode
 //! (`--jobs`) additionally takes the admission/QoS flags --lane
-//! latency|throughput, --max-queued N, --submit-timeout SECS.
+//! latency|throughput, --max-queued N, --submit-timeout SECS, plus the
+//! degradation flags --retry N, --mem-soft BYTES, --mem-hard BYTES; it
+//! exits non-zero if any job ends `Termination::Failed`.
 
 use cavc::bail;
 use cavc::graph::{generators, io, Graph};
@@ -22,8 +24,8 @@ use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
 use cavc::solver::engine::EngineStats;
 use cavc::solver::{
-    self, witness, JobHandle, Lane, Problem, SchedulerKind, SolverConfig, Termination, VcService,
-    Variant,
+    self, witness, JobHandle, Lane, Problem, RetryPolicy, SchedulerKind, SolverConfig, Termination,
+    VcService, Variant,
 };
 
 use cavc::util::cli::Args;
@@ -33,7 +35,7 @@ use std::time::{Duration, Instant};
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
     "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth", "lane", "submit-timeout",
-    "max-queued",
+    "max-queued", "retry", "mem-soft", "mem-hard",
 ];
 
 fn main() {
@@ -95,6 +97,14 @@ fn print_help() {
         \x20                                            block, exerting backpressure on the driver)\n\
         \x20                   [--submit-timeout SECS] (batch: give up on a submit stuck behind\n\
         \x20                                            admission backpressure after SECS)\n\
+        \x20                   [--retry N]             (batch: rerun a worker-panicked job on the\n\
+        \x20                                            sequential solver up to N times before\n\
+        \x20                                            surfacing it as failed)\n\
+        \x20                   [--mem-soft BYTES]      (batch: memory-watchdog soft limit — past it the\n\
+        \x20                                            service holds throughput-lane dispatch and\n\
+        \x20                                            forces the delta node representation)\n\
+        \x20                   [--mem-hard BYTES]      (batch: memory-watchdog hard limit — submits\n\
+        \x20                                            past it shed with a MemoryPressure error)\n\
          pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check]\n         mis <graph|dataset> [--variant ...] [--check]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
@@ -172,8 +182,10 @@ fn batch_specs(args: &Args, list: &str) -> Result<Vec<String>> {
 
 /// One resident service shaped by the CLI flags (workers / scheduler /
 /// per-job solver knobs all come in through the parsed config; the
-/// admission-queue bound comes in separately from `--max-queued`).
-fn build_service(cfg: &SolverConfig, max_queued: Option<usize>) -> VcService {
+/// admission-queue bound, retry policy, and memory-watchdog limits come
+/// in separately from `--max-queued` / `--retry` / `--mem-soft` /
+/// `--mem-hard`).
+fn build_service(args: &Args, cfg: &SolverConfig, max_queued: Option<usize>) -> Result<VcService> {
     let mut b = VcService::builder().config(cfg.clone()).scheduler(cfg.scheduler);
     if let Some(w) = cfg.workers {
         b = b.workers(w);
@@ -181,7 +193,20 @@ fn build_service(cfg: &SolverConfig, max_queued: Option<usize>) -> VcService {
     if let Some(q) = max_queued {
         b = b.max_queued(q);
     }
-    b.build()
+    if let Some(n) = args.get("retry") {
+        let attempts: u32 = n.parse().context("--retry")?;
+        if attempts == 0 {
+            bail!("--retry must be >= 1 (omit the flag to disable failure recovery)");
+        }
+        b = b.retry(RetryPolicy { attempts, ..RetryPolicy::default() });
+    }
+    if let Some(s) = args.get("mem-soft") {
+        b = b.mem_soft(s.parse().context("--mem-soft")?);
+    }
+    if let Some(s) = args.get("mem-hard") {
+        b = b.mem_hard(s.parse().context("--mem-hard")?);
+    }
+    Ok(b.build())
 }
 
 /// Batch mode: feed every graph spec through one resident service as
@@ -204,7 +229,7 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
     let submit_timeout: f64 = args.get_parse("submit-timeout", 0.0).map_err(Error::msg)?;
     let max_queued: Option<usize> =
         args.get("max-queued").map(str::parse).transpose().context("--max-queued")?;
-    let svc = build_service(&cfg, max_queued);
+    let svc = build_service(args, &cfg, max_queued)?;
     let t0 = Instant::now();
     let mut jobs: Vec<(String, JobHandle)> = Vec::with_capacity(specs.len());
     for spec in &specs {
@@ -235,6 +260,7 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
 
     let mut agg = EngineStats::default();
     let mut check_failures: Vec<String> = Vec::new();
+    let mut failed_jobs: Vec<String> = Vec::new();
     println!(
         "{:<28} {:>10} {:>12} {:>10}  {}",
         "graph", "answer", "tree nodes", "elapsed", "status"
@@ -251,8 +277,15 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
             Termination::Complete => "ok",
             Termination::DeadlineExpired => "timeout",
             Termination::Cancelled => "cancelled",
+            Termination::Recovered => "recovered",
             Termination::Failed => "failed",
         };
+        if sol.termination == Termination::Failed {
+            failed_jobs.push(match &sol.failure {
+                Some(msg) => format!("{spec} ({msg})"),
+                None => spec.clone(),
+            });
+        }
         // Witness verdict: a feasible PVC / any MVC answer must carry a
         // verified witness under --check; infeasible PVC has nothing to
         // witness.
@@ -275,6 +308,11 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
             status,
             checked
         );
+    }
+    // A Failed job produced no trusted answer (it exhausted any retry
+    // budget): the batch as a whole must exit non-zero so drivers see it.
+    if !failed_jobs.is_empty() {
+        bail!("{} job(s) failed: {}", failed_jobs.len(), failed_jobs.join(", "));
     }
     if !check_failures.is_empty() {
         bail!(

@@ -249,6 +249,7 @@ impl EngineCfg {
             extract_witness: self.extract_witness,
             node_repr: self.node_repr,
             max_pin_depth: self.max_pin_depth,
+            fault: None,
         }
     }
 }
@@ -281,6 +282,11 @@ pub struct JobCfg {
     pub node_repr: NodeRepr,
     /// Delta mode: chain-length bound forcing periodic materialization.
     pub max_pin_depth: u32,
+    /// Deterministic fault injector for chaos testing (see
+    /// [`crate::solver::faults`]). `None` on every production path; when
+    /// set, the engine consults it at node-processing, split, and
+    /// allocation points.
+    pub fault: Option<Arc<crate::solver::faults::FaultInjector>>,
 }
 
 impl Default for JobCfg {
@@ -353,6 +359,9 @@ pub struct EngineStats {
     /// Witness log buffers recycled through the worker pools instead of
     /// freed.
     pub logs_recycled: u64,
+    /// Worker panics contained while processing this job's nodes (the
+    /// service's per-job panic containment; includes injected faults).
+    pub panics: u64,
     /// Per-activity busy nanoseconds (all workers merged).
     pub activity: [u64; NUM_ACTIVITIES],
     /// Per-worker scheduler counters, indexed by worker id (Figure-4
@@ -393,6 +402,7 @@ impl EngineStats {
         self.pinned_frame_bytes += other.pinned_frame_bytes;
         self.witness_log_bytes += other.witness_log_bytes;
         self.logs_recycled += other.logs_recycled;
+        self.panics += other.panics;
         for i in 0..NUM_ACTIVITIES {
             self.activity[i] += other.activity[i];
         }
@@ -603,6 +613,13 @@ pub(crate) struct JobCtl {
     pub(crate) live_bytes: AtomicU64,
     /// High-water mark of `live_bytes` (instrumented runs only).
     pub(crate) peak_live_bytes: AtomicU64,
+    /// Search-tree nodes expanded so far, published every 64 nodes by
+    /// the inner descent loop — feeds `JobHandle::progress()` without a
+    /// stats-sink lock on the hot path.
+    pub(crate) nodes_expanded: AtomicU64,
+    /// Memory-watchdog override: when set (soft-limit pressure), new
+    /// right children use [`NodeRepr::Delta`] regardless of `cfg`.
+    pub(crate) forced_delta: AtomicBool,
     pub(crate) stats_sink: Mutex<EngineStats>,
 }
 
@@ -621,8 +638,22 @@ impl JobCtl {
             timed_out: AtomicBool::new(false),
             live_bytes: AtomicU64::new(0),
             peak_live_bytes: AtomicU64::new(0),
+            nodes_expanded: AtomicU64::new(0),
+            forced_delta: AtomicBool::new(false),
             stats_sink: Mutex::new(EngineStats::default()),
             cfg,
+        }
+    }
+
+    /// Effective node representation for new children: the configured
+    /// repr, or [`NodeRepr::Delta`] when the memory watchdog has forced
+    /// the compact representation on this job.
+    #[inline]
+    pub(crate) fn node_repr(&self) -> NodeRepr {
+        if self.forced_delta.load(Ordering::Relaxed) {
+            NodeRepr::Delta
+        } else {
+            self.cfg.node_repr
         }
     }
 
@@ -792,6 +823,9 @@ pub(crate) struct WorkerCtx<T> {
     /// cumulative totals across jobs; flushes record deltas).
     flushed_pool_hits: u64,
     flushed_pool_misses: u64,
+    /// `stats.tree_nodes` already published to `JobCtl::nodes_expanded`
+    /// (progress snapshots); reset with `stats` at every flush.
+    published_nodes: u64,
     timer: ActivityTimer,
     deadline_tick: u32,
 }
@@ -812,6 +846,7 @@ impl<T: DegElem> WorkerCtx<T> {
             stats: EngineStats::default(),
             flushed_pool_hits: 0,
             flushed_pool_misses: 0,
+            published_nodes: 0,
             timer: if instrument { ActivityTimer::enabled() } else { ActivityTimer::disabled() },
             deadline_tick: 0,
         }
@@ -860,8 +895,11 @@ impl<T: DegElem> WorkerCtx<T> {
         self.stats.pool_misses += misses - self.flushed_pool_misses;
         self.flushed_pool_hits = hits;
         self.flushed_pool_misses = misses;
+        ctl.nodes_expanded
+            .fetch_add(self.stats.tree_nodes - self.published_nodes, Ordering::Relaxed);
         ctl.stats_sink.lock().unwrap().merge(&self.stats);
         self.stats = EngineStats::default();
+        self.published_nodes = 0;
     }
 
     /// Flush this worker's timer, pool, and scheduler counters into its
@@ -1034,6 +1072,9 @@ fn track_alloc<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, len: us
     let bytes = (len * T::BYTES) as u64;
     ctx.stats.payload_nodes += 1;
     ctx.stats.payload_bytes += bytes;
+    if let Some(f) = &shared.ctl.cfg.fault {
+        f.on_alloc();
+    }
     if shared.ctl.cfg.instrument {
         let live = shared.ctl.live_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
         shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
@@ -1083,7 +1124,7 @@ pub(crate) fn process<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
 ) {
     match item {
         NodePayload::Owned(node) => {
-            let track = shared.ctl.cfg.node_repr == NodeRepr::Delta && ctx.frontier.is_none();
+            let track = shared.ctl.node_repr() == NodeRepr::Delta && ctx.frontier.is_none();
             let mut d = Descent::new(node, track);
             if track {
                 d.journal = ctx.upool.acquire(64);
@@ -1481,18 +1522,27 @@ fn descend<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     let extract = shared.ctl.cfg.extract_witness;
     loop {
         ctx.stats.tree_nodes += 1;
+        if let Some(f) = &shared.ctl.cfg.fault {
+            f.on_node();
+        }
 
         // Stop flags (cancel / deadline) are otherwise only observed at
         // pop time, but this loop descends in place without popping —
         // under the delta representation a single worker can live here
         // for the whole search. Poll every 64 in-place nodes so
         // cancellation latency stays bounded by a few branch steps, not
-        // by the depth of the descent.
-        if ctx.stats.tree_nodes & 63 == 0
-            && (shared.ctl.stop.load(Ordering::SeqCst) || shared.ctl.check_deadline())
-        {
-            complete(shared.ctl, d.node.ctx);
-            return;
+        // by the depth of the descent. The same cadence publishes the
+        // expanded-node count for `JobHandle::progress()`.
+        if ctx.stats.tree_nodes & 63 == 0 {
+            shared
+                .ctl
+                .nodes_expanded
+                .fetch_add(ctx.stats.tree_nodes - ctx.published_nodes, Ordering::Relaxed);
+            ctx.published_nodes = ctx.stats.tree_nodes;
+            if shared.ctl.stop.load(Ordering::SeqCst) || shared.ctl.check_deadline() {
+                complete(shared.ctl, d.node.ctx);
+                return;
+            }
         }
 
         // ---- reduce (Alg. 2 line 2) ----
@@ -1544,6 +1594,9 @@ fn descend<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
                     return;
                 }
                 Scan::Split { first_size, dmin, dmax } => {
+                    if let Some(f) = &shared.ctl.cfg.fault {
+                        f.on_split();
+                    }
                     branch_on_components(shared, g, ctx, handle, d, first_size, dmin, dmax);
                     return;
                 }

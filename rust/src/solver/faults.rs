@@ -1,0 +1,264 @@
+//! Deterministic fault injection for the resident service.
+//!
+//! A [`FaultPlan`] is a small, seed-derived description of *where* a job
+//! should misbehave: a panic at the Nth processed node, at the Nth
+//! component split, during setup or finalization; a forced
+//! allocation-failure path at the Nth tracked allocation; or an
+//! artificially stalled worker. A [`FaultInjector`] carries the plan
+//! plus the trigger counters and is threaded through `JobCfg` so the
+//! engine's hot paths can consult it with one relaxed atomic bump.
+//!
+//! Everything is derived from a single `u64` seed through
+//! [`SplitMix64`], so a failing chaos run is replayed exactly by
+//! re-running with the same seed (`CAVC_FAULT_SEED`). The injector
+//! never fires in production builds unless explicitly wired via
+//! `JobOptions::fault` or the environment — the `Option<Arc<..>>` in
+//! `JobCfg` is `None` on every default path.
+
+use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Marker prefix on every injected panic payload, so tests (and the
+/// service's failure log) can tell injected faults from real bugs.
+pub const INJECTED_PANIC_TAG: &str = "cavc-fault:";
+
+/// A deterministic, seed-derived description of one job's faults.
+///
+/// All trigger points are 1-based ordinals over the job's own event
+/// stream (nodes processed, splits performed, allocations tracked), so
+/// the same plan fires at the same logical point regardless of worker
+/// count or scheduler — the *interleaving* varies, the fault does not.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Seed this plan was derived from (kept for replay logs).
+    pub seed: u64,
+    /// Panic when the job processes its Nth search node.
+    pub panic_at_node: Option<u64>,
+    /// Panic when the job performs its Nth component split.
+    pub panic_at_split: Option<u64>,
+    /// Panic inside job setup (prepare/root-push).
+    pub panic_in_setup: bool,
+    /// Panic inside finalization (outcome assembly).
+    pub panic_in_finalize: bool,
+    /// Take the forced allocation-failure path at the Nth tracked
+    /// payload allocation.
+    pub alloc_fail_at: Option<u64>,
+    /// Stall the worker that reaches the Nth node for the given
+    /// duration (models a descheduled/preempted worker, not a crash).
+    pub stall_at_node: Option<(u64, Duration)>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (useful as a chaos-suite control).
+    pub fn none(seed: u64) -> Self {
+        FaultPlan {
+            seed,
+            panic_at_node: None,
+            panic_at_split: None,
+            panic_in_setup: false,
+            panic_in_finalize: false,
+            alloc_fail_at: None,
+            stall_at_node: None,
+        }
+    }
+
+    /// Derive a plan from a seed. Exactly one *primary* fault is chosen
+    /// (panic at node/split/setup/finalize, or an allocation failure);
+    /// with ~25% probability an unrelated worker stall is layered on
+    /// top so crashes are exercised under skewed progress too.
+    pub fn from_seed(seed: u64) -> Self {
+        let mut rng = SplitMix64::new(seed);
+        let mut plan = FaultPlan::none(seed);
+        // Ordinals are kept small so faults land while the job is still
+        // branching (chaos graphs are sized to expand >> 64 nodes).
+        match rng.next_below(5) {
+            0 => plan.panic_at_node = Some(1 + rng.next_below(48)),
+            1 => plan.panic_at_split = Some(1 + rng.next_below(8)),
+            2 => plan.panic_in_setup = true,
+            3 => plan.panic_in_finalize = true,
+            _ => plan.alloc_fail_at = Some(1 + rng.next_below(48)),
+        }
+        if rng.chance(0.25) {
+            let ms = 1 + rng.next_below(20);
+            plan.stall_at_node = Some((1 + rng.next_below(32), Duration::from_millis(ms)));
+        }
+        plan
+    }
+
+    /// Read a plan from `CAVC_FAULT_SEED` (decimal u64), if set.
+    pub fn from_env() -> Option<Self> {
+        let seed = std::env::var("CAVC_FAULT_SEED").ok()?.trim().parse::<u64>().ok()?;
+        Some(Self::from_seed(seed))
+    }
+
+    /// One-line replay log entry (`seed=.. faults=[..]`).
+    pub fn describe(&self) -> String {
+        let mut faults = Vec::new();
+        if let Some(n) = self.panic_at_node {
+            faults.push(format!("panic@node:{n}"));
+        }
+        if let Some(n) = self.panic_at_split {
+            faults.push(format!("panic@split:{n}"));
+        }
+        if self.panic_in_setup {
+            faults.push("panic@setup".to_string());
+        }
+        if self.panic_in_finalize {
+            faults.push("panic@finalize".to_string());
+        }
+        if let Some(n) = self.alloc_fail_at {
+            faults.push(format!("alloc-fail:{n}"));
+        }
+        if let Some((n, d)) = self.stall_at_node {
+            faults.push(format!("stall@node:{n}:{}ms", d.as_millis()));
+        }
+        if faults.is_empty() {
+            faults.push("none".to_string());
+        }
+        format!("seed={} faults=[{}]", self.seed, faults.join(","))
+    }
+}
+
+/// Shared trigger state for one job's [`FaultPlan`]. Hot-path hooks are
+/// a relaxed fetch-add plus a compare against the plan's ordinals; with
+/// no plan wired in, none of this exists (`Option<Arc<FaultInjector>>`
+/// is `None`).
+#[derive(Debug)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    nodes: AtomicU64,
+    splits: AtomicU64,
+    allocs: AtomicU64,
+    /// Panics actually raised by this injector (setup/node/split/
+    /// finalize/alloc all count; stalls do not).
+    fired_panics: AtomicU64,
+    fired_stalls: AtomicU64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> Self {
+        FaultInjector {
+            plan,
+            nodes: AtomicU64::new(0),
+            splits: AtomicU64::new(0),
+            allocs: AtomicU64::new(0),
+            fired_panics: AtomicU64::new(0),
+            fired_stalls: AtomicU64::new(0),
+        }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Panics this injector has raised so far.
+    pub fn fired_panics(&self) -> u64 {
+        self.fired_panics.load(Ordering::Relaxed)
+    }
+
+    /// Worker stalls this injector has performed so far.
+    pub fn fired_stalls(&self) -> u64 {
+        self.fired_stalls.load(Ordering::Relaxed)
+    }
+
+    /// Hook: a search node is about to be processed.
+    pub fn on_node(&self) {
+        let n = self.nodes.fetch_add(1, Ordering::Relaxed) + 1;
+        if let Some((at, dur)) = self.plan.stall_at_node {
+            if n == at {
+                self.fired_stalls.fetch_add(1, Ordering::Relaxed);
+                std::thread::sleep(dur);
+            }
+        }
+        if self.plan.panic_at_node == Some(n) {
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("{INJECTED_PANIC_TAG} node #{n} (seed {})", self.plan.seed);
+        }
+    }
+
+    /// Hook: a component split is about to be performed.
+    pub fn on_split(&self) {
+        let n = self.splits.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.plan.panic_at_split == Some(n) {
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("{INJECTED_PANIC_TAG} split #{n} (seed {})", self.plan.seed);
+        }
+    }
+
+    /// Hook: a payload allocation was just tracked. Models the paper's
+    /// out-of-slots condition: the engine has no fallible-alloc path,
+    /// so the forced failure surfaces as a contained panic the service
+    /// must absorb exactly like a real allocator abort.
+    pub fn on_alloc(&self) {
+        let n = self.allocs.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.plan.alloc_fail_at == Some(n) {
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("{INJECTED_PANIC_TAG} allocation failure #{n} (seed {})", self.plan.seed);
+        }
+    }
+
+    /// Hook: job setup is running (after admission, before root push).
+    pub fn on_setup(&self) {
+        if self.plan.panic_in_setup {
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("{INJECTED_PANIC_TAG} setup (seed {})", self.plan.seed);
+        }
+    }
+
+    /// Hook: finalization is assembling the outcome.
+    pub fn on_finalize(&self) {
+        if self.plan.panic_in_finalize {
+            self.fired_panics.fetch_add(1, Ordering::Relaxed);
+            panic!("{INJECTED_PANIC_TAG} finalize (seed {})", self.plan.seed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plans_are_deterministic_and_pick_one_primary_fault() {
+        for seed in 0..500u64 {
+            let a = FaultPlan::from_seed(seed);
+            let b = FaultPlan::from_seed(seed);
+            assert_eq!(a, b, "seed {seed} not deterministic");
+            let primaries = [
+                a.panic_at_node.is_some(),
+                a.panic_at_split.is_some(),
+                a.panic_in_setup,
+                a.panic_in_finalize,
+                a.alloc_fail_at.is_some(),
+            ]
+            .iter()
+            .filter(|&&x| x)
+            .count();
+            assert_eq!(primaries, 1, "seed {seed}: {}", a.describe());
+        }
+    }
+
+    #[test]
+    fn injector_fires_at_exact_ordinals() {
+        let mut plan = FaultPlan::none(7);
+        plan.panic_at_node = Some(3);
+        let inj = FaultInjector::new(plan);
+        inj.on_node();
+        inj.on_node();
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| inj.on_node()))
+            .expect_err("third node must panic");
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.starts_with(INJECTED_PANIC_TAG), "payload: {msg}");
+        assert_eq!(inj.fired_panics(), 1);
+        // past the trigger, the hook is inert again
+        inj.on_node();
+        assert_eq!(inj.fired_panics(), 1);
+    }
+
+    #[test]
+    fn describe_round_trips_the_seed() {
+        let p = FaultPlan::from_seed(42);
+        assert!(p.describe().starts_with("seed=42 "));
+    }
+}

@@ -25,6 +25,7 @@
 //! original vertex ids — and can verify the result edge-by-edge.
 
 pub mod engine;
+pub mod faults;
 pub mod mis;
 pub mod greedy;
 pub mod occupancy;
@@ -42,10 +43,12 @@ use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
 pub use engine::NodeRepr;
 use occupancy::{Occupancy, OccupancyModel};
+pub use faults::{FaultInjector, FaultPlan};
 pub use sched::SchedulerKind;
 pub use service::{
-    default_service, AdmissionStats, JobHandle, JobOptions, Lane, Problem, ProblemKind,
-    ServiceStats, Solution, SubmitError, TenantQuota, Termination, VcService,
+    default_service, AdmissionStats, JobHandle, JobOptions, JobProgress, Lane, Problem,
+    ProblemKind, RetryPolicy, ServiceStats, Solution, SubmitError, TenantQuota, Termination,
+    VcService,
 };
 use std::time::{Duration, Instant};
 

@@ -190,6 +190,24 @@ impl OccupancyModel {
         ((slice / ADMISSION_ENTRY_BYTES) as usize).clamp(64, 4096)
     }
 
+    /// Default soft limit for the service's memory watchdog: the live-
+    /// bytes ledger (queued payloads + pinned snapshots across all jobs)
+    /// crossing the modeled stack budget means the pool is holding more
+    /// node state than the device stacks were provisioned for — new jobs
+    /// are degraded (forced delta repr, throughput lane held back)
+    /// rather than refused.
+    pub fn watchdog_soft_bytes(&self) -> u64 {
+        self.stack_budget_bytes
+    }
+
+    /// Default hard limit for the memory watchdog: twice the stack
+    /// budget. Past this, admission sheds load with
+    /// `SubmitError::MemoryPressure` — the runtime analogue of the
+    /// static occupancy plan refusing a launch that cannot fit.
+    pub fn watchdog_hard_bytes(&self) -> u64 {
+        self.stack_budget_bytes.saturating_mul(2)
+    }
+
     /// Number of OS worker threads to actually run for a modeled launch:
     /// the model's block count capped by the hardware parallelism.
     pub fn workers(&self, n: usize, dtype: Dtype) -> usize {

@@ -122,11 +122,20 @@ pub struct Registry {
 struct WitnessStore {
     slots: Mutex<Vec<Option<Vec<u32>>>>,
     root: Mutex<Option<Vec<u32>>>,
+    /// Lock-free mirror of the root slot's length (`u32::MAX` = none
+    /// yet), maintained under the root lock so anytime-progress pollers
+    /// ([`Registry::root_witness_len`]) never contend with the workers'
+    /// shortest-wins offers.
+    root_len: AtomicU32,
 }
 
 impl WitnessStore {
     fn new() -> WitnessStore {
-        WitnessStore { slots: Mutex::new(Vec::new()), root: Mutex::new(None) }
+        WitnessStore {
+            slots: Mutex::new(Vec::new()),
+            root: Mutex::new(None),
+            root_len: AtomicU32::new(u32::MAX),
+        }
     }
 
     /// The slot for entry `idx`, growing the table as needed (all slot
@@ -173,6 +182,7 @@ impl WitnessStore {
         let mut root = self.root.lock().unwrap();
         if root.as_ref().is_none_or(|cur| w.len() < cur.len()) {
             *root = Some(w.to_vec());
+            self.root_len.store(w.len() as u32, Ordering::Release);
         }
     }
 }
@@ -399,8 +409,19 @@ impl Registry {
     }
 
     /// Length of the best assembled root witness so far, if any.
+    /// Lock-free (reads the length mirror, not the slot), so anytime
+    /// callers — [`crate::solver::JobHandle::progress`], a deadline
+    /// about to fire — can poll it at any rate without slowing the
+    /// workers' shortest-wins offers. Monotone non-increasing; it keeps
+    /// reporting the last length even after
+    /// [`Registry::take_root_witness`] retires the slot itself.
     pub fn root_witness_len(&self) -> Option<usize> {
-        self.witness.as_ref().and_then(|ws| ws.root.lock().unwrap().as_ref().map(Vec::len))
+        self.witness.as_ref().and_then(|ws| {
+            match ws.root_len.load(Ordering::Acquire) {
+                u32::MAX => None,
+                len => Some(len as usize),
+            }
+        })
     }
 
     /// Take the best assembled root witness (end of the run).

@@ -88,6 +88,12 @@ impl<N: Send> ShardedScheduler<N> {
         self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
     }
 
+    /// Approximate queued-node backlog (shared worklist length). Racy
+    /// snapshot; used by the service's `PoolStats` and memory watchdog.
+    pub fn backlog(&self) -> usize {
+        self.worklist.len()
+    }
+
     /// The shared latency-lane hint (service admission marks urgent
     /// injections through it; see [`LaneHint`]).
     pub(crate) fn lane_hint(&self) -> Arc<LaneHint> {

@@ -117,6 +117,14 @@ impl<N: Send> WorkStealScheduler<N> {
         self.resident.as_ref().map(|r| r.total_parks()).unwrap_or(0)
     }
 
+    /// Approximate queued-node backlog: the sum of per-worker deque
+    /// lengths. Racy by construction (each length is a snapshot), but
+    /// good enough for the service's memory watchdog and `PoolStats` —
+    /// it converges to the true value on a quiescent pool.
+    pub fn backlog(&self) -> usize {
+        self.deques.iter().map(|d| d.len()).sum()
+    }
+
     /// The shared latency-lane hint (service admission marks urgent
     /// injections through it; see [`LaneHint`]).
     pub(crate) fn lane_hint(&self) -> Arc<LaneHint> {

@@ -89,6 +89,48 @@
 //! Lane scheduling changes only *when* work is picked up, never what is
 //! computed: objectives and witnesses are identical with lanes on or
 //! off (asserted by `tests/qos_admission.rs`).
+//!
+//! ## Failure model & degradation ladder
+//!
+//! A job's answer degrades in well-defined rungs — each rung trades
+//! *progress* away while keeping the answer *trustworthy*, and only the
+//! last rung gives up on trust:
+//!
+//! 1. **Complete** — the search ran to exhaustion (or, PVC, to its
+//!    decision). Objective exact, witness (if requested) verified.
+//! 2. **Anytime** ([`Termination::DeadlineExpired`] /
+//!    [`Termination::Cancelled`]) — the deadline fired or the caller
+//!    cancelled. MVC/MIS jobs still return the best bound found *and*,
+//!    for extracting jobs, the best cover the engine had assembled (the
+//!    registry's shortest-wins root slot), re-anchored so `|witness| ==
+//!    objective` and verified edge-by-edge; with no assembled cover yet,
+//!    the greedy cover stands in. [`JobHandle::progress`] exposes the
+//!    same bound while the job is still running.
+//! 3. **Sequential retry** ([`Termination::Recovered`]) — a worker
+//!    *panicked* while running the job, and a [`RetryPolicy`] was set
+//!    (per job or builder-wide): the `cavc-svc-retry` thread reruns the
+//!    job from scratch on the sequential solver — no shared queues, no
+//!    registry, no speculation — and publishes its trusted answer.
+//!    Degraded throughput, not degraded truth; [`Solution::failure`]
+//!    still carries the original panic message.
+//! 4. **Failed** ([`Termination::Failed`]) — the job panicked and there
+//!    was no retry budget (or every rescue attempt panicked too — those
+//!    jobs are *quarantined*, [`AdmissionStats::quarantined`]). The
+//!    outcome is degenerate but `wait` always returns, and
+//!    [`Solution::failure`] says why. Panics never escape a worker: the
+//!    pool and co-scheduled jobs are unaffected.
+//!
+//! Admission itself sheds load in its own order —
+//! [`SubmitError::MemoryPressure`] when the watchdog's hard limit is
+//! exceeded (checked first: a full queue under memory pressure is a
+//! memory problem), [`SubmitError::QuotaExceeded`] when the tenant is at
+//! quota, [`SubmitError::QueueFull`] when the bounded queue is at
+//! capacity. Between the soft and hard limits the service degrades
+//! instead of shedding: throughput-lane dispatch pauses and new jobs are
+//! forced onto the delta node representation.
+//!
+//! The whole ladder is exercised deterministically by the seeded
+//! fault-injection harness ([`crate::solver::faults`], `tests/chaos.rs`).
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
@@ -107,7 +149,7 @@ use super::sched::{
     WorkStealScheduler, WorkerCounters, WorkerHandle,
 };
 use super::witness::{self, CoverLift};
-use super::{greedy, PrepSummary, SolverConfig};
+use super::{greedy, sequential, PrepSummary, SolverConfig};
 
 /// A problem submitted to the service. Graphs are `Arc`-shared so a
 /// batch driver can submit the same graph under several parameters
@@ -192,9 +234,15 @@ pub enum Termination {
     /// A worker panicked while running this job (internal error). The
     /// panic is contained — the pool and other jobs are unaffected, and
     /// `wait` still returns — but this job's objective/stats are not
-    /// trustworthy. The one-shot shims turn this back into a panic to
+    /// trustworthy ([`Solution::failure`] carries the captured panic
+    /// message). The one-shot shims turn this back into a panic to
     /// preserve the old loud-failure contract.
     Failed,
+    /// The parallel run failed, but a [`RetryPolicy`] was set and the
+    /// sequential fallback recomputed the answer: the objective and
+    /// witness are trusted (degraded throughput, not degraded truth);
+    /// [`Solution::failure`] still carries the original panic message.
+    Recovered,
 }
 
 /// Unified result of any [`Problem`] — replaces the old
@@ -233,6 +281,10 @@ pub struct Solution {
     pub elapsed: Duration,
     /// Why the job stopped.
     pub termination: Termination,
+    /// The captured panic payload, for [`Termination::Failed`] and
+    /// [`Termination::Recovered`] jobs (today's `catch_unwind` no longer
+    /// swallows the message). `None` on every healthy path.
+    pub failure: Option<String>,
 }
 
 impl Solution {
@@ -295,6 +347,11 @@ pub enum SubmitError {
     /// The job's tenant is at its concurrent-jobs or live-nodes quota
     /// ([`TenantQuota`]).
     QuotaExceeded,
+    /// The memory watchdog's hard limit is exceeded: the pool sheds
+    /// load until live bytes drop back under the limit. Non-blocking
+    /// submits get this immediately; blocking submits wait for the
+    /// pressure to clear (bounded waits report it on expiry).
+    MemoryPressure,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -302,6 +359,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::QueueFull => write!(f, "admission queue full"),
             SubmitError::QuotaExceeded => write!(f, "tenant quota exceeded"),
+            SubmitError::MemoryPressure => write!(f, "memory watchdog hard limit exceeded"),
         }
     }
 }
@@ -319,6 +377,45 @@ pub struct TenantQuota {
     /// running jobs hold this many live nodes cannot admit more work
     /// until some retire.
     pub max_live_nodes: u64,
+}
+
+/// Failure-recovery policy for a job whose parallel run panicked: rerun
+/// it on the *sequential* solver (same prep pipeline, no shared-state
+/// machinery — the degraded-but-trusted rung of the degradation ladder)
+/// up to `attempts` times before surfacing [`Termination::Failed`].
+/// Jobs that exhaust every attempt are quarantined and counted in
+/// [`AdmissionStats::quarantined`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Sequential rescue attempts before giving up (min 1).
+    pub attempts: u32,
+    /// Pause before each rescue attempt (lets transient pressure —
+    /// memory, a poisoned scratch — clear before recomputing).
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy { attempts: 1, backoff: Duration::ZERO }
+    }
+}
+
+/// A point-in-time progress snapshot of a running job
+/// ([`JobHandle::progress`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobProgress {
+    /// Best objective bound so far, in the problem's own terms (cover
+    /// size for MVC/PVC — an upper bound; independence number for MIS —
+    /// a lower bound). `None` until the job's setup published an
+    /// initial bound.
+    pub best_bound: Option<u32>,
+    /// Search-tree nodes expanded so far (published on the engine's
+    /// 64-node poll cadence, so it can trail the true count slightly).
+    pub nodes_expanded: u64,
+    /// Wall-clock time since submission.
+    pub elapsed: Duration,
+    /// Whether the job has finalized (its [`Solution`] is available).
+    pub done: bool,
 }
 
 /// Per-job submission options.
@@ -347,6 +444,15 @@ pub struct JobOptions {
     /// Tenant id for quota accounting. Jobs without a tenant are never
     /// quota-limited.
     pub tenant: Option<String>,
+    /// Failure recovery: rerun a panicked job on the sequential solver
+    /// under this policy before surfacing [`Termination::Failed`].
+    /// `None` falls back to the builder's [`VcServiceBuilder::retry`]
+    /// default (itself `None` = fail fast).
+    pub retry: Option<RetryPolicy>,
+    /// Deterministic fault plan for chaos testing (see
+    /// [`crate::solver::faults`]); also settable process-wide via
+    /// `CAVC_FAULT_SEED`. `None` (the default) injects nothing.
+    pub fault: Option<super::faults::FaultPlan>,
     /// Test hook: panic inside the job's setup stage, exercising the
     /// panic-containment path end to end.
     #[cfg(test)]
@@ -380,6 +486,33 @@ impl JobHandle {
     /// Non-blocking poll: the solution if the job already finalized.
     pub fn try_result(&self) -> Option<Solution> {
         self.job.outcome.lock().unwrap().as_ref().cloned()
+    }
+
+    /// A point-in-time progress snapshot: best objective bound so far,
+    /// search-tree nodes expanded, and elapsed wall-clock. Lock-free on
+    /// the engine side (the bound and node count are published
+    /// atomically by the workers); safe to poll at any rate.
+    pub fn progress(&self) -> JobProgress {
+        let job = &self.job;
+        let done = job.outcome.lock().unwrap().is_some();
+        let best_bound = job.prepared.get().map(|p| {
+            // Mirror finalization's objective arithmetic on the live
+            // residual bound, so the snapshot converges to the final
+            // objective as the search tightens it.
+            let b = job.ctl.best.load(Ordering::SeqCst);
+            let total = p.forced + b.min(p.initial);
+            let mvc = total.min(p.greedy_ub);
+            match job.problem.kind() {
+                ProblemKind::Mis => job.problem.graph().num_vertices() as u32 - mvc,
+                ProblemKind::Mvc | ProblemKind::Pvc => mvc,
+            }
+        });
+        JobProgress {
+            best_bound,
+            nodes_expanded: job.ctl.nodes_expanded.load(Ordering::Relaxed),
+            elapsed: job.started.elapsed(),
+            done,
+        }
     }
 
     /// Request cancellation. Queued nodes of the job are dropped as they
@@ -457,6 +590,14 @@ struct JobInner {
     cancelled: AtomicBool,
     /// A worker panicked while running this job's setup or a node.
     failed: AtomicBool,
+    /// First captured panic payload (the message behind
+    /// [`Solution::failure`]); later panics of the same job only count.
+    failure: Mutex<Option<String>>,
+    /// Failure-recovery policy (job option, else the builder default).
+    retry: Option<RetryPolicy>,
+    /// `Occupancy::pinned_bytes` charged to the memory ledger at setup,
+    /// released exactly once at outcome publication.
+    pinned_charge: AtomicU64,
     prepared: OnceLock<JobPrep>,
     outcome: Mutex<Option<Solution>>,
     done_cv: Condvar,
@@ -512,6 +653,9 @@ struct WorkItem {
     /// Latency-lane item injected through the shared queue with the
     /// lane hint raised; the popping worker lowers the hint again.
     urgent: bool,
+    /// Payload bytes charged to the memory-watchdog ledger while this
+    /// item is queued (released when the item retires).
+    bytes: u64,
 }
 
 enum Work {
@@ -573,6 +717,13 @@ impl ResidentSched {
         }
     }
 
+    fn backlog(&self) -> usize {
+        match self {
+            ResidentSched::Steal(s) => s.backlog(),
+            ResidentSched::Sharded(s) => s.backlog(),
+        }
+    }
+
     fn lane_hint(&self) -> Arc<LaneHint> {
         match self {
             ResidentSched::Steal(s) => s.lane_hint(),
@@ -605,6 +756,9 @@ pub struct PoolStats {
     /// Worker park events (an idle pool parks; a saturated one never
     /// does — the service QoS "is the pool starved or drowning" signal).
     pub parks: u64,
+    /// Queued-node backlog snapshot at the time `stats()` was called
+    /// (racy; exact only on a quiescent pool).
+    pub backlog: usize,
 }
 
 /// Admission-layer telemetry surfaced by [`VcService::stats`].
@@ -626,6 +780,20 @@ pub struct AdmissionStats {
     pub dispatched_latency: u64,
     /// Jobs dispatched from the throughput lane.
     pub dispatched_throughput: u64,
+    /// Live bytes on the memory-watchdog ledger right now (queued node
+    /// payloads + pinned occupancy charges of live jobs).
+    pub live_bytes: u64,
+    /// Submissions shed by the watchdog's hard limit
+    /// ([`SubmitError::MemoryPressure`]).
+    pub mem_rejected: u64,
+    /// Sequential rescue attempts started for panicked jobs.
+    pub retries: u64,
+    /// Panicked jobs whose sequential rescue produced a trusted answer
+    /// ([`Termination::Recovered`]).
+    pub recovered: u64,
+    /// Panicked jobs that exhausted every rescue attempt and surfaced
+    /// [`Termination::Failed`].
+    pub quarantined: u64,
 }
 
 /// Per-job-class counters surfaced by [`VcService::stats`].
@@ -857,6 +1025,26 @@ struct Admission {
     quota_rejected: AtomicU64,
     blocked_nanos: AtomicU64,
     dispatched: [AtomicU64; 2],
+    /// Memory-watchdog ledger: live bytes across queued node payloads
+    /// and live jobs' pinned occupancy charges.
+    mem_live: AtomicU64,
+    /// Soft limit: past it the dispatcher holds throughput-lane jobs
+    /// back and new jobs are forced onto the delta node representation.
+    mem_soft: u64,
+    /// Hard limit: past it submissions are shed with
+    /// [`SubmitError::MemoryPressure`].
+    mem_hard: u64,
+    mem_rejected: AtomicU64,
+    /// Failed jobs awaiting sequential rescue, drained by the
+    /// `cavc-svc-retry` thread (separate shutdown flag: the retry
+    /// thread must outlive the workers, which can enqueue during their
+    /// own shutdown drain).
+    retry_queue: Mutex<VecDeque<Arc<JobInner>>>,
+    retry_cv: Condvar,
+    retry_shutdown: AtomicBool,
+    retries: AtomicU64,
+    recovered: AtomicU64,
+    quarantined: AtomicU64,
 }
 
 impl Admission {
@@ -886,6 +1074,42 @@ impl Admission {
         self.space_cv.notify_all();
     }
 
+    /// Charge bytes to the memory-watchdog ledger (queued payloads,
+    /// pinned occupancy charges).
+    fn mem_charge(&self, bytes: u64) {
+        if bytes > 0 {
+            self.mem_live.fetch_add(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Release bytes from the ledger (item retired, job finalized).
+    fn mem_release(&self, bytes: u64) {
+        if bytes > 0 {
+            self.mem_live.fetch_sub(bytes, Ordering::Relaxed);
+        }
+    }
+
+    /// Past the soft limit: hold throughput dispatch, force delta repr.
+    fn mem_over_soft(&self) -> bool {
+        self.mem_live.load(Ordering::Relaxed) > self.mem_soft
+    }
+
+    /// Past the hard limit: shed load at admission.
+    fn mem_over_hard(&self) -> bool {
+        self.mem_live.load(Ordering::Relaxed) > self.mem_hard
+    }
+
+    /// Hand a failed job to the recovery thread (true), or report that
+    /// the job has no retry budget and must surface `Failed` (false).
+    fn enqueue_retry(&self, job: &Arc<JobInner>) -> bool {
+        if job.retry.is_none() {
+            return false;
+        }
+        self.retry_queue.lock().unwrap().push_back(Arc::clone(job));
+        self.retry_cv.notify_one();
+        true
+    }
+
     fn snapshot(&self) -> AdmissionStats {
         let st = self.state.lock().unwrap();
         AdmissionStats {
@@ -896,6 +1120,11 @@ impl Admission {
             blocked: Duration::from_nanos(self.blocked_nanos.load(Ordering::Relaxed)),
             dispatched_latency: self.dispatched[0].load(Ordering::Relaxed),
             dispatched_throughput: self.dispatched[1].load(Ordering::Relaxed),
+            live_bytes: self.mem_live.load(Ordering::Relaxed),
+            mem_rejected: self.mem_rejected.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            recovered: self.recovered.load(Ordering::Relaxed),
+            quarantined: self.quarantined.load(Ordering::Relaxed),
         }
     }
 }
@@ -911,8 +1140,25 @@ fn dispatcher_loop(inner: &ServiceInner) {
             let mut st = adm.state.lock().unwrap();
             loop {
                 let draining = adm.shutdown.load(Ordering::SeqCst);
+                // Memory watchdog, soft limit: stop feeding the pool
+                // throughput-lane jobs (their node fan-out is what grows
+                // the ledger); latency jobs still dispatch, and the
+                // shutdown drain ignores the gate so `Drop` always
+                // completes.
+                let throttled = adm.mem_over_soft() && !draining;
                 if st.queued > 0 && (st.live_jobs < adm.max_live_jobs || draining) {
-                    let lane = st.pick_lane();
+                    let latency = Lane::Latency.index();
+                    let lane = if throttled {
+                        if st.lanes[latency].is_empty() {
+                            // only throughput work queued: hold it until
+                            // the ledger drops back under the soft limit
+                            st = adm.work_cv.wait_timeout(st, ADMIT_WAIT_SLICE).unwrap().0;
+                            continue;
+                        }
+                        latency
+                    } else {
+                        st.pick_lane()
+                    };
                     let job = st.lanes[lane].pop_front().expect("picked lane is non-empty");
                     st.queued -= 1;
                     st.live_jobs += 1;
@@ -933,13 +1179,15 @@ fn dispatcher_loop(inner: &ServiceInner) {
             adm.lane_hint.pending.fetch_add(1, Ordering::Relaxed);
         }
         inner.counters.injected.fetch_add(1, Ordering::Relaxed);
-        inner.sched.inject(WorkItem { job, work: Work::Setup, urgent });
+        inner.sched.inject(WorkItem { job, work: Work::Setup, urgent, bytes: 0 });
     }
 }
 
 struct ServiceInner {
     sched: ResidentSched,
     defaults: SolverConfig,
+    /// Builder-level failure-recovery default ([`VcServiceBuilder::retry`]).
+    default_retry: Option<RetryPolicy>,
     workers: usize,
     next_job: AtomicU64,
     counters: Arc<ServiceCounters>,
@@ -956,6 +1204,9 @@ pub struct VcServiceBuilder {
     max_live_jobs: Option<usize>,
     latency_threshold: usize,
     quota: Option<TenantQuota>,
+    retry: Option<RetryPolicy>,
+    mem_soft: Option<u64>,
+    mem_hard: Option<u64>,
 }
 
 /// Default reduced-size cutoff for the latency lane: graphs this small
@@ -1023,6 +1274,31 @@ impl VcServiceBuilder {
         self
     }
 
+    /// Default failure-recovery policy for every job (overridable per
+    /// job via [`JobOptions::retry`]; default: none — a panicked job
+    /// surfaces [`Termination::Failed`] without a sequential rescue).
+    pub fn retry(mut self, policy: RetryPolicy) -> VcServiceBuilder {
+        self.retry = Some(policy);
+        self
+    }
+
+    /// Memory-watchdog soft limit in bytes (default: the occupancy
+    /// model's `watchdog_soft_bytes`). Past it, the dispatcher stops
+    /// feeding throughput-lane jobs into the pool and new jobs are
+    /// forced onto the delta node representation.
+    pub fn mem_soft(mut self, bytes: u64) -> VcServiceBuilder {
+        self.mem_soft = Some(bytes);
+        self
+    }
+
+    /// Memory-watchdog hard limit in bytes (default: the occupancy
+    /// model's `watchdog_hard_bytes`). Past it, submissions are shed
+    /// with [`SubmitError::MemoryPressure`].
+    pub fn mem_hard(mut self, bytes: u64) -> VcServiceBuilder {
+        self.mem_hard = Some(bytes);
+        self
+    }
+
     /// Spawn the worker pool and return the service.
     pub fn build(self) -> VcService {
         let workers = self.workers.unwrap_or_else(|| {
@@ -1037,14 +1313,13 @@ impl VcServiceBuilder {
                 self.queue_capacity,
             )),
         };
+        let occ = OccupancyModel::default();
         let admission = Arc::new(Admission {
             state: Mutex::new(AdmissionState::default()),
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             lane_hint: sched.lane_hint(),
-            max_queued: self
-                .max_queued
-                .unwrap_or_else(|| OccupancyModel::default().admission_capacity()),
+            max_queued: self.max_queued.unwrap_or_else(|| occ.admission_capacity()),
             max_live_jobs: self.max_live_jobs.unwrap_or((workers * 8).max(32)),
             latency_threshold: self.latency_threshold,
             quota: self.quota,
@@ -1053,10 +1328,21 @@ impl VcServiceBuilder {
             quota_rejected: AtomicU64::new(0),
             blocked_nanos: AtomicU64::new(0),
             dispatched: [AtomicU64::new(0), AtomicU64::new(0)],
+            mem_live: AtomicU64::new(0),
+            mem_soft: self.mem_soft.unwrap_or_else(|| occ.watchdog_soft_bytes()),
+            mem_hard: self.mem_hard.unwrap_or_else(|| occ.watchdog_hard_bytes()),
+            mem_rejected: AtomicU64::new(0),
+            retry_queue: Mutex::new(VecDeque::new()),
+            retry_cv: Condvar::new(),
+            retry_shutdown: AtomicBool::new(false),
+            retries: AtomicU64::new(0),
+            recovered: AtomicU64::new(0),
+            quarantined: AtomicU64::new(0),
         });
         let inner = Arc::new(ServiceInner {
             sched,
             defaults: self.defaults,
+            default_retry: self.retry,
             workers,
             next_job: AtomicU64::new(0),
             counters: Arc::new(ServiceCounters::new(workers)),
@@ -1081,7 +1367,14 @@ impl VcServiceBuilder {
                 .spawn(move || dispatcher_loop(&inner))
                 .expect("spawn admission dispatcher")
         };
-        VcService { inner, threads, dispatcher: Some(dispatcher) }
+        let recovery = {
+            let adm = Arc::clone(&inner.admission);
+            std::thread::Builder::new()
+                .name("cavc-svc-retry".into())
+                .spawn(move || recovery_loop(&adm))
+                .expect("spawn recovery thread")
+        };
+        VcService { inner, threads, dispatcher: Some(dispatcher), recovery: Some(recovery) }
     }
 }
 
@@ -1094,6 +1387,7 @@ pub struct VcService {
     inner: Arc<ServiceInner>,
     threads: Vec<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
+    recovery: Option<JoinHandle<()>>,
 }
 
 impl VcService {
@@ -1108,6 +1402,9 @@ impl VcService {
             max_live_jobs: None,
             latency_threshold: DEFAULT_LATENCY_THRESHOLD,
             quota: None,
+            retry: None,
+            mem_soft: None,
+            mem_hard: None,
         }
     }
 
@@ -1195,11 +1492,20 @@ impl VcService {
             extract_witness: opts.extract_witness || cfg.extract_cover,
             node_repr: cfg.node_repr,
             max_pin_depth: cfg.max_pin_depth,
+            fault: opts
+                .fault
+                .clone()
+                .or_else(super::faults::FaultPlan::from_env)
+                .map(|plan| Arc::new(super::faults::FaultInjector::new(plan))),
         };
         let prep_cfg = cfg.prep_cfg();
 
         let mut st = adm.state.lock().unwrap();
         loop {
+            // Memory watchdog, hard limit: shed load. Non-blocking
+            // submits bounce immediately; blocking ones wait for the
+            // ledger to drop (it frees as queued items retire).
+            let over_mem = adm.mem_over_hard();
             let full = st.queued >= adm.max_queued;
             let over_quota = match (&opts.tenant, &adm.quota) {
                 (Some(name), Some(q)) => match st.tenants.get(name) {
@@ -1211,7 +1517,7 @@ impl VcService {
                 },
                 _ => false,
             };
-            if !full && !over_quota {
+            if !over_mem && !full && !over_quota {
                 break;
             }
             let now = Instant::now();
@@ -1221,7 +1527,10 @@ impl VcService {
                 Wait::Until(Some(d)) => now >= d,
             };
             if expired {
-                return Err(if over_quota && !full {
+                return Err(if over_mem {
+                    adm.mem_rejected.fetch_add(1, Ordering::Relaxed);
+                    SubmitError::MemoryPressure
+                } else if over_quota && !full {
                     adm.quota_rejected.fetch_add(1, Ordering::Relaxed);
                     SubmitError::QuotaExceeded
                 } else {
@@ -1254,6 +1563,9 @@ impl VcService {
             live_nodes: AtomicU64::new(1), // the Setup item
             cancelled: AtomicBool::new(false),
             failed: AtomicBool::new(false),
+            failure: Mutex::new(None),
+            retry: opts.retry.or(self.inner.default_retry),
+            pinned_charge: AtomicU64::new(0),
             prepared: OnceLock::new(),
             outcome: Mutex::new(None),
             done_cv: Condvar::new(),
@@ -1294,6 +1606,7 @@ impl VcService {
         let mut pool = PoolStats {
             injected: c.injected.load(Ordering::Relaxed),
             parks: self.inner.sched.parks(),
+            backlog: self.inner.sched.backlog(),
             ..PoolStats::default()
         };
         for s in &c.slots {
@@ -1318,7 +1631,9 @@ impl Drop for VcService {
         // Order matters: the admission queue drains into the scheduler
         // first (the dispatcher exits only once it is empty), then the
         // pool drains and exits — held handles' `wait` calls return
-        // (the drop-drains contract).
+        // (the drop-drains contract). The recovery thread goes last:
+        // draining workers can still hand it failed jobs, and every one
+        // of those must publish an outcome before the service is gone.
         self.inner.admission.request_shutdown();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -1326,6 +1641,15 @@ impl Drop for VcService {
         self.inner.sched.request_shutdown();
         for t in self.threads.drain(..) {
             let _ = t.join();
+        }
+        let adm = &self.inner.admission;
+        adm.retry_shutdown.store(true, Ordering::SeqCst);
+        // Same lock-then-notify shape as `request_shutdown`: a recovery
+        // thread between its check and its wait cannot miss the wakeup.
+        drop(adm.retry_queue.lock().unwrap());
+        adm.retry_cv.notify_all();
+        if let Some(r) = self.recovery.take() {
+            let _ = r.join();
         }
     }
 }
@@ -1408,7 +1732,7 @@ fn process_item<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
     sched: &S,
     src: PopSource,
 ) {
-    let WorkItem { job, work, urgent } = item;
+    let WorkItem { job, work, urgent, bytes } = item;
     if urgent {
         // Pairs with the pre-inject bump: the urgent item has left the
         // shared queue, so the every-pop fairness poll can relax again.
@@ -1438,26 +1762,65 @@ fn process_item<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
             }
         }
     }));
-    if run.is_err() {
+    if let Err(payload) = run {
+        record_failure(&job, &payload);
         // Label first, then stop (same ordering argument as `cancel`):
         // the job's remaining nodes drain as drops and the normal
         // completion count finalizes it with `Termination::Failed`.
         job.failed.store(true, Ordering::SeqCst);
         job.ctl.stop.store(true, Ordering::SeqCst);
     }
-    // Release the retired item's tenant-quota charge (mirrors every
-    // `live_nodes` increment) — this is the admission layer's quota
-    // release point on the node axis.
+    // Release the retired item's memory-ledger and tenant-quota charges
+    // (each mirrors every `live_nodes` increment) — this is the
+    // admission layer's release point on the node axis.
+    job.admission.mem_release(bytes);
     if let Some(t) = &job.tenant {
         t.nodes.fetch_sub(1, Ordering::Relaxed);
     }
     if job.live_nodes.fetch_sub(1, Ordering::SeqCst) == 1 {
-        // `finalize` itself can assert (debug registry invariants); a
-        // panic there must not leave waiters hanging either.
-        if std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finalize(&job))).is_err() {
+        // `finalize` itself can assert (debug registry invariants) or
+        // carry an injected fault; a panic there must not leave waiters
+        // hanging either.
+        if let Err(payload) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finalize(&job)))
+        {
+            record_failure(&job, &payload);
             job.failed.store(true, Ordering::SeqCst);
-            store_outcome(&job, failed_solution(&job));
+            // A finalize panic still gets the degradation ladder's
+            // sequential-rescue rung before surfacing `Failed`.
+            if !job.admission.enqueue_retry(&job) {
+                store_outcome(&job, failed_solution(&job));
+            }
         }
+    }
+}
+
+/// Capture a contained panic's payload: store the first message on the
+/// job (the others only count), log it once, and bump the job's panic
+/// counter in its stats sink.
+fn record_failure(job: &Arc<JobInner>, payload: &(dyn std::any::Any + Send)) {
+    let msg = panic_message(payload);
+    {
+        let mut slot = job.failure.lock().unwrap();
+        if slot.is_none() {
+            // One log line per job, through the same sink `stats()`
+            // reads — repeated panics of one job would otherwise spam.
+            eprintln!("cavc-svc: job {} worker panic: {msg}", job.id);
+            *slot = Some(msg);
+        }
+    }
+    job.ctl.stats_sink.lock().unwrap().panics += 1;
+}
+
+/// Best-effort extraction of a panic payload's message (`panic!` with a
+/// literal yields `&str`, with formatting yields `String`).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic payload of unknown type".to_string()
     }
 }
 
@@ -1504,10 +1867,15 @@ where
         if let Some(t) = &self.job.tenant {
             t.nodes.fetch_add(1, Ordering::Relaxed);
         }
+        // Charge the queued payload to the pool-level memory ledger
+        // (released when the item retires in `process_item`).
+        let bytes = item.payload_bytes();
+        self.job.admission.mem_charge(bytes);
         self.inner.push(WorkItem {
             job: Arc::clone(self.job),
             work: Work::Node(AnyNode::from(item)),
             urgent: false,
+            bytes,
         });
     }
 
@@ -1539,6 +1907,15 @@ fn setup_job<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
     if job.panic_in_setup {
         panic!("injected setup panic (test hook)");
     }
+    if let Some(f) = &job.ctl.cfg.fault {
+        f.on_setup();
+    }
+    // Memory watchdog, soft limit: new jobs branch under the compact
+    // delta representation regardless of their configured repr, so
+    // their queued right children cost O(delta) instead of O(view).
+    if job.admission.mem_over_soft() {
+        job.ctl.forced_delta.store(true, Ordering::Relaxed);
+    }
     let g: &Graph = job.problem.graph();
     let (p, k) = match &job.problem {
         // ub = k+1 keeps the high-degree rule sound for covers ≤ k.
@@ -1567,6 +1944,14 @@ fn setup_job<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
         fits_shared_mem: p.occupancy.fits_shared_mem,
         workers: job.pool_workers,
     };
+    // Charge the occupancy plan's pinned bytes (delta-mode base frames)
+    // to the memory ledger for the job's lifetime; released exactly
+    // once at outcome publication.
+    let pinned = p.occupancy.pinned_bytes;
+    if pinned > 0 {
+        job.admission.mem_charge(pinned);
+        job.pinned_charge.store(pinned, Ordering::SeqCst);
+    }
 
     let (initial, k_resid, decided) = match k {
         None => (p.residual_ub, None, None),
@@ -1633,8 +2018,10 @@ fn setup_job<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
         if let Some(t) = &job.tenant {
             t.nodes.fetch_add(1, Ordering::Relaxed);
         }
+        job.admission.mem_charge(root_bytes);
         let urgent = job.lane() == Lane::Latency;
-        let item = WorkItem { job: Arc::clone(job), work: Work::Node(root), urgent };
+        let item =
+            WorkItem { job: Arc::clone(job), work: Work::Node(root), urgent, bytes: root_bytes };
         if urgent {
             // Inject latency roots through the shared queue with the
             // lane hint raised: a handle.push would land the root on
@@ -1665,6 +2052,9 @@ fn store_outcome(job: &Arc<JobInner>, solution: Solution) {
         first
     };
     if first {
+        // Release the setup-time pinned-bytes charge exactly once,
+        // alongside the admission accounting.
+        job.admission.mem_release(job.pinned_charge.swap(0, Ordering::SeqCst));
         job.admission.on_job_finalized(job.tenant.as_ref());
     }
 }
@@ -1692,16 +2082,20 @@ fn failed_solution(job: &Arc<JobInner>) -> Solution {
         feasible: false,
         witness: None,
         witness_verified: None,
-        stats: EngineStats::default(),
+        stats: job.ctl.stats_sink.lock().unwrap().clone(),
         prep,
         elapsed: job.started.elapsed(),
         termination: Termination::Failed,
+        failure: job.failure.lock().unwrap().clone(),
     }
 }
 
 /// Assemble the [`Solution`] once the job's last work item retired; the
 /// caller observed `live_nodes` hit zero, so it owns the continuation.
 fn finalize(job: &Arc<JobInner>) {
+    if let Some(f) = &job.ctl.cfg.fault {
+        f.on_finalize();
+    }
     let termination = if job.failed.load(Ordering::SeqCst) {
         Termination::Failed
     } else if job.cancelled.load(Ordering::SeqCst) {
@@ -1711,6 +2105,12 @@ fn finalize(job: &Arc<JobInner>) {
     } else {
         Termination::Complete
     };
+    if termination == Termination::Failed && job.admission.enqueue_retry(job) {
+        // Degradation ladder, rung 3: the parallel run panicked but a
+        // retry policy is set — the recovery thread reruns the job on
+        // the sequential solver and publishes the outcome instead.
+        return;
+    }
     let Some(p) = job.prepared.get() else {
         // Setup panicked before publishing prep: degenerate outcome.
         store_outcome(job, failed_solution(job));
@@ -1777,11 +2177,33 @@ fn finalize(job: &Arc<JobInner>) {
         }
         (Problem::Mvc { .. }, _) | (Problem::Mis { .. }, _) => {
             let total = p.forced + best_resid.min(p.initial);
-            let mvc = total.min(p.greedy_ub);
-            let cover = if extract {
-                witness::cover_of_record(lifted, mvc, p.greedy_ub, g_orig)
+            let anytime = matches!(
+                termination,
+                Termination::DeadlineExpired | Termination::Cancelled
+            );
+            let (mvc, cover) = if extract && anytime {
+                // Anytime results: a deadline/cancel must not discard
+                // the best cover already assembled. The registry's
+                // shortest-wins root slot (threaded here as `lifted`)
+                // is the best *witnessed* cover; est-propagation can
+                // tighten `best` below it without a cover, so under an
+                // early stop the reported objective is re-anchored to
+                // the witness length — the returned bound and cover
+                // always agree (`|witness| == objective`), falling back
+                // to the greedy cover when no witness was assembled.
+                let c = match lifted {
+                    Some(c) if (c.len() as u32) < p.greedy_ub => c,
+                    _ => greedy::greedy_cover(g_orig),
+                };
+                (c.len() as u32, Some(c))
             } else {
-                None
+                let mvc = total.min(p.greedy_ub);
+                let cover = if extract {
+                    witness::cover_of_record(lifted, mvc, p.greedy_ub, g_orig)
+                } else {
+                    None
+                };
+                (mvc, cover)
             };
             if matches!(job.problem, Problem::Mis { .. }) {
                 let set = cover.map(|c| witness::complement(g_orig, &c));
@@ -1808,8 +2230,162 @@ fn finalize(job: &Arc<JobInner>) {
             prep: p.summary.clone(),
             elapsed: job.started.elapsed(),
             termination,
+            failure: job.failure.lock().unwrap().clone(),
         },
     );
+}
+
+// ---------------------------------------------------------------------
+// Failure recovery: the sequential-rescue thread
+// ---------------------------------------------------------------------
+
+/// The recovery thread (`cavc-svc-retry`): reruns panicked jobs on the
+/// sequential solver under their [`RetryPolicy`] — the degraded-but-
+/// trusted rung of the degradation ladder. Jobs that exhaust every
+/// attempt are quarantined (counted) and surface [`Termination::Failed`].
+fn recovery_loop(adm: &Arc<Admission>) {
+    loop {
+        let job = {
+            let mut q = adm.retry_queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if adm.retry_shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                q = adm.retry_cv.wait(q).unwrap();
+            }
+        };
+        let policy = job.retry.unwrap_or_default();
+        let mut rescued = None;
+        for _ in 0..policy.attempts.max(1) {
+            if !policy.backoff.is_zero() {
+                std::thread::sleep(policy.backoff);
+            }
+            adm.retries.fetch_add(1, Ordering::Relaxed);
+            // The sequential solver shares none of the parallel run's
+            // state (fresh prep, no registry, no shared queues), but a
+            // rescue must stay contained too — e.g. a fault plan that
+            // panics in a shared reduction path.
+            match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                sequential_rescue(&job)
+            })) {
+                Ok(sol) => {
+                    rescued = Some(sol);
+                    break;
+                }
+                Err(payload) => record_failure(&job, &payload),
+            }
+        }
+        match rescued {
+            Some(sol) => {
+                adm.recovered.fetch_add(1, Ordering::Relaxed);
+                store_outcome(&job, sol);
+            }
+            None => {
+                adm.quarantined.fetch_add(1, Ordering::Relaxed);
+                store_outcome(&job, failed_solution(&job));
+            }
+        }
+    }
+}
+
+/// Recompute a panicked job's answer on the sequential solver, from
+/// scratch — fresh preparation, trusting nothing the failed parallel
+/// run left behind. Mirrors the one-shot `Variant::Sequential` recipes.
+fn sequential_rescue(job: &Arc<JobInner>) -> Solution {
+    let g: &Graph = job.problem.graph();
+    let extract = job.ctl.cfg.extract_witness;
+    let component_aware = job.ctl.cfg.component_aware;
+    let deadline = job.ctl.cfg.deadline;
+    // Stats: keep the failed attempt's counters (incl. its contained
+    // panics) and add the rescue's tree on top.
+    let mut stats = job.ctl.stats_sink.lock().unwrap().clone();
+
+    let (objective, feasible, witness, summary) = match &job.problem {
+        Problem::Mvc { .. } | Problem::Mis { .. } => {
+            let p = prep::prepare(g, &job.prep_cfg, None);
+            let initial = p.residual_ub;
+            let out =
+                sequential::solve(&p.residual.graph, initial, component_aware, extract, deadline);
+            stats.tree_nodes += out.tree_nodes;
+            stats.component_branches += out.component_branches;
+            let cover = out.cover.map(|c| p.lift_residual_cover(&c));
+            let best = p.total_size(out.best.min(initial)).min(p.greedy_ub);
+            let cover =
+                if extract { witness::cover_of_record(cover, best, p.greedy_ub, g) } else { None };
+            let summary = rescue_summary(g, &p);
+            if matches!(job.problem, Problem::Mis { .. }) {
+                let set = cover.map(|c| witness::complement(g, &c));
+                (g.num_vertices() as u32 - best, true, set, summary)
+            } else {
+                (best, true, cover, summary)
+            }
+        }
+        Problem::Pvc { k, .. } => {
+            let p = prep::prepare(g, &job.prep_cfg, Some(k.saturating_add(1)));
+            let forced = p.forced_cover.len() as u32;
+            let summary = rescue_summary(g, &p);
+            if p.greedy_ub <= *k {
+                (p.greedy_ub, true, extract.then(|| greedy::greedy_cover(g)), summary)
+            } else if forced > *k {
+                (k.saturating_add(1), false, None, summary)
+            } else {
+                let k_resid = k - forced;
+                let initial = (k_resid + 1).min(p.residual.graph.num_vertices() as u32 + 1);
+                let out = sequential::solve(
+                    &p.residual.graph,
+                    initial,
+                    component_aware,
+                    extract,
+                    deadline,
+                );
+                stats.tree_nodes += out.tree_nodes;
+                stats.component_branches += out.component_branches;
+                let found = out.best < initial && out.best <= k_resid;
+                if found {
+                    let cover = out
+                        .cover
+                        .map(|c| p.lift_residual_cover(&c))
+                        .filter(|c| c.len() as u32 <= *k);
+                    (forced + out.best, true, cover, summary)
+                } else {
+                    (k.saturating_add(1), false, None, summary)
+                }
+            }
+        }
+    };
+    let witness_verified = witness.as_ref().map(|w| match job.problem.kind() {
+        ProblemKind::Mis => witness::verify_independent_set(g, w).is_ok(),
+        ProblemKind::Mvc | ProblemKind::Pvc => witness::verify_cover(g, w).is_ok(),
+    });
+    Solution {
+        problem: job.problem.kind(),
+        objective,
+        feasible,
+        witness,
+        witness_verified,
+        stats,
+        prep: summary,
+        elapsed: job.started.elapsed(),
+        termination: Termination::Recovered,
+        failure: job.failure.lock().unwrap().clone(),
+    }
+}
+
+/// Prep summary for a sequential rescue (one logical worker).
+fn rescue_summary(g: &Graph, p: &prep::Prepared) -> PrepSummary {
+    PrepSummary {
+        n_original: g.num_vertices(),
+        n_residual: p.residual.graph.num_vertices(),
+        forced: p.forced_cover.len(),
+        greedy_ub: p.greedy_ub,
+        dtype: p.dtype,
+        blocks: p.occupancy.blocks,
+        fits_shared_mem: p.occupancy.fits_shared_mem,
+        workers: 1,
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,412 @@
+//! Chaos suite: deterministic fault injection against the resident
+//! service (the robustness tier of the test pyramid).
+//!
+//! Every test derives its faults from fixed seeds through
+//! [`FaultPlan::from_seed`], so a failure here is replayed exactly by
+//! re-running the same test binary — no flaky-crash lottery. The suite
+//! asserts the service's graceful-degradation contract:
+//!
+//!   * **no hung waiters** — every submitted job's `wait` returns within
+//!     a bounded budget, whatever was injected (setup/node/split/
+//!     finalize panics, forced allocation failures, stalled workers);
+//!   * **ledger reconciliation** — once every job finalized, the pool's
+//!     queue-traffic conservation law holds exactly:
+//!     `pops + shared_pops + steals == pushes + injected`, and the
+//!     memory watchdog's live-bytes ledger drains to zero;
+//!   * **blast-radius containment** — clean jobs co-scheduled with
+//!     faulted ones still produce oracle-exact answers;
+//!   * **witness soundness** — any job that did produce a witness
+//!     (Complete, Recovered, or anytime) hands back a cover that
+//!     verifies edge-by-edge against the original graph.
+//!
+//! Scale and shape knobs: `CAVC_CHAOS_PLANS` overrides the seeded-plan
+//! count (default 200); `CAVC_CHAOS_LOG` appends one replay line per
+//! plan (`FaultPlan::describe` + outcome) to the given file; the CI
+//! matrix runs the suite under `CAVC_SCHED` × `CAVC_NODE_REPR`.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::faults::INJECTED_PANIC_TAG;
+use cavc::solver::{
+    oracle, witness, FaultPlan, JobHandle, JobOptions, Lane, Problem, RetryPolicy, SchedulerKind,
+    Solution, SubmitError, Termination, VcService,
+};
+use std::io::Write;
+use std::time::{Duration, Instant};
+
+/// Scheduler under test: `CAVC_SCHED` (the CI chaos matrix) or the
+/// default work stealer.
+fn sched() -> SchedulerKind {
+    std::env::var("CAVC_SCHED")
+        .ok()
+        .and_then(|s| SchedulerKind::parse(&s))
+        .unwrap_or(SchedulerKind::WorkSteal)
+}
+
+/// Seeded fault plans per run (`CAVC_CHAOS_PLANS`, default 200).
+fn plan_count() -> u64 {
+    std::env::var("CAVC_CHAOS_PLANS").ok().and_then(|s| s.parse().ok()).unwrap_or(200)
+}
+
+/// Per-job wait budget. Generous: chaos graphs solve in well under a
+/// second even in debug builds; a minute means a waiter is hung.
+const WAIT_BUDGET: Duration = Duration::from_secs(60);
+
+/// A bounded `wait`: the no-hung-waiters assertion. `JobHandle::wait`
+/// blocks forever by design, so the chaos suite polls `try_result`
+/// against a budget instead.
+fn wait_bounded(h: &JobHandle, what: &str) -> Solution {
+    let t0 = Instant::now();
+    loop {
+        if let Some(sol) = h.try_result() {
+            return sol;
+        }
+        let id = h.id();
+        assert!(t0.elapsed() < WAIT_BUDGET, "hung waiter: {what} (job {id}) past {WAIT_BUDGET:?}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// A chaos target graph: small enough to finish fast, dense enough to
+/// expand a real search tree so node/split/alloc ordinals can fire.
+fn chaos_graph(seed: u64) -> Graph {
+    let n = 18 + (seed % 9) as usize; // 18..=26 vertices
+    generators::erdos_renyi(n, 0.3, seed)
+}
+
+/// Assert a witness matches its solution: right length for MVC, and it
+/// verifies edge-by-edge against the original graph.
+fn assert_witness_sound(g: &Graph, sol: &Solution, what: &str) {
+    let w = sol
+        .witness
+        .as_ref()
+        .unwrap_or_else(|| panic!("{what}: missing witness ({:?})", sol.termination));
+    assert_eq!(w.len() as u32, sol.objective, "{what}: |witness| != objective");
+    witness::verify_cover(g, w)
+        .unwrap_or_else(|e| panic!("{what}: witness failed verification: {e}"));
+    assert_eq!(sol.witness_verified, Some(true), "{what}: service did not self-verify");
+}
+
+/// The headline run: `plan_count()` seeded fault plans, batched with a
+/// clean oracle-checked job each, then the conservation ledgers.
+#[test]
+fn seeded_fault_plans_never_hang_and_ledgers_reconcile() {
+    let svc = VcService::builder().workers(3).scheduler(sched()).build();
+    let mut log = std::env::var("CAVC_CHAOS_LOG").ok().map(|p| {
+        if let Some(dir) = std::path::Path::new(&p).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).unwrap_or_else(|e| panic!("CAVC_CHAOS_LOG dir: {e}"));
+            }
+        }
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&p)
+            .unwrap_or_else(|e| panic!("CAVC_CHAOS_LOG={p}: {e}"))
+    });
+    let plans = plan_count();
+    let (mut failed, mut completed) = (0u64, 0u64);
+    for batch_start in (0..plans).step_by(8) {
+        let mut faulty = Vec::new();
+        for seed in batch_start..(batch_start + 8).min(plans) {
+            let plan = FaultPlan::from_seed(seed);
+            let g = chaos_graph(seed);
+            let h = svc.submit_with(
+                Problem::mvc(g.clone()),
+                JobOptions {
+                    extract_witness: true,
+                    fault: Some(plan.clone()),
+                    ..JobOptions::default()
+                },
+            );
+            faulty.push((seed, plan, g, h));
+        }
+        // one clean job rides along with every faulted batch
+        let clean_g = generators::erdos_renyi(16, 0.25, batch_start);
+        let clean_opt = oracle::mvc_size(&clean_g);
+        let clean = svc.submit(Problem::mvc(clean_g));
+
+        for (seed, plan, g, h) in faulty {
+            let sol = wait_bounded(&h, &format!("fault seed {seed}"));
+            match sol.termination {
+                Termination::Failed => {
+                    failed += 1;
+                    let msg = sol.failure.as_deref().unwrap_or_else(|| {
+                        panic!("seed {seed}: Failed without a captured panic message")
+                    });
+                    assert!(
+                        msg.starts_with(INJECTED_PANIC_TAG),
+                        "seed {seed}: unexpected (non-injected) panic: {msg}"
+                    );
+                }
+                Termination::Complete => {
+                    // the plan's ordinals landed past the job's event
+                    // stream; the answer must be fully trustworthy
+                    completed += 1;
+                    assert_witness_sound(&g, &sol, &format!("seed {seed}"));
+                }
+                t => panic!("seed {seed}: unexpected termination {t:?} (no retry/deadline set)"),
+            }
+            if let Some(f) = log.as_mut() {
+                writeln!(f, "{} -> {:?}", plan.describe(), sol.termination)
+                    .expect("chaos log write");
+            }
+        }
+        let sol = wait_bounded(&clean, &format!("clean job of batch {batch_start}"));
+        assert_eq!(sol.termination, Termination::Complete, "clean job of batch {batch_start}");
+        assert_eq!(sol.objective, clean_opt, "clean job of batch {batch_start}: wrong answer");
+    }
+    assert!(failed > 0, "no plan fired across {plans} seeds — chaos coverage collapsed");
+    assert!(completed > 0, "every plan fired — non-firing control path uncovered");
+
+    // Quiescence: every job finalized, so the queue ledger must balance
+    // exactly. Worker counters publish per processed item, so give the
+    // final flush a moment before asserting.
+    let t0 = Instant::now();
+    loop {
+        let s = svc.stats();
+        let consumed = s.pool.pops + s.pool.shared_pops + s.pool.steals;
+        let produced = s.pool.pushes + s.pool.injected;
+        if consumed == produced && s.pool.backlog == 0 && s.admission.live_bytes == 0 {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "ledgers did not reconcile: consumed {consumed} != produced {produced} \
+             (backlog {}, live bytes {})",
+            s.pool.backlog,
+            s.admission.live_bytes
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Degradation ladder rung 3: faulted jobs with a [`RetryPolicy`] are
+/// rerun on the sequential solver and come back *trusted* — oracle-exact
+/// objectives and verified witnesses under [`Termination::Recovered`].
+#[test]
+fn retry_policy_recovers_faulted_jobs_with_trusted_answers() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).build();
+    let retry = RetryPolicy { attempts: 2, backoff: Duration::ZERO };
+    let mut recovered = 0u64;
+    // seeds offset from the main run's range; plus one plan that is
+    // *guaranteed* to fire (setup panics are unconditional)
+    let mut plans: Vec<FaultPlan> = (10_000..10_024).map(FaultPlan::from_seed).collect();
+    let mut setup_plan = FaultPlan::none(99_999);
+    setup_plan.panic_in_setup = true;
+    plans.push(setup_plan);
+    for plan in plans {
+        let seed = plan.seed;
+        let g = chaos_graph(seed);
+        let opt = oracle::mvc_size(&g);
+        let h = svc.submit_with(
+            Problem::mvc(g.clone()),
+            JobOptions {
+                extract_witness: true,
+                fault: Some(plan),
+                retry: Some(retry),
+                ..JobOptions::default()
+            },
+        );
+        let sol = wait_bounded(&h, &format!("retry seed {seed}"));
+        match sol.termination {
+            Termination::Complete => {}
+            Termination::Recovered => {
+                recovered += 1;
+                let msg = sol.failure.as_deref().expect("Recovered must keep the panic message");
+                assert!(msg.starts_with(INJECTED_PANIC_TAG), "seed {seed}: {msg}");
+            }
+            t => panic!("retry seed {seed}: unexpected termination {t:?}"),
+        }
+        // recovered or not, the answer must be exact and witnessed
+        assert_eq!(sol.objective, opt, "retry seed {seed}: wrong objective");
+        assert_witness_sound(&g, &sol, &format!("retry seed {seed}"));
+    }
+    assert!(recovered > 0, "no job took the sequential-rescue path");
+    let adm = svc.stats().admission;
+    assert!(adm.retries >= recovered, "retries ({}) < recovered ({recovered})", adm.retries);
+    assert_eq!(adm.recovered, recovered, "AdmissionStats.recovered miscounts");
+    assert_eq!(adm.quarantined, 0, "sequential rescue must not fail on healthy graphs");
+}
+
+/// Without a retry policy the same injected faults must fail fast —
+/// quarantine accounting stays at zero and `Failed` surfaces directly.
+#[test]
+fn setup_panic_without_retry_fails_fast() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).build();
+    let mut plan = FaultPlan::none(7);
+    plan.panic_in_setup = true;
+    let h = svc.submit_with(
+        Problem::mvc(chaos_graph(7)),
+        JobOptions { fault: Some(plan), ..JobOptions::default() },
+    );
+    let sol = wait_bounded(&h, "setup panic, no retry");
+    assert_eq!(sol.termination, Termination::Failed);
+    let msg = sol.failure.as_deref().expect("Failed must carry the panic message");
+    assert!(msg.starts_with(INJECTED_PANIC_TAG), "payload: {msg}");
+    assert_eq!(svc.stats().admission.retries, 0, "no policy, no rescue attempts");
+    // the pool survived and still solves
+    let g = generators::erdos_renyi(16, 0.25, 3);
+    let opt = oracle::mvc_size(&g);
+    assert_eq!(svc.solve(Problem::mvc(g)).objective, opt);
+}
+
+/// Acceptance criterion: a deadline-expired MVC job with witness
+/// extraction returns a *feasible best-so-far* cover — `|witness| ==
+/// objective`, verifying against the original graph.
+#[test]
+fn deadline_expired_mvc_returns_feasible_anytime_witness() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).build();
+    let g = generators::p_hat(180, 0.35, 0.85, 11); // far beyond 40ms
+    let h = svc.submit_with(
+        Problem::mvc(g.clone()),
+        JobOptions {
+            extract_witness: true,
+            timeout: Some(Duration::from_millis(40)),
+            ..JobOptions::default()
+        },
+    );
+    let sol = wait_bounded(&h, "anytime deadline");
+    assert_eq!(sol.termination, Termination::DeadlineExpired);
+    assert!(sol.objective >= 1 && sol.objective <= 180, "bound {} out of range", sol.objective);
+    assert_witness_sound(&g, &sol, "anytime deadline");
+}
+
+/// Same anytime contract on cancellation, and for MIS (the complement
+/// witness path).
+#[test]
+fn cancelled_jobs_return_anytime_witnesses_too() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).build();
+    for problem in [
+        Problem::mvc(generators::p_hat(180, 0.35, 0.85, 11)),
+        Problem::mis(generators::p_hat(180, 0.35, 0.85, 12)),
+    ] {
+        let g = problem.graph().as_ref().clone();
+        let is_mis = matches!(problem.kind(), cavc::solver::ProblemKind::Mis);
+        let h = svc.submit_with(
+            problem,
+            JobOptions { extract_witness: true, ..JobOptions::default() },
+        );
+        std::thread::sleep(Duration::from_millis(30));
+        h.cancel();
+        let sol = wait_bounded(&h, "anytime cancel");
+        assert_eq!(sol.termination, Termination::Cancelled);
+        let w = sol.witness.as_ref().expect("cancelled job must keep its best-so-far witness");
+        assert_eq!(w.len() as u32, sol.objective, "|witness| != objective");
+        if is_mis {
+            witness::verify_independent_set(&g, w).expect("anytime MIS witness");
+        } else {
+            witness::verify_cover(&g, w).expect("anytime MVC witness");
+        }
+        assert_eq!(sol.witness_verified, Some(true));
+    }
+}
+
+/// Live progress: the bound/nodes/elapsed snapshot moves while a job
+/// runs and flips `done` once the outcome is published.
+#[test]
+fn progress_snapshots_track_a_running_job() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).build();
+    let h = svc.submit(Problem::mvc(generators::p_hat(180, 0.35, 0.85, 11)));
+    let t0 = Instant::now();
+    loop {
+        let p = h.progress();
+        if p.best_bound.is_some() && p.nodes_expanded > 0 {
+            assert!(!p.done, "progress says done before any result exists");
+            break;
+        }
+        assert!(t0.elapsed() < WAIT_BUDGET, "job never published progress");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    h.cancel();
+    let sol = wait_bounded(&h, "progress job");
+    let p = h.progress();
+    assert!(p.done);
+    assert_eq!(p.best_bound, Some(sol.objective), "final snapshot disagrees with the outcome");
+    assert!(p.elapsed >= sol.elapsed);
+}
+
+/// Memory watchdog, soft limit: an over-budget pool degrades (forced
+/// delta representation, throughput-lane dispatch held) but every job
+/// still completes with exact answers, and the ledger drains to zero.
+#[test]
+fn watchdog_soft_limit_degrades_without_wrong_answers() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).mem_soft(1).build();
+    // a hog keeps the ledger above the (tiny) soft limit...
+    let hog = svc.submit(Problem::mvc(generators::p_hat(180, 0.35, 0.85, 11)));
+    let t0 = Instant::now();
+    while svc.stats().admission.live_bytes <= 1 {
+        assert!(t0.elapsed() < WAIT_BUDGET, "hog never charged the ledger");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // ...while latency-lane jobs bypass the soft gate and stay exact
+    let g = generators::erdos_renyi(16, 0.25, 1);
+    let opt = oracle::mvc_size(&g);
+    let h = svc.submit_with(
+        Problem::mvc(g),
+        JobOptions { priority: Some(Lane::Latency), ..JobOptions::default() },
+    );
+    let sol = wait_bounded(&h, "latency job under soft pressure");
+    assert_eq!(sol.termination, Termination::Complete);
+    assert_eq!(sol.objective, opt, "degraded mode changed an answer");
+    // ...and throughput-lane dispatch is *held* (the job sits in the
+    // admission queue rather than feeding the over-budget pool)
+    let g = generators::erdos_renyi(16, 0.25, 2);
+    let opt = oracle::mvc_size(&g);
+    let held = svc.submit_with(
+        Problem::mvc(g),
+        JobOptions { priority: Some(Lane::Throughput), ..JobOptions::default() },
+    );
+    std::thread::sleep(Duration::from_millis(150));
+    assert!(held.try_result().is_none(), "throughput job dispatched past the soft limit");
+    assert!(svc.stats().admission.queued >= 1, "held job left the admission queue");
+    // once the hog drains, the hold releases and the answer is exact
+    hog.cancel();
+    wait_bounded(&hog, "watchdog hog");
+    let sol = wait_bounded(&held, "throughput job after pressure cleared");
+    assert_eq!(sol.termination, Termination::Complete);
+    assert_eq!(sol.objective, opt);
+    let t0 = Instant::now();
+    while svc.stats().admission.live_bytes != 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "live-bytes ledger did not drain");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+/// Memory watchdog, hard limit: past it, non-blocking submits shed with
+/// [`SubmitError::MemoryPressure`]; once pressure clears, admission
+/// recovers.
+#[test]
+fn watchdog_hard_limit_sheds_and_recovers() {
+    let svc = VcService::builder().workers(2).scheduler(sched()).mem_hard(1).build();
+    let hog = svc.submit(Problem::mvc(generators::p_hat(180, 0.35, 0.85, 11)));
+    let t0 = Instant::now();
+    while svc.stats().admission.live_bytes <= 1 {
+        assert!(t0.elapsed() < WAIT_BUDGET, "hog never charged the ledger");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let small = generators::erdos_renyi(16, 0.25, 5);
+    let opt = oracle::mvc_size(&small);
+    assert_eq!(
+        svc.try_submit(Problem::mvc(small.clone())).err(),
+        Some(SubmitError::MemoryPressure),
+        "hard limit must shed non-blocking submits"
+    );
+    assert!(svc.stats().admission.mem_rejected >= 1, "shed not counted");
+    hog.cancel();
+    wait_bounded(&hog, "watchdog hog");
+    // pressure clears as the hog's queue drains; admission must recover
+    let t0 = Instant::now();
+    let h = loop {
+        match svc.try_submit(Problem::mvc(small.clone())) {
+            Ok(h) => break h,
+            Err(SubmitError::MemoryPressure) => {
+                assert!(t0.elapsed() < WAIT_BUDGET, "pressure never cleared after the hog drained");
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => panic!("unexpected rejection: {e}"),
+        }
+    };
+    let sol = wait_bounded(&h, "post-pressure job");
+    assert_eq!(sol.termination, Termination::Complete);
+    assert_eq!(sol.objective, opt);
+}

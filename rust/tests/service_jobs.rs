@@ -3,9 +3,7 @@
 //! progress while a large job saturates the pool.
 
 use cavc::graph::generators;
-use cavc::solver::{
-    oracle, JobOptions, Problem, SchedulerKind, Termination, VcService,
-};
+use cavc::solver::{oracle, JobOptions, Problem, SchedulerKind, Termination, VcService};
 use std::time::{Duration, Instant};
 
 /// A dense graph whose exact MVC search runs far longer than any of
@@ -112,6 +110,88 @@ fn small_jobs_complete_while_a_large_job_is_branching() {
     assert!(big.try_result().is_none(), "dense search finished implausibly fast");
     big.cancel();
     assert_eq!(big.wait().termination, Termination::Cancelled);
+}
+
+#[test]
+fn double_cancel_is_idempotent_and_waiters_agree() {
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(2).scheduler(sched).build();
+        let h = svc.submit(Problem::mvc(long_running_graph()));
+        h.cancel();
+        h.cancel(); // second cancel must be a harmless no-op
+        let h2 = h.clone();
+        let other = std::thread::spawn(move || h2.wait());
+        let a = h.wait();
+        let b = other.join().expect("waiter thread");
+        assert_eq!(a.termination, Termination::Cancelled, "{}", sched.name());
+        // every waiter observes the one published outcome
+        assert_eq!(b.termination, a.termination, "{}", sched.name());
+        assert_eq!(b.objective, a.objective, "{}", sched.name());
+        h.cancel(); // cancel after the outcome: still a no-op
+        assert_eq!(h.wait().objective, a.objective, "{}", sched.name());
+    }
+}
+
+#[test]
+fn cancel_racing_completion_publishes_exactly_one_outcome() {
+    // Cancel small jobs at the instant they may be finalizing: whichever
+    // side wins, `wait` must settle on one immutable outcome and a
+    // Complete answer must still be exact.
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(2).scheduler(sched).build();
+        for seed in 0..20u64 {
+            let g = generators::erdos_renyi(14, 0.25, seed);
+            let opt = oracle::mvc_size(&g);
+            let h = svc.submit(Problem::mvc(g));
+            h.cancel();
+            let first = h.wait();
+            match first.termination {
+                Termination::Complete => {
+                    assert_eq!(first.objective, opt, "{} seed {seed}", sched.name())
+                }
+                Termination::Cancelled => {}
+                t => panic!("{} seed {seed}: unexpected termination {t:?}", sched.name()),
+            }
+            let again = h.wait();
+            assert_eq!(again.termination, first.termination, "{} seed {seed}", sched.name());
+            assert_eq!(again.objective, first.objective, "{} seed {seed}", sched.name());
+        }
+    }
+}
+
+#[test]
+fn deadline_racing_finalization_is_consistent() {
+    // Deadlines short enough to fire *during* setup/finalization of a
+    // small job: the outcome must be one of Complete/DeadlineExpired,
+    // published once, with Complete answers still exact.
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        let svc = VcService::builder().workers(2).scheduler(sched).build();
+        for (i, micros) in [0u64, 50, 200, 500, 1_000, 2_000, 5_000].into_iter().enumerate() {
+            let g = generators::erdos_renyi(14, 0.25, i as u64);
+            let opt = oracle::mvc_size(&g);
+            let h = svc.submit_with(
+                Problem::mvc(g),
+                JobOptions {
+                    timeout: Some(Duration::from_micros(micros)),
+                    ..JobOptions::default()
+                },
+            );
+            let first = h.wait();
+            match first.termination {
+                Termination::Complete => {
+                    assert_eq!(first.objective, opt, "{} {micros}us", sched.name())
+                }
+                Termination::DeadlineExpired => {
+                    // anytime bound: sound (greedy at worst), never junk
+                    assert!(first.objective <= 14, "{} {micros}us", sched.name());
+                }
+                t => panic!("{} {micros}us: unexpected termination {t:?}", sched.name()),
+            }
+            let again = h.wait();
+            assert_eq!(again.termination, first.termination, "{} {micros}us", sched.name());
+            assert_eq!(again.objective, first.objective, "{} {micros}us", sched.name());
+        }
+    }
 }
 
 #[test]
