@@ -1,0 +1,98 @@
+//! Memo-cache throughput: a component-rich batch run cold (empty cache)
+//! and warm (identical resubmission on the same resident service).
+//!
+//! The workload is a deterministic set of union-of-random graphs — many
+//! small induced components per job, repeated across jobs — which is
+//! exactly the traffic shape the cross-job memo cache targets: the warm
+//! pass should answer most component dispatches from the cache instead
+//! of re-searching their subtrees. Both passes must produce identical
+//! objectives; the warm pass must actually hit. Results go to stdout
+//! and `bench_out/memo_throughput.csv`. `CAVC_SMOKE=1` shrinks the
+//! batch for the CI smoke job (trajectory only, no speedup threshold —
+//! these graphs are small enough that wall-clock ratios are noisy in
+//! shared CI runners; the hit-rate column is the load-bearing signal).
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{Problem, VcService};
+use std::time::Instant;
+
+/// Component-rich deterministic batch: unions of small random parts,
+/// with seeds reused across the batch so distinct jobs share component
+/// structure even before resubmission.
+fn batch(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| {
+            let seed = 0x5EED_0000 + (i % 8) as u64;
+            generators::union_of_random(4, 4, 9, 0.35, seed)
+        })
+        .collect()
+}
+
+fn run_pass(svc: &VcService, graphs: &[Graph]) -> (Vec<u32>, f64) {
+    let t = Instant::now();
+    let handles: Vec<_> = graphs.iter().map(|g| svc.submit(Problem::mvc(g.clone()))).collect();
+    let answers: Vec<u32> = handles.iter().map(|h| h.wait().objective).collect();
+    (answers, t.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let n = if smoke { 24 } else { 120 };
+    let graphs = batch(n);
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    println!("# memo throughput — {n} component-rich graphs, {workers} workers");
+
+    let svc = VcService::builder().workers(workers).build();
+    let (cold, cold_s) = run_pass(&svc, &graphs);
+    let cold_stats = svc.stats().memo;
+    let (warm, warm_s) = run_pass(&svc, &graphs);
+    let warm_stats = svc.stats().memo;
+
+    assert_eq!(cold, warm, "warm pass must reproduce the cold answers");
+    let warm_hits = warm_stats.hits - cold_stats.hits;
+    let warm_lookups = warm_stats.lookups - cold_stats.lookups;
+    assert!(warm_hits > 0, "warm resubmission must hit the cache");
+
+    let rate = |h: u64, l: u64| h as f64 / (l as f64).max(1.0);
+    println!("{:<12} {:>10} {:>10} {:>10} {:>10}", "pass", "secs", "lookups", "hits", "hit_rate");
+    println!(
+        "{:<12} {:>10.4} {:>10} {:>10} {:>10.3}",
+        "cold",
+        cold_s,
+        cold_stats.lookups,
+        cold_stats.hits,
+        rate(cold_stats.hits, cold_stats.lookups)
+    );
+    println!(
+        "{:<12} {:>10.4} {:>10} {:>10} {:>10.3}",
+        "warm",
+        warm_s,
+        warm_lookups,
+        warm_hits,
+        rate(warm_hits, warm_lookups)
+    );
+    println!(
+        "warm vs cold: {:.2}x wall, {} subtree nodes saved, {} bytes held",
+        cold_s / warm_s.max(1e-12),
+        warm_stats.saved_nodes,
+        warm_stats.bytes
+    );
+
+    let rows = vec![
+        format!(
+            "cold,{n},{workers},{cold_s},{},{},{}",
+            cold_stats.lookups,
+            cold_stats.hits,
+            rate(cold_stats.hits, cold_stats.lookups)
+        ),
+        format!(
+            "warm,{n},{workers},{warm_s},{warm_lookups},{warm_hits},{}",
+            rate(warm_hits, warm_lookups)
+        ),
+    ];
+    let header = "pass,jobs,workers,secs,lookups,hits,hit_rate";
+    match cavc::harness::tables::write_csv("memo_throughput", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

@@ -55,6 +55,42 @@ pub fn induce_residual_into(
     }
 }
 
+/// Canonical fingerprint of an induced-component CSR, used as the key
+/// of the cross-job memo cache (`solver::memo`).
+///
+/// [`induce_residual_into`] renumbers a component's vertices `0..k` in
+/// ascending parent-id order and emits sorted rows, so structurally
+/// identical components produce bit-identical `(row_ptr, adj)` arrays —
+/// the fingerprint hashes exactly those words (plus the dimensions;
+/// `row_ptr` already encodes the full degree profile). FNV-1a over the
+/// words with a splitmix64-style avalanche finisher: cheap, word-at-a-
+/// time, and well mixed in the high bits (the cache shards on them).
+/// Collisions are harmless — the cache verifies every lookup against
+/// the retained arrays byte-for-byte.
+pub fn fingerprint_csr(row_ptr: &[u32], adj: &[u32]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |w: u64| {
+        h ^= w;
+        h = h.wrapping_mul(PRIME);
+    };
+    mix(row_ptr.len() as u64);
+    mix(adj.len() as u64);
+    for &w in row_ptr {
+        mix(w as u64);
+    }
+    for &w in adj {
+        mix(w as u64);
+    }
+    // splitmix64 finisher: avalanche so shard selection on high bits
+    // and bucket selection on low bits are both uniform.
+    h ^= h >> 30;
+    h = h.wrapping_mul(0xbf58476d1ce4e5b9);
+    h ^= h >> 27;
+    h = h.wrapping_mul(0x94d049bb133111eb);
+    h ^ (h >> 31)
+}
+
 /// A subgraph induced on a vertex subset, with id translation maps.
 #[derive(Debug, Clone)]
 pub struct InducedSubgraph {
@@ -200,6 +236,35 @@ mod tests {
         assert_eq!(adj.len(), 6);
         let sub = Graph::from_csr_parts(row_ptr, adj);
         assert_eq!(sub.num_edges(), 3);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_structure_not_origin() {
+        // The same structure induced from different host graphs (and
+        // different original ids) fingerprints identically...
+        let g1 = generators::cycle(8);
+        let g2 = Graph::disjoint_union(&[generators::clique(3), generators::cycle(8)]);
+        let build = |g: &Graph, comp: &[u32]| {
+            let mut map = vec![u32::MAX; g.num_vertices()];
+            for (i, &v) in comp.iter().enumerate() {
+                map[v as usize] = i as u32;
+            }
+            let deg: Vec<u32> = (0..g.num_vertices() as u32).map(|v| g.degree(v)).collect();
+            let (mut rp, mut aj) = (Vec::new(), Vec::new());
+            induce_residual_into(g, comp, &map, |v| deg[v as usize], &mut rp, &mut aj);
+            (rp, aj)
+        };
+        let (rp1, aj1) = build(&g1, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        let (rp2, aj2) = build(&g2, &[3, 4, 5, 6, 7, 8, 9, 10]);
+        assert_eq!((&rp1, &aj1), (&rp2, &aj2), "canonical CSR must be id-independent");
+        assert_eq!(fingerprint_csr(&rp1, &aj1), fingerprint_csr(&rp2, &aj2));
+        // ...while different structures differ.
+        let g3 = generators::path(8);
+        let (rp3, aj3) = build(&g3, &[0, 1, 2, 3, 4, 5, 6, 7]);
+        assert_ne!(fingerprint_csr(&rp1, &aj1), fingerprint_csr(&rp3, &aj3));
+        // Degenerate shapes don't alias: empty vs singleton vs edgeless pair.
+        assert_ne!(fingerprint_csr(&[0], &[]), fingerprint_csr(&[0, 0], &[]));
+        assert_ne!(fingerprint_csr(&[0, 0], &[]), fingerprint_csr(&[0, 0, 0], &[]));
     }
 
     #[test]

@@ -147,6 +147,26 @@
 //! objective" to "…and the parallel cover itself verifies": see
 //! `tests/witness_fuzz.rs` and the CLI's `--check` flag.
 //!
+//! ## Cross-job component memoization
+//!
+//! The resident service owns a sharded component → solution cache
+//! ([`solver::memo`]) consulted at every component dispatch: the
+//! canonical §IV-B induced form (renumbered CSR) is fingerprinted, and
+//! a verified hit skips the component's entire branch-and-bound subtree
+//! — the cached exact cover feeds straight through the registry's fold
+//! algebra via `add_solved_component`, exactly like a kernelized
+//! special component. Only *exact* component covers are ever published
+//! (bound-pruned PVC subtrees and deadline-truncated searches never
+//! reach the cache; publication is arranged at last-descendant
+//! finalization and poisoned on any early stop), so a warm service
+//! returns bit-identical verified witnesses to a cold one. Cache bytes
+//! are charged to the admission ledger and shed *first* under memory
+//! pressure — cached results are a luxury, live jobs are not. Batch
+//! mode exposes `--memo on|off` / `--memo-bytes N` (`CAVC_MEMO`,
+//! `CAVC_MEMO_BYTES`); differential coverage lives in
+//! `tests/memo_cache.rs` and `benches/memo_throughput.rs` measures the
+//! warm/cold resubmission ratio.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -15,7 +15,8 @@
 //! --timeout SECS, --k K, --out FILE, --no-accel, --seed S. Batch mode
 //! (`--jobs`) additionally takes the admission/QoS flags --lane
 //! latency|throughput, --max-queued N, --submit-timeout SECS, plus the
-//! degradation flags --retry N, --mem-soft BYTES, --mem-hard BYTES; it
+//! degradation flags --retry N, --mem-soft BYTES, --mem-hard BYTES and
+//! the cross-job memo-cache flags --memo on|off, --memo-bytes N; it
 //! exits non-zero if any job ends `Termination::Failed`.
 
 use cavc::bail;
@@ -35,7 +36,7 @@ use std::time::{Duration, Instant};
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
     "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth", "lane", "submit-timeout",
-    "max-queued", "retry", "mem-soft", "mem-hard",
+    "max-queued", "retry", "mem-soft", "mem-hard", "memo", "memo-bytes",
 ];
 
 fn main() {
@@ -105,6 +106,12 @@ fn print_help() {
         \x20                                            forces the delta node representation)\n\
         \x20                   [--mem-hard BYTES]      (batch: memory-watchdog hard limit — submits\n\
         \x20                                            past it shed with a MemoryPressure error)\n\
+        \x20                   [--memo on|off]         (batch: cross-job component memo cache — exact\n\
+        \x20                                            component covers are reused across jobs on the\n\
+        \x20                                            resident service; CAVC_MEMO sets the default)\n\
+        \x20                   [--memo-bytes N]        (batch: memo-cache byte budget; default is a\n\
+        \x20                                            quarter of the watchdog stack budget, and\n\
+        \x20                                            CAVC_MEMO_BYTES overrides)\n\
          pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check]\n         mis <graph|dataset> [--variant ...] [--check]\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
@@ -156,6 +163,13 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
     if let Some(d) = args.get("max-pin-depth") {
         cfg.max_pin_depth = d.parse().context("--max-pin-depth")?;
     }
+    if let Some(m) = args.get("memo") {
+        cfg.memo = Some(match m {
+            "on" => true,
+            "off" => false,
+            v => bail!("--memo takes on|off, got {v:?}"),
+        });
+    }
     let t: f64 = args.get_parse("timeout", 0.0).map_err(Error::msg)?;
     if t > 0.0 {
         cfg.timeout = Some(Duration::from_secs_f64(t));
@@ -205,6 +219,9 @@ fn build_service(args: &Args, cfg: &SolverConfig, max_queued: Option<usize>) -> 
     }
     if let Some(s) = args.get("mem-hard") {
         b = b.mem_hard(s.parse().context("--mem-hard")?);
+    }
+    if let Some(s) = args.get("memo-bytes") {
+        b = b.memo_bytes(s.parse().context("--memo-bytes")?);
     }
     Ok(b.build())
 }
@@ -331,6 +348,13 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
         submitted,
         agg.tree_nodes
     );
+    let m = svc.stats().memo;
+    if m.lookups > 0 || m.inserts > 0 {
+        println!(
+            "-- memo: {} hits / {} lookups ({} inserts, {} evictions, {} bytes held, ~{} nodes saved)",
+            m.hits, m.lookups, m.inserts, m.evictions, m.bytes, m.saved_nodes
+        );
+    }
     Ok(())
 }
 

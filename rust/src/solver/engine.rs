@@ -101,7 +101,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::degree::{DegElem, NonZeroBounds};
-use crate::graph::induced::induce_residual_into;
+use crate::graph::induced::{fingerprint_csr, induce_residual_into};
 use crate::graph::Graph;
 use crate::reduce::special::{classify, SpecialComponent};
 use crate::util::timer::{Activity, ActivityTimer, NUM_ACTIVITIES};
@@ -250,6 +250,7 @@ impl EngineCfg {
             node_repr: self.node_repr,
             max_pin_depth: self.max_pin_depth,
             fault: None,
+            memo: None,
         }
     }
 }
@@ -287,6 +288,12 @@ pub struct JobCfg {
     /// set, the engine consults it at node-processing, split, and
     /// allocation points.
     pub fault: Option<Arc<crate::solver::faults::FaultInjector>>,
+    /// Cross-job component memoization handle (see
+    /// [`crate::solver::memo`]). `None` on one-shot engines and when the
+    /// service runs with the cache disabled; when set, component
+    /// dispatch consults the cache and exactly-solved components are
+    /// published back at last-view-drop time.
+    pub memo: Option<Arc<crate::solver::memo::JobMemo>>,
 }
 
 impl Default for JobCfg {
@@ -362,6 +369,13 @@ pub struct EngineStats {
     /// Worker panics contained while processing this job's nodes (the
     /// service's per-job panic containment; includes injected faults).
     pub panics: u64,
+    /// Component dispatches that consulted the cross-job memo cache.
+    pub memo_lookups: u64,
+    /// Memo lookups that skipped the component's subtree entirely.
+    pub memo_hits: u64,
+    /// Coarse lower-bound estimate of tree nodes not expanded thanks to
+    /// memo hits (component size per hit).
+    pub memo_saved_nodes: u64,
     /// Per-activity busy nanoseconds (all workers merged).
     pub activity: [u64; NUM_ACTIVITIES],
     /// Per-worker scheduler counters, indexed by worker id (Figure-4
@@ -403,6 +417,9 @@ impl EngineStats {
         self.witness_log_bytes += other.witness_log_bytes;
         self.logs_recycled += other.logs_recycled;
         self.panics += other.panics;
+        self.memo_lookups += other.memo_lookups;
+        self.memo_hits += other.memo_hits;
+        self.memo_saved_nodes += other.memo_saved_nodes;
         for i in 0..NUM_ACTIVITIES {
             self.activity[i] += other.activity[i];
         }
@@ -443,6 +460,17 @@ pub(crate) struct GraphView {
     pub(crate) graph: Graph,
     /// local id → root-residual id; empty when logging is off.
     back: Vec<u32>,
+    /// Memo-cache tag: set when this view's component missed the cache
+    /// and was registered for publication — the last view drop then
+    /// offers the CSR buffers to the cache instead of the pool.
+    memo: Option<ViewMemo>,
+}
+
+/// The memo registration riding on a [`GraphView`]: the component's
+/// canonical fingerprint plus the owning job's cache handle.
+pub(crate) struct ViewMemo {
+    fp: u64,
+    job: Arc<crate::solver::memo::JobMemo>,
 }
 
 /// One *owned* search-tree node. `deg` is the degree array of the node's
@@ -629,6 +657,17 @@ impl JobCtl {
         if cfg.extract_witness {
             registry = registry.with_witnesses();
         }
+        if let Some(m) = &cfg.memo {
+            if m.publishes() {
+                // Observe every child-slot fold: the memo decides
+                // whether the folded value is the component's *exact*
+                // MVC and queues it for publication (solver::memo docs).
+                let m = Arc::clone(m);
+                registry = registry.with_fold_observer(Box::new(
+                    move |ctx, best, limit, cover| m.on_fold(ctx, best, limit, cover),
+                ));
+            }
+        }
         JobCtl {
             registry,
             best: AtomicU32::new(initial_best),
@@ -705,6 +744,12 @@ impl JobCtl {
     pub(crate) fn check_deadline(&self) -> bool {
         if let Some(d) = self.cfg.deadline {
             if Instant::now() >= d {
+                // Poison the memo before raising stop: workers that see
+                // the stop mid-descent complete truncated subtrees whose
+                // folds must not be published (solver::memo docs).
+                if let Some(m) = &self.cfg.memo {
+                    m.poison();
+                }
                 self.timed_out.store(true, Ordering::SeqCst);
                 self.stop.store(true, Ordering::SeqCst);
                 return true;
@@ -1480,11 +1525,27 @@ fn recycle_view_buffers<T: DegElem>(
 ) -> u64 {
     let Some(v) = view else { return 0 };
     let Some(gv) = Arc::into_inner(v) else { return 0 };
-    let GraphView { graph, back } = gv;
+    let GraphView { graph, back, memo } = gv;
     let (row_ptr, adj) = graph.into_parts();
     let bytes = view_bytes(&row_ptr, &adj, &back);
-    ctx.upool.release(row_ptr);
-    ctx.upool.release(adj);
+    match memo {
+        // Memo-registered component: the fold (which happened-before
+        // this last drop — the completing node held the view) may have
+        // queued an exact result. Offer the CSR buffers to the cache as
+        // the entry's verification key; they come back for pool
+        // recycling only when the cache declines (satellite invariant:
+        // buffers the cache took never return to the BufferPool).
+        Some(vm) => {
+            if let Some((rp, aj)) = vm.job.publish_at_recycle(vm.fp, row_ptr, adj, &back) {
+                ctx.upool.release(rp);
+                ctx.upool.release(aj);
+            }
+        }
+        None => {
+            ctx.upool.release(row_ptr);
+            ctx.upool.release(adj);
+        }
+    }
     ctx.upool.release(back);
     bytes
 }
@@ -2198,13 +2259,11 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
         }
     }
 
-    // Register the component child: Best starts at the achievable
+    // Bounds for the component child: Best starts at the achievable
     // |V_i|-1; Limit adds the parent's remaining budget.
     let parent_bound = shared.ctl.bound_of_parent(node.ctx, parent);
     let best0 = size - 1;
     let limit = best0.min(parent_bound);
-    let child_ctx = shared.ctl.registry.new_child(parent, best0, limit);
-    ctx.stats.registry_entries += 1;
 
     let view_n = node.deg.len();
     let induce = shared.ctl.cfg.induce_threshold > 0.0
@@ -2216,6 +2275,51 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
         // root-id image.
         ctx.queue.sort_unstable();
     }
+
+    // Cross-job memoization (solver::memo): induced components come out
+    // in canonical renumbered form, so build the CSR up front and
+    // consult the cache *before* registering a child slot — a hit folds
+    // the cached exact answer into the parent like a closed-form special
+    // component and skips the subtree entirely. A miss hands the built
+    // CSR (plus its fingerprint, registered for publication) on to
+    // `induce_component_child`.
+    let memo = if induce { shared.ctl.cfg.memo.clone() } else { None };
+    let prebuilt = match &memo {
+        Some(m) => {
+            let (row_ptr, adj, edges2) = build_component_csr(g, ctx, node);
+            let fp = fingerprint_csr(&row_ptr, &adj);
+            ctx.stats.memo_lookups += 1;
+            if let Some((mvc, cover)) = m.lookup(fp, &row_ptr, &adj, extract) {
+                ctx.stats.memo_hits += 1;
+                ctx.stats.memo_saved_nodes += size as u64;
+                shared.ctl.registry.add_solved_component(parent, mvc);
+                if extract {
+                    // Cached covers are component-local: translate
+                    // through the sorted component list and the parent
+                    // view's back map into root-residual ids.
+                    let cover = cover.expect("memo hit without cover under need_cover");
+                    let to_root = |l: u32| {
+                        let v = ctx.queue[l as usize];
+                        match node.view.as_deref() {
+                            Some(vw) => vw.back[v as usize],
+                            None => v,
+                        }
+                    };
+                    let root_cover: Vec<u32> = cover.iter().map(|&l| to_root(l)).collect();
+                    shared.ctl.registry.witness_solved_component(parent, &root_cover);
+                }
+                ctx.upool.release(row_ptr);
+                ctx.upool.release(adj);
+                return;
+            }
+            Some((row_ptr, adj, edges2, fp))
+        }
+        None => None,
+    };
+
+    let child_ctx = shared.ctl.registry.new_child(parent, best0, limit);
+    ctx.stats.registry_entries += 1;
+
     // The component's root-residual ids: the child's winning-witness
     // slot starts at the achievable all-but-one fallback, and for an
     // induced child the same list *is* its back map (local id i =
@@ -2233,7 +2337,25 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     }
     let child = if induce {
         ctx.stats.induced_subproblems += 1;
-        induce_component_child(shared, g, ctx, node, child_ctx, comp_root)
+        let (row_ptr, adj, edges2, view_memo) = match prebuilt {
+            Some((row_ptr, adj, edges2, fp)) => {
+                // Queue the slot for publication only on publishing
+                // (MVC-mode) jobs; the view carries the fingerprint so
+                // the last view drop can hand the buffers to the cache.
+                let vm = memo.filter(|m| m.publishes()).map(|m| {
+                    m.register_pending(child_ctx, fp, best0);
+                    ViewMemo { fp, job: m }
+                });
+                (row_ptr, adj, edges2, vm)
+            }
+            None => {
+                let (row_ptr, adj, edges2) = build_component_csr(g, ctx, node);
+                (row_ptr, adj, edges2, None)
+            }
+        };
+        induce_component_child(
+            shared, ctx, node, child_ctx, comp_root, row_ptr, adj, edges2, view_memo,
+        )
     } else {
         // Full-width fallback (ablation / `--induce-threshold 0`):
         // degrees masked to the component over the parent's view.
@@ -2262,33 +2384,25 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     push_child(ctx, handle, NodePayload::Owned(child));
 }
 
-/// Materialize the component in `ctx.queue` (already sorted by the
-/// dispatch gate) as a compact, renumbered subproblem: a component-local
-/// CSR plus a `|C|`-sized degree array, all built from recycled buffers.
-/// The paper's §IV-B subgraph induction, applied inside the tree — every
-/// descendant of this child now pays O(|C|) per clone and sweeps a
-/// |C|-wide window. `back` is the component's root-residual id list
-/// (local id `i` → `back[i]`), pre-composed through the parent view's
-/// back map; empty when witness extraction is off.
-fn induce_component_child<T: DegElem>(
-    shared: &JobView<'_>,
+/// Build the canonical induced CSR of the component in `ctx.queue`
+/// (already sorted by the dispatch gate) from recycled buffers, filling
+/// `ctx.vmap` with the view→local renumbering. Returns
+/// `(row_ptr, adj, 2·edges)`. Shared by the memo lookup (which needs the
+/// canonical arrays before a child slot exists) and the plain induced
+/// dispatch path.
+fn build_component_csr<T: DegElem>(
     g: &Graph,
     ctx: &mut WorkerCtx<T>,
     node: &Node<T>,
-    child_ctx: u32,
-    back: Vec<u32>,
-) -> Node<T> {
+) -> (Vec<u32>, Vec<u32>, u64) {
     debug_assert!(ctx.queue.windows(2).all(|w| w[0] < w[1]), "component must be sorted");
     let k = ctx.queue.len();
     for (i, &v) in ctx.queue.iter().enumerate() {
         ctx.vmap[v as usize] = i as u32;
     }
-    let mut deg = ctx.pool.acquire(k);
     let mut edges2 = 0u64;
     for &v in &ctx.queue {
-        let d = node.deg[v as usize];
-        edges2 += d.to_u32() as u64;
-        deg.push(d);
+        edges2 += node.deg[v as usize].to_u32() as u64;
     }
     let mut row_ptr = ctx.upool.acquire(k + 1);
     let mut adj = ctx.upool.acquire(edges2 as usize);
@@ -2300,6 +2414,36 @@ fn induce_component_child<T: DegElem>(
         &mut row_ptr,
         &mut adj,
     );
+    (row_ptr, adj, edges2)
+}
+
+/// Materialize the component in `ctx.queue` (already sorted by the
+/// dispatch gate) as a compact, renumbered subproblem: the prebuilt
+/// component-local CSR ([`build_component_csr`]) plus a `|C|`-sized
+/// degree array from recycled buffers. The paper's §IV-B subgraph
+/// induction, applied inside the tree — every descendant of this child
+/// now pays O(|C|) per clone and sweeps a |C|-wide window. `back` is the
+/// component's root-residual id list (local id `i` → `back[i]`),
+/// pre-composed through the parent view's back map; empty when witness
+/// extraction is off. `memo` tags the view when the component is
+/// registered for memo publication at last view drop.
+#[allow(clippy::too_many_arguments)]
+fn induce_component_child<T: DegElem>(
+    shared: &JobView<'_>,
+    ctx: &mut WorkerCtx<T>,
+    node: &Node<T>,
+    child_ctx: u32,
+    back: Vec<u32>,
+    row_ptr: Vec<u32>,
+    adj: Vec<u32>,
+    edges2: u64,
+    memo: Option<ViewMemo>,
+) -> Node<T> {
+    let k = ctx.queue.len();
+    let mut deg = ctx.pool.acquire(k);
+    for &v in &ctx.queue {
+        deg.push(node.deg[v as usize]);
+    }
     track_alloc(shared, ctx, k);
     if shared.ctl.cfg.instrument {
         // The view's CSR (and back map) stays live as long as any
@@ -2315,7 +2459,11 @@ fn induce_component_child<T: DegElem>(
         edges: edges2 / 2,
         bounds: NonZeroBounds::full(k),
         ctx: child_ctx,
-        view: Some(Arc::new(GraphView { graph: Graph::from_csr_parts(row_ptr, adj), back })),
+        view: Some(Arc::new(GraphView {
+            graph: Graph::from_csr_parts(row_ptr, adj),
+            back,
+            memo,
+        })),
         log: Vec::new(),
     }
 }

@@ -1,0 +1,767 @@
+//! Cross-job component memoization: a sharded, concurrent
+//! component → solution cache owned by [`VcService`](super::VcService)
+//! and consulted at every component dispatch.
+//!
+//! # Why this works
+//!
+//! Component-aware branching (§III-C) already isolates every split
+//! component into its own registry child slot, and tree induction
+//! (§IV-B) re-numbers each component into a *canonical* compact CSR:
+//! vertices are renamed `0..k` in ascending order of their parent-view
+//! ids and each adjacency row is sorted. Two structurally identical
+//! components therefore induce **bit-identical** CSR arrays, no matter
+//! which job, graph, or tree depth they came from. That canonical form
+//! is the cache key: a 64-bit fingerprint of the induced
+//! `(row_ptr, adj)` arrays (the row pointers *are* the degree profile),
+//! verified on lookup by exact comparison against the retained arrays,
+//! so hash collisions can never corrupt an answer.
+//!
+//! # Hit flow through the fold algebra
+//!
+//! A component's solved value enters its parent through the registry
+//! fold (`val = Sum` over child slots, witness side-table concatenation).
+//! A cache hit feeds that algebra directly: the engine calls
+//! `Registry::add_solved_component(parent, mvc)` — exactly how special
+//! (clique/chain) components are folded in — appends the cached cover
+//! (translated through the component's `back` map into root-residual
+//! ids) to the parent's witness row, and **never registers a child
+//! slot**: the entire subtree is skipped.
+//!
+//! # The exact-covers-only invariant
+//!
+//! Only *exact* component covers may be published:
+//!
+//! * **Bound-pruned subtrees are rejected at the fold.** A child slot
+//!   finishing with `best` is exact iff `best < limit` (some leaf beat
+//!   the pruning bound, so no pruned subtree could have held anything
+//!   smaller) or `limit == best0` (the search ran as pure
+//!   branch-and-bound from the always-achievable `|C|-1` cover).
+//!   PVC jobs (`propagate` mode) never publish at all.
+//! * **Truncated subtrees are rejected by poisoning.** Every site that
+//!   can raise the job's stop flag (cancel, deadline, worker-failure,
+//!   finalize-panic) first marks the job's [`JobMemo`] poisoned; the
+//!   in-flight folds that fire while workers drain are discarded.
+//! * **Failed jobs are retracted.** Entries are versioned by publishing
+//!   job id; a job that terminates `Failed` retracts anything it
+//!   published as belt-and-suspenders on top of poisoning.
+//!
+//! # Publication without a data race
+//!
+//! The fold fires while the completing descendant still holds the
+//! component's view `Arc`, so the fold *happens-before* the last view
+//! drop. Publication is therefore two-phase: the fold observer moves an
+//! exact result from the `pending` (ctx-keyed) to the `ready`
+//! (fingerprint-keyed) table, and the actual insert happens when
+//! `recycle_view_buffers` drops the last view reference — at which
+//! point the engine hands the cache the component's own `row_ptr`/`adj`
+//! buffers as the verification key instead of returning them to the
+//! `BufferPool` (the pool simply never sees them again; evicted entries
+//! are dropped, not re-pooled).
+//!
+//! # Budget and eviction
+//!
+//! The cache is 16-way sharded; each shard runs a CLOCK (second-chance)
+//! ring over its entries with a per-shard slice of the byte budget
+//! (default: [`OccupancyModel::memo_budget_bytes`]
+//! (super::occupancy::OccupancyModel::memo_budget_bytes)). Resident
+//! bytes are charged against the service admission ledger through
+//! [`MemoLedger`], so the memory watchdog sees them — and to keep the
+//! watchdog ladder honest the cache is the *first* rung shed under
+//! pressure: the dispatcher drops the whole cache before holding
+//! throughput-lane dispatch, and an over-hard-limit admission sheds it
+//! before refusing a submit.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// Number of independent shards (and CLOCK rings) in a [`MemoCache`].
+const SHARDS: usize = 16;
+
+/// Fixed per-entry overhead charged on top of the array payloads
+/// (hash-map slot, ring slot, entry header).
+const ENTRY_OVERHEAD: u64 = 64;
+
+/// Counters describing cache behaviour, surfaced through
+/// `ServiceStats::memo` and the `--jobs` batch summary.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Component dispatches that consulted the cache.
+    pub lookups: u64,
+    /// Lookups that skipped a subtree (exact CSR match, witness
+    /// available when required).
+    pub hits: u64,
+    /// Lookups that fell through to a normal branch.
+    pub misses: u64,
+    /// Exact component solutions published into the cache.
+    pub inserts: u64,
+    /// Entries dropped by CLOCK pressure, pressure shed, or retraction.
+    pub evictions: u64,
+    /// Resident cache bytes (arrays + per-entry overhead).
+    pub bytes: u64,
+    /// Coarse lower-bound estimate of tree nodes not expanded thanks to
+    /// hits: the component size `k` per hit (an exact subtree on `k`
+    /// vertices has at least `k` nodes on its leftmost spine).
+    pub saved_nodes: u64,
+}
+
+/// Byte-accounting hook: the cache charges resident bytes against the
+/// owning service's admission ledger so the memory watchdog sees them.
+pub trait MemoLedger: Send + Sync {
+    /// Account `bytes` of newly resident cache memory.
+    fn charge(&self, bytes: u64);
+    /// Return `bytes` of freed cache memory.
+    fn release(&self, bytes: u64);
+}
+
+/// One cached exact component solution. The retained `row_ptr`/`adj`
+/// arrays are the verification key: a fingerprint match alone is never
+/// trusted.
+struct Entry {
+    row_ptr: Vec<u32>,
+    adj: Vec<u32>,
+    /// Exact MVC size of the component.
+    mvc: u32,
+    /// Exact cover in component-local ids (ascending), when the
+    /// publishing job extracted witnesses.
+    cover: Option<Box<[u32]>>,
+    /// Accounted bytes (arrays + overhead).
+    bytes: u64,
+    /// Publishing job id, for retraction.
+    job: u64,
+    /// CLOCK second-chance bit, set on every hit.
+    ref_bit: bool,
+}
+
+impl Entry {
+    fn matches(&self, row_ptr: &[u32], adj: &[u32]) -> bool {
+        self.row_ptr[..] == *row_ptr && self.adj[..] == *adj
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// CLOCK ring of fingerprints present in `map`.
+    ring: Vec<u64>,
+    hand: usize,
+    bytes: u64,
+}
+
+/// Sharded, concurrent component → solution cache. See the module docs
+/// for the key scheme, exactness invariant, and eviction policy.
+pub struct MemoCache {
+    shards: Vec<Mutex<Shard>>,
+    /// Per-shard slice of the byte budget.
+    shard_budget: u64,
+    budget: u64,
+    ledger: Option<Arc<dyn MemoLedger>>,
+    lookups: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+    evictions: AtomicU64,
+    bytes: AtomicU64,
+    saved_nodes: AtomicU64,
+}
+
+impl fmt::Debug for MemoCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("MemoCache")
+            .field("budget", &self.budget)
+            .field("bytes", &self.bytes.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+/// A cache lock section never runs caller code, so a poisoned mutex
+/// (worker panicked elsewhere while unwinding through a drop) only
+/// guards plain counters: continue with the inner state.
+fn lock(m: &Mutex<Shard>) -> MutexGuard<'_, Shard> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+impl MemoCache {
+    /// A cache bounded to `budget` resident bytes, charging them
+    /// against `ledger` when present.
+    pub fn new(budget: u64, ledger: Option<Arc<dyn MemoLedger>>) -> Self {
+        MemoCache {
+            shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: (budget / SHARDS as u64).max(1),
+            budget,
+            ledger,
+            lookups: AtomicU64::new(0),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            bytes: AtomicU64::new(0),
+            saved_nodes: AtomicU64::new(0),
+        }
+    }
+
+    /// Configured byte budget.
+    pub fn budget(&self) -> u64 {
+        self.budget
+    }
+
+    fn shard_of(fp: u64) -> usize {
+        // High bits: the fingerprint finalizer avalanches, and the low
+        // bits already pick the hash-map bucket.
+        (fp >> 59) as usize % SHARDS
+    }
+
+    fn entry_bytes(row_ptr: &[u32], adj: &[u32], cover: Option<&[u32]>) -> u64 {
+        let words = row_ptr.len() + adj.len() + cover.map_or(0, <[u32]>::len);
+        words as u64 * 4 + ENTRY_OVERHEAD
+    }
+
+    /// Look up a component by fingerprint, verifying the induced CSR
+    /// byte-for-byte. `need_cover` lookups (witness-extracting jobs)
+    /// treat an entry without a stored cover as a miss. Returns the
+    /// exact MVC size and, when stored, the cover in component-local
+    /// ids.
+    pub fn lookup(
+        &self,
+        fp: u64,
+        row_ptr: &[u32],
+        adj: &[u32],
+        need_cover: bool,
+    ) -> Option<(u32, Option<Vec<u32>>)> {
+        self.lookups.fetch_add(1, Ordering::Relaxed);
+        let mut s = lock(&self.shards[Self::shard_of(fp)]);
+        if let Some(e) = s.map.get_mut(&fp) {
+            if e.matches(row_ptr, adj) && (!need_cover || e.cover.is_some()) {
+                e.ref_bit = true;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Some((e.mvc, e.cover.as_ref().map(|c| c.to_vec())));
+            }
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        None
+    }
+
+    /// Publish an exact component solution, taking ownership of the
+    /// induced CSR arrays as the verification key. Returns the arrays
+    /// when the cache did *not* take them (duplicate fingerprint,
+    /// entry larger than a shard's budget slice) so the caller can
+    /// recycle them to its `BufferPool`.
+    pub fn insert(
+        &self,
+        fp: u64,
+        row_ptr: Vec<u32>,
+        adj: Vec<u32>,
+        mvc: u32,
+        cover: Option<Box<[u32]>>,
+        job: u64,
+    ) -> Option<(Vec<u32>, Vec<u32>)> {
+        let bytes = Self::entry_bytes(&row_ptr, &adj, cover.as_deref());
+        if bytes > self.shard_budget {
+            return Some((row_ptr, adj));
+        }
+        let mut s = lock(&self.shards[Self::shard_of(fp)]);
+        if s.map.contains_key(&fp) {
+            // First publisher wins; identical components re-derive the
+            // same exact answer, so nothing is lost.
+            return Some((row_ptr, adj));
+        }
+        // CLOCK (second-chance) sweep until the new entry fits.
+        let mut freed = 0u64;
+        let mut evicted = 0u64;
+        while s.bytes + bytes > self.shard_budget && !s.ring.is_empty() {
+            let hand = s.hand % s.ring.len();
+            let victim = s.ring[hand];
+            let spare = match s.map.get_mut(&victim) {
+                Some(e) if e.ref_bit => {
+                    e.ref_bit = false;
+                    s.hand = hand + 1;
+                    continue;
+                }
+                Some(e) => e.bytes,
+                // Ring hygiene: `retract` removes map entries lazily.
+                None => 0,
+            };
+            s.ring.swap_remove(hand);
+            s.hand = hand;
+            if spare > 0 {
+                s.map.remove(&victim);
+                s.bytes -= spare;
+                freed += spare;
+                evicted += 1;
+            }
+        }
+        s.ring.push(fp);
+        s.bytes += bytes;
+        s.map.insert(fp, Entry { row_ptr, adj, mvc, cover, bytes, job, ref_bit: false });
+        // Account while still holding the shard: an entry visible in the
+        // map is always already charged, so a concurrent shed/retract
+        // can never release bytes from the admission ledger before their
+        // matching charge (which would underflow the watchdog counter).
+        self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.bytes.fetch_sub(freed, Ordering::Relaxed);
+        if let Some(l) = &self.ledger {
+            l.charge(bytes);
+            if freed > 0 {
+                l.release(freed);
+            }
+        }
+        drop(s);
+        None
+    }
+
+    /// Drop every entry a job published. Called when a job terminates
+    /// `Failed`: poisoning already discards in-flight folds, this
+    /// retracts anything that slipped through before the failure.
+    pub fn retract(&self, job: u64) {
+        let mut freed = 0u64;
+        let mut evicted = 0u64;
+        for sh in &self.shards {
+            let mut s = lock(sh);
+            let before = s.map.len();
+            s.map.retain(|_, e| {
+                if e.job == job {
+                    freed += e.bytes;
+                    false
+                } else {
+                    true
+                }
+            });
+            let removed = before - s.map.len();
+            if removed > 0 {
+                evicted += removed as u64;
+                let mut ring = std::mem::take(&mut s.ring);
+                ring.retain(|fp| s.map.contains_key(fp));
+                s.ring = ring;
+                s.hand = 0;
+                s.bytes = s.map.values().map(|e| e.bytes).sum();
+            }
+        }
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+            self.bytes.fetch_sub(freed, Ordering::Relaxed);
+            if let Some(l) = &self.ledger {
+                l.release(freed);
+            }
+        }
+    }
+
+    /// Drop everything. The first rung of the degradation ladder:
+    /// memory pressure sheds the cache before the service holds
+    /// dispatch or refuses submits. Returns the bytes freed.
+    pub fn shed(&self) -> u64 {
+        let mut freed = 0u64;
+        let mut evicted = 0u64;
+        for sh in &self.shards {
+            let mut s = lock(sh);
+            freed += s.bytes;
+            evicted += s.map.len() as u64;
+            s.map.clear();
+            s.ring.clear();
+            s.hand = 0;
+            s.bytes = 0;
+        }
+        if freed > 0 || evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+            self.bytes.fetch_sub(freed, Ordering::Relaxed);
+            if let Some(l) = &self.ledger {
+                l.release(freed);
+            }
+        }
+        freed
+    }
+
+    /// Resident cache bytes (as charged to the ledger).
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    fn note_saved(&self, nodes: u64) {
+        self.saved_nodes.fetch_add(nodes, Ordering::Relaxed);
+    }
+
+    /// Snapshot of the cache counters.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            lookups: self.lookups.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+            saved_nodes: self.saved_nodes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A component queued for publication: registered at dispatch (miss)
+/// time, resolved by the fold observer.
+struct Pending {
+    fp: u64,
+    /// The child slot's initial bound `|C| - 1`; `limit == best0` means
+    /// the slot ran as pure branch-and-bound (see module docs).
+    best0: u32,
+}
+
+/// An exact result awaiting its buffer hand-off: the fold proved
+/// exactness, `publish_at_recycle` supplies the CSR key.
+struct Ready {
+    mvc: u32,
+    /// Winning cover in root-residual ids (the witness side-table's id
+    /// space); translated to component-local ids at insert time.
+    cover: Option<Box<[u32]>>,
+}
+
+/// Per-job view of the cache, carried in `JobCfg`. Tracks which child
+/// slots should publish on completion (`pending` → `ready` two-phase
+/// hand-off, see module docs) and whether the job has been poisoned by
+/// a cancel/deadline/failure — in which case nothing it folds is
+/// trusted.
+pub struct JobMemo {
+    job: u64,
+    cache: Arc<MemoCache>,
+    /// MVC-mode jobs publish; PVC (`propagate`) jobs only consume.
+    publish: bool,
+    poisoned: AtomicBool,
+    pending: Mutex<HashMap<u32, Pending>>,
+    ready: Mutex<HashMap<u64, Ready>>,
+}
+
+impl fmt::Debug for JobMemo {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("JobMemo")
+            .field("job", &self.job)
+            .field("publish", &self.publish)
+            .field("poisoned", &self.poisoned.load(Ordering::SeqCst))
+            .finish_non_exhaustive()
+    }
+}
+
+impl JobMemo {
+    /// A job's cache handle. `publish` is false for PVC jobs, whose
+    /// bound-pruned components must never be cached.
+    pub fn new(job: u64, cache: Arc<MemoCache>, publish: bool) -> Self {
+        JobMemo {
+            job,
+            cache,
+            publish,
+            poisoned: AtomicBool::new(false),
+            pending: Mutex::new(HashMap::new()),
+            ready: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// The shared cache this job consults.
+    pub fn cache(&self) -> &Arc<MemoCache> {
+        &self.cache
+    }
+
+    /// Whether exact results of this job may enter the cache.
+    pub fn publishes(&self) -> bool {
+        self.publish
+    }
+
+    /// Mark every in-flight and future fold of this job untrusted.
+    /// MUST be called (SeqCst) *before* raising the job's stop flag:
+    /// workers poll stop and then complete their truncated subtrees,
+    /// so the poison store has to be visible first.
+    pub fn poison(&self) {
+        self.poisoned.store(true, Ordering::SeqCst);
+    }
+
+    fn is_poisoned(&self) -> bool {
+        self.poisoned.load(Ordering::SeqCst)
+    }
+
+    /// Consult the cache for a component about to be dispatched.
+    /// On a hit, credits the saved-subtree estimate with the component
+    /// size `k`.
+    pub fn lookup(
+        &self,
+        fp: u64,
+        row_ptr: &[u32],
+        adj: &[u32],
+        need_cover: bool,
+    ) -> Option<(u32, Option<Vec<u32>>)> {
+        let hit = self.cache.lookup(fp, row_ptr, adj, need_cover);
+        if hit.is_some() {
+            self.cache.note_saved(row_ptr.len().saturating_sub(1) as u64);
+        }
+        hit
+    }
+
+    /// Record that child slot `ctx` is a cache-miss component with
+    /// fingerprint `fp` and initial bound `best0`, to be published if
+    /// its fold proves exactness.
+    pub fn register_pending(&self, ctx: u32, fp: u64, best0: u32) {
+        if !self.publish || self.is_poisoned() {
+            return;
+        }
+        let mut p = self.pending.lock().unwrap_or_else(|e| e.into_inner());
+        p.insert(ctx, Pending { fp, best0 });
+    }
+
+    /// Registry fold observer: child slot `ctx` folded with final value
+    /// `best` under pruning bound `limit`; `cover` is the winning
+    /// witness (root-residual ids) when the job extracts witnesses.
+    /// Moves exact results to the `ready` table (see module docs for
+    /// the exactness gate).
+    pub fn on_fold(&self, ctx: u32, best: u32, limit: u32, cover: Option<&[u32]>) {
+        let Some(p) = self.pending.lock().unwrap_or_else(|e| e.into_inner()).remove(&ctx) else {
+            return;
+        };
+        if self.is_poisoned() {
+            return;
+        }
+        // Exactness gate: `best < limit` means a leaf beat the pruning
+        // bound (every pruned subtree held only covers >= limit >
+        // best); `limit == best0` means the slot never inherited a
+        // tighter parent bound, so the search was pure B&B from the
+        // always-achievable |C|-1 cover.
+        if best < limit || limit == p.best0 {
+            let mut r = self.ready.lock().unwrap_or_else(|e| e.into_inner());
+            r.insert(p.fp, Ready { mvc: best, cover: cover.map(Box::from) });
+        }
+    }
+
+    /// Buffer hand-off at last view drop: if slot fingerprint `fp` has
+    /// a ready exact result, publish it using the view's own CSR arrays
+    /// as the verification key and translate the cover from
+    /// root-residual ids to component-local ids through the (strictly
+    /// ascending) `back` map. Returns the arrays when the caller should
+    /// recycle them to the pool (no ready result, poisoned, or the
+    /// cache declined).
+    pub fn publish_at_recycle(
+        &self,
+        fp: u64,
+        row_ptr: Vec<u32>,
+        adj: Vec<u32>,
+        back: &[u32],
+    ) -> Option<(Vec<u32>, Vec<u32>)> {
+        let ready = self.ready.lock().unwrap_or_else(|e| e.into_inner()).remove(&fp);
+        let Some(r) = ready else {
+            return Some((row_ptr, adj));
+        };
+        if self.is_poisoned() {
+            return Some((row_ptr, adj));
+        }
+        let cover = match r.cover {
+            Some(c) => {
+                let mut local: Vec<u32> = Vec::with_capacity(c.len());
+                for &root in c.iter() {
+                    match back.binary_search(&root) {
+                        Ok(l) => local.push(l as u32),
+                        // A cover vertex outside the component: the
+                        // slot's witness row was contaminated (should
+                        // be impossible) — do not cache a wrong cover.
+                        Err(_) => return Some((row_ptr, adj)),
+                    }
+                }
+                local.sort_unstable();
+                Some(local.into_boxed_slice())
+            }
+            None => None,
+        };
+        self.cache.insert(fp, row_ptr, adj, r.mvc, cover, self.job)
+    }
+
+    /// Retract everything this job published (terminal failure path).
+    pub fn retract(&self) {
+        self.cache.retract(self.job);
+    }
+}
+
+/// Process-wide default for whether memoization is enabled, from
+/// `CAVC_MEMO` (`on`/`off`, `1`/`0`, `true`/`false`). `None` when
+/// unset or unparsable.
+pub fn env_memo_default() -> Option<bool> {
+    let v = std::env::var("CAVC_MEMO").ok()?;
+    match v.trim().to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" | "yes" => Some(true),
+        "off" | "0" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Process-wide default cache byte budget, from `CAVC_MEMO_BYTES`.
+pub fn env_memo_bytes() -> Option<u64> {
+    std::env::var("CAVC_MEMO_BYTES").ok()?.trim().parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicI64;
+
+    #[derive(Default)]
+    struct TestLedger {
+        net: AtomicI64,
+    }
+
+    impl MemoLedger for TestLedger {
+        fn charge(&self, bytes: u64) {
+            self.net.fetch_add(bytes as i64, Ordering::SeqCst);
+        }
+        fn release(&self, bytes: u64) {
+            self.net.fetch_sub(bytes as i64, Ordering::SeqCst);
+        }
+    }
+
+    fn csr(k: u32) -> (Vec<u32>, Vec<u32>) {
+        // Path on k vertices in canonical induced form.
+        let mut row_ptr = vec![0u32];
+        let mut adj = Vec::new();
+        for v in 0..k {
+            if v > 0 {
+                adj.push(v - 1);
+            }
+            if v + 1 < k {
+                adj.push(v + 1);
+            }
+            row_ptr.push(adj.len() as u32);
+        }
+        (row_ptr, adj)
+    }
+
+    #[test]
+    fn lookup_verifies_exact_arrays() {
+        let c = MemoCache::new(1 << 20, None);
+        let (rp, aj) = csr(5);
+        assert!(c.insert(7, rp.clone(), aj.clone(), 2, None, 1).is_none());
+        assert_eq!(c.lookup(7, &rp, &aj, false), Some((2, None)));
+        // Same fingerprint, different arrays: collision must miss.
+        let (rp2, aj2) = csr(6);
+        assert_eq!(c.lookup(7, &rp2, &aj2, false), None);
+        let s = c.stats();
+        assert_eq!((s.lookups, s.hits, s.misses, s.inserts), (2, 1, 1, 1));
+        assert!(s.bytes > 0);
+    }
+
+    #[test]
+    fn need_cover_misses_value_only_entries() {
+        let c = MemoCache::new(1 << 20, None);
+        let (rp, aj) = csr(4);
+        assert!(c.insert(1, rp.clone(), aj.clone(), 2, None, 1).is_none());
+        assert_eq!(c.lookup(1, &rp, &aj, true), None);
+        let cover: Box<[u32]> = vec![1, 2].into_boxed_slice();
+        let (rp2, aj2) = csr(3);
+        assert!(c.insert(2, rp2.clone(), aj2.clone(), 1, Some(cover), 1).is_none());
+        let (mvc, cv) = c.lookup(2, &rp2, &aj2, true).unwrap();
+        assert_eq!((mvc, cv.as_deref()), (1, Some(&[1u32, 2][..])));
+    }
+
+    #[test]
+    fn duplicate_insert_returns_buffers() {
+        let c = MemoCache::new(1 << 20, None);
+        let (rp, aj) = csr(5);
+        assert!(c.insert(9, rp.clone(), aj.clone(), 2, None, 1).is_none());
+        let back = c.insert(9, rp.clone(), aj.clone(), 2, None, 2);
+        assert_eq!(back, Some((rp, aj)));
+        assert_eq!(c.stats().inserts, 1);
+    }
+
+    #[test]
+    fn clock_eviction_stays_under_budget_and_ledgered() {
+        let ledger = Arc::new(TestLedger::default());
+        // Tiny budget: each shard holds roughly one small entry.
+        let c = MemoCache::new(4096, Some(ledger.clone() as Arc<dyn MemoLedger>));
+        for i in 0..256u64 {
+            let (rp, aj) = csr(8);
+            c.insert(i.wrapping_mul(0x9e3779b97f4a7c15), rp, aj, 4, None, 1);
+        }
+        let s = c.stats();
+        assert!(s.evictions > 0, "tiny budget must evict");
+        assert!(s.bytes <= 4096 + ENTRY_OVERHEAD * SHARDS as u64);
+        assert_eq!(ledger.net.load(Ordering::SeqCst), s.bytes as i64);
+        c.shed();
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(ledger.net.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn retract_drops_only_that_jobs_entries() {
+        let ledger = Arc::new(TestLedger::default());
+        let c = MemoCache::new(1 << 20, Some(ledger.clone() as Arc<dyn MemoLedger>));
+        let (rp, aj) = csr(5);
+        let (rp2, aj2) = csr(6);
+        assert!(c.insert(1, rp.clone(), aj.clone(), 2, None, 10).is_none());
+        assert!(c.insert(2, rp2.clone(), aj2.clone(), 3, None, 11).is_none());
+        c.retract(10);
+        assert_eq!(c.lookup(1, &rp, &aj, false), None);
+        assert_eq!(c.lookup(2, &rp2, &aj2, false), Some((3, None)));
+        assert_eq!(ledger.net.load(Ordering::SeqCst), c.bytes() as i64);
+    }
+
+    #[test]
+    fn job_memo_two_phase_publish_and_exactness_gate() {
+        let c = Arc::new(MemoCache::new(1 << 20, None));
+        let m = JobMemo::new(1, c.clone(), true);
+        let (rp, aj) = csr(5);
+
+        // Pruned at the limit with an inherited tighter bound: not exact.
+        m.register_pending(100, 77, 4);
+        m.on_fold(100, 3, 3, None); // best == limit, limit != best0
+        assert_eq!(
+            m.publish_at_recycle(77, rp.clone(), aj.clone(), &[0, 1, 2, 3, 4]),
+            Some((rp.clone(), aj.clone()))
+        );
+
+        // Pure B&B slot (limit == best0): exact even at best == limit.
+        m.register_pending(101, 78, 4);
+        m.on_fold(101, 4, 4, None);
+        assert!(m.publish_at_recycle(78, rp.clone(), aj.clone(), &[0, 1, 2, 3, 4]).is_none());
+        assert_eq!(c.lookup(78, &rp, &aj, false), Some((4, None)));
+
+        // best < limit: exact.
+        let (rp2, aj2) = csr(6);
+        m.register_pending(102, 79, 5);
+        m.on_fold(102, 2, 4, None);
+        assert!(m.publish_at_recycle(79, rp2.clone(), aj2.clone(), &[0, 1, 2, 3, 4, 5]).is_none());
+        assert_eq!(c.lookup(79, &rp2, &aj2, false), Some((2, None)));
+    }
+
+    #[test]
+    fn cover_translated_to_local_ids() {
+        let c = Arc::new(MemoCache::new(1 << 20, None));
+        let m = JobMemo::new(1, c.clone(), true);
+        let (rp, aj) = csr(4);
+        m.register_pending(5, 42, 3);
+        // Winning cover in root ids {12, 30}; back maps local -> root.
+        m.on_fold(5, 2, 3, Some(&[30, 12]));
+        let back = [7, 12, 19, 30];
+        assert!(m.publish_at_recycle(42, rp.clone(), aj.clone(), &back).is_none());
+        let (mvc, cover) = c.lookup(42, &rp, &aj, true).unwrap();
+        assert_eq!((mvc, cover.as_deref()), (2, Some(&[1u32, 3][..])));
+    }
+
+    #[test]
+    fn poison_discards_pending_and_ready() {
+        let c = Arc::new(MemoCache::new(1 << 20, None));
+        let m = JobMemo::new(1, c.clone(), true);
+        let (rp, aj) = csr(5);
+        m.register_pending(7, 55, 4);
+        m.poison();
+        m.on_fold(7, 2, 4, None);
+        assert_eq!(
+            m.publish_at_recycle(55, rp.clone(), aj.clone(), &[0, 1, 2, 3, 4]),
+            Some((rp.clone(), aj.clone()))
+        );
+        assert_eq!(c.stats().inserts, 0);
+    }
+
+    #[test]
+    fn non_publishing_job_never_registers() {
+        let c = Arc::new(MemoCache::new(1 << 20, None));
+        let m = JobMemo::new(1, c.clone(), false); // PVC
+        let (rp, aj) = csr(5);
+        m.register_pending(3, 66, 4);
+        m.on_fold(3, 2, 4, None);
+        assert_eq!(
+            m.publish_at_recycle(66, rp.clone(), aj.clone(), &[0, 1, 2, 3, 4]),
+            Some((rp, aj))
+        );
+        assert_eq!(c.stats().inserts, 0);
+    }
+}

@@ -26,6 +26,7 @@
 
 pub mod engine;
 pub mod faults;
+pub mod memo;
 pub mod mis;
 pub mod greedy;
 pub mod occupancy;
@@ -44,6 +45,7 @@ use engine::{EngineCfg, EngineStats};
 pub use engine::NodeRepr;
 use occupancy::{Occupancy, OccupancyModel};
 pub use faults::{FaultInjector, FaultPlan};
+pub use memo::MemoStats;
 pub use sched::SchedulerKind;
 pub use service::{
     default_service, AdmissionStats, JobHandle, JobOptions, JobProgress, Lane, Problem,
@@ -131,6 +133,13 @@ pub struct SolverConfig {
     /// Delta mode: pinned-chain length bound forcing periodic
     /// materialization (see `EngineCfg::max_pin_depth`).
     pub max_pin_depth: u32,
+    /// Cross-job component memoization (`solver::memo`): consult the
+    /// resident service's component → solution cache at every component
+    /// dispatch. `None` (default) resolves through the `CAVC_MEMO`
+    /// environment default, then `on`; `Some(false)` is the ablation
+    /// baseline (`--memo off`). Only meaningful through the service —
+    /// one-shot engines never memoize.
+    pub memo: Option<bool>,
 }
 
 impl SolverConfig {
@@ -152,6 +161,7 @@ impl SolverConfig {
             one_shot: false,
             node_repr: NodeRepr::from_env(),
             max_pin_depth: engine::DEFAULT_MAX_PIN_DEPTH,
+            memo: None,
         }
     }
 
@@ -223,6 +233,13 @@ impl SolverConfig {
     /// materialization so undo chains stay bounded).
     pub fn with_max_pin_depth(mut self, d: u32) -> SolverConfig {
         self.max_pin_depth = d;
+        self
+    }
+
+    /// Enable or disable cross-job component memoization for jobs run
+    /// under this config (`--memo {on,off}` on the CLI).
+    pub fn with_memo(mut self, on: bool) -> SolverConfig {
+        self.memo = Some(on);
         self
     }
 

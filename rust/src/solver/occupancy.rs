@@ -208,6 +208,17 @@ impl OccupancyModel {
         self.stack_budget_bytes.saturating_mul(2)
     }
 
+    /// Default byte budget for the cross-job component memo cache
+    /// (`solver::memo`): a quarter of the stack budget. Cache bytes are
+    /// charged against the same admission ledger the watchdog reads, so
+    /// a full cache consumes a bounded slice of the soft limit
+    /// ([`OccupancyModel::watchdog_soft_bytes`]) and the cache is shed
+    /// outright when the watchdog trips — reuse never outranks live
+    /// search state.
+    pub fn memo_budget_bytes(&self) -> u64 {
+        self.stack_budget_bytes / 4
+    }
+
     /// Number of OS worker threads to actually run for a modeled launch:
     /// the model's block count capped by the hardware parallelism.
     pub fn workers(&self, n: usize, dtype: Dtype) -> usize {
@@ -252,6 +263,13 @@ mod tests {
     fn at_least_one_block() {
         let m = OccupancyModel::default();
         assert!(m.plan(10_000_000, Dtype::U32).blocks >= 1);
+    }
+
+    #[test]
+    fn memo_budget_is_a_bounded_slice_of_the_watchdog() {
+        let m = OccupancyModel::default();
+        assert_eq!(m.memo_budget_bytes(), m.stack_budget_bytes / 4);
+        assert!(m.memo_budget_bytes() < m.watchdog_soft_bytes());
     }
 
     #[test]

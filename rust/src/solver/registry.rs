@@ -114,7 +114,19 @@ pub struct Registry {
     propagate: bool,
     /// Witness side table (enabled by [`Registry::with_witnesses`]).
     witness: Option<WitnessStore>,
+    /// Last-descendant fold hook (enabled by
+    /// [`Registry::with_fold_observer`]): observes every child slot's
+    /// terminal `(ctx, best, limit, witness)` as it folds into its
+    /// parent. The memo subsystem uses it to detect exactly-solved
+    /// components worth publishing to the cross-job cache.
+    fold_observer: Option<FoldObserver>,
 }
+
+/// Observer of child-slot folds: `(ctx, best, limit, witness)` where
+/// `limit` is the slot's pruning bound (`aux`) and `witness` the winning
+/// cover behind `best` when extraction is on. Runs inside the completion
+/// cascade — it must be cheap and must not call back into the registry.
+pub type FoldObserver = Box<dyn Fn(u32, u32, u32, Option<&[u32]>) + Send + Sync>;
 
 /// Side table of witness vertex lists, indexed by entry id, plus the
 /// root slot. Entries are only touched when extraction is on; the mutex
@@ -211,7 +223,14 @@ impl Registry {
     pub fn new(propagate: bool) -> Registry {
         let mut chunks = Vec::with_capacity(MAX_CHUNKS);
         chunks.resize_with(MAX_CHUNKS, || AtomicPtr::new(std::ptr::null_mut()));
-        Registry { chunks, next: AtomicU64::new(0), grow: Mutex::new(()), propagate, witness: None }
+        Registry {
+            chunks,
+            next: AtomicU64::new(0),
+            grow: Mutex::new(()),
+            propagate,
+            witness: None,
+            fold_observer: None,
+        }
     }
 
     /// Enable witness reassembly: every entry gains a side slot for the
@@ -225,6 +244,12 @@ impl Registry {
     /// True when witness reassembly is enabled.
     pub fn extracting(&self) -> bool {
         self.witness.is_some()
+    }
+
+    /// Install a last-descendant fold observer (see [`FoldObserver`]).
+    pub fn with_fold_observer(mut self, obs: FoldObserver) -> Registry {
+        self.fold_observer = Some(obs);
+        self
     }
 
     /// Number of entries ever allocated.
@@ -466,10 +491,12 @@ impl Registry {
             // list (all reports for `ctx` happened-before this fold).
             let parent = e.link.load(Ordering::SeqCst);
             let best = e.val.load(Ordering::SeqCst);
-            if let Some(ws) = &self.witness {
-                if let Some(cw) = ws.take(ctx) {
-                    ws.append(parent, &cw);
-                }
+            let cw = self.witness.as_ref().and_then(|ws| ws.take(ctx));
+            if let Some(obs) = &self.fold_observer {
+                obs(ctx, best, e.aux.load(Ordering::SeqCst), cw.as_deref());
+            }
+            if let (Some(ws), Some(cw)) = (&self.witness, &cw) {
+                ws.append(parent, cw);
             }
             let p = self.entry(parent);
             p.val.fetch_add(best, Ordering::SeqCst);

@@ -129,6 +129,14 @@
 //! instead of shedding: throughput-lane dispatch pauses and new jobs are
 //! forced onto the delta node representation.
 //!
+//! The cross-job memo cache ([`crate::solver::memo`]) sits *below* all
+//! of those rungs: its resident bytes are charged to the same ledger
+//! the watchdog reads, and under memory pressure the cache is shed
+//! outright — the dispatcher drops it before holding throughput
+//! dispatch, and an over-hard-limit submit drops it before shedding the
+//! submit itself. Cached reuse is pure speedup, so it is always the
+//! first thing traded away.
+//!
 //! The whole ladder is exercised deterministically by the seeded
 //! fault-injection harness ([`crate::solver::faults`], `tests/chaos.rs`).
 
@@ -143,6 +151,7 @@ use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 
 use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, NodePayload, WorkerCtx};
+use super::memo::{self, JobMemo, MemoCache, MemoLedger, MemoStats};
 use super::occupancy::OccupancyModel;
 use super::sched::{
     IdleOutcome, LaneHint, PopSource, Scheduler, SchedulerKind, ShardedScheduler,
@@ -453,6 +462,11 @@ pub struct JobOptions {
     /// [`crate::solver::faults`]); also settable process-wide via
     /// `CAVC_FAULT_SEED`. `None` (the default) injects nothing.
     pub fault: Option<super::faults::FaultPlan>,
+    /// Per-job opt-in/out of the cross-job component memo cache
+    /// ([`crate::solver::memo`]). `None` falls back to the job config's
+    /// `memo`, then the service default. Ignored (always off) when the
+    /// service was built without a cache.
+    pub memo: Option<bool>,
     /// Test hook: panic inside the job's setup stage, exercising the
     /// panic-containment path end to end.
     #[cfg(test)]
@@ -519,9 +533,13 @@ impl JobHandle {
     /// surface; `wait` then returns with [`Termination::Cancelled`].
     /// Cancelling a finished job is a no-op.
     pub fn cancel(&self) {
-        // Order matters: the flag that *labels* the stop must be set
-        // before the flag that *causes* it, so finalization can't read
-        // a stop with no recorded reason.
+        // Order matters: the memo poison and the flag that *labels* the
+        // stop must both be set before the flag that *causes* it, so
+        // truncated folds can't publish to the cache and finalization
+        // can't read a stop with no recorded reason.
+        if let Some(m) = &self.job.ctl.cfg.memo {
+            m.poison();
+        }
         self.job.cancelled.store(true, Ordering::SeqCst);
         self.job.ctl.stop.store(true, Ordering::SeqCst);
     }
@@ -812,6 +830,11 @@ pub struct ClassStats {
     pub undo_pops: u64,
     /// Delta nodes materialized into owned payloads (stolen/foreign).
     pub materializations: u64,
+    /// Component dispatches of this class that consulted the cross-job
+    /// memo cache.
+    pub memo_lookups: u64,
+    /// Memo lookups of this class that skipped the subtree.
+    pub memo_hits: u64,
 }
 
 /// Aggregate scheduler/engine telemetry of a running service (the
@@ -829,6 +852,9 @@ pub struct ServiceStats {
     pub pvc: ClassStats,
     /// MIS-class jobs.
     pub mis: ClassStats,
+    /// Cross-job component memo cache counters (all zero when the
+    /// service runs with the cache disabled).
+    pub memo: MemoStats,
 }
 
 impl ServiceStats {
@@ -851,6 +877,8 @@ struct ClassAgg {
     delta_children: AtomicU64,
     undo_pops: AtomicU64,
     materializations: AtomicU64,
+    memo_lookups: AtomicU64,
+    memo_hits: AtomicU64,
 }
 
 impl ClassAgg {
@@ -862,6 +890,8 @@ impl ClassAgg {
             delta_children: self.delta_children.load(Ordering::Relaxed),
             undo_pops: self.undo_pops.load(Ordering::Relaxed),
             materializations: self.materializations.load(Ordering::Relaxed),
+            memo_lookups: self.memo_lookups.load(Ordering::Relaxed),
+            memo_hits: self.memo_hits.load(Ordering::Relaxed),
         }
     }
 }
@@ -1129,6 +1159,18 @@ impl Admission {
     }
 }
 
+/// The memo cache charges its resident bytes to the same ledger the
+/// memory watchdog reads, so a full cache shows up as pressure — and is
+/// shed first when pressure arrives (module docs, degradation ladder).
+impl MemoLedger for Admission {
+    fn charge(&self, bytes: u64) {
+        self.mem_charge(bytes);
+    }
+    fn release(&self, bytes: u64) {
+        self.mem_release(bytes);
+    }
+}
+
 /// The single-consumer dispatcher: drains the admission queue into the
 /// pool's injector by DRR, gated on the live-jobs bound. Runs on its
 /// own thread (`cavc-svc-admit`); exits once shutdown is requested and
@@ -1145,7 +1187,17 @@ fn dispatcher_loop(inner: &ServiceInner) {
                 // the ledger); latency jobs still dispatch, and the
                 // shutdown drain ignores the gate so `Drop` always
                 // completes.
-                let throttled = adm.mem_over_soft() && !draining;
+                let mut throttled = adm.mem_over_soft() && !draining;
+                if throttled {
+                    // First degradation rung: shed the memo cache — its
+                    // bytes are pure speedup, never live search state —
+                    // and re-check before holding throughput dispatch.
+                    if let Some(m) = &inner.memo {
+                        if m.shed() > 0 {
+                            throttled = adm.mem_over_soft();
+                        }
+                    }
+                }
                 if st.queued > 0 && (st.live_jobs < adm.max_live_jobs || draining) {
                     let latency = Lane::Latency.index();
                     let lane = if throttled {
@@ -1192,6 +1244,9 @@ struct ServiceInner {
     next_job: AtomicU64,
     counters: Arc<ServiceCounters>,
     admission: Arc<Admission>,
+    /// Cross-job component memo cache ([`crate::solver::memo`]); `None`
+    /// when the service was built with memoization disabled.
+    memo: Option<Arc<MemoCache>>,
 }
 
 /// Builder for [`VcService`].
@@ -1207,6 +1262,8 @@ pub struct VcServiceBuilder {
     retry: Option<RetryPolicy>,
     mem_soft: Option<u64>,
     mem_hard: Option<u64>,
+    memo: Option<bool>,
+    memo_bytes: Option<u64>,
 }
 
 /// Default reduced-size cutoff for the latency lane: graphs this small
@@ -1299,6 +1356,25 @@ impl VcServiceBuilder {
         self
     }
 
+    /// Enable or disable the cross-job component memo cache
+    /// ([`crate::solver::memo`]) for this service (`--memo {on,off}` on
+    /// the CLI). Default: the config's `memo`, then the `CAVC_MEMO`
+    /// environment default, then on. `off` builds no cache at all — the
+    /// ablation baseline with every memo path inert.
+    pub fn memo(mut self, on: bool) -> VcServiceBuilder {
+        self.memo = Some(on);
+        self
+    }
+
+    /// Byte budget for the memo cache (`--memo-bytes N`; default:
+    /// `CAVC_MEMO_BYTES`, then the occupancy model's
+    /// `memo_budget_bytes`). Cache bytes are charged to the memory-
+    /// watchdog ledger and evicted CLOCK-wise at the budget.
+    pub fn memo_bytes(mut self, bytes: u64) -> VcServiceBuilder {
+        self.memo_bytes = Some(bytes);
+        self
+    }
+
     /// Spawn the worker pool and return the service.
     pub fn build(self) -> VcService {
         let workers = self.workers.unwrap_or_else(|| {
@@ -1339,6 +1415,19 @@ impl VcServiceBuilder {
             recovered: AtomicU64::new(0),
             quarantined: AtomicU64::new(0),
         });
+        // Memo cache: builder override → config → CAVC_MEMO env → on.
+        let memo_on = self
+            .memo
+            .or(self.defaults.memo)
+            .or_else(memo::env_memo_default)
+            .unwrap_or(true);
+        let memo = memo_on.then(|| {
+            let budget = self
+                .memo_bytes
+                .or_else(memo::env_memo_bytes)
+                .unwrap_or_else(|| occ.memo_budget_bytes());
+            Arc::new(MemoCache::new(budget, Some(Arc::clone(&admission) as Arc<dyn MemoLedger>)))
+        });
         let inner = Arc::new(ServiceInner {
             sched,
             defaults: self.defaults,
@@ -1347,6 +1436,7 @@ impl VcServiceBuilder {
             next_job: AtomicU64::new(0),
             counters: Arc::new(ServiceCounters::new(workers)),
             admission,
+            memo,
         });
         let threads = (0..workers)
             .map(|w| {
@@ -1405,6 +1495,8 @@ impl VcService {
             retry: None,
             mem_soft: None,
             mem_hard: None,
+            memo: None,
+            memo_bytes: None,
         }
     }
 
@@ -1478,6 +1570,20 @@ impl VcService {
                 Lane::Throughput
             }
         });
+        // Memo participation: per-job override → job config → on (the
+        // service-level gate is whether a cache exists at all). PVC
+        // jobs consume the cache but never publish — their bound-pruned
+        // subtrees are not exact component solutions.
+        let job_id = self.inner.next_job.fetch_add(1, Ordering::SeqCst);
+        let memo_on = opts.memo.or(cfg.memo).unwrap_or(true);
+        let job_memo = match (&self.inner.memo, memo_on) {
+            (Some(cache), true) => Some(Arc::new(JobMemo::new(
+                job_id,
+                Arc::clone(cache),
+                !matches!(problem, Problem::Pvc { .. }),
+            ))),
+            _ => None,
+        };
         let job_cfg = JobCfg {
             component_aware: cfg.component_aware,
             use_bounds: cfg.use_bounds,
@@ -1497,6 +1603,7 @@ impl VcService {
                 .clone()
                 .or_else(super::faults::FaultPlan::from_env)
                 .map(|plan| Arc::new(super::faults::FaultInjector::new(plan))),
+            memo: job_memo,
         };
         let prep_cfg = cfg.prep_cfg();
 
@@ -1504,8 +1611,17 @@ impl VcService {
         loop {
             // Memory watchdog, hard limit: shed load. Non-blocking
             // submits bounce immediately; blocking ones wait for the
-            // ledger to drop (it frees as queued items retire).
-            let over_mem = adm.mem_over_hard();
+            // ledger to drop (it frees as queued items retire). The memo
+            // cache goes first — dropping pure-speedup bytes beats
+            // refusing a submit (degradation ladder, module docs).
+            let mut over_mem = adm.mem_over_hard();
+            if over_mem {
+                if let Some(m) = &self.inner.memo {
+                    if m.shed() > 0 {
+                        over_mem = adm.mem_over_hard();
+                    }
+                }
+            }
             let full = st.queued >= adm.max_queued;
             let over_quota = match (&opts.tenant, &adm.quota) {
                 (Some(name), Some(q)) => match st.tenants.get(name) {
@@ -1557,7 +1673,7 @@ impl VcService {
             TenantRef { name: name.clone(), nodes: Arc::clone(&e.nodes) }
         });
         let job = Arc::new(JobInner {
-            id: self.inner.next_job.fetch_add(1, Ordering::SeqCst),
+            id: job_id,
             ctl: JobCtl::new(job_cfg, u32::MAX),
             prep_cfg,
             live_nodes: AtomicU64::new(1), // the Setup item
@@ -1622,6 +1738,7 @@ impl VcService {
             mvc: c.classes[0].snapshot(),
             pvc: c.classes[1].snapshot(),
             mis: c.classes[2].snapshot(),
+            memo: self.inner.memo.as_ref().map(|m| m.stats()).unwrap_or_default(),
         }
     }
 }
@@ -1764,9 +1881,14 @@ fn process_item<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
     }));
     if let Err(payload) = run {
         record_failure(&job, &payload);
-        // Label first, then stop (same ordering argument as `cancel`):
-        // the job's remaining nodes drain as drops and the normal
-        // completion count finalizes it with `Termination::Failed`.
+        // Poison, then label, then stop (same ordering argument as
+        // `cancel`): a failed job's truncated folds must not publish to
+        // the memo cache, and the job's remaining nodes drain as drops
+        // so the normal completion count finalizes it with
+        // `Termination::Failed`.
+        if let Some(m) = &job.ctl.cfg.memo {
+            m.poison();
+        }
         job.failed.store(true, Ordering::SeqCst);
         job.ctl.stop.store(true, Ordering::SeqCst);
     }
@@ -1785,6 +1907,10 @@ fn process_item<S: Scheduler<WorkItem>, H: WorkerHandle<WorkItem>>(
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| finalize(&job)))
         {
             record_failure(&job, &payload);
+            if let Some(m) = &job.ctl.cfg.memo {
+                m.poison();
+                m.retract();
+            }
             job.failed.store(true, Ordering::SeqCst);
             // A finalize panic still gets the degradation ladder's
             // sequential-rescue rung before surfacing `Failed`.
@@ -2105,11 +2231,20 @@ fn finalize(job: &Arc<JobInner>) {
     } else {
         Termination::Complete
     };
-    if termination == Termination::Failed && job.admission.enqueue_retry(job) {
-        // Degradation ladder, rung 3: the parallel run panicked but a
-        // retry policy is set — the recovery thread reruns the job on
-        // the sequential solver and publishes the outcome instead.
-        return;
+    if termination == Termination::Failed {
+        // A failed job's folds were poisoned at the failure site;
+        // retract anything it published before that as belt-and-
+        // suspenders (entries are versioned by job id).
+        if let Some(m) = &job.ctl.cfg.memo {
+            m.retract();
+        }
+        if job.admission.enqueue_retry(job) {
+            // Degradation ladder, rung 3: the parallel run panicked but
+            // a retry policy is set — the recovery thread reruns the
+            // job on the sequential solver and publishes the outcome
+            // instead.
+            return;
+        }
     }
     let Some(p) = job.prepared.get() else {
         // Setup panicked before publishing prep: degenerate outcome.
@@ -2142,6 +2277,8 @@ fn finalize(job: &Arc<JobInner>) {
     agg.delta_children.fetch_add(stats.delta_children, Ordering::Relaxed);
     agg.undo_pops.fetch_add(stats.undo_pops, Ordering::Relaxed);
     agg.materializations.fetch_add(stats.materializations, Ordering::Relaxed);
+    agg.memo_lookups.fetch_add(stats.memo_lookups, Ordering::Relaxed);
+    agg.memo_hits.fetch_add(stats.memo_hits, Ordering::Relaxed);
 
     let best_resid = job.ctl.best.load(Ordering::SeqCst);
     let improved = job.ctl.improved.load(Ordering::SeqCst);
@@ -2213,6 +2350,13 @@ fn finalize(job: &Arc<JobInner>) {
             }
         }
     };
+    // Canonical witness order: assembly order depends on scheduling, so
+    // sort before reporting — cold and warm (memo-hit) runs of the same
+    // job then return bit-identical witnesses.
+    let witness = witness.map(|mut w| {
+        w.sort_unstable();
+        w
+    });
     let witness_verified = witness.as_ref().map(|w| match job.problem.kind() {
         ProblemKind::Mis => witness::verify_independent_set(g_orig, w).is_ok(),
         ProblemKind::Mvc | ProblemKind::Pvc => witness::verify_cover(g_orig, w).is_ok(),
@@ -2356,6 +2500,11 @@ fn sequential_rescue(job: &Arc<JobInner>) -> Solution {
             }
         }
     };
+    // Same canonical order as the parallel path (see `finalize`).
+    let witness = witness.map(|mut w: Vec<u32>| {
+        w.sort_unstable();
+        w
+    });
     let witness_verified = witness.as_ref().map(|w| match job.problem.kind() {
         ProblemKind::Mis => witness::verify_independent_set(g, w).is_ok(),
         ProblemKind::Mvc | ProblemKind::Pvc => witness::verify_cover(g, w).is_ok(),

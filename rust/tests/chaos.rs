@@ -160,21 +160,25 @@ fn seeded_fault_plans_never_hang_and_ledgers_reconcile() {
 
     // Quiescence: every job finalized, so the queue ledger must balance
     // exactly. Worker counters publish per processed item, so give the
-    // final flush a moment before asserting.
+    // final flush a moment before asserting. The only live bytes the
+    // admission ledger may still hold are the memo cache's retained
+    // component entries — anything beyond that is a leak.
     let t0 = Instant::now();
     loop {
         let s = svc.stats();
         let consumed = s.pool.pops + s.pool.shared_pops + s.pool.steals;
         let produced = s.pool.pushes + s.pool.injected;
-        if consumed == produced && s.pool.backlog == 0 && s.admission.live_bytes == 0 {
+        if consumed == produced && s.pool.backlog == 0 && s.admission.live_bytes == s.memo.bytes
+        {
             break;
         }
         assert!(
             t0.elapsed() < Duration::from_secs(10),
             "ledgers did not reconcile: consumed {consumed} != produced {produced} \
-             (backlog {}, live bytes {})",
+             (backlog {}, live bytes {}, memo-held bytes {})",
             s.pool.backlog,
-            s.admission.live_bytes
+            s.admission.live_bytes,
+            s.memo.bytes
         );
         std::thread::sleep(Duration::from_millis(5));
     }
@@ -365,9 +369,20 @@ fn watchdog_soft_limit_degrades_without_wrong_answers() {
     let sol = wait_bounded(&held, "throughput job after pressure cleared");
     assert_eq!(sol.termination, Termination::Complete);
     assert_eq!(sol.objective, opt);
+    // Drained means drained-to-memo: job payload bytes all release, and
+    // whatever the memo cache retained is accounted on the same ledger.
     let t0 = Instant::now();
-    while svc.stats().admission.live_bytes != 0 {
-        assert!(t0.elapsed() < Duration::from_secs(10), "live-bytes ledger did not drain");
+    loop {
+        let s = svc.stats();
+        if s.admission.live_bytes == s.memo.bytes {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(10),
+            "live-bytes ledger did not drain: {} live vs {} memo-held",
+            s.admission.live_bytes,
+            s.memo.bytes
+        );
         std::thread::sleep(Duration::from_millis(5));
     }
 }

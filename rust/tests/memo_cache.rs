@@ -1,0 +1,135 @@
+//! Differential tests for the cross-job component memo cache
+//! ([`cavc::solver::memo`]): a warm resident service must return the
+//! same objectives — and, on serial runs, bit-identical verified
+//! witnesses — as a cold one, while actually hitting the cache; PVC
+//! (decision-bounded) jobs must never publish; and `--memo off` must be
+//! fully inert.
+
+use cavc::graph::generators;
+use cavc::solver::engine::NodeRepr;
+use cavc::solver::{
+    oracle, JobOptions, MemoStats, Problem, SchedulerKind, SolverConfig, Termination, VcService,
+};
+
+/// Component-rich workloads: unions of small random parts, so every job
+/// splits into several induced components and resubmission re-derives
+/// the same canonical CSR forms.
+fn workload() -> Vec<cavc::graph::Graph> {
+    (0..6u64).map(|seed| generators::union_of_random(4, 4, 8, 0.35, seed)).collect()
+}
+
+fn extract_opts() -> JobOptions {
+    JobOptions { extract_witness: true, ..JobOptions::default() }
+}
+
+/// Run the workload once through `svc`, returning (objective, witness)
+/// per job after asserting completion and witness verification.
+fn run_batch(svc: &VcService) -> Vec<(u32, Vec<u32>)> {
+    let handles: Vec<_> = workload()
+        .into_iter()
+        .map(|g| svc.submit_with(Problem::mvc(g), extract_opts()))
+        .collect();
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let sol = h.wait();
+            assert_eq!(sol.termination, Termination::Complete, "job {i}");
+            assert_eq!(sol.witness_verified, Some(true), "job {i}: witness must verify");
+            (sol.objective, sol.witness.expect("extracting job returns a witness"))
+        })
+        .collect()
+}
+
+#[test]
+fn warm_resubmission_is_bit_identical_on_serial_runs() {
+    // One worker keeps both passes deterministic, so the warm pass must
+    // reproduce the cold answers *and* the exact same (sorted) covers —
+    // a cache hit substitutes the published component cover for the
+    // cold run's freshly searched one, and those are the same arrays.
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        for repr in [NodeRepr::Owned, NodeRepr::Delta] {
+            let cfg = SolverConfig::proposed().with_node_repr(repr);
+            let svc =
+                VcService::builder().config(cfg).scheduler(sched).workers(1).build();
+            let cold = run_batch(&svc);
+            let after_cold = svc.stats().memo;
+            let warm = run_batch(&svc);
+            let after_warm = svc.stats().memo;
+            let tag = format!("{}/{}", sched.name(), repr.name());
+            assert_eq!(cold, warm, "{tag}: warm answers/witnesses diverge from cold");
+            assert!(
+                after_cold.inserts > 0,
+                "{tag}: cold pass published nothing — components never reached the cache"
+            );
+            assert!(
+                after_warm.hits > after_cold.hits,
+                "{tag}: warm resubmission produced no cache hits \
+                 (cold {after_cold:?}, warm {after_warm:?})"
+            );
+            // exact MVC sanity against the oracle
+            for (i, (g, (obj, _))) in workload().iter().zip(&cold).enumerate() {
+                assert_eq!(*obj, oracle::mvc_size(g), "{tag}: job {i} objective");
+            }
+        }
+    }
+}
+
+#[test]
+fn warm_resubmission_hits_and_verifies_under_concurrency() {
+    // Multi-worker passes are not bit-deterministic, but objectives are
+    // exact and every witness must still verify; the warm pass must hit.
+    let svc = VcService::builder().workers(4).build();
+    let cold = run_batch(&svc);
+    let warm = run_batch(&svc);
+    for (i, ((c, _), (w, _))) in cold.iter().zip(&warm).enumerate() {
+        assert_eq!(c, w, "job {i}: warm objective diverges from cold");
+    }
+    let m = svc.stats().memo;
+    assert!(m.hits > 0, "warm resubmission produced no cache hits: {m:?}");
+    assert!(m.lookups >= m.hits, "hits cannot exceed lookups: {m:?}");
+    assert!(m.saved_nodes > 0, "hits must account skipped subtree nodes: {m:?}");
+}
+
+#[test]
+fn pvc_jobs_never_publish_to_the_cache() {
+    // PVC searches prune against the budget k, so their component
+    // results are bounded, not exact — the cache must never see them.
+    let svc = VcService::builder().workers(2).build();
+    for seed in 0..4u64 {
+        let g = generators::union_of_random(3, 4, 8, 0.35, seed);
+        let k = oracle::mvc_size(&g);
+        let sol = svc.submit_with(Problem::pvc(g, k), extract_opts()).wait();
+        assert_eq!(sol.termination, Termination::Complete, "seed {seed}");
+        assert!(sol.feasible, "seed {seed}: k = exact MVC must be feasible");
+    }
+    let m = svc.stats().memo;
+    assert_eq!(m.inserts, 0, "PVC results were published: {m:?}");
+    assert_eq!(m.bytes, 0, "cache holds bytes no job published: {m:?}");
+}
+
+#[test]
+fn memo_off_is_fully_inert() {
+    // `--memo off` (builder form) must leave zero trace: no lookups, no
+    // inserts, no held bytes — both passes run the plain search.
+    let svc = VcService::builder().workers(2).memo(false).build();
+    let cold = run_batch(&svc);
+    let warm = run_batch(&svc);
+    for (i, ((c, _), (w, _))) in cold.iter().zip(&warm).enumerate() {
+        assert_eq!(c, w, "job {i}: objectives must agree without the cache");
+    }
+    assert_eq!(svc.stats().memo, MemoStats::default(), "memo off must be inert");
+}
+
+#[test]
+fn per_job_opt_out_skips_the_cache() {
+    // A job submitted with `memo: Some(false)` on a memo-enabled service
+    // neither consults nor feeds the cache.
+    let svc = VcService::builder().workers(2).build();
+    let g = generators::union_of_random(4, 4, 8, 0.35, 99);
+    let opt = oracle::mvc_size(&g);
+    let opts = JobOptions { memo: Some(false), ..extract_opts() };
+    let sol = svc.submit_with(Problem::mvc(g), opts).wait();
+    assert_eq!(sol.objective, opt);
+    assert_eq!(svc.stats().memo, MemoStats::default(), "opted-out job touched the cache");
+}
