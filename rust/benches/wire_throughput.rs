@@ -1,0 +1,114 @@
+//! Wire-protocol overhead: the same deterministic batch solved on one
+//! resident service three ways — in-process submits, remote serial
+//! (one `solve` round trip per job), and remote pipelined (submit all,
+//! then collect) — over a loopback TCP connection.
+//!
+//! All three modes must produce identical objectives (the framing layer
+//! is not allowed to change answers); the interesting columns are the
+//! per-job overhead of a serial round trip versus pipelining. Results
+//! go to stdout and `bench_out/wire_throughput.csv`. `CAVC_SMOKE=1`
+//! shrinks the batch for the CI smoke job.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{Problem, ServerConfig, ServerReply, VcClient, VcServer, VcService, WireOptions};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// Deterministic small-graph batch: cheap individual solves, so the
+/// measurement is dominated by dispatch + framing, not search.
+fn batch(n: usize) -> Vec<Graph> {
+    (0..n).map(|i| generators::erdos_renyi(18, 0.22, 0xA11CE + i as u64)).collect()
+}
+
+fn in_process(svc: &VcService, graphs: &[Graph]) -> (Vec<u32>, f64) {
+    let t = Instant::now();
+    let handles: Vec<_> = graphs.iter().map(|g| svc.submit(Problem::mvc(g.clone()))).collect();
+    let answers: Vec<u32> = handles.iter().map(|h| h.wait().objective).collect();
+    (answers, t.elapsed().as_secs_f64())
+}
+
+fn remote_serial(client: &mut VcClient, graphs: &[Graph]) -> (Vec<u32>, f64) {
+    let t = Instant::now();
+    let answers: Vec<u32> = graphs
+        .iter()
+        .map(|g| {
+            client
+                .solve(&Problem::mvc(g.clone()), WireOptions::default())
+                .expect("remote solve")
+                .objective
+        })
+        .collect();
+    (answers, t.elapsed().as_secs_f64())
+}
+
+fn remote_pipelined(client: &mut VcClient, graphs: &[Graph]) -> (Vec<u32>, f64) {
+    let t = Instant::now();
+    let ids: Vec<u64> = graphs
+        .iter()
+        .map(|g| client.submit(&Problem::mvc(g.clone()), WireOptions::default()).expect("submit"))
+        .collect();
+    let mut by_id: HashMap<u64, u32> = HashMap::with_capacity(ids.len());
+    while by_id.len() < ids.len() {
+        match client.recv().expect("reply") {
+            ServerReply::Solution(sol) => {
+                by_id.insert(sol.req_id, sol.objective);
+            }
+            ServerReply::Error(e) => panic!("remote rejection: {e:?}"),
+            ServerReply::Stats(_) => {}
+        }
+    }
+    let answers = ids.iter().map(|id| by_id[id]).collect();
+    (answers, t.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let n = if smoke { 40 } else { 200 };
+    let graphs = batch(n);
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    println!("# wire throughput — {n} small graphs, {workers} workers, loopback TCP");
+
+    let svc = VcService::builder().workers(workers).build();
+    let server =
+        VcServer::bind("127.0.0.1:0", svc, ServerConfig::default()).expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    let (local, local_s) = in_process(server.service(), &graphs);
+    let mut client = VcClient::connect(&addr).expect("connect");
+    let (serial, serial_s) = remote_serial(&mut client, &graphs);
+    let (piped, piped_s) = remote_pipelined(&mut client, &graphs);
+
+    assert_eq!(local, serial, "serial wire answers must match in-process");
+    assert_eq!(local, piped, "pipelined wire answers must match in-process");
+
+    let per_job_us = |secs: f64| 1e6 * secs / n as f64;
+    println!("{:<16} {:>10} {:>12} {:>12}", "mode", "secs", "jobs/s", "us/job");
+    for (mode, secs) in
+        [("in-process", local_s), ("remote-serial", serial_s), ("remote-pipelined", piped_s)]
+    {
+        println!(
+            "{:<16} {:>10.4} {:>12.1} {:>12.1}",
+            mode,
+            secs,
+            n as f64 / secs.max(1e-12),
+            per_job_us(secs)
+        );
+    }
+    println!(
+        "framing overhead: serial {:.2}x, pipelined {:.2}x of in-process wall",
+        serial_s / local_s.max(1e-12),
+        piped_s / local_s.max(1e-12)
+    );
+
+    let rows = vec![
+        format!("in-process,{n},{workers},{local_s},{}", per_job_us(local_s)),
+        format!("remote-serial,{n},{workers},{serial_s},{}", per_job_us(serial_s)),
+        format!("remote-pipelined,{n},{workers},{piped_s},{}", per_job_us(piped_s)),
+    ];
+    let header = "mode,jobs,workers,secs,us_per_job";
+    match cavc::harness::tables::write_csv("wire_throughput", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+    server.shutdown();
+}

@@ -167,6 +167,25 @@
 //! `tests/memo_cache.rs` and `benches/memo_throughput.rs` measures the
 //! warm/cold resubmission ratio.
 //!
+//! ## Serving over the network
+//!
+//! The resident service is network-reachable: [`solver::wire`] defines
+//! a zero-dependency length-prefixed binary protocol (magic + version
+//! handshake, CSR-validated graph transport, typed admission errors)
+//! and [`solver::VcServer`] exposes one [`solver::VcService`] over TCP
+//! — per-connection reader threads decode frames into a single bounded
+//! ingress channel drained by one coordinator (the sole admission
+//! caller), replies fan back out through per-connection writers, and a
+//! dropped connection cancels its outstanding jobs. Backpressure maps
+//! onto the wire: a shed submit travels back as a typed
+//! queue-full/quota/memory error frame the client can turn back into a
+//! [`solver::SubmitError`]. [`solver::VcClient`] is the blocking,
+//! pipelining client behind `cavc solve --remote HOST:PORT` and
+//! `cavc serve`; `tests/wire_protocol.rs` holds the loopback
+//! differential (remote answers bit-identical to in-process), the
+//! malformed-frame fuzzer, and the disconnect-cancellation coverage,
+//! and `benches/wire_throughput.rs` prices the framing overhead.
+//!
 //! ## Quickstart
 //!
 //! ```no_run

@@ -25,18 +25,22 @@ use cavc::util::error::{Context, Error, Result};
 use cavc::harness::{datasets, tables};
 use cavc::solver::engine::EngineStats;
 use cavc::solver::{
-    self, witness, JobHandle, Lane, Problem, RetryPolicy, SchedulerKind, SolverConfig, Termination,
-    VcService, Variant,
+    self, witness, JobHandle, Lane, Problem, ProblemKind, RetryPolicy, SchedulerKind, ServerConfig,
+    ServerReply, SolverConfig, Termination, VcClient, VcServer, VcService, Variant, WireOptions,
+    WireSolution,
 };
 
 use cavc::util::cli::Args;
+use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
     "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth", "lane", "submit-timeout",
-    "max-queued", "retry", "mem-soft", "mem-hard", "memo", "memo-bytes",
+    "max-queued", "retry", "mem-soft", "mem-hard", "memo", "memo-bytes", "addr", "remote",
+    "max-conns", "tenant",
 ];
 
 fn main() {
@@ -59,6 +63,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         Some("info") => cmd_info(&args),
         Some("components") => cmd_components(&args),
         Some("gen") => cmd_gen(&args),
+        Some("serve") => cmd_serve(&args),
         Some("datasets") => cmd_datasets(),
         Some("tables") => cmd_tables(&args),
         Some("version") => {
@@ -75,7 +80,7 @@ fn run(raw: Vec<String>) -> Result<()> {
 fn print_help() {
     println!(
         "cavc {} — component-aware vertex cover (TPDS'25 reproduction)\n\n\
-         usage: cavc <solve|pvc|mis|info|components|gen|datasets|tables> [args]\n\
+         usage: cavc <solve|pvc|mis|serve|info|components|gen|datasets|tables> [args]\n\
          \n\
          solve <graph|dataset> [--variant proposed|yamout|no-lb|sequential]\n\
         \x20                   [--workers N] [--timeout SECS] [--sched steal|sharded]\n\
@@ -112,7 +117,21 @@ fn print_help() {
         \x20                   [--memo-bytes N]        (batch: memo-cache byte budget; default is a\n\
         \x20                                            quarter of the watchdog stack budget, and\n\
         \x20                                            CAVC_MEMO_BYTES overrides)\n\
-         pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check]\n         mis <graph|dataset> [--variant ...] [--check]\n\
+        \x20                   [--remote HOST:PORT]    (run the job on a `cavc serve` instance over the\n\
+        \x20                                            length-prefixed wire protocol instead of in\n\
+        \x20                                            process; works with --jobs batch mode too, and\n\
+        \x20                                            --check re-verifies the witness locally.\n\
+        \x20                                            --lane/--timeout/--tenant/--memo travel with\n\
+        \x20                                            each job; a backpressured server answers with\n\
+        \x20                                            typed queue-full/quota/memory errors)\n\
+         pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check] [--remote HOST:PORT]\n         mis <graph|dataset> [--variant ...] [--check] [--remote HOST:PORT]\n\
+         serve --addr HOST:PORT [--max-conns N] [--workers N] [--sched steal|sharded]\n\
+        \x20      [--max-queued N] [--submit-timeout SECS] [--retry N] [--mem-soft BYTES]\n\
+        \x20      [--mem-hard BYTES] [--memo on|off] [--memo-bytes N]\n\
+        \x20                  (expose one resident VcService over TCP: per-connection readers feed a\n\
+        \x20                   single admission coordinator; --submit-timeout > 0 lets a submit wait\n\
+        \x20                   out backpressure server-side instead of bouncing immediately; stats\n\
+        \x20                   are scrapeable as a wire frame)\n\
          info <graph|dataset>\n\
          components <graph|dataset> [--no-accel]\n\
          gen <er|ba|grid|cfat|phat|banded|union> --out FILE [--n N] [--p P] [--seed S]\n\
@@ -231,6 +250,9 @@ fn build_service(args: &Args, cfg: &SolverConfig, max_queued: Option<usize>) -> 
 /// With `--check`, every job extracts its witness and the run fails if
 /// any witness is missing or does not verify.
 fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
+    if let Some(addr) = args.get("remote") {
+        return cmd_batch_remote(args, list, k, addr);
+    }
     let specs = batch_specs(args, list)?;
     let check = args.flag("check");
     let cfg = parse_config(args)?;
@@ -378,6 +400,9 @@ fn cmd_solve(args: &Args) -> Result<()> {
     if let Some(list) = args.get("jobs") {
         return cmd_batch(args, list, None);
     }
+    if let Some(addr) = args.get("remote") {
+        return cmd_remote(args, addr, ProblemKind::Mvc);
+    }
     let spec = args.pos(1).context("solve: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
     let check = args.flag("check");
@@ -422,6 +447,9 @@ fn cmd_pvc(args: &Args) -> Result<()> {
     if let Some(list) = args.get("jobs") {
         return cmd_batch(args, list, Some(k));
     }
+    if let Some(addr) = args.get("remote") {
+        return cmd_remote(args, addr, ProblemKind::Pvc);
+    }
     let spec = args.pos(1).context("pvc: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
     let check = args.flag("check");
@@ -449,6 +477,9 @@ fn cmd_pvc(args: &Args) -> Result<()> {
 }
 
 fn cmd_mis(args: &Args) -> Result<()> {
+    if let Some(addr) = args.get("remote") {
+        return cmd_remote(args, addr, ProblemKind::Mis);
+    }
     let spec = args.pos(1).context("mis: missing <graph|dataset>")?;
     let g = load_graph(spec)?;
     let check = args.flag("check");
@@ -469,6 +500,291 @@ fn cmd_mis(args: &Args) -> Result<()> {
         None => {}
     }
     Ok(())
+}
+
+/// The per-job options that travel with a remote submit. The solver
+/// knobs in `--variant`/`--sched`/… stay server-side (the resident
+/// service was built with its own config); only the wire-visible
+/// subset crosses: lane, deadline, tenant, witness extraction, memo.
+fn remote_options(args: &Args, cfg: &SolverConfig, check: bool) -> Result<WireOptions> {
+    let lane = match args.get("lane") {
+        Some(s) => Some(
+            Lane::parse(s).with_context(|| format!("unknown lane {s:?} (use latency|throughput)"))?,
+        ),
+        None => None,
+    };
+    Ok(WireOptions {
+        lane,
+        timeout: cfg.timeout,
+        tenant: args.get("tenant").map(String::from),
+        extract_witness: check,
+        memo: cfg.memo,
+    })
+}
+
+fn connect_remote(addr: &str) -> Result<VcClient> {
+    VcClient::connect(addr).with_context(|| format!("connecting to {addr}"))
+}
+
+/// Run one problem on a `cavc serve` instance instead of in process.
+/// The answer comes back over the wire; with `--check` the witness is
+/// re-verified *locally* edge-by-edge against the input graph, so a
+/// buggy or hostile server cannot hand back an unvouched answer.
+fn cmd_remote(args: &Args, addr: &str, kind: ProblemKind) -> Result<()> {
+    let spec = args.pos(1).context("missing <graph|dataset>")?;
+    let g = Arc::new(load_graph(spec)?);
+    let check = args.flag("check");
+    let cfg = parse_config(args)?;
+    let (problem, k) = match kind {
+        ProblemKind::Mvc => (Problem::mvc(Arc::clone(&g)), None),
+        ProblemKind::Pvc => {
+            let k: u32 = args.get("k").context("pvc: missing --k")?.parse().context("--k")?;
+            (Problem::pvc(Arc::clone(&g), k), Some(k))
+        }
+        ProblemKind::Mis => (Problem::mis(Arc::clone(&g)), None),
+    };
+    let opts = remote_options(args, &cfg, check)?;
+    let mut client = connect_remote(addr)?;
+    let t0 = Instant::now();
+    let sol = client.solve(&problem, opts).with_context(|| format!("remote solve on {addr}"))?;
+    let round_trip = t0.elapsed();
+
+    println!("graph           : {spec} (|V|={}, |E|={})", g.num_vertices(), g.num_edges());
+    println!("server          : {addr} (protocol v{})", client.version());
+    let answer = match (kind, sol.feasible) {
+        (ProblemKind::Mvc, _) => format!("mvc {}", sol.objective),
+        (ProblemKind::Pvc, true) => format!("pvc yes (size {})", sol.objective),
+        (ProblemKind::Pvc, false) => format!("pvc no (no cover of size <= {})", k.unwrap_or(0)),
+        (ProblemKind::Mis, _) => format!("alpha {}", sol.objective),
+    };
+    println!(
+        "answer          : {}{}",
+        answer,
+        if sol.timed_out() { " (timeout: bound only)" } else { "" }
+    );
+    println!(
+        "elapsed         : {:.3}s on server ({:.3}s round trip)",
+        sol.elapsed.as_secs_f64(),
+        round_trip.as_secs_f64()
+    );
+    println!("tree nodes      : {}", sol.tree_nodes);
+    println!(
+        "prep            : n {} -> {}, forced {}, greedy ub {}",
+        g.num_vertices(),
+        sol.n_residual,
+        sol.forced,
+        sol.greedy_ub
+    );
+    if sol.memo_lookups > 0 {
+        println!("memo            : {} hits / {} lookups", sol.memo_hits, sol.memo_lookups);
+    }
+    if sol.termination == Termination::Failed {
+        bail!(
+            "remote job failed: {}",
+            sol.failure.as_deref().unwrap_or("no failure detail")
+        );
+    }
+    match &sol.witness {
+        Some(w) => {
+            println!("witness         : {} vertices returned over the wire", w.len());
+            match kind {
+                ProblemKind::Mis => {
+                    report_check("independent set", witness::verify_independent_set(&g, w))?
+                }
+                _ => report_check("cover", witness::verify_cover(&g, w))?,
+            }
+        }
+        // Infeasible PVC has nothing to witness; any other checked
+        // answer without one is a failure (timeout or server fault).
+        None if check && !(kind == ProblemKind::Pvc && !sol.feasible) => {
+            bail!("--check: no witness came back (timeout?)")
+        }
+        None => {}
+    }
+    Ok(())
+}
+
+/// Batch mode against a remote server: submit every spec pipelined on
+/// one connection, then collect replies by request id and print the
+/// same per-job table as the in-process batch path.
+fn cmd_batch_remote(args: &Args, list: &str, k: Option<u32>, addr: &str) -> Result<()> {
+    let specs = batch_specs(args, list)?;
+    let check = args.flag("check");
+    let cfg = parse_config(args)?;
+    let opts = remote_options(args, &cfg, check)?;
+    let mut client = connect_remote(addr)?;
+    println!("server: {addr} (protocol v{})", client.version());
+
+    let t0 = Instant::now();
+    // Keep every input graph alive for local witness re-verification.
+    let mut graphs: Vec<Arc<Graph>> = Vec::with_capacity(specs.len());
+    let mut ids: Vec<u64> = Vec::with_capacity(specs.len());
+    for spec in &specs {
+        let g = Arc::new(load_graph(spec)?);
+        let problem = match k {
+            Some(k) => Problem::pvc(Arc::clone(&g), k),
+            None => Problem::mvc(Arc::clone(&g)),
+        };
+        let id = client
+            .submit(&problem, opts.clone())
+            .with_context(|| format!("submit {spec} to {addr}"))?;
+        graphs.push(g);
+        ids.push(id);
+    }
+    let submitted = t0.elapsed().as_secs_f64();
+
+    // Replies arrive in completion order; bucket them by request id.
+    // A typed error frame with a request id is that job's rejection; a
+    // connection-scoped error (id 0) sinks the whole batch.
+    let mut replies: HashMap<u64, std::result::Result<WireSolution, String>> = HashMap::new();
+    while replies.len() < ids.len() {
+        match client.recv().with_context(|| format!("receiving from {addr}"))? {
+            ServerReply::Solution(s) => {
+                replies.insert(s.req_id, Ok(s));
+            }
+            ServerReply::Error(e) if e.req_id != 0 => {
+                replies.insert(e.req_id, Err(e.detail));
+            }
+            ServerReply::Error(e) => bail!("server rejected the connection: {}", e.detail),
+            ServerReply::Stats(_) => {}
+        }
+    }
+
+    let mut total_nodes: u64 = 0;
+    let mut check_failures: Vec<String> = Vec::new();
+    let mut failed_jobs: Vec<String> = Vec::new();
+    println!(
+        "{:<28} {:>10} {:>12} {:>10}  {}",
+        "graph", "answer", "tree nodes", "elapsed", "status"
+    );
+    for ((spec, id), g) in specs.iter().zip(&ids).zip(&graphs) {
+        let sol = match replies.get(id) {
+            Some(Ok(s)) => s,
+            Some(Err(detail)) => {
+                println!("{:<28} {:>10} {:>12} {:>10}  rejected: {}", spec, "-", "-", "-", detail);
+                failed_jobs.push(format!("{spec} ({detail})"));
+                continue;
+            }
+            None => {
+                failed_jobs.push(format!("{spec} (no reply)"));
+                continue;
+            }
+        };
+        total_nodes += sol.tree_nodes;
+        let answer = match k {
+            Some(_) if sol.feasible => format!("<= {}", sol.objective),
+            Some(k) => format!("> {k}"),
+            None => sol.objective.to_string(),
+        };
+        let status = match sol.termination {
+            Termination::Complete => "ok",
+            Termination::DeadlineExpired => "timeout",
+            Termination::Cancelled => "cancelled",
+            Termination::Recovered => "recovered",
+            Termination::Failed => "failed",
+        };
+        if sol.termination == Termination::Failed {
+            failed_jobs.push(match &sol.failure {
+                Some(msg) => format!("{spec} ({msg})"),
+                None => spec.clone(),
+            });
+        }
+        // Re-verify the wire witness locally — the server's own
+        // verified bit is reported but not trusted for --check.
+        let checked = if !check {
+            ""
+        } else if sol
+            .witness
+            .as_deref()
+            .is_some_and(|w| witness::verify_cover(g, w).is_ok())
+        {
+            " witness=ok"
+        } else if k.is_some() && !sol.feasible {
+            " witness=n/a"
+        } else {
+            check_failures.push(spec.clone());
+            " witness=FAILED"
+        };
+        println!(
+            "{:<28} {:>10} {:>12} {:>9.3}s  {}{}",
+            spec,
+            answer,
+            sol.tree_nodes,
+            sol.elapsed.as_secs_f64(),
+            status,
+            checked
+        );
+    }
+    if !failed_jobs.is_empty() {
+        bail!("{} job(s) failed: {}", failed_jobs.len(), failed_jobs.join(", "));
+    }
+    if !check_failures.is_empty() {
+        bail!(
+            "--check: {} job(s) without a locally verified witness: {}",
+            check_failures.len(),
+            check_failures.join(", ")
+        );
+    }
+    let total = t0.elapsed().as_secs_f64();
+    println!(
+        "-- {} remote jobs: {:.3}s total ({:.1} jobs/s; submit {:.3}s), {} tree nodes",
+        ids.len(),
+        total,
+        ids.len() as f64 / total.max(1e-9),
+        submitted,
+        total_nodes
+    );
+    // Scrape the server-side admission/memo ledger over the wire.
+    if let Ok(stats) = client.stats() {
+        let a = &stats.admission;
+        println!(
+            "-- server: {} latency + {} throughput dispatched, {} shed ({} quota, {} memory)",
+            a.dispatched_latency,
+            a.dispatched_throughput,
+            a.rejected,
+            a.quota_rejected,
+            a.mem_rejected
+        );
+        let m = &stats.memo;
+        if m.lookups > 0 || m.inserts > 0 {
+            println!(
+                "-- server memo: {} hits / {} lookups ({} inserts, {} bytes held)",
+                m.hits, m.lookups, m.inserts, m.bytes
+            );
+        }
+    }
+    Ok(())
+}
+
+/// `cavc serve`: expose one resident [`VcService`] over TCP until the
+/// process is killed. All the batch-mode service flags apply; the
+/// wire-protocol knobs are `--addr` and `--max-conns`.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = parse_config(args)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:9717");
+    let max_queued: Option<usize> =
+        args.get("max-queued").map(str::parse).transpose().context("--max-queued")?;
+    let svc = build_service(args, &cfg, max_queued)?;
+    let submit_timeout: f64 = args.get_parse("submit-timeout", 0.0).map_err(Error::msg)?;
+    let server_cfg = ServerConfig {
+        max_conns: args.get_parse("max-conns", 64).map_err(Error::msg)?,
+        submit_wait: Duration::from_secs_f64(submit_timeout.max(0.0)),
+        ..ServerConfig::default()
+    };
+    let server = VcServer::bind(addr, svc, server_cfg)
+        .with_context(|| format!("binding {addr}"))?;
+    println!(
+        "cavc serve: listening on {} (protocol v{}, {} workers, scheduler {})",
+        server.local_addr(),
+        solver::PROTOCOL_VERSION,
+        server.service().workers(),
+        cfg.scheduler.name()
+    );
+    // Serve until killed; the accept loop, readers, and coordinator all
+    // live on background threads.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

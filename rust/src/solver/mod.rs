@@ -34,7 +34,9 @@ pub mod oracle;
 pub mod registry;
 pub mod sched;
 pub mod sequential;
+pub mod server;
 pub mod service;
+pub mod wire;
 pub mod witness;
 pub mod worklist;
 
@@ -47,11 +49,13 @@ use occupancy::{Occupancy, OccupancyModel};
 pub use faults::{FaultInjector, FaultPlan};
 pub use memo::MemoStats;
 pub use sched::SchedulerKind;
+pub use server::{ClientError, ServerConfig, ServerReply, VcClient, VcServer};
 pub use service::{
     default_service, AdmissionStats, JobHandle, JobOptions, JobProgress, Lane, Problem,
     ProblemKind, RetryPolicy, ServiceStats, Solution, SubmitError, TenantQuota, Termination,
     VcService,
 };
+pub use wire::{WireOptions, WireSolution, PROTOCOL_VERSION};
 use std::time::{Duration, Instant};
 
 /// Which execution strategy to run.

@@ -1,0 +1,724 @@
+//! TCP front end for a resident [`VcService`]: [`VcServer`] accepts
+//! connections speaking the [`crate::solver::wire`] protocol and
+//! [`VcClient`] is the matching blocking client.
+//!
+//! # Serving over the network: why one coordinator
+//!
+//! The socket layer is deliberately *thin*. Per-connection reader
+//! threads do nothing but decode frames and push them into **one
+//! bounded ingress channel**; a single coordinator thread drains it and
+//! is the only caller of [`VcService::try_submit_with`] /
+//! [`VcService::submit_within`]. This mirrors the ROADMAP's caution
+//! (from the galette line of work) that a fleet of sockets each
+//! negotiating admission on its own loses to one coordinator on
+//! kernel↔user synchronization overhead — and it keeps the service's
+//! single-threaded admission dispatcher the only policy engine: the
+//! network adds transport, not a second scheduler. Backpressure
+//! composes the same way: the ingress channel is bounded (a flooding
+//! connection blocks its own reader, not the pool), and admission
+//! verdicts ([`SubmitError`]) travel back as typed error frames.
+//!
+//! Each connection gets a writer thread fed by an unbounded queue of
+//! pre-encoded frames, so a slow client never blocks the coordinator or
+//! another connection's replies. Per-request waiter threads block on
+//! [`JobHandle::wait`] and post the solution frame when the job
+//! finalizes — the coordinator never waits on a job.
+//!
+//! **Lifecycle.** Reads carry a timeout so readers notice the shutdown
+//! flag; a client disconnect (EOF or error) cancels that connection's
+//! outstanding jobs via [`JobHandle::cancel`] — a caller who hung up
+//! should not keep burning pool time. Malformed frames are answered
+//! with a typed error frame and the connection keeps serving (the
+//! framing keeps the stream in sync); only unframeable input — an
+//! oversized length prefix, a mid-frame stall — closes the connection.
+//! [`VcServer::shutdown`] (also run on drop) drains rather than aborts:
+//! stop accepting, let readers exit, drain the ingress queue, wait for
+//! every outstanding job's reply to be written, then join all threads.
+//!
+//! [`JobHandle::wait`]: super::service::JobHandle::wait
+//! [`JobHandle::cancel`]: super::service::JobHandle::cancel
+
+use std::collections::HashMap;
+use std::io::{self, BufWriter, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender, SyncSender};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::service::{JobHandle, Problem, ServiceStats, SubmitError, VcService};
+use super::wire::{
+    self, ErrorCode, Frame, SubmitRequest, WireError, WireErrorFrame, WireOptions, WireSolution,
+    PROTOCOL_VERSION, WIRE_MAGIC,
+};
+
+/// How long a fresh connection gets to complete the `Hello` handshake
+/// before its slot is reclaimed.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(5);
+
+/// Knobs for [`VcServer::bind`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum simultaneous connections; excess connects are answered
+    /// with an [`ErrorCode::ConnLimit`] frame and closed.
+    pub max_conns: usize,
+    /// Socket read timeout: the idle-poll cadence at which reader
+    /// threads re-check the shutdown flag, and the patience for a
+    /// started-but-stalled frame (a mid-frame stall past it closes the
+    /// connection).
+    pub read_timeout: Duration,
+    /// How long the coordinator lets a submit wait on admission
+    /// backpressure ([`VcService::submit_within`]). Zero (the default)
+    /// means pure [`VcService::try_submit_with`]: the queue-full verdict
+    /// travels back immediately as a typed error frame.
+    pub submit_wait: Duration,
+    /// Bound of the shared ingress channel. A connection that floods
+    /// submits faster than the coordinator drains them blocks its own
+    /// reader thread here — per-connection backpressure, not a global
+    /// stall.
+    pub ingress_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: 64,
+            read_timeout: Duration::from_millis(100),
+            submit_wait: Duration::ZERO,
+            ingress_depth: 256,
+        }
+    }
+}
+
+/// What a reader thread hands the coordinator.
+enum Ingress {
+    Submit { conn: Arc<ConnState>, req: SubmitRequest },
+    Cancel { conn: Arc<ConnState>, req_id: u64 },
+    Stats { conn: Arc<ConnState> },
+}
+
+/// Per-connection shared state: the reply queue and the outstanding
+/// requests (for cancel-on-disconnect).
+struct ConnState {
+    /// Pre-encoded reply frames headed for the writer thread; `None`
+    /// once the connection is torn down.
+    writer: Mutex<Option<Sender<Vec<u8>>>>,
+    /// Outstanding request id → running job.
+    pending: Mutex<HashMap<u64, JobHandle>>,
+    /// Set on teardown so late coordinator work and waiters skip it.
+    closed: AtomicBool,
+}
+
+impl ConnState {
+    fn send(&self, frame: &Frame) {
+        let bytes = wire::encode_frame(frame);
+        if let Some(tx) = self.writer.lock().unwrap().as_ref() {
+            let _ = tx.send(bytes);
+        }
+    }
+
+    fn send_error(&self, req_id: u64, code: ErrorCode, detail: String) {
+        self.send(&Frame::Error(WireErrorFrame { req_id, code, detail }));
+    }
+
+    /// Disconnect teardown: cancel every outstanding job (the client is
+    /// gone; nobody will read the answers) and close the reply queue.
+    fn close_and_cancel(&self) {
+        self.closed.store(true, Ordering::SeqCst);
+        let handles: Vec<JobHandle> =
+            self.pending.lock().unwrap().drain().map(|(_, h)| h).collect();
+        for h in &handles {
+            h.cancel();
+        }
+        *self.writer.lock().unwrap() = None;
+    }
+}
+
+struct Shared {
+    service: VcService,
+    cfg: ServerConfig,
+    shutdown: AtomicBool,
+    conns: AtomicUsize,
+    /// Outstanding remote jobs (admitted, reply not yet posted); the
+    /// drain barrier `shutdown` waits on.
+    inflight: Mutex<usize>,
+    idle_cv: Condvar,
+    conn_threads: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn inflight_add(&self) {
+        *self.inflight.lock().unwrap() += 1;
+    }
+
+    fn inflight_done(&self) {
+        let mut n = self.inflight.lock().unwrap();
+        *n -= 1;
+        if *n == 0 {
+            self.idle_cv.notify_all();
+        }
+    }
+}
+
+/// A TCP server exposing one [`VcService`] over the wire protocol. See
+/// the module docs for the threading model.
+pub struct VcServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    ingress: Option<SyncSender<Ingress>>,
+    accept: Option<JoinHandle<()>>,
+    coord: Option<JoinHandle<()>>,
+}
+
+impl VcServer {
+    /// Bind `addr` and start serving `service`. The service is owned by
+    /// the server (and dropped — draining its pool — when the server
+    /// shuts down); use [`VcServer::service`] for in-process access to
+    /// the same instance.
+    pub fn bind(
+        addr: impl ToSocketAddrs,
+        service: VcService,
+        cfg: ServerConfig,
+    ) -> io::Result<VcServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let (tx, rx) = mpsc::sync_channel::<Ingress>(cfg.ingress_depth.max(1));
+        let shared = Arc::new(Shared {
+            service,
+            cfg,
+            shutdown: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            inflight: Mutex::new(0),
+            idle_cv: Condvar::new(),
+            conn_threads: Mutex::new(Vec::new()),
+        });
+        let coord = {
+            let shared = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name("cavc-net-coord".into())
+                .spawn(move || coordinator_loop(&shared, rx))?
+        };
+        let accept = {
+            let shared = Arc::clone(&shared);
+            let tx = tx.clone();
+            std::thread::Builder::new()
+                .name("cavc-net-accept".into())
+                .spawn(move || accept_loop(&shared, listener, tx))?
+        };
+        Ok(VcServer {
+            shared,
+            addr: local,
+            ingress: Some(tx),
+            accept: Some(accept),
+            coord: Some(coord),
+        })
+    }
+
+    /// The bound address (resolves `:0` ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The served [`VcService`] — in-process submits and `stats()` see
+    /// exactly the instance remote clients are talking to.
+    pub fn service(&self) -> &VcService {
+        &self.shared.service
+    }
+
+    /// Live connection count.
+    pub fn connections(&self) -> usize {
+        self.shared.conns.load(Ordering::SeqCst)
+    }
+
+    /// Drain-then-exit shutdown: stop accepting, let readers notice and
+    /// exit, drain queued ingress, wait for every outstanding job's
+    /// reply to be posted, then join all server threads. Also runs on
+    /// drop.
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the accept loop with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // Readers exit within one read timeout of the flag; once their
+        // ingress senders (and ours) drop, the coordinator drains the
+        // channel and exits.
+        self.ingress = None;
+        if let Some(h) = self.coord.take() {
+            let _ = h.join();
+        }
+        // Wait for outstanding jobs to finalize and their replies to be
+        // queued (disconnected connections already cancelled theirs).
+        let mut n = self.shared.inflight.lock().unwrap();
+        while *n > 0 {
+            n = self.shared.idle_cv.wait(n).unwrap();
+        }
+        drop(n);
+        // Writers exit once the last reply queue closes; join everyone.
+        let threads = std::mem::take(&mut *self.shared.conn_threads.lock().unwrap());
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for VcServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(shared: &Arc<Shared>, listener: TcpListener, ingress: SyncSender<Ingress>) {
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(_) => {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                continue;
+            }
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        if shared.conns.load(Ordering::SeqCst) >= shared.cfg.max_conns {
+            // Best-effort typed rejection; the slot was never taken.
+            let mut s = stream;
+            let _ = s.write_all(&wire::encode_frame(&Frame::Error(WireErrorFrame {
+                req_id: 0,
+                code: ErrorCode::ConnLimit,
+                detail: format!("connection limit {} reached", shared.cfg.max_conns),
+            })));
+            let _ = s.shutdown(Shutdown::Both);
+            continue;
+        }
+        let write_half = match stream.try_clone() {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+        let _ = stream.set_nodelay(true);
+        shared.conns.fetch_add(1, Ordering::SeqCst);
+        let (wtx, wrx) = mpsc::channel::<Vec<u8>>();
+        let conn = Arc::new(ConnState {
+            writer: Mutex::new(Some(wtx)),
+            pending: Mutex::new(HashMap::new()),
+            closed: AtomicBool::new(false),
+        });
+        let reader = {
+            let shared = Arc::clone(shared);
+            let tx = ingress.clone();
+            std::thread::Builder::new()
+                .name("cavc-net-read".into())
+                .spawn(move || conn_reader(&shared, stream, &conn, &tx))
+        };
+        let writer = std::thread::Builder::new()
+            .name("cavc-net-write".into())
+            .spawn(move || writer_loop(write_half, wrx));
+        let mut threads = shared.conn_threads.lock().unwrap();
+        if let Ok(h) = reader {
+            threads.push(h);
+        }
+        if let Ok(h) = writer {
+            threads.push(h);
+        }
+    }
+}
+
+/// Drain pre-encoded reply frames onto the socket until the queue
+/// closes or the peer stops reading.
+fn writer_loop(stream: TcpStream, rx: Receiver<Vec<u8>>) {
+    let mut w = BufWriter::new(stream);
+    for bytes in rx {
+        if w.write_all(&bytes).and_then(|_| w.flush()).is_err() {
+            return;
+        }
+    }
+}
+
+/// What one blocking read attempt produced.
+enum NetRead {
+    Frame(Frame),
+    /// Read timeout before any byte of a frame arrived — re-check flags
+    /// and poll again.
+    Idle,
+    /// Orderly EOF at a frame boundary.
+    Eof,
+    /// Connection-fatal: an I/O error, a mid-frame stall, or an
+    /// unframeable length prefix.
+    Fatal,
+    /// The frame was consumed exactly but did not decode: reply with a
+    /// typed error frame and keep the connection.
+    Bad(WireError),
+}
+
+fn read_one(stream: &mut TcpStream) -> NetRead {
+    // First length byte read separately: a timeout here means "no
+    // traffic", not "broken frame", because no bytes were consumed.
+    let mut first = [0u8; 1];
+    loop {
+        match stream.read(&mut first) {
+            Ok(0) => return NetRead::Eof,
+            Ok(_) => break,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                return NetRead::Idle;
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(_) => return NetRead::Fatal,
+        }
+    }
+    let mut rest = [0u8; 3];
+    if stream.read_exact(&mut rest).is_err() {
+        return NetRead::Fatal;
+    }
+    let len = u32::from_le_bytes([first[0], rest[0], rest[1], rest[2]]);
+    match wire::read_body(stream, len) {
+        Ok(frame) => NetRead::Frame(frame),
+        // Oversized: the declared payload was not consumed, so the
+        // stream position is lost. I/O: the socket broke mid-frame.
+        Err(WireError::Oversized(n)) => NetRead::Bad(WireError::Oversized(n)),
+        Err(WireError::Io(_)) => NetRead::Fatal,
+        Err(e) => NetRead::Bad(e),
+    }
+}
+
+/// Read loop of one connection: handshake, then frames into the
+/// ingress channel. Returns `true` when exiting for server shutdown
+/// (pending jobs drain normally) and `false` on disconnect (pending
+/// jobs are cancelled).
+fn reader_session(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    conn: &Arc<ConnState>,
+    tx: &SyncSender<Ingress>,
+) -> bool {
+    // Handshake: the first frame must be a valid Hello.
+    let deadline = Instant::now() + HANDSHAKE_TIMEOUT;
+    let client_version = loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return true;
+        }
+        if Instant::now() > deadline {
+            conn.send_error(0, ErrorCode::Protocol, "handshake timeout".into());
+            return false;
+        }
+        match read_one(stream) {
+            NetRead::Idle => continue,
+            NetRead::Frame(Frame::Hello { version, .. }) => break version,
+            NetRead::Frame(_) => {
+                conn.send_error(0, ErrorCode::Protocol, "expected hello".into());
+                return false;
+            }
+            NetRead::Bad(e) => {
+                conn.send_error(0, e.code(), e.to_string());
+                if !e.recoverable() {
+                    return false;
+                }
+            }
+            NetRead::Eof | NetRead::Fatal => return false,
+        }
+    };
+    conn.send(&Frame::HelloAck { version: client_version.min(PROTOCOL_VERSION) });
+
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return true;
+        }
+        let msg = match read_one(stream) {
+            NetRead::Idle => continue,
+            NetRead::Eof | NetRead::Fatal => return false,
+            NetRead::Bad(e) => {
+                // Malformed but exactly-framed input: typed error frame,
+                // keep serving this connection (robustness contract —
+                // garbage must never take the server down).
+                conn.send_error(0, e.code(), e.to_string());
+                if !e.recoverable() {
+                    return false;
+                }
+                continue;
+            }
+            NetRead::Frame(Frame::Submit(req)) => {
+                Ingress::Submit { conn: Arc::clone(conn), req }
+            }
+            NetRead::Frame(Frame::Cancel { req_id }) => {
+                Ingress::Cancel { conn: Arc::clone(conn), req_id }
+            }
+            NetRead::Frame(Frame::StatsRequest) => Ingress::Stats { conn: Arc::clone(conn) },
+            NetRead::Frame(_) => {
+                conn.send_error(0, ErrorCode::Protocol, "unexpected frame from client".into());
+                continue;
+            }
+        };
+        // A full ingress channel blocks this reader only (bounded
+        // transport backpressure); an error means the coordinator is
+        // gone, i.e. shutdown.
+        if tx.send(msg).is_err() {
+            return true;
+        }
+    }
+}
+
+fn conn_reader(
+    shared: &Arc<Shared>,
+    mut stream: TcpStream,
+    conn: &Arc<ConnState>,
+    tx: &SyncSender<Ingress>,
+) {
+    let drain = reader_session(shared, &mut stream, conn, tx);
+    if !drain {
+        // Cancel outstanding jobs and close the reply queue; the writer
+        // thread flushes any queued error frame, then its clone of the
+        // socket drops and the connection closes.
+        conn.close_and_cancel();
+    }
+    // On the drain path the reply queue stays open: outstanding waiters
+    // still post their solutions, and the writer exits when the last
+    // `ConnState` reference drops.
+    shared.conns.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// The single coordinator: the only thread that talks to the service's
+/// admission layer on behalf of the network.
+fn coordinator_loop(shared: &Arc<Shared>, rx: Receiver<Ingress>) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Ingress::Submit { conn, req } => handle_submit(shared, conn, req),
+            Ingress::Cancel { conn, req_id } => {
+                // The handle stays pending: the job's anytime Solution
+                // (Termination::Cancelled) is still the one reply this
+                // request gets.
+                let handle = conn.pending.lock().unwrap().get(&req_id).cloned();
+                if let Some(h) = handle {
+                    h.cancel();
+                }
+            }
+            Ingress::Stats { conn } => {
+                conn.send(&Frame::StatsReply(Box::new(shared.service.stats())));
+            }
+        }
+    }
+}
+
+fn handle_submit(shared: &Arc<Shared>, conn: Arc<ConnState>, req: SubmitRequest) {
+    if conn.closed.load(Ordering::SeqCst) {
+        return;
+    }
+    let SubmitRequest { req_id, problem, opts } = req;
+    if conn.pending.lock().unwrap().contains_key(&req_id) {
+        conn.send_error(req_id, ErrorCode::Protocol, format!("duplicate request id {req_id}"));
+        return;
+    }
+    let wait = shared.cfg.submit_wait;
+    let admitted = if wait.is_zero() {
+        shared.service.try_submit_with(problem, opts.job_options())
+    } else {
+        shared.service.submit_within(problem, opts.job_options(), wait)
+    };
+    match admitted {
+        Ok(handle) => {
+            conn.pending.lock().unwrap().insert(req_id, handle.clone());
+            shared.inflight_add();
+            let sh = Arc::clone(shared);
+            let waiter_conn = Arc::clone(&conn);
+            let spawned = std::thread::Builder::new().name("cavc-net-wait".into()).spawn(
+                move || {
+                    let sol = handle.wait();
+                    // A disconnect teardown drains `pending`; if our
+                    // entry is gone the client is too.
+                    if waiter_conn.pending.lock().unwrap().remove(&req_id).is_some() {
+                        waiter_conn.send(&Frame::Solution(Box::new(
+                            WireSolution::from_solution(req_id, &sol),
+                        )));
+                    }
+                    sh.inflight_done();
+                },
+            );
+            if spawned.is_err() {
+                // Could not spawn a waiter: undo the bookkeeping and
+                // report the job as shed.
+                shared.inflight_done();
+                if let Some(h) = conn.pending.lock().unwrap().remove(&req_id) {
+                    h.cancel();
+                }
+                conn.send_error(req_id, ErrorCode::Protocol, "server thread spawn failed".into());
+            }
+        }
+        Err(e) => conn.send_error(req_id, ErrorCode::from(e), e.to_string()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client
+// ---------------------------------------------------------------------------
+
+/// Client-side failure talking to a [`VcServer`].
+#[derive(Debug)]
+pub enum ClientError {
+    /// The connection failed.
+    Io(io::Error),
+    /// A reply frame did not decode.
+    Wire(WireError),
+    /// The server answered with a typed error frame (admission
+    /// backpressure, protocol violation, connection cap…).
+    Rejected(WireErrorFrame),
+    /// The server sent a frame that makes no sense here.
+    Protocol(&'static str),
+}
+
+impl ClientError {
+    /// The in-process [`SubmitError`] behind a typed rejection, when
+    /// the server shed this submit for admission reasons.
+    pub fn submit_error(&self) -> Option<SubmitError> {
+        match self {
+            ClientError::Rejected(e) => e.code.submit_error(),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "connection: {e}"),
+            ClientError::Wire(e) => write!(f, "wire: {e}"),
+            ClientError::Rejected(e) => write!(f, "server: {} ({:?})", e.detail, e.code),
+            ClientError::Protocol(what) => write!(f, "protocol: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> ClientError {
+        ClientError::Io(e)
+    }
+}
+
+impl From<WireError> for ClientError {
+    fn from(e: WireError) -> ClientError {
+        ClientError::Wire(e)
+    }
+}
+
+/// A reply frame a client can receive.
+#[derive(Debug, Clone)]
+pub enum ServerReply {
+    /// A finished job.
+    Solution(WireSolution),
+    /// A typed rejection.
+    Error(WireErrorFrame),
+    /// A stats scrape.
+    Stats(ServiceStats),
+}
+
+/// Blocking client for the wire protocol: connect, submit problems
+/// (pipelined — replies carry the request id), scrape stats.
+pub struct VcClient {
+    stream: TcpStream,
+    version: u16,
+    next_req: u64,
+}
+
+impl VcClient {
+    /// Connect and run the version handshake.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<VcClient, ClientError> {
+        let mut stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        wire::write_frame(
+            &mut stream,
+            &Frame::Hello { magic: WIRE_MAGIC, version: PROTOCOL_VERSION },
+        )?;
+        match wire::read_frame(&mut stream)? {
+            Frame::HelloAck { version } => Ok(VcClient { stream, version, next_req: 1 }),
+            Frame::Error(e) => Err(ClientError::Rejected(e)),
+            _ => Err(ClientError::Protocol("expected hello-ack")),
+        }
+    }
+
+    /// The negotiated protocol version.
+    pub fn version(&self) -> u16 {
+        self.version
+    }
+
+    /// Submit a problem; returns the request id its reply will carry.
+    pub fn submit(&mut self, problem: &Problem, opts: WireOptions) -> Result<u64, ClientError> {
+        let req_id = self.next_req;
+        self.next_req += 1;
+        wire::write_frame(
+            &mut self.stream,
+            &Frame::Submit(SubmitRequest { req_id, problem: problem.clone(), opts }),
+        )?;
+        Ok(req_id)
+    }
+
+    /// Ask the server to cancel an outstanding request. Its `Solution`
+    /// still arrives, terminated `Cancelled` (anytime result).
+    pub fn cancel(&mut self, req_id: u64) -> Result<(), ClientError> {
+        wire::write_frame(&mut self.stream, &Frame::Cancel { req_id })?;
+        Ok(())
+    }
+
+    /// Block for the next reply frame.
+    pub fn recv(&mut self) -> Result<ServerReply, ClientError> {
+        match wire::read_frame(&mut self.stream)? {
+            Frame::Solution(s) => Ok(ServerReply::Solution(*s)),
+            Frame::Error(e) => Ok(ServerReply::Error(e)),
+            Frame::StatsReply(s) => Ok(ServerReply::Stats(*s)),
+            _ => Err(ClientError::Protocol("unexpected server frame")),
+        }
+    }
+
+    /// Submit one problem and block for its solution; a typed error
+    /// reply (admission backpressure) surfaces as
+    /// [`ClientError::Rejected`]. Replies to other in-flight requests
+    /// on this connection are *not* consumed out of order — use
+    /// [`VcClient::submit`] + [`VcClient::recv`] for pipelining.
+    pub fn solve(
+        &mut self,
+        problem: &Problem,
+        opts: WireOptions,
+    ) -> Result<WireSolution, ClientError> {
+        let req_id = self.submit(problem, opts)?;
+        loop {
+            match self.recv()? {
+                ServerReply::Solution(s) if s.req_id == req_id => return Ok(s),
+                ServerReply::Error(e) if e.req_id == req_id || e.req_id == 0 => {
+                    return Err(ClientError::Rejected(e));
+                }
+                // A stale stats scrape or another request's reply.
+                _ => continue,
+            }
+        }
+    }
+
+    /// Scrape the server's [`ServiceStats`] snapshot.
+    pub fn stats(&mut self) -> Result<ServiceStats, ClientError> {
+        wire::write_frame(&mut self.stream, &Frame::StatsRequest)?;
+        loop {
+            match self.recv()? {
+                ServerReply::Stats(s) => return Ok(s),
+                ServerReply::Error(e) if e.req_id == 0 => return Err(ClientError::Rejected(e)),
+                // Solutions to in-flight submits may arrive first; they
+                // are lost to this simple scrape path, so scrape on a
+                // dedicated connection when pipelining.
+                _ => continue,
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for VcClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VcClient").field("version", &self.version).finish_non_exhaustive()
+    }
+}

@@ -139,6 +139,19 @@
 //!
 //! The whole ladder is exercised deterministically by the seeded
 //! fault-injection harness ([`crate::solver::faults`], `tests/chaos.rs`).
+//!
+//! ## Serving over the network
+//!
+//! Everything above is also reachable over TCP: [`crate::solver::wire`]
+//! frames [`Problem`]s, a [`JobOptions`] subset (lane, deadline, tenant,
+//! witness, memo), [`Solution`] digests, and [`ServiceStats`] scrapes in
+//! a length-prefixed binary protocol, and [`crate::solver::server`]
+//! mounts one service behind a listener — reader threads feed a single
+//! coordinator that is the only admission caller, so the network path
+//! exercises exactly the `try_submit_with`/`submit_within` semantics
+//! documented here, and every [`SubmitError`] arm has a typed wire
+//! error. See `cavc serve` and the module docs of
+//! [`crate::solver::server`].
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
@@ -1646,7 +1659,11 @@ impl VcService {
                 return Err(if over_mem {
                     adm.mem_rejected.fetch_add(1, Ordering::Relaxed);
                     SubmitError::MemoryPressure
-                } else if over_quota && !full {
+                } else if over_quota {
+                    // Documented shed order (module docs): quota beats
+                    // queue-full — a tenant at quota is told so even
+                    // when the queue is also at capacity, so its
+                    // backoff targets the right resource.
                     adm.quota_rejected.fetch_add(1, Ordering::Relaxed);
                     SubmitError::QuotaExceeded
                 } else {

@@ -1,0 +1,1204 @@
+//! Zero-dependency binary wire protocol for [`crate::solver::service`].
+//!
+//! # Serving over the network: the frame grammar
+//!
+//! Everything on the wire is a *frame*:
+//!
+//! ```text
+//! frame    := len:u32le  kind:u8  payload[len-1]
+//! ```
+//!
+//! `len` counts the kind byte plus the payload, so an empty payload is
+//! `len == 1`; `len == 0` is malformed and `len > MAX_FRAME_LEN` is
+//! rejected before any allocation. All integers are little-endian;
+//! strings are `len:u32le` followed by that many UTF-8 bytes; vectors
+//! of `u32` are `len:u32le` followed by the elements. Every decoder is
+//! *checked*: short payloads, out-of-range tags, non-UTF-8 strings, and
+//! trailing garbage return a [`WireError`] — malformed input can never
+//! panic the peer, which is what lets the server answer garbage with a
+//! typed [`Frame::Error`] and keep serving.
+//!
+//! Frame kinds (the `kind` byte):
+//!
+//! | kind | frame            | direction | payload                          |
+//! |------|------------------|-----------|----------------------------------|
+//! | 0x01 | `Hello`          | C → S     | magic `u32`, client version `u16`|
+//! | 0x02 | `HelloAck`       | S → C     | negotiated version `u16`         |
+//! | 0x03 | `Submit`         | C → S     | req id, problem, options         |
+//! | 0x04 | `Solution`       | S → C     | req id, solution                 |
+//! | 0x05 | `Error`          | S → C     | req id (0 = connection), code, detail |
+//! | 0x06 | `Cancel`         | C → S     | req id                           |
+//! | 0x07 | `StatsRequest`   | C → S     | —                                |
+//! | 0x08 | `StatsReply`     | S → C     | full [`ServiceStats`] snapshot   |
+//!
+//! **Version negotiation.** A connection opens with `Hello{magic,
+//! version}`; the server rejects a wrong magic outright, otherwise
+//! replies `HelloAck{min(client, server)}` and both sides speak that
+//! version. Version 1 is the only version today; the handshake exists
+//! so a future frame-layout change can keep old clients working.
+//!
+//! **Problems on the wire.** A [`Problem`] travels as its kind tag, the
+//! PVC budget `k`, and the graph in CSR form — `n`, `n + 1` row
+//! pointers, then `row_ptr[n]` adjacency entries (each undirected edge
+//! appears twice, exactly the in-memory layout). The decoder
+//! re-validates everything [`Graph::from_csr_parts`] debug-asserts —
+//! monotone row pointers, strictly sorted rows, in-range endpoints, no
+//! self loops, symmetry — because the bytes come from an untrusted
+//! socket, then rebuilds the graph with `from_csr_parts` so the engine
+//! sees exactly the structure an in-process caller would have built.
+//!
+//! **Solutions on the wire** carry the objective, feasibility, the
+//! optional witness (verbatim vertex ids) and its verification verdict,
+//! the termination reason, the failure message if any, and a small
+//! stats subset (tree nodes, component branches, induced subproblems,
+//! memo traffic, prep sizes) — enough for a remote driver to print the
+//! same table batch mode prints locally.
+//!
+//! [`SubmitError`] maps onto typed error frames
+//! ([`ErrorCode::QueueFull`] / [`ErrorCode::QuotaExceeded`] /
+//! [`ErrorCode::MemoryPressure`]) so remote callers see the same
+//! backpressure vocabulary in-process callers get, and
+//! [`ErrorCode::submit_error`] folds them back. The TCP server that
+//! speaks this protocol lives in [`crate::solver::server`].
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::graph::Graph;
+
+use super::memo::MemoStats;
+use super::service::{
+    AdmissionStats, ClassStats, JobOptions, Lane, PoolStats, Problem, ProblemKind, ServiceStats,
+    Solution, SubmitError, Termination,
+};
+
+/// First bytes of every connection: `b"CAVC"` read as a little-endian
+/// `u32`. A peer that opens with anything else is not speaking this
+/// protocol and is rejected before any state is allocated.
+pub const WIRE_MAGIC: u32 = u32::from_le_bytes(*b"CAVC");
+
+/// Protocol version spoken by this build. The handshake negotiates
+/// `min(client, server)`.
+pub const PROTOCOL_VERSION: u16 = 1;
+
+/// Upper bound on `len` of a single frame (64 MiB). Checked before the
+/// payload is allocated, so a hostile length prefix cannot balloon
+/// memory; a graph too large for one frame is a connection-fatal
+/// [`WireError::Oversized`].
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+/// Frame-kind discriminants (the `kind` byte after the length prefix).
+pub mod kind {
+    /// Client → server version handshake opener.
+    pub const HELLO: u8 = 0x01;
+    /// Server → client handshake reply carrying the negotiated version.
+    pub const HELLO_ACK: u8 = 0x02;
+    /// Client → server job submission (request id + problem + options).
+    pub const SUBMIT: u8 = 0x03;
+    /// Server → client finished-job digest.
+    pub const SOLUTION: u8 = 0x04;
+    /// Server → client typed error (admission shed, protocol fault…).
+    pub const ERROR: u8 = 0x05;
+    /// Client → server cancellation of an outstanding request.
+    pub const CANCEL: u8 = 0x06;
+    /// Client → server stats scrape request.
+    pub const STATS_REQUEST: u8 = 0x07;
+    /// Server → client [`super::ServiceStats`] snapshot.
+    pub const STATS_REPLY: u8 = 0x08;
+}
+
+/// Why a frame could not be decoded (or read).
+#[derive(Debug)]
+pub enum WireError {
+    /// The underlying socket/stream failed (includes EOF mid-frame and
+    /// read timeouts, surfaced by the transport).
+    Io(std::io::Error),
+    /// The payload ended in the middle of a field.
+    Truncated,
+    /// The payload decoded but left unconsumed bytes.
+    Trailing(usize),
+    /// A field held an out-of-range or inconsistent value.
+    Malformed(&'static str),
+    /// The length prefix exceeded [`MAX_FRAME_LEN`]. Connection-fatal:
+    /// the oversized payload was not consumed, so the stream is out of
+    /// sync.
+    Oversized(u32),
+    /// An unknown frame-kind byte.
+    UnknownKind(u8),
+    /// The `Hello` magic was wrong — the peer is not speaking this
+    /// protocol.
+    BadMagic(u32),
+    /// The peer requested protocol version 0 (reserved / unsupported).
+    Version(u16),
+    /// A string field was not valid UTF-8.
+    BadUtf8,
+}
+
+impl WireError {
+    /// Whether the stream is still framed after this error: the decoder
+    /// consumed exactly the declared frame, so the connection can reply
+    /// with a typed error frame and keep going. I/O failures and
+    /// oversized length prefixes are not recoverable — the stream
+    /// position is unknown.
+    pub fn recoverable(&self) -> bool {
+        !matches!(self, WireError::Io(_) | WireError::Oversized(_))
+    }
+
+    /// The wire error code a server reports for this decode failure.
+    pub fn code(&self) -> ErrorCode {
+        match self {
+            WireError::Oversized(_) => ErrorCode::Oversized,
+            WireError::Version(_) => ErrorCode::UnsupportedVersion,
+            _ => ErrorCode::Malformed,
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "i/o: {e}"),
+            WireError::Truncated => write!(f, "frame truncated mid-field"),
+            WireError::Trailing(n) => write!(f, "{n} trailing bytes after frame"),
+            WireError::Malformed(what) => write!(f, "malformed frame: {what}"),
+            WireError::Oversized(len) => {
+                write!(f, "frame length {len} exceeds cap {MAX_FRAME_LEN}")
+            }
+            WireError::UnknownKind(k) => write!(f, "unknown frame kind {k:#04x}"),
+            WireError::BadMagic(m) => write!(f, "bad hello magic {m:#010x}"),
+            WireError::Version(v) => write!(f, "unsupported protocol version {v}"),
+            WireError::BadUtf8 => write!(f, "string field is not valid UTF-8"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Typed error codes carried by [`Frame::Error`]. The first three are
+/// the [`SubmitError`] backpressure vocabulary; the rest are protocol-
+/// and connection-level failures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// [`SubmitError::QueueFull`] — the admission queue bounced the job.
+    QueueFull,
+    /// [`SubmitError::QuotaExceeded`] — the tenant is at quota.
+    QuotaExceeded,
+    /// [`SubmitError::MemoryPressure`] — the watchdog hard limit shed
+    /// the job.
+    MemoryPressure,
+    /// The peer sent a frame that did not decode.
+    Malformed,
+    /// The peer sent a frame longer than [`MAX_FRAME_LEN`].
+    Oversized,
+    /// The peer requested an unsupported protocol version.
+    UnsupportedVersion,
+    /// The server is at its connection cap.
+    ConnLimit,
+    /// A duplicate request id or a frame the server does not accept in
+    /// the current connection state.
+    Protocol,
+}
+
+impl ErrorCode {
+    fn as_u8(self) -> u8 {
+        match self {
+            ErrorCode::QueueFull => 1,
+            ErrorCode::QuotaExceeded => 2,
+            ErrorCode::MemoryPressure => 3,
+            ErrorCode::Malformed => 16,
+            ErrorCode::Oversized => 17,
+            ErrorCode::UnsupportedVersion => 18,
+            ErrorCode::ConnLimit => 19,
+            ErrorCode::Protocol => 20,
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<ErrorCode> {
+        Some(match v {
+            1 => ErrorCode::QueueFull,
+            2 => ErrorCode::QuotaExceeded,
+            3 => ErrorCode::MemoryPressure,
+            16 => ErrorCode::Malformed,
+            17 => ErrorCode::Oversized,
+            18 => ErrorCode::UnsupportedVersion,
+            19 => ErrorCode::ConnLimit,
+            20 => ErrorCode::Protocol,
+            _ => return None,
+        })
+    }
+
+    /// Fold an admission error code back into the in-process
+    /// [`SubmitError`] it mirrors; `None` for protocol-level codes.
+    pub fn submit_error(self) -> Option<SubmitError> {
+        match self {
+            ErrorCode::QueueFull => Some(SubmitError::QueueFull),
+            ErrorCode::QuotaExceeded => Some(SubmitError::QuotaExceeded),
+            ErrorCode::MemoryPressure => Some(SubmitError::MemoryPressure),
+            _ => None,
+        }
+    }
+}
+
+impl From<SubmitError> for ErrorCode {
+    fn from(e: SubmitError) -> ErrorCode {
+        match e {
+            SubmitError::QueueFull => ErrorCode::QueueFull,
+            SubmitError::QuotaExceeded => ErrorCode::QuotaExceeded,
+            SubmitError::MemoryPressure => ErrorCode::MemoryPressure,
+        }
+    }
+}
+
+/// The [`JobOptions`] subset that travels with a remote submit: lane
+/// pin, deadline, tenant id, witness extraction, memo opt-in/out.
+/// Per-job `SolverConfig` overrides, retry policies, and fault plans
+/// stay server-side policy.
+#[derive(Debug, Clone, Default)]
+pub struct WireOptions {
+    /// Pin the job to a QoS lane (`None` = size-classified).
+    pub lane: Option<Lane>,
+    /// Per-job wall-clock budget. The clock starts at admission on the
+    /// *server*, so network transit does not count against it.
+    pub timeout: Option<Duration>,
+    /// Tenant id for quota accounting.
+    pub tenant: Option<String>,
+    /// Ask the server to extract and verify a witness.
+    pub extract_witness: bool,
+    /// Per-job memo-cache override (`None` = server default).
+    pub memo: Option<bool>,
+}
+
+impl WireOptions {
+    /// The in-process [`JobOptions`] this remote submission stands for.
+    pub fn job_options(&self) -> JobOptions {
+        JobOptions {
+            timeout: self.timeout,
+            extract_witness: self.extract_witness,
+            priority: self.lane,
+            tenant: self.tenant.clone(),
+            memo: self.memo,
+            ..JobOptions::default()
+        }
+    }
+}
+
+/// A remote job submission: client-chosen request id (unique per
+/// connection), the problem, and the options subset.
+#[derive(Debug, Clone)]
+pub struct SubmitRequest {
+    /// Client-chosen id echoed on the reply; must be unique among this
+    /// connection's outstanding requests and non-zero (0 is reserved
+    /// for connection-level errors).
+    pub req_id: u64,
+    /// The decoded problem (graph rebuilt via [`Graph::from_csr_parts`]).
+    pub problem: Problem,
+    /// The remote options subset.
+    pub opts: WireOptions,
+}
+
+/// The [`Solution`] subset that travels back to a remote client.
+#[derive(Debug, Clone)]
+pub struct WireSolution {
+    /// The request id this answers.
+    pub req_id: u64,
+    /// Which problem kind this answers.
+    pub problem: ProblemKind,
+    /// Objective value (see [`Solution::objective`]).
+    pub objective: u32,
+    /// PVC feasibility (always true for MVC/MIS).
+    pub feasible: bool,
+    /// Witness vertex set, if extraction was requested and produced one.
+    pub witness: Option<Vec<u32>>,
+    /// Whether the server verified the witness edge-by-edge.
+    pub witness_verified: Option<bool>,
+    /// Why the job stopped.
+    pub termination: Termination,
+    /// Captured panic message for failed/recovered jobs.
+    pub failure: Option<String>,
+    /// Server-side wall clock from admission to finalization.
+    pub elapsed: Duration,
+    /// Search-tree nodes visited.
+    pub tree_nodes: u64,
+    /// Nodes that branched on components.
+    pub component_branches: u64,
+    /// Split components materialized as induced subproblems.
+    pub induced_subproblems: u64,
+    /// Component dispatches that consulted the cross-job memo cache.
+    pub memo_lookups: u64,
+    /// Memo lookups that skipped the subtree.
+    pub memo_hits: u64,
+    /// Residual |V| after root reduction.
+    pub n_residual: u32,
+    /// Vertices forced into the cover at the root.
+    pub forced: u32,
+    /// Greedy upper bound at the root.
+    pub greedy_ub: u32,
+}
+
+impl WireSolution {
+    /// Project a service [`Solution`] onto the wire subset.
+    pub fn from_solution(req_id: u64, sol: &Solution) -> WireSolution {
+        WireSolution {
+            req_id,
+            problem: sol.problem,
+            objective: sol.objective,
+            feasible: sol.feasible,
+            witness: sol.witness.clone(),
+            witness_verified: sol.witness_verified,
+            termination: sol.termination,
+            failure: sol.failure.clone(),
+            elapsed: sol.elapsed,
+            tree_nodes: sol.stats.tree_nodes,
+            component_branches: sol.stats.component_branches,
+            induced_subproblems: sol.stats.induced_subproblems,
+            memo_lookups: sol.stats.memo_lookups,
+            memo_hits: sol.stats.memo_hits,
+            n_residual: sol.prep.n_residual as u32,
+            forced: sol.prep.forced as u32,
+            greedy_ub: sol.prep.greedy_ub,
+        }
+    }
+
+    /// Whether the job stopped because its deadline fired (mirrors
+    /// [`Solution::timed_out`]).
+    pub fn timed_out(&self) -> bool {
+        self.termination == Termination::DeadlineExpired
+    }
+}
+
+/// A typed error reply ([`Frame::Error`]).
+#[derive(Debug, Clone)]
+pub struct WireErrorFrame {
+    /// The request this rejects, or 0 for a connection-level error.
+    pub req_id: u64,
+    /// The typed code.
+    pub code: ErrorCode,
+    /// Human-readable detail.
+    pub detail: String,
+}
+
+/// One decoded protocol frame. See the module docs for the grammar.
+#[derive(Debug, Clone)]
+pub enum Frame {
+    /// Client handshake: magic + highest version the client speaks.
+    Hello {
+        /// Must equal [`WIRE_MAGIC`].
+        magic: u32,
+        /// Highest protocol version the client speaks (≥ 1).
+        version: u16,
+    },
+    /// Server handshake reply: the negotiated version.
+    HelloAck {
+        /// `min(client, server)` version; all further frames use it.
+        version: u16,
+    },
+    /// A job submission.
+    Submit(SubmitRequest),
+    /// A finished job's result (exactly one per admitted submit).
+    Solution(Box<WireSolution>),
+    /// A typed rejection or protocol error.
+    Error(WireErrorFrame),
+    /// Cancel an outstanding request; its `Solution` still arrives,
+    /// terminated [`Termination::Cancelled`] (anytime result).
+    Cancel {
+        /// The request to cancel.
+        req_id: u64,
+    },
+    /// Ask for a [`ServiceStats`] snapshot.
+    StatsRequest,
+    /// The scrape reply: the full [`VcService::stats`] snapshot
+    /// (admission, lanes, watchdog ledger, memo cache), field for field.
+    ///
+    /// [`VcService::stats`]: super::service::VcService::stats
+    StatsReply(Box<ServiceStats>),
+}
+
+// ---------------------------------------------------------------------------
+// Encoder / decoder primitives
+// ---------------------------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn new() -> Enc {
+        // Reserve the 4-byte length slot; patched in `finish`.
+        Enc { buf: vec![0u8; 4] }
+    }
+
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    fn vec_u32(&mut self, v: &[u32]) {
+        self.u32(v.len() as u32);
+        for x in v {
+            self.u32(*x);
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        let len = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&len.to_le_bytes());
+        self.buf
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Truncated);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    fn str(&mut self) -> Result<String, WireError> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| WireError::BadUtf8)
+    }
+
+    /// A `u32` vector whose declared length is validated against the
+    /// remaining payload *before* allocating, so a hostile length can
+    /// never balloon memory past the (already capped) frame size.
+    fn vec_u32(&mut self) -> Result<Vec<u32>, WireError> {
+        let len = self.u32()? as usize;
+        self.checked_u32s(len)
+    }
+
+    fn checked_u32s(&mut self, len: usize) -> Result<Vec<u32>, WireError> {
+        if len.checked_mul(4).is_none_or(|bytes| bytes > self.remaining()) {
+            return Err(WireError::Truncated);
+        }
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        match self.remaining() {
+            0 => Ok(()),
+            n => Err(WireError::Trailing(n)),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Domain-type encodings
+// ---------------------------------------------------------------------------
+
+fn kind_tag(k: ProblemKind) -> u8 {
+    match k {
+        ProblemKind::Mvc => 0,
+        ProblemKind::Pvc => 1,
+        ProblemKind::Mis => 2,
+    }
+}
+
+fn kind_from_tag(t: u8) -> Result<ProblemKind, WireError> {
+    Ok(match t {
+        0 => ProblemKind::Mvc,
+        1 => ProblemKind::Pvc,
+        2 => ProblemKind::Mis,
+        _ => return Err(WireError::Malformed("problem kind tag")),
+    })
+}
+
+fn termination_tag(t: Termination) -> u8 {
+    match t {
+        Termination::Complete => 0,
+        Termination::DeadlineExpired => 1,
+        Termination::Cancelled => 2,
+        Termination::Failed => 3,
+        Termination::Recovered => 4,
+    }
+}
+
+fn termination_from_tag(t: u8) -> Result<Termination, WireError> {
+    Ok(match t {
+        0 => Termination::Complete,
+        1 => Termination::DeadlineExpired,
+        2 => Termination::Cancelled,
+        3 => Termination::Failed,
+        4 => Termination::Recovered,
+        _ => return Err(WireError::Malformed("termination tag")),
+    })
+}
+
+fn encode_graph(e: &mut Enc, g: &Graph) {
+    let n = g.num_vertices();
+    e.u32(n as u32);
+    let mut acc = 0u32;
+    e.u32(acc);
+    for v in 0..n as u32 {
+        acc += g.degree(v);
+        e.u32(acc);
+    }
+    for v in 0..n as u32 {
+        for u in g.neighbors(v) {
+            e.u32(*u);
+        }
+    }
+}
+
+/// Decode and *fully validate* a CSR graph: the checks mirror what
+/// [`Graph::from_csr_parts`] debug-asserts, but run unconditionally —
+/// wire input is untrusted, and release builds skip debug assertions.
+fn decode_graph(d: &mut Dec<'_>) -> Result<Graph, WireError> {
+    let n = d.u32()? as usize;
+    let row_ptr = d.checked_u32s(n + 1)?;
+    if row_ptr[0] != 0 {
+        return Err(WireError::Malformed("row_ptr[0] != 0"));
+    }
+    if row_ptr.windows(2).any(|w| w[0] > w[1]) {
+        return Err(WireError::Malformed("row pointers not monotone"));
+    }
+    let adj = d.checked_u32s(row_ptr[n] as usize)?;
+    for v in 0..n {
+        let row = &adj[row_ptr[v] as usize..row_ptr[v + 1] as usize];
+        if row.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(WireError::Malformed("adjacency row not strictly sorted"));
+        }
+        if row.iter().any(|&u| u as usize >= n) {
+            return Err(WireError::Malformed("adjacency endpoint out of range"));
+        }
+        if row.binary_search(&(v as u32)).is_ok() {
+            return Err(WireError::Malformed("self loop"));
+        }
+    }
+    // Symmetry: every (v, u) must have a mirror (u, v).
+    for v in 0..n {
+        for &u in &adj[row_ptr[v] as usize..row_ptr[v + 1] as usize] {
+            let mirror = &adj[row_ptr[u as usize] as usize..row_ptr[u as usize + 1] as usize];
+            if mirror.binary_search(&(v as u32)).is_err() {
+                return Err(WireError::Malformed("asymmetric edge"));
+            }
+        }
+    }
+    Ok(Graph::from_csr_parts(row_ptr, adj))
+}
+
+fn encode_problem(e: &mut Enc, p: &Problem) {
+    e.u8(kind_tag(p.kind()));
+    let k = match p {
+        Problem::Pvc { k, .. } => *k,
+        _ => 0,
+    };
+    e.u32(k);
+    encode_graph(e, p.graph());
+}
+
+fn decode_problem(d: &mut Dec<'_>) -> Result<Problem, WireError> {
+    let kind = kind_from_tag(d.u8()?)?;
+    let k = d.u32()?;
+    let g = Arc::new(decode_graph(d)?);
+    Ok(match kind {
+        ProblemKind::Mvc => Problem::mvc(g),
+        ProblemKind::Pvc => Problem::pvc(g, k),
+        ProblemKind::Mis => Problem::mis(g),
+    })
+}
+
+const OPT_WITNESS: u8 = 1 << 0;
+const OPT_LANE: u8 = 1 << 1;
+const OPT_TIMEOUT: u8 = 1 << 2;
+const OPT_TENANT: u8 = 1 << 3;
+const OPT_MEMO: u8 = 1 << 4;
+const OPT_MEMO_ON: u8 = 1 << 5;
+
+fn encode_options(e: &mut Enc, o: &WireOptions) {
+    let mut flags = 0u8;
+    if o.extract_witness {
+        flags |= OPT_WITNESS;
+    }
+    if o.lane.is_some() {
+        flags |= OPT_LANE;
+    }
+    if o.timeout.is_some() {
+        flags |= OPT_TIMEOUT;
+    }
+    if o.tenant.is_some() {
+        flags |= OPT_TENANT;
+    }
+    if let Some(on) = o.memo {
+        flags |= OPT_MEMO;
+        if on {
+            flags |= OPT_MEMO_ON;
+        }
+    }
+    e.u8(flags);
+    if let Some(lane) = o.lane {
+        e.u8(match lane {
+            Lane::Latency => 0,
+            Lane::Throughput => 1,
+        });
+    }
+    if let Some(t) = o.timeout {
+        e.u64(t.as_nanos().min(u64::MAX as u128) as u64);
+    }
+    if let Some(t) = &o.tenant {
+        e.str(t);
+    }
+}
+
+fn decode_options(d: &mut Dec<'_>) -> Result<WireOptions, WireError> {
+    let flags = d.u8()?;
+    let lane = if flags & OPT_LANE != 0 {
+        Some(match d.u8()? {
+            0 => Lane::Latency,
+            1 => Lane::Throughput,
+            _ => return Err(WireError::Malformed("lane tag")),
+        })
+    } else {
+        None
+    };
+    let timeout = if flags & OPT_TIMEOUT != 0 {
+        Some(Duration::from_nanos(d.u64()?))
+    } else {
+        None
+    };
+    let tenant = if flags & OPT_TENANT != 0 { Some(d.str()?) } else { None };
+    let memo = if flags & OPT_MEMO != 0 { Some(flags & OPT_MEMO_ON != 0) } else { None };
+    Ok(WireOptions { lane, timeout, tenant, extract_witness: flags & OPT_WITNESS != 0, memo })
+}
+
+const SOL_WITNESS: u8 = 1 << 0;
+const SOL_VERIFIED: u8 = 1 << 1;
+const SOL_VERIFIED_OK: u8 = 1 << 2;
+const SOL_FAILURE: u8 = 1 << 3;
+
+fn encode_solution(e: &mut Enc, s: &WireSolution) {
+    e.u64(s.req_id);
+    e.u8(kind_tag(s.problem));
+    e.u32(s.objective);
+    e.u8(s.feasible as u8);
+    e.u8(termination_tag(s.termination));
+    e.u64(s.elapsed.as_nanos().min(u64::MAX as u128) as u64);
+    let mut flags = 0u8;
+    if s.witness.is_some() {
+        flags |= SOL_WITNESS;
+    }
+    if let Some(ok) = s.witness_verified {
+        flags |= SOL_VERIFIED;
+        if ok {
+            flags |= SOL_VERIFIED_OK;
+        }
+    }
+    if s.failure.is_some() {
+        flags |= SOL_FAILURE;
+    }
+    e.u8(flags);
+    if let Some(w) = &s.witness {
+        e.vec_u32(w);
+    }
+    if let Some(msg) = &s.failure {
+        e.str(msg);
+    }
+    e.u64(s.tree_nodes);
+    e.u64(s.component_branches);
+    e.u64(s.induced_subproblems);
+    e.u64(s.memo_lookups);
+    e.u64(s.memo_hits);
+    e.u32(s.n_residual);
+    e.u32(s.forced);
+    e.u32(s.greedy_ub);
+}
+
+fn decode_solution(d: &mut Dec<'_>) -> Result<WireSolution, WireError> {
+    let req_id = d.u64()?;
+    let problem = kind_from_tag(d.u8()?)?;
+    let objective = d.u32()?;
+    let feasible = match d.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(WireError::Malformed("feasible flag")),
+    };
+    let termination = termination_from_tag(d.u8()?)?;
+    let elapsed = Duration::from_nanos(d.u64()?);
+    let flags = d.u8()?;
+    let witness = if flags & SOL_WITNESS != 0 { Some(d.vec_u32()?) } else { None };
+    let witness_verified =
+        if flags & SOL_VERIFIED != 0 { Some(flags & SOL_VERIFIED_OK != 0) } else { None };
+    let failure = if flags & SOL_FAILURE != 0 { Some(d.str()?) } else { None };
+    Ok(WireSolution {
+        req_id,
+        problem,
+        objective,
+        feasible,
+        witness,
+        witness_verified,
+        termination,
+        failure,
+        elapsed,
+        tree_nodes: d.u64()?,
+        component_branches: d.u64()?,
+        induced_subproblems: d.u64()?,
+        memo_lookups: d.u64()?,
+        memo_hits: d.u64()?,
+        n_residual: d.u32()?,
+        forced: d.u32()?,
+        greedy_ub: d.u32()?,
+    })
+}
+
+fn encode_stats(e: &mut Enc, s: &ServiceStats) {
+    let p = &s.pool;
+    e.u64(p.pushes);
+    e.u64(p.injected);
+    e.u64(p.pops);
+    e.u64(p.shared_pops);
+    e.u64(p.steals);
+    e.u64(p.steal_retries);
+    e.u64(p.parks);
+    e.u64(p.backlog as u64);
+    let a = &s.admission;
+    e.u64(a.queued as u64);
+    e.u64(a.live_jobs as u64);
+    e.u64(a.rejected);
+    e.u64(a.quota_rejected);
+    e.u64(a.blocked.as_nanos().min(u64::MAX as u128) as u64);
+    e.u64(a.dispatched_latency);
+    e.u64(a.dispatched_throughput);
+    e.u64(a.live_bytes);
+    e.u64(a.mem_rejected);
+    e.u64(a.retries);
+    e.u64(a.recovered);
+    e.u64(a.quarantined);
+    for c in [&s.mvc, &s.pvc, &s.mis] {
+        e.u64(c.jobs);
+        e.u64(c.steals);
+        e.u64(c.tree_nodes);
+        e.u64(c.delta_children);
+        e.u64(c.undo_pops);
+        e.u64(c.materializations);
+        e.u64(c.memo_lookups);
+        e.u64(c.memo_hits);
+    }
+    let m = &s.memo;
+    e.u64(m.lookups);
+    e.u64(m.hits);
+    e.u64(m.misses);
+    e.u64(m.inserts);
+    e.u64(m.evictions);
+    e.u64(m.bytes);
+    e.u64(m.saved_nodes);
+}
+
+fn decode_class(d: &mut Dec<'_>) -> Result<ClassStats, WireError> {
+    Ok(ClassStats {
+        jobs: d.u64()?,
+        steals: d.u64()?,
+        tree_nodes: d.u64()?,
+        delta_children: d.u64()?,
+        undo_pops: d.u64()?,
+        materializations: d.u64()?,
+        memo_lookups: d.u64()?,
+        memo_hits: d.u64()?,
+    })
+}
+
+fn decode_stats(d: &mut Dec<'_>) -> Result<ServiceStats, WireError> {
+    let pool = PoolStats {
+        pushes: d.u64()?,
+        injected: d.u64()?,
+        pops: d.u64()?,
+        shared_pops: d.u64()?,
+        steals: d.u64()?,
+        steal_retries: d.u64()?,
+        parks: d.u64()?,
+        backlog: d.u64()? as usize,
+    };
+    let admission = AdmissionStats {
+        queued: d.u64()? as usize,
+        live_jobs: d.u64()? as usize,
+        rejected: d.u64()?,
+        quota_rejected: d.u64()?,
+        blocked: Duration::from_nanos(d.u64()?),
+        dispatched_latency: d.u64()?,
+        dispatched_throughput: d.u64()?,
+        live_bytes: d.u64()?,
+        mem_rejected: d.u64()?,
+        retries: d.u64()?,
+        recovered: d.u64()?,
+        quarantined: d.u64()?,
+    };
+    let mvc = decode_class(d)?;
+    let pvc = decode_class(d)?;
+    let mis = decode_class(d)?;
+    let memo = MemoStats {
+        lookups: d.u64()?,
+        hits: d.u64()?,
+        misses: d.u64()?,
+        inserts: d.u64()?,
+        evictions: d.u64()?,
+        bytes: d.u64()?,
+        saved_nodes: d.u64()?,
+    };
+    Ok(ServiceStats { pool, admission, mvc, pvc, mis, memo })
+}
+
+// ---------------------------------------------------------------------------
+// Frame-level API
+// ---------------------------------------------------------------------------
+
+/// Encode one frame to its full wire representation (length prefix
+/// included), ready for `write_all`.
+pub fn encode_frame(frame: &Frame) -> Vec<u8> {
+    let mut e = Enc::new();
+    match frame {
+        Frame::Hello { magic, version } => {
+            e.u8(kind::HELLO);
+            e.u32(*magic);
+            e.u16(*version);
+        }
+        Frame::HelloAck { version } => {
+            e.u8(kind::HELLO_ACK);
+            e.u16(*version);
+        }
+        Frame::Submit(req) => {
+            e.u8(kind::SUBMIT);
+            e.u64(req.req_id);
+            encode_problem(&mut e, &req.problem);
+            encode_options(&mut e, &req.opts);
+        }
+        Frame::Solution(sol) => {
+            e.u8(kind::SOLUTION);
+            encode_solution(&mut e, sol);
+        }
+        Frame::Error(err) => {
+            e.u8(kind::ERROR);
+            e.u64(err.req_id);
+            e.u8(err.code.as_u8());
+            e.str(&err.detail);
+        }
+        Frame::Cancel { req_id } => {
+            e.u8(kind::CANCEL);
+            e.u64(*req_id);
+        }
+        Frame::StatsRequest => {
+            e.u8(kind::STATS_REQUEST);
+        }
+        Frame::StatsReply(stats) => {
+            e.u8(kind::STATS_REPLY);
+            encode_stats(&mut e, stats);
+        }
+    }
+    e.finish()
+}
+
+/// Decode the body of one frame (the bytes *after* the length prefix:
+/// kind byte + payload). Checked end to end; trailing bytes are an
+/// error so stream desyncs surface immediately instead of corrupting
+/// the next field.
+pub fn decode_payload(body: &[u8]) -> Result<Frame, WireError> {
+    let mut d = Dec::new(body);
+    let frame = match d.u8()? {
+        kind::HELLO => {
+            let magic = d.u32()?;
+            let version = d.u16()?;
+            if magic != WIRE_MAGIC {
+                return Err(WireError::BadMagic(magic));
+            }
+            if version == 0 {
+                return Err(WireError::Version(version));
+            }
+            Frame::Hello { magic, version }
+        }
+        kind::HELLO_ACK => Frame::HelloAck { version: d.u16()? },
+        kind::SUBMIT => {
+            let req_id = d.u64()?;
+            if req_id == 0 {
+                return Err(WireError::Malformed("request id 0 is reserved"));
+            }
+            let problem = decode_problem(&mut d)?;
+            let opts = decode_options(&mut d)?;
+            Frame::Submit(SubmitRequest { req_id, problem, opts })
+        }
+        kind::SOLUTION => Frame::Solution(Box::new(decode_solution(&mut d)?)),
+        kind::ERROR => {
+            let req_id = d.u64()?;
+            let code =
+                ErrorCode::from_u8(d.u8()?).ok_or(WireError::Malformed("error code"))?;
+            let detail = d.str()?;
+            Frame::Error(WireErrorFrame { req_id, code, detail })
+        }
+        kind::CANCEL => Frame::Cancel { req_id: d.u64()? },
+        kind::STATS_REQUEST => Frame::StatsRequest,
+        kind::STATS_REPLY => Frame::StatsReply(Box::new(decode_stats(&mut d)?)),
+        k => return Err(WireError::UnknownKind(k)),
+    };
+    d.done()?;
+    Ok(frame)
+}
+
+/// Blocking read of one frame from a stream. Length-prefix violations
+/// (`len == 0`, `len > MAX_FRAME_LEN`) are caught before the payload is
+/// allocated or consumed.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame, WireError> {
+    let mut len_buf = [0u8; 4];
+    r.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf);
+    read_body(r, len)
+}
+
+/// Read a frame's body once its length prefix is known (the server's
+/// idle-poll loop reads the prefix itself so it can distinguish "no
+/// traffic" from "slow frame").
+pub fn read_body<R: Read>(r: &mut R, len: u32) -> Result<Frame, WireError> {
+    if len == 0 {
+        return Err(WireError::Malformed("zero-length frame"));
+    }
+    if len > MAX_FRAME_LEN {
+        return Err(WireError::Oversized(len));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)?;
+    decode_payload(&body)
+}
+
+/// Write one frame and flush it.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode_frame(frame))?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn roundtrip(f: &Frame) -> Frame {
+        let bytes = encode_frame(f);
+        let len = u32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]) as usize;
+        assert_eq!(len + 4, bytes.len());
+        decode_payload(&bytes[4..]).expect("roundtrip decode")
+    }
+
+    #[test]
+    fn handshake_frames_roundtrip() {
+        match roundtrip(&Frame::Hello { magic: WIRE_MAGIC, version: PROTOCOL_VERSION }) {
+            Frame::Hello { magic, version } => {
+                assert_eq!(magic, WIRE_MAGIC);
+                assert_eq!(version, PROTOCOL_VERSION);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        match roundtrip(&Frame::HelloAck { version: 1 }) {
+            Frame::HelloAck { version } => assert_eq!(version, 1),
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn submit_roundtrips_graph_options_and_k() {
+        let g = generators::erdos_renyi(40, 0.15, 7);
+        let (nv, ne) = (g.num_vertices(), g.num_edges());
+        let req = SubmitRequest {
+            req_id: 99,
+            problem: Problem::pvc(g, 17),
+            opts: WireOptions {
+                lane: Some(Lane::Latency),
+                timeout: Some(Duration::from_millis(1500)),
+                tenant: Some("acme".into()),
+                extract_witness: true,
+                memo: Some(false),
+            },
+        };
+        match roundtrip(&Frame::Submit(req)) {
+            Frame::Submit(r) => {
+                assert_eq!(r.req_id, 99);
+                assert!(matches!(r.problem, Problem::Pvc { k: 17, .. }));
+                assert_eq!(r.problem.graph().num_vertices(), nv);
+                assert_eq!(r.problem.graph().num_edges(), ne);
+                assert_eq!(r.opts.lane, Some(Lane::Latency));
+                assert_eq!(r.opts.timeout, Some(Duration::from_millis(1500)));
+                assert_eq!(r.opts.tenant.as_deref(), Some("acme"));
+                assert!(r.opts.extract_witness);
+                assert_eq!(r.opts.memo, Some(false));
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn solution_and_error_frames_roundtrip() {
+        let sol = WireSolution {
+            req_id: 3,
+            problem: ProblemKind::Mvc,
+            objective: 12,
+            feasible: true,
+            witness: Some(vec![1, 4, 9]),
+            witness_verified: Some(true),
+            termination: Termination::Complete,
+            failure: None,
+            elapsed: Duration::from_micros(1234),
+            tree_nodes: 100,
+            component_branches: 5,
+            induced_subproblems: 2,
+            memo_lookups: 4,
+            memo_hits: 1,
+            n_residual: 30,
+            forced: 3,
+            greedy_ub: 15,
+        };
+        match roundtrip(&Frame::Solution(Box::new(sol))) {
+            Frame::Solution(s) => {
+                assert_eq!(s.req_id, 3);
+                assert_eq!(s.objective, 12);
+                assert_eq!(s.witness.as_deref(), Some(&[1u32, 4, 9][..]));
+                assert_eq!(s.witness_verified, Some(true));
+                assert_eq!(s.termination, Termination::Complete);
+                assert_eq!(s.elapsed, Duration::from_micros(1234));
+                assert_eq!(s.greedy_ub, 15);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+        let err = WireErrorFrame {
+            req_id: 0,
+            code: ErrorCode::QuotaExceeded,
+            detail: "tenant quota exceeded".into(),
+        };
+        match roundtrip(&Frame::Error(err)) {
+            Frame::Error(e) => {
+                assert_eq!(e.req_id, 0);
+                assert_eq!(e.code, ErrorCode::QuotaExceeded);
+                assert_eq!(e.code.submit_error(), Some(SubmitError::QuotaExceeded));
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_reply_roundtrips_every_counter() {
+        let s = ServiceStats {
+            pool: PoolStats { pushes: 11, backlog: 3, ..PoolStats::default() },
+            admission: AdmissionStats {
+                queued: 2,
+                live_jobs: 5,
+                blocked: Duration::from_nanos(777),
+                quota_rejected: 9,
+                ..AdmissionStats::default()
+            },
+            mvc: ClassStats { jobs: 4, ..ClassStats::default() },
+            pvc: ClassStats { tree_nodes: 123, ..ClassStats::default() },
+            mis: ClassStats { memo_hits: 8, ..ClassStats::default() },
+            memo: MemoStats { bytes: 4096, ..MemoStats::default() },
+        };
+        match roundtrip(&Frame::StatsReply(Box::new(s))) {
+            Frame::StatsReply(r) => {
+                assert_eq!(r.pool.pushes, 11);
+                assert_eq!(r.pool.backlog, 3);
+                assert_eq!(r.admission.queued, 2);
+                assert_eq!(r.admission.live_jobs, 5);
+                assert_eq!(r.admission.blocked, Duration::from_nanos(777));
+                assert_eq!(r.admission.quota_rejected, 9);
+                assert_eq!(r.mvc.jobs, 4);
+                assert_eq!(r.pvc.tree_nodes, 123);
+                assert_eq!(r.mis.memo_hits, 8);
+                assert_eq!(r.memo.bytes, 4096);
+            }
+            f => panic!("wrong frame {f:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_payloads_error_not_panic() {
+        // Unknown kind.
+        assert!(matches!(decode_payload(&[0xEE]), Err(WireError::UnknownKind(0xEE))));
+        // Truncated submit.
+        assert!(matches!(decode_payload(&[kind::SUBMIT, 1, 2]), Err(WireError::Truncated)));
+        // Trailing garbage after a complete frame.
+        let mut bytes = encode_frame(&Frame::StatsRequest);
+        bytes.push(0xAB);
+        assert!(matches!(decode_payload(&bytes[4..]), Err(WireError::Trailing(1))));
+        // Bad magic.
+        let hello = encode_frame(&Frame::Hello { magic: 0xDEAD_BEEF, version: 1 });
+        assert!(matches!(decode_payload(&hello[4..]), Err(WireError::BadMagic(0xDEAD_BEEF))));
+        // Asymmetric CSR: row 0 lists neighbor 1, row 1 is empty.
+        let mut e = Enc::new();
+        e.u8(kind::SUBMIT);
+        e.u64(1);
+        e.u8(0); // Mvc
+        e.u32(0); // k
+        e.u32(2); // n
+        e.u32(0);
+        e.u32(1);
+        e.u32(1); // row_ptr = [0, 1, 1]
+        e.u32(1); // adj = [1]
+        e.u8(0); // options flags
+        let bytes = e.finish();
+        assert!(matches!(
+            decode_payload(&bytes[4..]),
+            Err(WireError::Malformed("asymmetric edge"))
+        ));
+    }
+
+    #[test]
+    fn oversized_and_empty_lengths_rejected_before_allocation() {
+        let mut buf: &[u8] = &(MAX_FRAME_LEN + 1).to_le_bytes();
+        assert!(matches!(read_frame(&mut buf), Err(WireError::Oversized(_))));
+        let mut buf: &[u8] = &0u32.to_le_bytes();
+        assert!(matches!(read_frame(&mut buf), Err(WireError::Malformed(_))));
+    }
+}

@@ -160,6 +160,50 @@ fn tenant_job_quota_is_enforced_and_released() {
 }
 
 #[test]
+fn quota_rejection_wins_over_queue_full_when_both_apply() {
+    // Regression: admission used to report QueueFull to a tenant at
+    // quota whenever the queue was *also* full (the branch tested
+    // `over_quota && !full`), so the tenant's backoff targeted the
+    // wrong resource. The documented shed order is MemoryPressure >
+    // QuotaExceeded > QueueFull.
+    let svc = VcService::builder()
+        .workers(1)
+        .max_queued(1)
+        .max_live_jobs(1)
+        .tenant_quota(TenantQuota { max_jobs: 1, max_live_nodes: u64::MAX })
+        .build();
+    let tenant = |name: &str| JobOptions {
+        priority: Some(Lane::Throughput),
+        tenant: Some(name.into()),
+        ..JobOptions::default()
+    };
+    let hog = svc
+        .try_submit_with(Problem::mvc(long_running_graph()), tenant("acme"))
+        .expect("empty service admits the hog");
+    assert!(
+        wait_until(Duration::from_secs(10), || svc.stats().admission.live_jobs == 1),
+        "hog must dispatch so the queue slot frees"
+    );
+    // Fill the single queue slot with an untenanted job; max_live_jobs(1)
+    // keeps it parked behind the hog.
+    let queued = svc.try_submit(Problem::mvc(generators::path(4))).expect("queue slot");
+    assert_eq!(svc.stats().admission.queued, 1);
+    // Both shed conditions now hold for "acme": the queue is at its
+    // bound AND the tenant is at its job quota. The quota verdict wins.
+    let err = svc.try_submit_with(Problem::mvc(generators::path(5)), tenant("acme")).unwrap_err();
+    assert_eq!(err, SubmitError::QuotaExceeded, "quota beats queue-full in the shed order");
+    assert!(svc.stats().admission.quota_rejected >= 1);
+    // An untenanted submit against the same full queue still sees
+    // queue-full — the fix reorders the verdicts, it does not widen the
+    // quota check.
+    let err = svc.try_submit(Problem::mvc(generators::path(6))).unwrap_err();
+    assert_eq!(err, SubmitError::QueueFull);
+    hog.cancel();
+    assert_eq!(hog.wait().termination, Termination::Cancelled);
+    queued.wait();
+}
+
+#[test]
 fn tenant_live_node_quota_blocks_admission_while_a_job_runs() {
     let svc = VcService::builder()
         .workers(1)

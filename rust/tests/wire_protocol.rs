@@ -1,0 +1,449 @@
+//! Wire-protocol and server tests: the loopback differential (remote
+//! answers match in-process answers on the same service, across both
+//! schedulers and both node representations), concurrent clients, a
+//! seeded malformed-frame fuzzer the server must survive, the mapping
+//! of admission backpressure onto typed wire errors, and
+//! disconnect-cancels-outstanding-jobs.
+
+use cavc::graph::generators;
+use cavc::solver::wire::{self, ErrorCode, Frame, SubmitRequest, WireErrorFrame};
+use cavc::solver::{
+    oracle, ClientError, JobOptions, Lane, NodeRepr, Problem, SchedulerKind, ServerConfig,
+    ServerReply, SolverConfig, SubmitError, TenantQuota, Termination, VcClient, VcServer,
+    VcService, WireOptions,
+};
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+/// A dense graph whose exact MVC search runs far longer than any of
+/// these tests wait.
+fn long_running_graph() -> cavc::graph::Graph {
+    generators::p_hat(180, 0.35, 0.85, 11)
+}
+
+/// Poll `cond` until it holds or `deadline` elapses.
+fn wait_until(deadline: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let t = Instant::now();
+    while t.elapsed() < deadline {
+        if cond() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    cond()
+}
+
+/// Bind a loopback server on an ephemeral port around `svc`.
+fn serve(svc: VcService) -> VcServer {
+    VcServer::bind("127.0.0.1:0", svc, ServerConfig::default()).expect("bind loopback")
+}
+
+fn addr_of(server: &VcServer) -> String {
+    server.local_addr().to_string()
+}
+
+/// Deterministic fuzz source (SplitMix64).
+struct SplitMix64(u64);
+
+impl SplitMix64 {
+    fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^ (z >> 31)
+    }
+}
+
+/// Remote answers are the same answers: for every scheduler × node
+/// representation, a job solved over the wire must agree with the same
+/// job submitted in-process on the *same* service instance, and the
+/// wire witness must verify locally.
+#[test]
+fn loopback_differential_matches_in_process_on_both_scheds_and_reprs() {
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        for repr in [NodeRepr::Owned, NodeRepr::Delta] {
+            let cfg = SolverConfig::proposed().with_node_repr(repr);
+            let svc =
+                VcService::builder().workers(2).scheduler(sched).config(cfg).build();
+            let server = serve(svc);
+            let mut client = VcClient::connect(addr_of(&server)).expect("connect");
+            assert_eq!(client.version(), wire::PROTOCOL_VERSION);
+            for seed in 0..4u64 {
+                let g = generators::erdos_renyi(18, 0.22, seed);
+                let opt = oracle::mvc_size(&g);
+                let tag = format!("{} {} seed {seed}", sched.name(), repr.name());
+                let local = server
+                    .service()
+                    .submit_with(
+                        Problem::mvc(g.clone()),
+                        JobOptions { extract_witness: true, ..JobOptions::default() },
+                    )
+                    .wait();
+                let remote = client
+                    .solve(
+                        &Problem::mvc(g.clone()),
+                        WireOptions { extract_witness: true, ..WireOptions::default() },
+                    )
+                    .expect("remote solve");
+                assert_eq!(local.objective, opt, "{tag}: in-process objective");
+                assert_eq!(remote.objective, opt, "{tag}: remote objective");
+                assert_eq!(remote.termination, Termination::Complete, "{tag}");
+                assert!(!remote.timed_out(), "{tag}");
+                let w = remote.witness.as_ref().expect("wire witness");
+                assert_eq!(w.len() as u32, opt, "{tag}: witness length");
+                assert!(g.is_vertex_cover(w), "{tag}: wire witness invalid");
+                assert_eq!(remote.witness_verified, Some(true), "{tag}");
+            }
+            // PVC decisions and MIS cross the wire too.
+            let g = generators::erdos_renyi(16, 0.25, 99);
+            let opt = oracle::mvc_size(&g);
+            let yes = client
+                .solve(&Problem::pvc(g.clone(), opt), WireOptions::default())
+                .expect("pvc yes");
+            assert!(yes.feasible && yes.objective <= opt);
+            let no = client
+                .solve(&Problem::pvc(g.clone(), opt - 1), WireOptions::default())
+                .expect("pvc no");
+            assert!(!no.feasible);
+            let mis = client
+                .solve(&Problem::mis(g.clone()), WireOptions::default())
+                .expect("mis");
+            assert_eq!(mis.objective, g.num_vertices() as u32 - opt);
+            server.shutdown();
+        }
+    }
+}
+
+/// Several clients hammer one server concurrently; every reply routes
+/// to the connection that asked, and all answers are oracle-exact.
+#[test]
+fn concurrent_clients_get_their_own_answers() {
+    let server = serve(VcService::builder().workers(3).build());
+    let addr = addr_of(&server);
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for c in 0..4u64 {
+            let addr = addr.clone();
+            handles.push(s.spawn(move || {
+                let mut client = VcClient::connect(&addr).expect("connect");
+                // Pipeline several submits per client, then collect.
+                let mut jobs = Vec::new();
+                for i in 0..3u64 {
+                    let g = generators::erdos_renyi(16, 0.22, 17 * c + i);
+                    let opt = oracle::mvc_size(&g);
+                    let id = client.submit(&Problem::mvc(g), WireOptions::default()).unwrap();
+                    jobs.push((id, opt));
+                }
+                let mut seen = 0;
+                while seen < jobs.len() {
+                    match client.recv().expect("reply") {
+                        ServerReply::Solution(sol) => {
+                            let (_, opt) = jobs
+                                .iter()
+                                .find(|(id, _)| *id == sol.req_id)
+                                .expect("reply for a job this client submitted");
+                            assert_eq!(sol.objective, *opt, "client {c} req {}", sol.req_id);
+                            seen += 1;
+                        }
+                        other => panic!("client {c}: unexpected reply {other:?}"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("client thread");
+        }
+    });
+    let stats = server.service().stats();
+    assert_eq!(stats.admission.live_jobs, 0, "ledger clean after all clients drain");
+    server.shutdown();
+}
+
+/// Seeded garbage, truncated frames, and oversized length prefixes
+/// must never kill the server: after every fuzz round the service is
+/// still serving and its admission ledger is clean.
+#[test]
+fn malformed_frame_fuzzer_leaves_the_server_serving() {
+    let server = serve(VcService::builder().workers(2).build());
+    let addr = addr_of(&server);
+    let mut rng = SplitMix64(0xcafe_f00d);
+    for round in 0..24 {
+        let mut s = TcpStream::connect(&addr).expect("fuzz connect");
+        let mut bytes = Vec::new();
+        match round % 4 {
+            // Pure garbage from byte zero (handshake never happens).
+            0 => {
+                for _ in 0..(rng.next() % 64 + 1) {
+                    bytes.push(rng.next() as u8);
+                }
+            }
+            // Valid hello, then garbage frames.
+            1 => {
+                bytes.extend_from_slice(&wire::encode_frame(&Frame::Hello {
+                    magic: wire::WIRE_MAGIC,
+                    version: wire::PROTOCOL_VERSION,
+                }));
+                for _ in 0..(rng.next() % 96 + 1) {
+                    bytes.push(rng.next() as u8);
+                }
+            }
+            // Valid hello, then a truncated frame: a plausible length
+            // prefix with the connection cut mid-body.
+            2 => {
+                bytes.extend_from_slice(&wire::encode_frame(&Frame::Hello {
+                    magic: wire::WIRE_MAGIC,
+                    version: wire::PROTOCOL_VERSION,
+                }));
+                let claimed = (rng.next() % 4096 + 2) as u32;
+                bytes.extend_from_slice(&claimed.to_le_bytes());
+                bytes.push(wire::kind::SUBMIT);
+                for _ in 0..(rng.next() % 16) {
+                    bytes.push(rng.next() as u8);
+                }
+            }
+            // Oversized length prefix: must be rejected before any
+            // 64 MiB allocation happens.
+            _ => {
+                bytes.extend_from_slice(&(wire::MAX_FRAME_LEN + 1).to_le_bytes());
+                bytes.push(wire::kind::SUBMIT);
+            }
+        }
+        let _ = s.write_all(&bytes);
+        let _ = s.flush();
+        drop(s);
+    }
+    // A structured-but-wrong frame on a live session gets a typed error
+    // and the session *continues*: the next (valid) submit still works.
+    let mut s = TcpStream::connect(&addr).expect("connect");
+    wire::write_frame(
+        &mut s,
+        &Frame::Hello { magic: wire::WIRE_MAGIC, version: wire::PROTOCOL_VERSION },
+    )
+    .unwrap();
+    match wire::read_frame(&mut s).expect("hello-ack") {
+        Frame::HelloAck { version } => assert_eq!(version, wire::PROTOCOL_VERSION),
+        f => panic!("expected hello-ack, got {f:?}"),
+    }
+    // Unknown frame kind, well-formed length: recoverable.
+    s.write_all(&[2, 0, 0, 0, 0x7f, 0xaa]).unwrap();
+    s.flush().unwrap();
+    match wire::read_frame(&mut s).expect("typed error reply") {
+        Frame::Error(e) => assert_eq!(e.code, ErrorCode::Malformed),
+        f => panic!("expected error frame, got {f:?}"),
+    }
+    let g = generators::erdos_renyi(14, 0.25, 3);
+    wire::write_frame(
+        &mut s,
+        &Frame::Submit(SubmitRequest {
+            req_id: 1,
+            problem: Problem::mvc(g.clone()),
+            opts: WireOptions::default(),
+        }),
+    )
+    .unwrap();
+    let sol = loop {
+        match wire::read_frame(&mut s).expect("solution after recoverable error") {
+            Frame::Solution(sol) => break sol,
+            Frame::Error(e) => panic!("submit rejected: {e:?}"),
+            _ => continue,
+        }
+    };
+    assert_eq!(sol.objective, oracle::mvc_size(&g));
+    drop(s);
+
+    // The server survived it all: a fresh well-behaved client solves,
+    // and nothing leaked into the admission ledger.
+    let mut client = VcClient::connect(&addr).expect("post-fuzz connect");
+    let g = generators::erdos_renyi(15, 0.25, 7);
+    let sol = client.solve(&Problem::mvc(g.clone()), WireOptions::default()).expect("solve");
+    assert_eq!(sol.objective, oracle::mvc_size(&g));
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            let a = server.service().stats().admission;
+            a.live_jobs == 0 && a.queued == 0
+        }),
+        "admission ledger must drain clean after the fuzz rounds"
+    );
+    server.shutdown();
+}
+
+/// Every admission shed reason crosses the wire as its typed error
+/// code, and the client lifts it back to the in-process `SubmitError`.
+#[test]
+fn backpressure_maps_onto_typed_wire_errors() {
+    // Queue-full: one worker, a one-slot queue, and a hog holding the
+    // single live-job slot.
+    let svc = VcService::builder().workers(1).max_queued(1).max_live_jobs(1).build();
+    let server = serve(svc);
+    let mut client = VcClient::connect(addr_of(&server)).expect("connect");
+    let hog_opts = WireOptions { lane: Some(Lane::Throughput), ..WireOptions::default() };
+    let hog = client.submit(&Problem::mvc(long_running_graph()), hog_opts).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.service().stats().admission.live_jobs == 1
+        }),
+        "hog must dispatch"
+    );
+    let queued_g = generators::erdos_renyi(14, 0.2, 1);
+    let queued =
+        client.submit(&Problem::mvc(queued_g.clone()), WireOptions::default()).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.service().stats().admission.queued == 1
+        }),
+        "second submit must park in the admission queue"
+    );
+    let rejected =
+        client.submit(&Problem::mvc(generators::path(4)), WireOptions::default()).unwrap();
+    let err = expect_error(&mut client, rejected);
+    assert_eq!(err.code, ErrorCode::QueueFull);
+    assert_eq!(err.code.submit_error(), Some(SubmitError::QueueFull));
+    client.cancel(hog).unwrap();
+    let mut done = 0;
+    while done < 2 {
+        match client.recv().expect("drain") {
+            ServerReply::Solution(sol) if sol.req_id == hog => {
+                assert_eq!(sol.termination, Termination::Cancelled);
+                done += 1;
+            }
+            ServerReply::Solution(sol) if sol.req_id == queued => {
+                assert_eq!(sol.objective, oracle::mvc_size(&queued_g));
+                done += 1;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    server.shutdown();
+
+    // Quota: a tenant at its job cap is told "quota", not "queue".
+    let svc = VcService::builder()
+        .workers(2)
+        .tenant_quota(TenantQuota { max_jobs: 1, max_live_nodes: u64::MAX })
+        .build();
+    let server = serve(svc);
+    let mut client = VcClient::connect(addr_of(&server)).expect("connect");
+    let acme = WireOptions {
+        lane: Some(Lane::Throughput),
+        tenant: Some("acme".into()),
+        ..WireOptions::default()
+    };
+    let hog = client.submit(&Problem::mvc(long_running_graph()), acme.clone()).unwrap();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.service().stats().admission.live_jobs == 1
+        }),
+        "tenant hog must dispatch"
+    );
+    let rejected = client.submit(&Problem::mvc(generators::path(4)), acme).unwrap();
+    let err = expect_error(&mut client, rejected);
+    assert_eq!(err.code, ErrorCode::QuotaExceeded);
+    assert_eq!(err.code.submit_error(), Some(SubmitError::QuotaExceeded));
+    // `solve` surfaces the same thing as a typed client rejection.
+    let rejection = client
+        .solve(
+            &Problem::mvc(generators::path(5)),
+            WireOptions { tenant: Some("acme".into()), ..WireOptions::default() },
+        )
+        .expect_err("tenant is at quota");
+    assert_eq!(rejection.submit_error(), Some(SubmitError::QuotaExceeded));
+    assert!(matches!(rejection, ClientError::Rejected(_)));
+    client.cancel(hog).unwrap();
+    loop {
+        if let ServerReply::Solution(sol) = client.recv().expect("drain") {
+            assert_eq!(sol.req_id, hog);
+            break;
+        }
+    }
+    server.shutdown();
+
+    // Memory pressure: past the hard limit, submits shed with the
+    // memory code (checked before queue-full — a full queue under
+    // pressure is a memory problem).
+    let svc = VcService::builder().workers(2).mem_hard(1).build();
+    let server = serve(svc);
+    let mut client = VcClient::connect(addr_of(&server)).expect("connect");
+    let hog = client
+        .submit(
+            &Problem::mvc(long_running_graph()),
+            WireOptions { lane: Some(Lane::Throughput), ..WireOptions::default() },
+        )
+        .unwrap();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.service().stats().admission.live_bytes > 1
+        }),
+        "hog never charged the ledger"
+    );
+    let rejected =
+        client.submit(&Problem::mvc(generators::path(4)), WireOptions::default()).unwrap();
+    let err = expect_error(&mut client, rejected);
+    assert_eq!(err.code, ErrorCode::MemoryPressure);
+    assert_eq!(err.code.submit_error(), Some(SubmitError::MemoryPressure));
+    client.cancel(hog).unwrap();
+    loop {
+        if let ServerReply::Solution(sol) = client.recv().expect("drain") {
+            assert_eq!(sol.req_id, hog);
+            break;
+        }
+    }
+    server.shutdown();
+}
+
+/// Receive replies until `req_id`'s typed error frame arrives.
+fn expect_error(client: &mut VcClient, req_id: u64) -> WireErrorFrame {
+    loop {
+        match client.recv().expect("reply") {
+            ServerReply::Error(e) if e.req_id == req_id => return e,
+            ServerReply::Error(e) => panic!("error for unexpected request: {e:?}"),
+            _ => continue,
+        }
+    }
+}
+
+/// Dropping a connection cancels its outstanding jobs: the hog stops
+/// burning the pool, the ledger drains, and the server keeps serving
+/// other clients with clean stats.
+#[test]
+fn disconnect_cancels_outstanding_jobs() {
+    let server = serve(VcService::builder().workers(2).build());
+    let addr = addr_of(&server);
+    let mut doomed = VcClient::connect(&addr).expect("connect");
+    doomed
+        .submit(
+            &Problem::mvc(long_running_graph()),
+            WireOptions { lane: Some(Lane::Throughput), ..WireOptions::default() },
+        )
+        .unwrap();
+    assert!(
+        wait_until(Duration::from_secs(10), || {
+            server.service().stats().admission.live_jobs == 1
+        }),
+        "hog must dispatch"
+    );
+    drop(doomed);
+    // The reader notices the hangup, cancels the pending job, and the
+    // anytime cancellation drains it from the ledger.
+    assert!(
+        wait_until(Duration::from_secs(15), || {
+            server.service().stats().admission.live_jobs == 0
+        }),
+        "disconnect must cancel the outstanding hog"
+    );
+    assert!(
+        wait_until(Duration::from_secs(10), || server.connections() == 0),
+        "connection slot must be reclaimed"
+    );
+    // The pool is idle again: a fresh client gets a fast exact answer.
+    let mut client = VcClient::connect(&addr).expect("connect");
+    let g = generators::erdos_renyi(16, 0.25, 21);
+    let sol = client.solve(&Problem::mvc(g.clone()), WireOptions::default()).expect("solve");
+    assert_eq!(sol.objective, oracle::mvc_size(&g));
+    assert_eq!(sol.termination, Termination::Complete);
+    // Stats scrape over the wire agrees with the in-process ledger.
+    let scraped = client.stats().expect("stats scrape");
+    assert_eq!(scraped.admission.live_jobs, 0);
+    assert!(scraped.admission.dispatched_latency + scraped.admission.dispatched_throughput >= 2);
+    server.shutdown();
+}
