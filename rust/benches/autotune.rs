@@ -1,0 +1,160 @@
+//! Self-tuning controller convergence smoke: a mixed batch (component-
+//! rich unions plus denser single components) run once per fixed knob
+//! setting — owned frames, and delta frames across a pin-depth ×
+//! induction grid, all with the controller pinned off — and then on a
+//! service with the controller live and every knob at its default.
+//!
+//! Every configuration must produce identical objectives (the knobs are
+//! performance levers, never correctness levers); the controller row
+//! additionally reports its convergence trajectory (epochs, flips,
+//! converged-at epoch, final pin depth and delta-bucket mask). Results
+//! go to stdout and `bench_out/autotune.csv`. `CAVC_SMOKE=1` shrinks
+//! the batch and the grid for the CI smoke job — trajectory only, no
+//! wall-clock threshold: these graphs are small enough that ratios are
+//! noisy in shared CI runners.
+
+use cavc::graph::{generators, Graph};
+use cavc::solver::{NodeRepr, Problem, SolverConfig, VcService};
+use std::time::Instant;
+
+/// Mixed deterministic batch: component-rich unions (many small induced
+/// components per job — induction and memo traffic) interleaved with
+/// denser single components (genuine branching — repr and pin-depth
+/// traffic).
+fn batch(n: usize) -> Vec<Graph> {
+    (0..n)
+        .map(|i| {
+            let seed = 0xA070_0000 + (i % 8) as u64;
+            if i % 3 == 0 {
+                generators::erdos_renyi(20, 0.25, seed)
+            } else {
+                generators::union_of_random(4, 4, 9, 0.35, seed)
+            }
+        })
+        .collect()
+}
+
+fn run_pass(svc: &VcService, graphs: &[Graph]) -> (Vec<u32>, f64, u64) {
+    let t = Instant::now();
+    let handles: Vec<_> = graphs.iter().map(|g| svc.submit(Problem::mvc(g.clone()))).collect();
+    let mut answers = Vec::with_capacity(handles.len());
+    let mut nodes = 0u64;
+    for h in handles {
+        let sol = h.wait();
+        nodes += sol.stats.tree_nodes;
+        answers.push(sol.objective);
+    }
+    (answers, t.elapsed().as_secs_f64(), nodes)
+}
+
+struct Fixed {
+    label: &'static str,
+    repr: NodeRepr,
+    pin: u32,
+    induce: f64,
+}
+
+const GRID: &[Fixed] = &[
+    Fixed { label: "owned", repr: NodeRepr::Owned, pin: 24, induce: 0.5 },
+    Fixed { label: "delta-pin8", repr: NodeRepr::Delta, pin: 8, induce: 0.5 },
+    Fixed { label: "delta-pin24", repr: NodeRepr::Delta, pin: 24, induce: 0.5 },
+    Fixed { label: "delta-pin64", repr: NodeRepr::Delta, pin: 64, induce: 0.5 },
+    Fixed { label: "delta-noinduce", repr: NodeRepr::Delta, pin: 24, induce: 0.0 },
+    Fixed { label: "delta-induce1", repr: NodeRepr::Delta, pin: 24, induce: 1.0 },
+];
+const SMOKE_GRID: &[Fixed] = &[
+    Fixed { label: "owned", repr: NodeRepr::Owned, pin: 24, induce: 0.5 },
+    Fixed { label: "delta-pin24", repr: NodeRepr::Delta, pin: 24, induce: 0.5 },
+];
+
+fn main() {
+    let smoke = std::env::var("CAVC_SMOKE").is_ok();
+    let n = if smoke { 24 } else { 96 };
+    let passes = if smoke { 2 } else { 4 };
+    let grid = if smoke { SMOKE_GRID } else { GRID };
+    let graphs = batch(n);
+    let workers = std::thread::available_parallelism().map(|x| x.get()).unwrap_or(4);
+    println!(
+        "# autotune convergence — {n} mixed graphs x {passes} passes, {workers} workers, \
+         {} fixed settings vs controller",
+        grid.len()
+    );
+    println!(
+        "{:<16} {:>10} {:>10} {:>12} {:>8} {:>6} {:>10}",
+        "config", "secs", "jobs/s", "tree nodes", "epochs", "flips", "converged"
+    );
+
+    let mut rows: Vec<String> = Vec::new();
+    let mut reference: Option<Vec<u32>> = None;
+    fn check(reference: &mut Option<Vec<u32>>, label: &str, answers: &[u32]) {
+        match reference {
+            Some(r) => {
+                assert_eq!(r.as_slice(), answers, "{label}: objectives diverge from the reference")
+            }
+            None => *reference = Some(answers.to_vec()),
+        }
+    }
+
+    for f in grid {
+        let cfg = SolverConfig::proposed()
+            .with_node_repr(f.repr)
+            .with_max_pin_depth(f.pin)
+            .with_induce_threshold(f.induce);
+        let svc = VcService::builder().config(cfg).workers(workers).autotune(false).build();
+        let mut secs = 0.0;
+        let mut nodes = 0u64;
+        for _ in 0..passes {
+            let (answers, s, tn) = run_pass(&svc, &graphs);
+            check(&mut reference, f.label, &answers);
+            secs += s;
+            nodes += tn;
+        }
+        let rate = (n * passes) as f64 / secs.max(1e-9);
+        println!(
+            "{:<16} {:>10.4} {:>10.1} {:>12} {:>8} {:>6} {:>10}",
+            f.label, secs, rate, nodes, "-", "-", "-"
+        );
+        rows.push(format!("{},{n},{passes},{workers},{secs},{rate},{nodes},0,0,0", f.label));
+    }
+
+    // The controller: every knob at its default, decisions live. Passes
+    // after the first run against whatever it has learned so far.
+    let svc = VcService::builder().workers(workers).autotune(true).build();
+    let mut secs = 0.0;
+    let mut nodes = 0u64;
+    for _ in 0..passes {
+        let (answers, s, tn) = run_pass(&svc, &graphs);
+        check(&mut reference, "controller", &answers);
+        secs += s;
+        nodes += tn;
+    }
+    let a = svc.stats().autotune;
+    assert!(a.enabled, "controller service must report the tuner enabled");
+    let rate = (n * passes) as f64 / secs.max(1e-9);
+    println!(
+        "{:<16} {:>10.4} {:>10.1} {:>12} {:>8} {:>6} {:>10}",
+        "controller", secs, rate, nodes, a.epochs, a.flips, a.converged_epoch
+    );
+    println!(
+        "controller state: pin-depth {}, delta-buckets {:#010b}, steal {} ppm, \
+         repr decisions {} owned / {} delta, induce {} pass / {} block",
+        a.pin_depth,
+        a.delta_buckets,
+        a.steal_rate_ppm,
+        a.decisions_owned,
+        a.decisions_delta,
+        a.induce_pass,
+        a.induce_block
+    );
+    rows.push(format!(
+        "controller,{n},{passes},{workers},{secs},{rate},{nodes},{},{},{}",
+        a.epochs, a.flips, a.converged_epoch
+    ));
+
+    let header =
+        "config,jobs,passes,workers,secs,jobs_per_s,tree_nodes,epochs,flips,converged_epoch";
+    match cavc::harness::tables::write_csv("autotune", header, &rows) {
+        Ok(path) => println!("csv: {}", path.display()),
+        Err(e) => eprintln!("csv write failed: {e}"),
+    }
+}

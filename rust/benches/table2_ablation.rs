@@ -2,7 +2,8 @@
 //! solver with (a) component branching disabled, (b) root reduce+induce
 //! disabled, (c) tree induction disabled (`--induce-threshold 0`:
 //! full-width split children), (d) non-zero bounds disabled, vs the
-//! full system.
+//! full system — plus the full system on a resident service with the
+//! self-tuning controller retuning its knobs online.
 
 use cavc::harness::{datasets, tables};
 
@@ -22,7 +23,7 @@ fn main() {
         eprintln!("[table2] {} ...", d.name);
         let row = tables::table2_row(d);
         csv.push(format!(
-            "{},{:.6},{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
+            "{},{:.6},{},{:.6},{},{:.6},{},{:.6},{},{:.6},{},{:.6},{}",
             row.name,
             row.no_components.secs,
             row.no_components.timed_out,
@@ -34,13 +35,15 @@ fn main() {
             row.no_bounds.timed_out,
             row.proposed.secs,
             row.proposed.timed_out,
+            row.controller.secs,
+            row.controller.timed_out,
         ));
         rows.push(row);
     }
     tables::print_table2(&rows, std::io::stdout().lock()).unwrap();
     let path = tables::write_csv(
         "table2_ablation",
-        "graph,no_components_s,no_components_to,no_induce_s,no_induce_to,no_tree_induce_s,no_tree_induce_to,no_bounds_s,no_bounds_to,proposed_s,proposed_to",
+        "graph,no_components_s,no_components_to,no_induce_s,no_induce_to,no_tree_induce_s,no_tree_induce_to,no_bounds_s,no_bounds_to,proposed_s,proposed_to,controller_s,controller_to",
         &csv,
     )
     .unwrap();

@@ -5,7 +5,7 @@
 use super::datasets::Dataset;
 use crate::graph::Graph;
 use crate::solver::sched::WorkerCounters;
-use crate::solver::{self, NodeRepr, SchedulerKind, SolverConfig};
+use crate::solver::{self, NodeRepr, Problem, SchedulerKind, SolverConfig, Termination, VcService};
 use crate::util::{fmt_secs, fmt_speedup};
 use std::io::Write;
 use std::time::Duration;
@@ -56,6 +56,29 @@ pub fn run_mvc(g: &Graph, mut cfg: SolverConfig) -> Timed {
         timed_out: r.timed_out,
         best: r.best,
         tree_nodes: r.stats.tree_nodes,
+    }
+}
+
+/// Run MVC through a resident service with the self-tuning controller
+/// live: the "controller" ablation column. Unlike the variant columns
+/// (which share the one-shot shape), this cell *is* the resident
+/// deployment the controller targets — the job runs under whatever
+/// repr/pin/induction decisions the tuner has reached, and must still
+/// land the same answer inside the same budget.
+pub fn run_mvc_controller(g: &Graph, mut cfg: SolverConfig) -> Timed {
+    cfg.timeout = Some(cell_timeout());
+    cfg.scheduler = cell_scheduler();
+    let svc = VcService::builder()
+        .config(cfg.clone())
+        .scheduler(cfg.scheduler)
+        .autotune(true)
+        .build();
+    let sol = svc.submit(Problem::mvc(g.clone())).wait();
+    Timed {
+        secs: sol.elapsed.as_secs_f64(),
+        timed_out: sol.termination == Termination::DeadlineExpired,
+        best: sol.objective,
+        tree_nodes: sol.stats.tree_nodes,
     }
 }
 
@@ -182,6 +205,9 @@ pub struct Table2Row {
     pub no_bounds: Timed,
     /// Full proposed.
     pub proposed: Timed,
+    /// Full proposed on a resident service with the self-tuning
+    /// controller retuning repr/pin/induction/pool-shape online.
+    pub controller: Timed,
 }
 
 /// Run one Table II row.
@@ -202,6 +228,7 @@ pub fn table2_row(d: &Dataset) -> Table2Row {
         no_tree_induce: run_mvc(&g, no_tree_induce),
         no_bounds: run_mvc(&g, no_bounds),
         proposed: run_mvc(&g, SolverConfig::proposed()),
+        controller: run_mvc_controller(&g, SolverConfig::proposed()),
     }
 }
 
@@ -209,20 +236,21 @@ pub fn table2_row(d: &Dataset) -> Table2Row {
 pub fn print_table2(rows: &[Table2Row], mut w: impl Write) -> std::io::Result<()> {
     writeln!(
         w,
-        "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} |",
-        "Graph", "-components", "-induce", "-tree-induce", "-bounds", "Proposed"
+        "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} | {:>10} |",
+        "Graph", "-components", "-induce", "-tree-induce", "-bounds", "Proposed", "Controller"
     )?;
-    writeln!(w, "|{}|", "-".repeat(98))?;
+    writeln!(w, "|{}|", "-".repeat(111))?;
     for r in rows {
         writeln!(
             w,
-            "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} |",
+            "| {:<22} | {:>12} | {:>12} | {:>13} | {:>12} | {:>10} | {:>10} |",
             r.name,
             cell(&r.no_components),
             cell(&r.no_induce),
             cell(&r.no_tree_induce),
             cell(&r.no_bounds),
-            cell(&r.proposed)
+            cell(&r.proposed),
+            cell(&r.controller)
         )?;
     }
     Ok(())

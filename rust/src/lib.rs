@@ -167,6 +167,26 @@
 //! `tests/memo_cache.rs` and `benches/memo_throughput.rs` measures the
 //! warm/cold resubmission ratio.
 //!
+//! ## Self-tuning controller
+//!
+//! The resident service closes its measurement → decision loop online
+//! ([`solver::autotune`]): a controller thread samples the counters the
+//! engine already maintains — per-width-bucket delta bytes, undo vs
+//! materialize traffic, steal rates, CSR-rebuild amortization, the live
+//! admission ledger — and retunes the knobs that were previously fixed
+//! at build time: owned-vs-delta node representation per width bucket,
+//! `max_pin_depth`, per-bucket induction gating, and the pool shape
+//! (admission capacity + memo budget replanned through the occupancy
+//! model). Every knob it turns is a performance lever, never a
+//! correctness lever — answers and verified witnesses are bit-identical
+//! with the controller on or off (`tests/autotune_invariance.rs`), and
+//! the watchdog's soft-pressure forced-delta override always outranks
+//! it. Explicit static knobs (`--node-repr`, `--max-pin-depth`,
+//! `--induce-threshold`, `--max-queued`, `--memo-bytes`) pin their
+//! dimension so ablation runs stay exact; `--autotune on|off`
+//! (`CAVC_AUTOTUNE`) switches the whole controller, and
+//! `benches/autotune.rs` races it against the fixed-knob grid.
+//!
 //! ## Serving over the network
 //!
 //! The resident service is network-reachable: [`solver::wire`] defines

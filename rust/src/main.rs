@@ -16,8 +16,9 @@
 //! (`--jobs`) additionally takes the admission/QoS flags --lane
 //! latency|throughput, --max-queued N, --submit-timeout SECS, plus the
 //! degradation flags --retry N, --mem-soft BYTES, --mem-hard BYTES and
-//! the cross-job memo-cache flags --memo on|off, --memo-bytes N; it
-//! exits non-zero if any job ends `Termination::Failed`.
+//! the cross-job memo-cache flags --memo on|off, --memo-bytes N, and
+//! the self-tuning controller switch --autotune on|off; it exits
+//! non-zero if any job ends `Termination::Failed`.
 
 use cavc::bail;
 use cavc::graph::{generators, io, Graph};
@@ -39,8 +40,8 @@ use std::time::{Duration, Instant};
 const VALUED: &[&str] = &[
     "variant", "workers", "timeout", "k", "out", "seed", "n", "p", "m", "family", "rows", "cols",
     "sched", "induce-threshold", "jobs", "node-repr", "max-pin-depth", "lane", "submit-timeout",
-    "max-queued", "retry", "mem-soft", "mem-hard", "memo", "memo-bytes", "addr", "remote",
-    "max-conns", "tenant",
+    "max-queued", "retry", "mem-soft", "mem-hard", "memo", "memo-bytes", "autotune", "addr",
+    "remote", "max-conns", "tenant",
 ];
 
 fn main() {
@@ -117,6 +118,13 @@ fn print_help() {
         \x20                   [--memo-bytes N]        (batch: memo-cache byte budget; default is a\n\
         \x20                                            quarter of the watchdog stack budget, and\n\
         \x20                                            CAVC_MEMO_BYTES overrides)\n\
+        \x20                   [--autotune on|off]     (batch/serve: online controller retunes node\n\
+        \x20                                            repr, pin depth, induction gating, and pool\n\
+        \x20                                            shape from live counters; default on, CAVC_AUTOTUNE\n\
+        \x20                                            overrides. Explicit --node-repr/--max-pin-depth/\n\
+        \x20                                            --induce-threshold/--max-queued/--memo-bytes pin\n\
+        \x20                                            that knob; the batch summary prints the\n\
+        \x20                                            converged settings)\n\
         \x20                   [--remote HOST:PORT]    (run the job on a `cavc serve` instance over the\n\
         \x20                                            length-prefixed wire protocol instead of in\n\
         \x20                                            process; works with --jobs batch mode too, and\n\
@@ -127,7 +135,7 @@ fn print_help() {
          pvc <graph|dataset> --k K [--variant ...] [--jobs LIST] [--check] [--remote HOST:PORT]\n         mis <graph|dataset> [--variant ...] [--check] [--remote HOST:PORT]\n\
          serve --addr HOST:PORT [--max-conns N] [--workers N] [--sched steal|sharded]\n\
         \x20      [--max-queued N] [--submit-timeout SECS] [--retry N] [--mem-soft BYTES]\n\
-        \x20      [--mem-hard BYTES] [--memo on|off] [--memo-bytes N]\n\
+        \x20      [--mem-hard BYTES] [--memo on|off] [--memo-bytes N] [--autotune on|off]\n\
         \x20                  (expose one resident VcService over TCP: per-connection readers feed a\n\
         \x20                   single admission coordinator; --submit-timeout > 0 lets a submit wait\n\
         \x20                   out backpressure server-side instead of bouncing immediately; stats\n\
@@ -187,6 +195,13 @@ fn parse_config(args: &Args) -> Result<SolverConfig> {
             "on" => true,
             "off" => false,
             v => bail!("--memo takes on|off, got {v:?}"),
+        });
+    }
+    if let Some(a) = args.get("autotune") {
+        cfg.autotune = Some(match a {
+            "on" => true,
+            "off" => false,
+            v => bail!("--autotune takes on|off, got {v:?}"),
         });
     }
     let t: f64 = args.get_parse("timeout", 0.0).map_err(Error::msg)?;
@@ -375,6 +390,26 @@ fn cmd_batch(args: &Args, list: &str, k: Option<u32>) -> Result<()> {
         println!(
             "-- memo: {} hits / {} lookups ({} inserts, {} evictions, {} bytes held, ~{} nodes saved)",
             m.hits, m.lookups, m.inserts, m.evictions, m.bytes, m.saved_nodes
+        );
+    }
+    let a = svc.stats().autotune;
+    if a.enabled {
+        let converged = if a.converged_epoch > 0 {
+            format!("converged@{}", a.converged_epoch)
+        } else {
+            "not converged".to_string()
+        };
+        println!(
+            "-- autotune: {} epochs / {} flips ({}), pin-depth {}, delta-buckets {:#010b}, \
+             steal {} ppm, admission {} / queue {}",
+            a.epochs,
+            a.flips,
+            converged,
+            a.pin_depth,
+            a.delta_buckets,
+            a.steal_rate_ppm,
+            a.admission_capacity,
+            a.queue_capacity
         );
     }
     Ok(())

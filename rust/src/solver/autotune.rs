@@ -1,0 +1,770 @@
+//! Online self-tuning controller for the engine's memory/scheduling
+//! knobs (the ROADMAP "self-tuning engine controller" item).
+//!
+//! Every major engine lever — node representation, `max_pin_depth`, the
+//! §IV-B induction gate, admission/queue capacity — ships as a static
+//! knob, yet the engine already measures exactly what is needed to set
+//! them: bytes/node, undo-vs-materialize traffic, steal rates, induced
+//! subproblem counts, live ledger bytes. This module closes the loop
+//! for the resident service:
+//!
+//! * [`TuneShared`] is the controller's blackboard: lock-free atomic
+//!   decision cells (a per-width-bucket owned/delta mask, the tuned pin
+//!   depth, per-bucket induction thresholds, replanned pool shape) plus
+//!   the cumulative observation counters workers drain into it.
+//! * [`JobTune`] is the per-job consultation handle the engine reads on
+//!   the hot path (`JobCtl::repr_for` / `max_pin_depth` /
+//!   `induce_gate`). Explicitly-set static knobs pin the corresponding
+//!   decision off per job (ablation overrides stay exact), and the
+//!   memory watchdog's soft-pressure `forced_delta` override outranks
+//!   every controller decision — the degradation ladder wins.
+//! * [`Tuner`] is the decision procedure, run periodically by the
+//!   service's `cavc-svc-tune` thread: EWMA bytes/node per width
+//!   bucket decides owned-vs-delta, the observed steal rate
+//!   lengthens/shortens pin chains, induced-subproblem amortization
+//!   gates tree induction per bucket, and live ledger bytes re-plan
+//!   admission capacity and the memo budget through the occupancy
+//!   model. It is deliberately free of threads and clocks so unit
+//!   tests can drive epochs synthetically.
+//!
+//! Decisions never change *what* is computed — only how node state is
+//! represented and where induction pays — so answers and witnesses are
+//! bit-identical with the controller on or off
+//! (`tests/autotune_invariance.rs`).
+
+use std::sync::atomic::{AtomicU32, AtomicU64, Ordering};
+use std::sync::Arc;
+
+use super::engine::{EngineStats, NodeRepr, DEFAULT_MAX_PIN_DEPTH};
+
+/// Width buckets for per-view-size decisions: bucket `b` covers view
+/// widths in `[2^(3b-2), 2^(3b+1))` (roughly one decision per 8× width
+/// change), clamped to [`TUNE_BUCKETS`] classes.
+pub(crate) const TUNE_BUCKETS: usize = 8;
+
+/// Buckets strictly below this never take the delta representation:
+/// a pinned-chain link plus eventual materialization replay does not
+/// amortize against copying a few dozen bytes.
+const MIN_DELTA_BUCKET: usize = 2;
+
+/// Bootstrap prior before any observations: buckets at or above this
+/// (view width ≥ ~256) start on the delta representation — wide views
+/// are exactly where O(delta) resident bytes beat O(view) copies.
+const PRIOR_DELTA_BUCKET: usize = 3;
+
+/// Pin-depth controller bounds and step.
+const MIN_PIN_DEPTH: u32 = 4;
+const MAX_PIN_DEPTH_CAP: u32 = 96;
+const PIN_STEP: u32 = 4;
+
+/// Steal-rate thresholds (parts per million of acquired nodes): below
+/// `LOW` the undo fast path dominates and chains may lengthen; above
+/// `HIGH` thieves pay materialization replay and chains shorten.
+const STEAL_LOW_PPM: u64 = 20_000;
+const STEAL_HIGH_PPM: u64 = 100_000;
+
+/// Induction-gate controller: a bucket needs this many induced
+/// subproblems before its amortization estimate is trusted, and the
+/// tuned threshold moves by powers of two within [MIN, 1000] milli.
+const INDUCE_MIN_SAMPLES: u64 = 16;
+const INDUCE_MIN_ALPHA_MILLI: u32 = 100;
+const INDUCE_LOW_AMORT: u64 = 4;
+const INDUCE_HIGH_AMORT: u64 = 32;
+
+/// Ticks with traffic and no knob movement before the controller
+/// declares convergence.
+const STABLE_TICKS: u32 = 3;
+
+/// Width bucket of a view of `width` vertices.
+#[inline]
+pub(crate) fn bucket_of(width: usize) -> usize {
+    let bits = usize::BITS - width.leading_zeros();
+    ((bits as usize) / 3).min(TUNE_BUCKETS - 1)
+}
+
+fn zeros() -> [AtomicU64; TUNE_BUCKETS] {
+    std::array::from_fn(|_| AtomicU64::new(0))
+}
+
+/// The controller blackboard shared between the tuner thread, the
+/// admission layer, and every job's [`JobTune`] handle. All cells are
+/// relaxed atomics: decisions are hints consumed on the engine hot
+/// path, and observation counters are drained by workers at stats-flush
+/// time — neither side ever blocks on the other.
+pub struct TuneShared {
+    // ---- decisions (written by the tuner, read by the engine) ----
+    /// Bit `b` set ⇒ owned nodes opening a descent in width bucket `b`
+    /// branch with delta right children.
+    delta_mask: AtomicU32,
+    /// Tuned delta-chain length bound.
+    pin_depth: AtomicU32,
+    /// Tuned per-bucket induction gate, in milli (1000 = induce every
+    /// component, the static default).
+    alpha_milli: [AtomicU32; TUNE_BUCKETS],
+    /// Last replanned admission capacity (also applied to
+    /// `Admission::max_queued` by the tuner thread).
+    admission_capacity: AtomicU64,
+    /// Last replanned per-worker queue capacity (published telemetry;
+    /// resident deques grow on demand, so this is the plan, not a cap).
+    queue_capacity: AtomicU64,
+
+    // ---- decision traffic (written by JobTune on consultation) ----
+    decisions_owned: AtomicU64,
+    decisions_delta: AtomicU64,
+    induce_pass: AtomicU64,
+    induce_block: AtomicU64,
+
+    // ---- engine observations (drained from worker scratch) ----
+    owned_nodes: [AtomicU64; TUNE_BUCKETS],
+    owned_bytes: [AtomicU64; TUNE_BUCKETS],
+    delta_nodes: [AtomicU64; TUNE_BUCKETS],
+    delta_bytes: [AtomicU64; TUNE_BUCKETS],
+    tree_nodes: [AtomicU64; TUNE_BUCKETS],
+    induced: [AtomicU64; TUNE_BUCKETS],
+    undo_pops: AtomicU64,
+    undo_covers: AtomicU64,
+    materializations: AtomicU64,
+    replayed_covers: AtomicU64,
+
+    // ---- controller surface ----
+    epochs: AtomicU64,
+    flips: AtomicU64,
+    /// First epoch after which [`STABLE_TICKS`] consecutive ticks saw
+    /// traffic but no knob movement (0 = not converged yet).
+    converged_epoch: AtomicU64,
+    steal_rate_ppm: AtomicU64,
+}
+
+impl Default for TuneShared {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TuneShared {
+    pub(crate) fn new() -> TuneShared {
+        let mut mask = 0u32;
+        for b in PRIOR_DELTA_BUCKET..TUNE_BUCKETS {
+            mask |= 1 << b;
+        }
+        TuneShared {
+            delta_mask: AtomicU32::new(mask),
+            pin_depth: AtomicU32::new(DEFAULT_MAX_PIN_DEPTH),
+            alpha_milli: std::array::from_fn(|_| AtomicU32::new(1000)),
+            admission_capacity: AtomicU64::new(0),
+            queue_capacity: AtomicU64::new(0),
+            decisions_owned: AtomicU64::new(0),
+            decisions_delta: AtomicU64::new(0),
+            induce_pass: AtomicU64::new(0),
+            induce_block: AtomicU64::new(0),
+            owned_nodes: zeros(),
+            owned_bytes: zeros(),
+            delta_nodes: zeros(),
+            delta_bytes: zeros(),
+            tree_nodes: zeros(),
+            induced: zeros(),
+            undo_pops: AtomicU64::new(0),
+            undo_covers: AtomicU64::new(0),
+            materializations: AtomicU64::new(0),
+            replayed_covers: AtomicU64::new(0),
+            epochs: AtomicU64::new(0),
+            flips: AtomicU64::new(0),
+            converged_epoch: AtomicU64::new(0),
+            steal_rate_ppm: AtomicU64::new(0),
+        }
+    }
+
+    /// Absorb a worker's per-item observation scratch plus the
+    /// stats-delta globals (the caller flushes and resets `stats`
+    /// immediately after, so its counters are per-item deltas). Only
+    /// non-zero cells touch the shared atomics.
+    pub(crate) fn absorb(&self, obs: &mut TuneObs, stats: &EngineStats) {
+        if obs.any {
+            for b in 0..TUNE_BUCKETS {
+                macro_rules! add {
+                    ($field:ident) => {
+                        if obs.$field[b] != 0 {
+                            self.$field[b].fetch_add(obs.$field[b], Ordering::Relaxed);
+                        }
+                    };
+                }
+                add!(owned_nodes);
+                add!(owned_bytes);
+                add!(delta_nodes);
+                add!(delta_bytes);
+                add!(tree_nodes);
+                add!(induced);
+            }
+            *obs = TuneObs::default();
+        }
+        macro_rules! addg {
+            ($field:ident) => {
+                if stats.$field != 0 {
+                    self.$field.fetch_add(stats.$field, Ordering::Relaxed);
+                }
+            };
+        }
+        addg!(undo_pops);
+        addg!(undo_covers);
+        addg!(materializations);
+        addg!(replayed_covers);
+    }
+
+    fn snapshot(&self) -> ObsSnapshot {
+        macro_rules! arr {
+            ($field:ident) => {
+                std::array::from_fn(|b| self.$field[b].load(Ordering::Relaxed))
+            };
+        }
+        ObsSnapshot {
+            owned_nodes: arr!(owned_nodes),
+            owned_bytes: arr!(owned_bytes),
+            delta_nodes: arr!(delta_nodes),
+            delta_bytes: arr!(delta_bytes),
+            tree_nodes: arr!(tree_nodes),
+            induced: arr!(induced),
+            materializations: self.materializations.load(Ordering::Relaxed),
+            replayed_covers: self.replayed_covers.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Current controller state as a stats block (`enabled` is supplied
+    /// by the service, which knows whether a tuner thread is running).
+    pub(crate) fn stats(&self, enabled: bool) -> AutotuneStats {
+        AutotuneStats {
+            enabled,
+            epochs: self.epochs.load(Ordering::Relaxed),
+            flips: self.flips.load(Ordering::Relaxed),
+            converged_epoch: self.converged_epoch.load(Ordering::Relaxed),
+            pin_depth: self.pin_depth.load(Ordering::Relaxed) as u64,
+            delta_buckets: self.delta_mask.load(Ordering::Relaxed) as u64,
+            decisions_owned: self.decisions_owned.load(Ordering::Relaxed),
+            decisions_delta: self.decisions_delta.load(Ordering::Relaxed),
+            induce_pass: self.induce_pass.load(Ordering::Relaxed),
+            induce_block: self.induce_block.load(Ordering::Relaxed),
+            steal_rate_ppm: self.steal_rate_ppm.load(Ordering::Relaxed),
+            admission_capacity: self.admission_capacity.load(Ordering::Relaxed),
+            queue_capacity: self.queue_capacity.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Per-worker observation scratch, drained into [`TuneShared`] at
+/// stats-flush time so the engine hot path pays plain-integer adds, not
+/// shared atomics.
+#[derive(Default)]
+pub(crate) struct TuneObs {
+    pub(crate) owned_nodes: [u64; TUNE_BUCKETS],
+    pub(crate) owned_bytes: [u64; TUNE_BUCKETS],
+    pub(crate) delta_nodes: [u64; TUNE_BUCKETS],
+    pub(crate) delta_bytes: [u64; TUNE_BUCKETS],
+    pub(crate) tree_nodes: [u64; TUNE_BUCKETS],
+    pub(crate) induced: [u64; TUNE_BUCKETS],
+    /// Whether any cell was written since the last drain.
+    pub(crate) any: bool,
+}
+
+impl TuneObs {
+    #[inline]
+    pub(crate) fn note_owned(&mut self, width: usize, bytes: u64) {
+        let b = bucket_of(width);
+        self.owned_nodes[b] += 1;
+        self.owned_bytes[b] += bytes;
+        self.any = true;
+    }
+
+    #[inline]
+    pub(crate) fn note_delta_node(&mut self, width: usize) {
+        self.delta_nodes[bucket_of(width)] += 1;
+        self.any = true;
+    }
+
+    #[inline]
+    pub(crate) fn note_delta_bytes(&mut self, width: usize, bytes: u64) {
+        self.delta_bytes[bucket_of(width)] += bytes;
+        self.any = true;
+    }
+
+    #[inline]
+    pub(crate) fn note_tree_node(&mut self, width: usize) {
+        self.tree_nodes[bucket_of(width)] += 1;
+        self.any = true;
+    }
+
+    #[inline]
+    pub(crate) fn note_induced(&mut self, size: usize) {
+        self.induced[bucket_of(size)] += 1;
+        self.any = true;
+    }
+}
+
+/// The per-job consultation handle carried on `JobCfg`. Knobs the
+/// submitter (or an env override) set explicitly are *pinned*: the
+/// corresponding `tune_*` flag is false and the static value wins, so
+/// ablation runs stay exact while default-configured jobs float with
+/// the controller.
+pub struct JobTune {
+    pub(crate) shared: Arc<TuneShared>,
+    pub(crate) tune_repr: bool,
+    pub(crate) tune_pin: bool,
+    pub(crate) tune_induce: bool,
+}
+
+impl std::fmt::Debug for JobTune {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobTune")
+            .field("tune_repr", &self.tune_repr)
+            .field("tune_pin", &self.tune_pin)
+            .field("tune_induce", &self.tune_induce)
+            .finish()
+    }
+}
+
+impl JobTune {
+    /// Effective node representation for an owned node of `width`
+    /// opening a descent. The caller (`JobCtl::repr_for`) has already
+    /// applied the watchdog's `forced_delta` override — the degradation
+    /// ladder outranks the controller.
+    #[inline]
+    pub(crate) fn repr_for(&self, width: usize, cfg_repr: NodeRepr) -> NodeRepr {
+        if !self.tune_repr {
+            return cfg_repr;
+        }
+        let b = bucket_of(width);
+        if self.shared.delta_mask.load(Ordering::Relaxed) & (1 << b) != 0 {
+            self.shared.decisions_delta.fetch_add(1, Ordering::Relaxed);
+            NodeRepr::Delta
+        } else {
+            self.shared.decisions_owned.fetch_add(1, Ordering::Relaxed);
+            NodeRepr::Owned
+        }
+    }
+
+    /// Effective delta-chain length bound.
+    #[inline]
+    pub(crate) fn pin_depth(&self, cfg: u32) -> u32 {
+        if self.tune_pin {
+            self.shared.pin_depth.load(Ordering::Relaxed)
+        } else {
+            cfg
+        }
+    }
+
+    /// Effective §IV-B induction gate for a component of `size` inside
+    /// a view of `view_n` vertices.
+    #[inline]
+    pub(crate) fn induce_gate(&self, size: u32, view_n: usize, cfg_alpha: f64) -> bool {
+        let alpha = if self.tune_induce {
+            self.shared.alpha_milli[bucket_of(size as usize)].load(Ordering::Relaxed) as f64
+                / 1000.0
+        } else {
+            cfg_alpha
+        };
+        let pass = alpha > 0.0 && (size as f64) <= alpha * view_n as f64;
+        if pass {
+            self.shared.induce_pass.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.shared.induce_block.fetch_add(1, Ordering::Relaxed);
+        }
+        pass
+    }
+}
+
+/// Plain snapshot of the cumulative observation counters.
+#[derive(Default, Clone)]
+struct ObsSnapshot {
+    owned_nodes: [u64; TUNE_BUCKETS],
+    owned_bytes: [u64; TUNE_BUCKETS],
+    delta_nodes: [u64; TUNE_BUCKETS],
+    delta_bytes: [u64; TUNE_BUCKETS],
+    tree_nodes: [u64; TUNE_BUCKETS],
+    induced: [u64; TUNE_BUCKETS],
+    materializations: u64,
+    replayed_covers: u64,
+}
+
+impl ObsSnapshot {
+    fn activity(&self) -> u64 {
+        self.tree_nodes.iter().sum::<u64>()
+            + self.owned_nodes.iter().sum::<u64>()
+            + self.delta_nodes.iter().sum::<u64>()
+    }
+}
+
+/// The decision procedure: one `tick` per controller epoch. Owns the
+/// EWMA state and the previous snapshot; free of threads and clocks so
+/// tests can drive it synthetically. The service thread supplies the
+/// scheduler-side inputs (steal counters) and the occupancy replans
+/// (admission/queue capacity from live ledger bytes) each tick.
+pub(crate) struct Tuner {
+    shared: Arc<TuneShared>,
+    prev: ObsSnapshot,
+    prev_steals: u64,
+    prev_acquired: u64,
+    /// EWMA bytes/node per bucket, in milli-bytes (0 = no data yet).
+    ewma_owned_bpn: [u64; TUNE_BUCKETS],
+    ewma_delta_bpn: [u64; TUNE_BUCKETS],
+    stable: u32,
+}
+
+impl Tuner {
+    pub(crate) fn new(shared: Arc<TuneShared>) -> Tuner {
+        Tuner {
+            shared,
+            prev: ObsSnapshot::default(),
+            prev_steals: 0,
+            prev_acquired: 0,
+            ewma_owned_bpn: [0; TUNE_BUCKETS],
+            ewma_delta_bpn: [0; TUNE_BUCKETS],
+            stable: 0,
+        }
+    }
+
+    /// Run one controller epoch. `steals`/`acquired` are cumulative
+    /// pool-wide scheduler counters; `admission_capacity` and
+    /// `queue_capacity` are the occupancy model's replans from live
+    /// ledger bytes (the caller applies the admission value to the
+    /// admission layer; this records them and charges flips).
+    pub(crate) fn tick(
+        &mut self,
+        steals: u64,
+        acquired: u64,
+        admission_capacity: u64,
+        queue_capacity: u64,
+    ) {
+        let sh = &self.shared;
+        let epoch = sh.epochs.fetch_add(1, Ordering::Relaxed) + 1;
+        let cur = sh.snapshot();
+        let traffic = cur.activity() > self.prev.activity();
+        let mut flips = 0u64;
+
+        // ---- steal rate (per-tick, falling back to the last value on
+        // idle ticks) ----
+        let d_steals = steals.saturating_sub(self.prev_steals);
+        let d_acquired = acquired.saturating_sub(self.prev_acquired);
+        self.prev_steals = steals;
+        self.prev_acquired = acquired;
+        if d_acquired > 0 {
+            sh.steal_rate_ppm.store(d_steals * 1_000_000 / d_acquired, Ordering::Relaxed);
+        }
+        let rate = sh.steal_rate_ppm.load(Ordering::Relaxed);
+
+        // ---- (b) steal-rate-driven pin depth ----
+        if d_acquired >= 64 {
+            let pin = sh.pin_depth.load(Ordering::Relaxed);
+            let new_pin = if rate < STEAL_LOW_PPM {
+                (pin + PIN_STEP).min(MAX_PIN_DEPTH_CAP)
+            } else if rate > STEAL_HIGH_PPM {
+                pin.saturating_sub(PIN_STEP).max(MIN_PIN_DEPTH)
+            } else {
+                pin
+            };
+            if new_pin != pin {
+                sh.pin_depth.store(new_pin, Ordering::Relaxed);
+                flips += 1;
+            }
+        }
+
+        // ---- (a) per-width repr choice: EWMA bytes/node ----
+        for b in 0..TUNE_BUCKETS {
+            let dn = cur.owned_nodes[b] - self.prev.owned_nodes[b];
+            if dn > 0 {
+                let sample = (cur.owned_bytes[b] - self.prev.owned_bytes[b]) * 1000 / dn;
+                self.ewma_owned_bpn[b] = ewma(self.ewma_owned_bpn[b], sample);
+            }
+            let dn = cur.delta_nodes[b] - self.prev.delta_nodes[b];
+            if dn > 0 {
+                let sample = (cur.delta_bytes[b] - self.prev.delta_bytes[b]) * 1000 / dn;
+                self.ewma_delta_bpn[b] = ewma(self.ewma_delta_bpn[b], sample);
+            }
+        }
+        // Materialization replay cost a thief pays per stolen delta, in
+        // milli-bytes of cover entries (4 bytes each).
+        let replay_milli = if cur.materializations > 0 {
+            cur.replayed_covers * 4_000 / cur.materializations
+        } else {
+            64_000 // prior: ~16 replayed covers per materialization
+        };
+        let mut mask = sh.delta_mask.load(Ordering::Relaxed);
+        for b in MIN_DELTA_BUCKET..TUNE_BUCKETS {
+            let (owned, delta) = (self.ewma_owned_bpn[b], self.ewma_delta_bpn[b]);
+            if owned == 0 || delta == 0 {
+                continue; // keep prior/current choice until both sides have data
+            }
+            // Expected delta cost: resident chain bytes plus the
+            // steal-rate-weighted materialization replay.
+            let delta_cost = delta + rate * replay_milli / 1_000_000;
+            let bit = 1u32 << b;
+            // 2× hysteresis on both edges so the mask doesn't chatter.
+            if mask & bit == 0 && owned > delta_cost * 2 {
+                mask |= bit;
+                flips += 1;
+            } else if mask & bit != 0 && owned * 2 < delta_cost {
+                mask &= !bit;
+                flips += 1;
+            }
+        }
+        sh.delta_mask.store(mask, Ordering::Relaxed);
+
+        // ---- (c) per-bucket induction gating from amortization ----
+        for b in 0..TUNE_BUCKETS {
+            if cur.induced[b] < INDUCE_MIN_SAMPLES {
+                continue;
+            }
+            // Tree nodes processed at this width per induced CSR
+            // rebuild: the §IV-B rebuild amortizes when descendants
+            // sweep the compact view many times.
+            let amort = cur.tree_nodes[b] / cur.induced[b];
+            let alpha = sh.alpha_milli[b].load(Ordering::Relaxed);
+            let new_alpha = if amort < INDUCE_LOW_AMORT {
+                (alpha / 2).max(INDUCE_MIN_ALPHA_MILLI)
+            } else if amort > INDUCE_HIGH_AMORT {
+                (alpha * 2).min(1000)
+            } else {
+                alpha
+            };
+            if new_alpha != alpha {
+                sh.alpha_milli[b].store(new_alpha, Ordering::Relaxed);
+                flips += 1;
+            }
+        }
+
+        // ---- (d) pool-shape convergence ----
+        if sh.admission_capacity.swap(admission_capacity, Ordering::Relaxed)
+            != admission_capacity
+        {
+            flips += 1;
+        }
+        if sh.queue_capacity.swap(queue_capacity, Ordering::Relaxed) != queue_capacity {
+            flips += 1;
+        }
+
+        // ---- convergence bookkeeping ----
+        if flips > 0 {
+            sh.flips.fetch_add(flips, Ordering::Relaxed);
+            self.stable = 0;
+        } else if traffic {
+            self.stable += 1;
+            if self.stable >= STABLE_TICKS
+                && sh.converged_epoch.load(Ordering::Relaxed) == 0
+            {
+                sh.converged_epoch.store(epoch, Ordering::Relaxed);
+            }
+        }
+        self.prev = cur;
+    }
+}
+
+#[inline]
+fn ewma(prev: u64, sample: u64) -> u64 {
+    if prev == 0 {
+        sample
+    } else {
+        (3 * prev + sample) / 4
+    }
+}
+
+/// Controller counters surfaced through `ServiceStats` (and the wire
+/// stats frame): what the controller decided, how often it moved, and
+/// when it converged.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AutotuneStats {
+    /// Whether a controller thread is running on this service.
+    pub enabled: bool,
+    /// Controller epochs (ticks) elapsed.
+    pub epochs: u64,
+    /// Knob movements across all epochs.
+    pub flips: u64,
+    /// First epoch after which the knobs held still for several ticks
+    /// of live traffic (0 = not converged yet).
+    pub converged_epoch: u64,
+    /// Current tuned delta-chain length bound.
+    pub pin_depth: u64,
+    /// Bitmask of width buckets currently taking the delta
+    /// representation (bit `b` ⇔ bucket `b`).
+    pub delta_buckets: u64,
+    /// Per-dispatch repr decisions resolved to owned / delta.
+    pub decisions_owned: u64,
+    pub decisions_delta: u64,
+    /// Induction-gate consultations that passed / were blocked.
+    pub induce_pass: u64,
+    pub induce_block: u64,
+    /// Last observed steal rate (parts per million of acquired nodes).
+    pub steal_rate_ppm: u64,
+    /// Last replanned admission capacity (0 until the first replan).
+    pub admission_capacity: u64,
+    /// Last replanned per-worker queue capacity plan.
+    pub queue_capacity: u64,
+}
+
+/// The `CAVC_AUTOTUNE` process default: `Some(true)`/`Some(false)` when
+/// the variable is set to an on/off word, `None` otherwise (callers
+/// fall through to the built-in default — on for the resident service).
+pub fn env_autotune_default() -> Option<bool> {
+    let v = std::env::var("CAVC_AUTOTUNE").ok()?;
+    match v.trim().to_ascii_lowercase().as_str() {
+        "on" | "1" | "true" | "yes" => Some(true),
+        "off" | "0" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_monotonic_and_clamped() {
+        let mut last = 0;
+        for w in 1..100_000usize {
+            let b = bucket_of(w);
+            assert!(b >= last || b == last, "bucket regressed at width {w}");
+            assert!(b < TUNE_BUCKETS);
+            last = b;
+        }
+        assert!(bucket_of(1) < MIN_DELTA_BUCKET, "tiny views sit below the delta floor");
+        assert!(bucket_of(16) < MIN_DELTA_BUCKET);
+        assert!(bucket_of(1 << 30) == TUNE_BUCKETS - 1);
+    }
+
+    #[test]
+    fn pin_depth_follows_steal_rate() {
+        let sh = Arc::new(TuneShared::new());
+        let mut t = Tuner::new(Arc::clone(&sh));
+        // Low steal rate: chains lengthen toward the cap.
+        let mut acquired = 0;
+        for _ in 0..64 {
+            acquired += 1000;
+            t.tick(0, acquired, 0, 0);
+        }
+        assert_eq!(sh.pin_depth.load(Ordering::Relaxed), MAX_PIN_DEPTH_CAP);
+        // High steal rate: chains shorten toward the floor.
+        let mut steals = 0;
+        for _ in 0..64 {
+            acquired += 1000;
+            steals += 500;
+            t.tick(steals, acquired, 0, 0);
+        }
+        assert_eq!(sh.pin_depth.load(Ordering::Relaxed), MIN_PIN_DEPTH);
+    }
+
+    #[test]
+    fn repr_mask_moves_with_observed_bytes_per_node() {
+        let sh = Arc::new(TuneShared::new());
+        let mut t = Tuner::new(Arc::clone(&sh));
+        // Bucket 2 (width ~64): owned copies cost 256 B/node while delta
+        // children freeze ~8 B/node — the controller should flip the
+        // bucket to delta.
+        let mut obs = TuneObs::default();
+        for _ in 0..4 {
+            obs.note_owned(64, 256);
+            obs.note_delta_bytes(64, 8);
+            obs.note_delta_node(64);
+            sh.absorb(&mut obs, &EngineStats::default());
+            t.tick(0, 0, 0, 0);
+        }
+        assert_ne!(
+            sh.delta_mask.load(Ordering::Relaxed) & (1 << 2),
+            0,
+            "cheap deltas should win bucket 2"
+        );
+        // Now make deltas expensive (wide frozen bases) and owned cheap:
+        // the bit must clear again.
+        for _ in 0..16 {
+            obs.note_owned(64, 16);
+            obs.note_delta_bytes(64, 4096);
+            obs.note_delta_node(64);
+            sh.absorb(&mut obs, &EngineStats::default());
+            t.tick(0, 0, 0, 0);
+        }
+        assert_eq!(
+            sh.delta_mask.load(Ordering::Relaxed) & (1 << 2),
+            0,
+            "expensive deltas should lose bucket 2"
+        );
+    }
+
+    #[test]
+    fn induction_gate_halves_when_rebuilds_do_not_amortize() {
+        let sh = Arc::new(TuneShared::new());
+        let mut t = Tuner::new(Arc::clone(&sh));
+        let b = bucket_of(100);
+        let mut obs = TuneObs::default();
+        // 32 induced rebuilds but only ~2 tree nodes each: no
+        // amortization, alpha should halve (repeatedly, to the floor).
+        for _ in 0..32 {
+            obs.note_induced(100);
+            obs.note_tree_node(100);
+            obs.note_tree_node(100);
+        }
+        sh.absorb(&mut obs, &EngineStats::default());
+        for _ in 0..8 {
+            t.tick(0, 0, 0, 0);
+        }
+        assert_eq!(
+            sh.alpha_milli[b].load(Ordering::Relaxed),
+            INDUCE_MIN_ALPHA_MILLI,
+            "non-amortizing bucket should bottom out"
+        );
+    }
+
+    #[test]
+    fn converges_after_stable_ticks_with_traffic() {
+        let sh = Arc::new(TuneShared::new());
+        let mut t = Tuner::new(Arc::clone(&sh));
+        let mut obs = TuneObs::default();
+        for i in 0..8u64 {
+            obs.note_tree_node(50);
+            sh.absorb(&mut obs, &EngineStats::default());
+            t.tick(0, 0, 128, 256);
+            if i == 0 {
+                // The first replan publishes the pool shape (one flip
+                // each) — convergence counting starts after.
+                assert!(sh.flips.load(Ordering::Relaxed) > 0);
+            }
+        }
+        let converged = sh.converged_epoch.load(Ordering::Relaxed);
+        assert!(converged > 0, "controller should converge under steady obs");
+        assert!(sh.epochs.load(Ordering::Relaxed) >= converged);
+    }
+
+    #[test]
+    fn pinned_knobs_ignore_the_controller() {
+        let sh = Arc::new(TuneShared::new());
+        sh.pin_depth.store(7, Ordering::Relaxed);
+        sh.delta_mask.store(u32::MAX, Ordering::Relaxed);
+        let jt = JobTune {
+            shared: Arc::clone(&sh),
+            tune_repr: false,
+            tune_pin: false,
+            tune_induce: false,
+        };
+        assert_eq!(jt.repr_for(10_000, NodeRepr::Owned), NodeRepr::Owned);
+        assert_eq!(jt.pin_depth(24), 24);
+        // Pinned induce gate uses the static threshold verbatim.
+        assert!(jt.induce_gate(10, 100, 1.0));
+        assert!(!jt.induce_gate(10, 100, 0.0));
+        let floats = JobTune {
+            shared: Arc::clone(&sh),
+            tune_repr: true,
+            tune_pin: true,
+            tune_induce: true,
+        };
+        assert_eq!(floats.repr_for(10_000, NodeRepr::Owned), NodeRepr::Delta);
+        assert_eq!(floats.pin_depth(24), 7);
+    }
+
+    #[test]
+    fn env_parse_matches_the_memo_idiom() {
+        // No env manipulation here (tests run in parallel); the parse
+        // table itself is exercised through a local copy of the match.
+        let parse = |v: &str| match v {
+            "on" | "1" | "true" | "yes" => Some(true),
+            "off" | "0" | "false" | "no" => Some(false),
+            _ => None,
+        };
+        assert_eq!(parse("on"), Some(true));
+        assert_eq!(parse("off"), Some(false));
+        assert_eq!(parse("banana"), None);
+    }
+}

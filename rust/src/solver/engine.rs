@@ -251,6 +251,7 @@ impl EngineCfg {
             max_pin_depth: self.max_pin_depth,
             fault: None,
             memo: None,
+            tune: None,
         }
     }
 }
@@ -294,6 +295,15 @@ pub struct JobCfg {
     /// dispatch consults the cache and exactly-solved components are
     /// published back at last-view-drop time.
     pub memo: Option<Arc<crate::solver::memo::JobMemo>>,
+    /// Self-tuning controller handle (see [`crate::solver::autotune`]).
+    /// `None` on one-shot engines and when the service runs with the
+    /// controller off; when set, the engine consults it for the
+    /// per-width node representation, the delta pin depth, and the
+    /// per-bucket induction gate — unless the corresponding static
+    /// knob was set explicitly, which pins that decision. The memory
+    /// watchdog's `forced_delta` override outranks every controller
+    /// decision.
+    pub tune: Option<Arc<crate::solver::autotune::JobTune>>,
 }
 
 impl Default for JobCfg {
@@ -684,15 +694,44 @@ impl JobCtl {
         }
     }
 
-    /// Effective node representation for new children: the configured
-    /// repr, or [`NodeRepr::Delta`] when the memory watchdog has forced
-    /// the compact representation on this job.
+    /// Effective node representation for a descent opening on an owned
+    /// node of `width` vertices. Precedence, highest first: the memory
+    /// watchdog's soft-pressure `forced_delta` override (the
+    /// degradation ladder outranks autotuning), then the self-tuning
+    /// controller's per-width-bucket choice (when the job carries a
+    /// tune handle and the repr knob floats), then the configured repr.
     #[inline]
-    pub(crate) fn node_repr(&self) -> NodeRepr {
+    pub(crate) fn repr_for(&self, width: usize) -> NodeRepr {
         if self.forced_delta.load(Ordering::Relaxed) {
-            NodeRepr::Delta
-        } else {
-            self.cfg.node_repr
+            return NodeRepr::Delta;
+        }
+        match &self.cfg.tune {
+            Some(t) => t.repr_for(width, self.cfg.node_repr),
+            None => self.cfg.node_repr,
+        }
+    }
+
+    /// Effective delta-chain length bound: the controller's tuned value
+    /// when the knob floats, the configured one otherwise.
+    #[inline]
+    pub(crate) fn max_pin_depth(&self) -> u32 {
+        match &self.cfg.tune {
+            Some(t) => t.pin_depth(self.cfg.max_pin_depth),
+            None => self.cfg.max_pin_depth,
+        }
+    }
+
+    /// §IV-B induction gate for a component of `size` inside a view of
+    /// `view_n` vertices: the controller's per-bucket threshold when
+    /// the knob floats, the configured `induce_threshold` otherwise.
+    #[inline]
+    pub(crate) fn induce_gate(&self, size: u32, view_n: usize) -> bool {
+        match &self.cfg.tune {
+            Some(t) => t.induce_gate(size, view_n, self.cfg.induce_threshold),
+            None => {
+                self.cfg.induce_threshold > 0.0
+                    && (size as f64) <= self.cfg.induce_threshold * view_n as f64
+            }
         }
     }
 
@@ -864,6 +903,10 @@ pub(crate) struct WorkerCtx<T> {
     /// Recycled u32 buffers for induced-CSR `row_ptr`/`adj` arrays.
     upool: BufferPool<u32>,
     stats: EngineStats,
+    /// Self-tuning observation scratch (per-width-bucket node/byte
+    /// counts), drained into the job's controller blackboard at stats
+    /// flush. Written only when the job carries a tune handle.
+    tune_obs: crate::solver::autotune::TuneObs,
     /// Pool counter values already drained into `stats` (the pools keep
     /// cumulative totals across jobs; flushes record deltas).
     flushed_pool_hits: u64,
@@ -889,6 +932,7 @@ impl<T: DegElem> WorkerCtx<T> {
             pool: BufferPool::new(),
             upool: BufferPool::new(),
             stats: EngineStats::default(),
+            tune_obs: crate::solver::autotune::TuneObs::default(),
             flushed_pool_hits: 0,
             flushed_pool_misses: 0,
             published_nodes: 0,
@@ -940,6 +984,11 @@ impl<T: DegElem> WorkerCtx<T> {
         self.stats.pool_misses += misses - self.flushed_pool_misses;
         self.flushed_pool_hits = hits;
         self.flushed_pool_misses = misses;
+        if let Some(t) = &ctl.cfg.tune {
+            // Per-item deltas: `stats` is reset below, so the globals it
+            // carries (undo/materialize traffic) are since the last flush.
+            t.shared.absorb(&mut self.tune_obs, &self.stats);
+        }
         ctl.nodes_expanded
             .fetch_add(self.stats.tree_nodes - self.published_nodes, Ordering::Relaxed);
         ctl.stats_sink.lock().unwrap().merge(&self.stats);
@@ -1117,6 +1166,9 @@ fn track_alloc<T: DegElem>(shared: &JobView<'_>, ctx: &mut WorkerCtx<T>, len: us
     let bytes = (len * T::BYTES) as u64;
     ctx.stats.payload_nodes += 1;
     ctx.stats.payload_bytes += bytes;
+    if shared.ctl.cfg.tune.is_some() {
+        ctx.tune_obs.note_owned(len, bytes);
+    }
     if let Some(f) = &shared.ctl.cfg.fault {
         f.on_alloc();
     }
@@ -1169,7 +1221,8 @@ pub(crate) fn process<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
 ) {
     match item {
         NodePayload::Owned(node) => {
-            let track = shared.ctl.node_repr() == NodeRepr::Delta && ctx.frontier.is_none();
+            let track = ctx.frontier.is_none()
+                && shared.ctl.repr_for(node.deg.len()) == NodeRepr::Delta;
             let mut d = Descent::new(node, track);
             if track {
                 d.journal = ctx.upool.acquire(64);
@@ -1583,6 +1636,9 @@ fn descend<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     let extract = shared.ctl.cfg.extract_witness;
     loop {
         ctx.stats.tree_nodes += 1;
+        if shared.ctl.cfg.tune.is_some() {
+            ctx.tune_obs.note_tree_node(d.node.deg.len());
+        }
         if let Some(f) = &shared.ctl.cfg.fault {
             f.on_node();
         }
@@ -1711,7 +1767,7 @@ fn freeze_frame<T: DegElem>(
     let link_depth = d.anchors.last().map(|a| a.state.depth + 1);
     let frozen_bytes;
     let state = match link_depth {
-        Some(depth) if depth <= shared.ctl.cfg.max_pin_depth => {
+        Some(depth) if depth <= shared.ctl.max_pin_depth() => {
             let prev = d.anchors.last().expect("link freeze has a previous anchor");
             let mut suffix = ctx.upool.acquire(jlen - prev.jpos);
             suffix.extend(
@@ -1751,6 +1807,9 @@ fn freeze_frame<T: DegElem>(
     };
     ctx.stats.pinned_frame_bytes += frozen_bytes;
     ctx.stats.payload_bytes += frozen_bytes;
+    if shared.ctl.cfg.tune.is_some() {
+        ctx.tune_obs.note_delta_bytes(node.deg.len(), frozen_bytes);
+    }
     if shared.ctl.cfg.instrument {
         let live = shared.ctl.live_bytes.fetch_add(frozen_bytes, Ordering::Relaxed) + frozen_bytes;
         shared.ctl.peak_live_bytes.fetch_max(live, Ordering::Relaxed);
@@ -1788,6 +1847,9 @@ fn make_delta_child<T: DegElem>(
     // `freeze_frame`); neither charges the queue-item struct itself.
     ctx.stats.delta_children += 1;
     ctx.stats.payload_nodes += 1;
+    if shared.ctl.cfg.tune.is_some() {
+        ctx.tune_obs.note_delta_node(d.node.deg.len());
+    }
     DeltaNode {
         parent: state,
         branch: vmax,
@@ -2266,8 +2328,7 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     let limit = best0.min(parent_bound);
 
     let view_n = node.deg.len();
-    let induce = shared.ctl.cfg.induce_threshold > 0.0
-        && (size as f64) <= shared.ctl.cfg.induce_threshold * view_n as f64;
+    let induce = shared.ctl.induce_gate(size, view_n);
     if induce {
         // Sorting makes the view→local map monotonic, so the induced
         // CSR rows come out sorted (required for `has_edge` binary
@@ -2337,6 +2398,9 @@ fn dispatch_component<T: DegElem, H: WorkerHandle<NodePayload<T>>>(
     }
     let child = if induce {
         ctx.stats.induced_subproblems += 1;
+        if shared.ctl.cfg.tune.is_some() {
+            ctx.tune_obs.note_induced(size as usize);
+        }
         let (row_ptr, adj, edges2, view_memo) = match prebuilt {
             Some((row_ptr, adj, edges2, fp)) => {
                 // Queue the slot for publication only on publishing

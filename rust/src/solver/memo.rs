@@ -153,9 +153,12 @@ struct Shard {
 /// for the key scheme, exactness invariant, and eviction policy.
 pub struct MemoCache {
     shards: Vec<Mutex<Shard>>,
-    /// Per-shard slice of the byte budget.
-    shard_budget: u64,
-    budget: u64,
+    /// Per-shard slice of the byte budget. Atomic so the service's
+    /// self-tuning controller can re-plan the budget from live ledger
+    /// bytes without stopping the cache ([`set_budget`]
+    /// (MemoCache::set_budget)).
+    shard_budget: AtomicU64,
+    budget: AtomicU64,
     ledger: Option<Arc<dyn MemoLedger>>,
     lookups: AtomicU64,
     hits: AtomicU64,
@@ -169,7 +172,7 @@ pub struct MemoCache {
 impl fmt::Debug for MemoCache {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("MemoCache")
-            .field("budget", &self.budget)
+            .field("budget", &self.budget.load(Ordering::Relaxed))
             .field("bytes", &self.bytes.load(Ordering::Relaxed))
             .finish_non_exhaustive()
     }
@@ -188,8 +191,8 @@ impl MemoCache {
     pub fn new(budget: u64, ledger: Option<Arc<dyn MemoLedger>>) -> Self {
         MemoCache {
             shards: (0..SHARDS).map(|_| Mutex::new(Shard::default())).collect(),
-            shard_budget: (budget / SHARDS as u64).max(1),
-            budget,
+            shard_budget: AtomicU64::new((budget / SHARDS as u64).max(1)),
+            budget: AtomicU64::new(budget),
             ledger,
             lookups: AtomicU64::new(0),
             hits: AtomicU64::new(0),
@@ -203,7 +206,16 @@ impl MemoCache {
 
     /// Configured byte budget.
     pub fn budget(&self) -> u64 {
-        self.budget
+        self.budget.load(Ordering::Relaxed)
+    }
+
+    /// Re-plan the byte budget online. Shrinking does not evict
+    /// eagerly — the CLOCK sweep in the next insert brings each shard
+    /// back under its new slice, and the watchdog ladder (shed) still
+    /// covers acute pressure.
+    pub fn set_budget(&self, budget: u64) {
+        self.budget.store(budget, Ordering::Relaxed);
+        self.shard_budget.store((budget / SHARDS as u64).max(1), Ordering::Relaxed);
     }
 
     fn shard_of(fp: u64) -> usize {
@@ -257,7 +269,8 @@ impl MemoCache {
         job: u64,
     ) -> Option<(Vec<u32>, Vec<u32>)> {
         let bytes = Self::entry_bytes(&row_ptr, &adj, cover.as_deref());
-        if bytes > self.shard_budget {
+        let shard_budget = self.shard_budget.load(Ordering::Relaxed);
+        if bytes > shard_budget {
             return Some((row_ptr, adj));
         }
         let mut s = lock(&self.shards[Self::shard_of(fp)]);
@@ -269,7 +282,7 @@ impl MemoCache {
         // CLOCK (second-chance) sweep until the new entry fits.
         let mut freed = 0u64;
         let mut evicted = 0u64;
-        while s.bytes + bytes > self.shard_budget && !s.ring.is_empty() {
+        while s.bytes + bytes > shard_budget && !s.ring.is_empty() {
             let hand = s.hand % s.ring.len();
             let victim = s.ring[hand];
             let spare = match s.map.get_mut(&victim) {
@@ -678,6 +691,21 @@ mod tests {
         c.shed();
         assert_eq!(c.bytes(), 0);
         assert_eq!(ledger.net.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn set_budget_replans_online() {
+        let c = MemoCache::new(1 << 20, None);
+        let (rp, aj) = csr(5);
+        assert!(c.insert(1, rp, aj, 2, None, 1).is_none());
+        // Shrink so no entry fits a shard slice any more: inserts decline.
+        c.set_budget(16);
+        assert_eq!(c.budget(), 16);
+        let (rp2, aj2) = csr(6);
+        assert!(c.insert(2, rp2.clone(), aj2.clone(), 3, None, 1).is_some());
+        // Grow back: inserts resume.
+        c.set_budget(1 << 20);
+        assert!(c.insert(2, rp2, aj2, 3, None, 1).is_none());
     }
 
     #[test]

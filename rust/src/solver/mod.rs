@@ -24,6 +24,7 @@
 //! through the induction renumbering and the root-reduction unwind to
 //! original vertex ids — and can verify the result edge-by-edge.
 
+pub mod autotune;
 pub mod engine;
 pub mod faults;
 pub mod memo;
@@ -45,6 +46,7 @@ use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 use engine::{EngineCfg, EngineStats};
 pub use engine::NodeRepr;
+pub use autotune::AutotuneStats;
 use occupancy::{Occupancy, OccupancyModel};
 pub use faults::{FaultInjector, FaultPlan};
 pub use memo::MemoStats;
@@ -144,6 +146,15 @@ pub struct SolverConfig {
     /// baseline (`--memo off`). Only meaningful through the service —
     /// one-shot engines never memoize.
     pub memo: Option<bool>,
+    /// Self-tuning controller (`solver::autotune`): let the resident
+    /// service pick node representation, pin depth, induction gating,
+    /// and pool shape online from its own measurements. `None`
+    /// (default) resolves through the `CAVC_AUTOTUNE` environment
+    /// default, then `on`; `Some(false)` is the ablation baseline
+    /// (`--autotune off`). Inert for one-shot engines. Explicitly set
+    /// static knobs pin their own dimension even when the controller
+    /// is on.
+    pub autotune: Option<bool>,
 }
 
 impl SolverConfig {
@@ -166,6 +177,7 @@ impl SolverConfig {
             node_repr: NodeRepr::from_env(),
             max_pin_depth: engine::DEFAULT_MAX_PIN_DEPTH,
             memo: None,
+            autotune: None,
         }
     }
 
@@ -244,6 +256,13 @@ impl SolverConfig {
     /// under this config (`--memo {on,off}` on the CLI).
     pub fn with_memo(mut self, on: bool) -> SolverConfig {
         self.memo = Some(on);
+        self
+    }
+
+    /// Enable or disable the service's self-tuning controller for jobs
+    /// run under this config (`--autotune {on,off}` on the CLI).
+    pub fn with_autotune(mut self, on: bool) -> SolverConfig {
+        self.autotune = Some(on);
         self
     }
 

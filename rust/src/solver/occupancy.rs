@@ -219,6 +219,47 @@ impl OccupancyModel {
         self.stack_budget_bytes / 4
     }
 
+    /// Re-plan the admission capacity from *live* ledger bytes instead
+    /// of the seed-time estimate: the budget still unclaimed by resident
+    /// node state (`stack_budget − live`) is what queued submissions can
+    /// actually draw on, so the self-tuning controller periodically
+    /// replaces the static [`OccupancyModel::admission_capacity`] with
+    /// this value as the pool fills and drains. Same 1/256 slice and
+    /// clamps as the static plan; a fully-consumed budget floors at the
+    /// minimum rather than refusing admission outright (the watchdog,
+    /// not the queue bound, owns shedding).
+    pub fn replan_admission(&self, live_bytes: u64) -> usize {
+        let remaining = self.stack_budget_bytes.saturating_sub(live_bytes);
+        let slice = (remaining >> 8).max(ADMISSION_ENTRY_BYTES);
+        ((slice / ADMISSION_ENTRY_BYTES) as usize).clamp(64, 4096)
+    }
+
+    /// Re-plan the per-worker queue capacity from live ledger bytes:
+    /// the remaining stack budget divided by the modeled full-width
+    /// frame charge, spread across `workers` queues. Published by the
+    /// self-tuning controller as the current plan (resident deques grow
+    /// on demand, so this is telemetry plus the seed for future pools,
+    /// not a hard cap).
+    pub fn replan_queue_capacity(
+        &self,
+        live_bytes: u64,
+        frame_bytes: u64,
+        workers: usize,
+    ) -> usize {
+        let remaining = self.stack_budget_bytes.saturating_sub(live_bytes);
+        let per_worker = remaining / frame_bytes.max(1) / workers.max(1) as u64;
+        (per_worker as usize).next_power_of_two().clamp(64, 8192)
+    }
+
+    /// Re-plan the memo budget from live ledger bytes: the same quarter
+    /// slice as [`OccupancyModel::memo_budget_bytes`], but of the budget
+    /// *remaining* after live search state — as jobs pin more node
+    /// state, the cache's allowance shrinks ahead of the watchdog's
+    /// shed, and it grows back when the pool drains.
+    pub fn replan_memo_budget(&self, live_bytes: u64) -> u64 {
+        self.stack_budget_bytes.saturating_sub(live_bytes) / 4
+    }
+
     /// Number of OS worker threads to actually run for a modeled launch:
     /// the model's block count capped by the hardware parallelism.
     pub fn workers(&self, n: usize, dtype: Dtype) -> usize {
@@ -374,6 +415,26 @@ mod tests {
         assert_eq!(tiny.admission_capacity(), 64);
         let mid = OccupancyModel { stack_budget_bytes: 64 << 20, ..m };
         assert_eq!(mid.admission_capacity(), 512);
+    }
+
+    #[test]
+    fn replans_shrink_with_live_bytes_and_recover() {
+        let m = OccupancyModel::default();
+        // Empty ledger: the replan equals the static plan.
+        assert_eq!(m.replan_admission(0), m.admission_capacity());
+        assert_eq!(m.replan_memo_budget(0), m.memo_budget_bytes());
+        // Half the budget live: capacities shrink but stay in range.
+        let half = m.stack_budget_bytes / 2;
+        assert!(m.replan_admission(half) <= m.admission_capacity());
+        assert_eq!(m.replan_memo_budget(half), half / 4);
+        // Budget exhausted (or overshot): floors, never zero/panic.
+        assert_eq!(m.replan_admission(u64::MAX), 64);
+        assert_eq!(m.replan_memo_budget(u64::MAX), 0);
+        let q_empty = m.replan_queue_capacity(0, 4096, 8);
+        let q_full = m.replan_queue_capacity(u64::MAX, 4096, 8);
+        assert!(q_empty >= q_full);
+        assert!((64..=8192).contains(&q_full));
+        assert!((64..=8192).contains(&q_empty));
     }
 
     #[test]

@@ -253,6 +253,26 @@ impl WorkerCounters {
     pub fn acquired(&self) -> u64 {
         self.pops + self.shared_pops + self.steals
     }
+
+    /// Steal rate of this worker's acquisitions, in parts per million
+    /// (see [`steal_rate_ppm`]).
+    pub fn steal_rate_ppm(&self) -> u64 {
+        steal_rate_ppm(self.steals, self.acquired())
+    }
+}
+
+/// Pool-wide steal rate: stolen acquisitions per million acquired
+/// nodes. This is the self-tuning controller's scheduler-side input —
+/// a low rate means the undo fast path dominates and delta chains may
+/// lengthen; a high rate means thieves pay materialization replay and
+/// chains should shorten. 0 when nothing was acquired.
+#[inline]
+pub fn steal_rate_ppm(steals: u64, acquired: u64) -> u64 {
+    if acquired == 0 {
+        0
+    } else {
+        steals.saturating_mul(1_000_000) / acquired
+    }
 }
 
 /// Outcome of one bounded idle step.

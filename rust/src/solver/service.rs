@@ -140,6 +140,46 @@
 //! The whole ladder is exercised deterministically by the seeded
 //! fault-injection harness ([`crate::solver::faults`], `tests/chaos.rs`).
 //!
+//! ## Self-tuning controller
+//!
+//! The engine's memory/scheduling knobs — node representation,
+//! `max_pin_depth`, the induction threshold, admission capacity, and
+//! the memo budget — default to an *online controller*
+//! ([`crate::solver::autotune`]) instead of static values. A
+//! `cavc-svc-tune` thread beside the dispatcher ticks every
+//! ~25 ms, reading the measurements the service already keeps:
+//!
+//! * per-width-bucket **bytes/node** EWMAs and the undo-vs-materialize
+//!   cost split from the engine stats flush, deciding owned-vs-delta
+//!   per dispatched component width;
+//! * the pool-wide **steal rate** from the worker publication slots,
+//!   lengthening delta chains (`max_pin_depth`) when the undo fast
+//!   path dominates and shortening them when thieves pay replay;
+//! * per-bucket **induction amortization** (tree nodes per induced
+//!   rebuild), gating the §IV-B induce threshold where the CSR
+//!   rebuild does not pay for itself;
+//! * live ledger bytes, **re-planning** the admission capacity and the
+//!   memo byte budget through [`OccupancyModel`] instead of trusting
+//!   seed-time estimates.
+//!
+//! Decisions are published to a lock-free blackboard and consulted
+//! per dispatch in `engine.rs`; convergence (epochs, flips,
+//! converged-at epoch) surfaces as [`AutotuneStats`] in
+//! [`ServiceStats`] and the wire stats frame.
+//!
+//! **Override precedence**, strongest first: (1) the memory watchdog's
+//! soft-pressure forced-delta override — the degradation ladder always
+//! outranks tuning; (2) explicit static knobs (a non-default
+//! `node_repr` / `max_pin_depth` / `induce_threshold` in the job's
+//! config, or `CAVC_NODE_REPR`) pin that knob and the controller never
+//! touches it — this is what keeps ablation baselines exact; (3) the
+//! controller's decision; (4) the built-in default. `--autotune off`
+//! (or `CAVC_AUTOTUNE=off`, or [`VcServiceBuilder::autotune`]) removes
+//! rungs 3 entirely. Tuning never changes *what* is computed — only
+//! representation and pacing — so objectives and witnesses are
+//! bit-identical with the controller on or off
+//! (`tests/autotune_invariance.rs`).
+//!
 //! ## Serving over the network
 //!
 //! Everything above is also reachable over TCP: [`crate::solver::wire`]
@@ -154,7 +194,7 @@
 //! [`crate::solver::server`].
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -163,7 +203,8 @@ use crate::degree::{DegElem, Dtype};
 use crate::graph::Graph;
 use crate::prep::{self, PrepConfig};
 
-use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, NodePayload, WorkerCtx};
+use super::autotune::{self, AutotuneStats, JobTune, TuneShared, Tuner};
+use super::engine::{self, EngineStats, JobCfg, JobCtl, JobView, NodePayload, NodeRepr, WorkerCtx};
 use super::memo::{self, JobMemo, MemoCache, MemoLedger, MemoStats};
 use super::occupancy::OccupancyModel;
 use super::sched::{
@@ -868,6 +909,9 @@ pub struct ServiceStats {
     /// Cross-job component memo cache counters (all zero when the
     /// service runs with the cache disabled).
     pub memo: MemoStats,
+    /// Self-tuning controller counters (decisions, flips, convergence;
+    /// `enabled == false` and all-zero when the controller is off).
+    pub autotune: AutotuneStats,
 }
 
 impl ServiceStats {
@@ -1055,8 +1099,10 @@ struct Admission {
     space_cv: Condvar,
     /// Latency-lane hint shared with the scheduler's fairness poll.
     lane_hint: Arc<LaneHint>,
-    /// Admission queue bound (backpressure past it).
-    max_queued: usize,
+    /// Admission queue bound (backpressure past it). Atomic so the
+    /// self-tuning controller can re-plan it from live ledger bytes;
+    /// an explicit [`VcServiceBuilder::max_queued`] pins it.
+    max_queued: AtomicUsize,
     /// Dispatched-jobs bound; the dispatcher holds jobs back beyond it.
     max_live_jobs: usize,
     /// Lane classification threshold (reduced |V| ≤ it ⇒ latency).
@@ -1260,6 +1306,81 @@ struct ServiceInner {
     /// Cross-job component memo cache ([`crate::solver::memo`]); `None`
     /// when the service was built with memoization disabled.
     memo: Option<Arc<MemoCache>>,
+    /// Self-tuning controller state ([`crate::solver::autotune`]);
+    /// `None` when the service runs with the controller off.
+    tune: Option<Arc<TuneCtl>>,
+}
+
+/// Shared state between the service and its `cavc-svc-tune` thread.
+struct TuneCtl {
+    /// The controller blackboard jobs consult per dispatch.
+    shared: Arc<TuneShared>,
+    /// An explicit builder/env queue bound pins the admission re-plan.
+    admission_pinned: bool,
+    /// An explicit builder/env memo budget pins the budget re-plan.
+    memo_pinned: bool,
+    /// Shutdown flag + wakeup for the tuner thread's tick sleep.
+    stop: Mutex<bool>,
+    cv: Condvar,
+}
+
+/// Tick cadence of the controller thread: frequent enough to converge
+/// within a short batch, cheap enough to be noise (each tick is a few
+/// dozen relaxed loads and one decision pass).
+const TUNE_TICK: Duration = Duration::from_millis(25);
+
+/// Nominal queued-frame charge used for the queue-capacity re-plan: a
+/// 1024-vertex u32 degree array, the latency-threshold-sized frame the
+/// occupancy model's seed-time plan also assumes for mixed workloads.
+const TUNE_NOMINAL_FRAME_BYTES: u64 = 4096;
+
+/// The controller thread: every tick, fold the worker publication
+/// slots into a pool-wide steal rate, re-plan admission/queue/memo
+/// capacity from live ledger bytes through the occupancy model, apply
+/// what is applicable live (admission bound, memo budget), and let the
+/// [`Tuner`] decision pass move the per-width knobs.
+fn tuner_loop(
+    ctl: &TuneCtl,
+    counters: &ServiceCounters,
+    admission: &Admission,
+    memo: Option<&Arc<MemoCache>>,
+    occ: &OccupancyModel,
+    workers: usize,
+) {
+    let mut tuner = Tuner::new(Arc::clone(&ctl.shared));
+    loop {
+        {
+            let stop = ctl.stop.lock().unwrap();
+            if *stop {
+                return;
+            }
+            let (stop, _) = ctl.cv.wait_timeout(stop, TUNE_TICK).unwrap();
+            if *stop {
+                return;
+            }
+        }
+        let mut steals = 0u64;
+        let mut acquired = 0u64;
+        for s in &counters.slots {
+            let st = s.steals.load(Ordering::Relaxed);
+            steals += st;
+            acquired += s.pops.load(Ordering::Relaxed)
+                + s.shared_pops.load(Ordering::Relaxed)
+                + st;
+        }
+        let live = admission.mem_live.load(Ordering::Relaxed);
+        let adm_cap = occ.replan_admission(live);
+        let q_cap = occ.replan_queue_capacity(live, TUNE_NOMINAL_FRAME_BYTES, workers);
+        if !ctl.admission_pinned {
+            admission.max_queued.store(adm_cap, Ordering::Relaxed);
+        }
+        if !ctl.memo_pinned {
+            if let Some(m) = memo {
+                m.set_budget(occ.replan_memo_budget(live));
+            }
+        }
+        tuner.tick(steals, acquired, adm_cap as u64, q_cap as u64);
+    }
 }
 
 /// Builder for [`VcService`].
@@ -1277,6 +1398,7 @@ pub struct VcServiceBuilder {
     mem_hard: Option<u64>,
     memo: Option<bool>,
     memo_bytes: Option<u64>,
+    autotune: Option<bool>,
 }
 
 /// Default reduced-size cutoff for the latency lane: graphs this small
@@ -1388,6 +1510,19 @@ impl VcServiceBuilder {
         self
     }
 
+    /// Enable or disable the self-tuning controller
+    /// ([`crate::solver::autotune`], `--autotune {on,off}` on the CLI).
+    /// Default: the config's `autotune`, then the `CAVC_AUTOTUNE`
+    /// environment default, then on. `off` spawns no tuner thread and
+    /// attaches no tune handle to jobs — every knob runs at its static
+    /// configured value, the ablation baseline. Explicit static knobs
+    /// pin their own dimension even with the controller on (see the
+    /// module docs, "Self-tuning controller").
+    pub fn autotune(mut self, on: bool) -> VcServiceBuilder {
+        self.autotune = Some(on);
+        self
+    }
+
     /// Spawn the worker pool and return the service.
     pub fn build(self) -> VcService {
         let workers = self.workers.unwrap_or_else(|| {
@@ -1408,7 +1543,9 @@ impl VcServiceBuilder {
             work_cv: Condvar::new(),
             space_cv: Condvar::new(),
             lane_hint: sched.lane_hint(),
-            max_queued: self.max_queued.unwrap_or_else(|| occ.admission_capacity()),
+            max_queued: AtomicUsize::new(
+                self.max_queued.unwrap_or_else(|| occ.admission_capacity()),
+            ),
             max_live_jobs: self.max_live_jobs.unwrap_or((workers * 8).max(32)),
             latency_threshold: self.latency_threshold,
             quota: self.quota,
@@ -1441,6 +1578,24 @@ impl VcServiceBuilder {
                 .unwrap_or_else(|| occ.memo_budget_bytes());
             Arc::new(MemoCache::new(budget, Some(Arc::clone(&admission) as Arc<dyn MemoLedger>)))
         });
+        // Self-tuning controller: builder override → config →
+        // CAVC_AUTOTUNE env → on.
+        let tune_on = self
+            .autotune
+            .or(self.defaults.autotune)
+            .or_else(autotune::env_autotune_default)
+            .unwrap_or(true);
+        // An explicit queue bound or memo budget (builder or env) pins
+        // that dimension: the controller re-plans only defaults.
+        let tune = tune_on.then(|| {
+            Arc::new(TuneCtl {
+                shared: Arc::new(TuneShared::new()),
+                admission_pinned: self.max_queued.is_some(),
+                memo_pinned: self.memo_bytes.is_some() || memo::env_memo_bytes().is_some(),
+                stop: Mutex::new(false),
+                cv: Condvar::new(),
+            })
+        });
         let inner = Arc::new(ServiceInner {
             sched,
             defaults: self.defaults,
@@ -1450,6 +1605,7 @@ impl VcServiceBuilder {
             counters: Arc::new(ServiceCounters::new(workers)),
             admission,
             memo,
+            tune,
         });
         let threads = (0..workers)
             .map(|w| {
@@ -1477,7 +1633,24 @@ impl VcServiceBuilder {
                 .spawn(move || recovery_loop(&adm))
                 .expect("spawn recovery thread")
         };
-        VcService { inner, threads, dispatcher: Some(dispatcher), recovery: Some(recovery) }
+        let tuner = inner.tune.as_ref().map(|_| {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name("cavc-svc-tune".into())
+                .spawn(move || {
+                    let ctl = inner.tune.as_ref().expect("tuner spawned with tune state");
+                    tuner_loop(
+                        ctl,
+                        &inner.counters,
+                        &inner.admission,
+                        inner.memo.as_ref(),
+                        &OccupancyModel::default(),
+                        inner.workers,
+                    )
+                })
+                .expect("spawn tuner thread")
+        });
+        VcService { inner, threads, dispatcher: Some(dispatcher), recovery: Some(recovery), tuner }
     }
 }
 
@@ -1491,6 +1664,7 @@ pub struct VcService {
     threads: Vec<JoinHandle<()>>,
     dispatcher: Option<JoinHandle<()>>,
     recovery: Option<JoinHandle<()>>,
+    tuner: Option<JoinHandle<()>>,
 }
 
 impl VcService {
@@ -1510,6 +1684,7 @@ impl VcService {
             mem_hard: None,
             memo: None,
             memo_bytes: None,
+            autotune: None,
         }
     }
 
@@ -1597,6 +1772,28 @@ impl VcService {
             ))),
             _ => None,
         };
+        // Controller participation is per *knob*: an explicitly static
+        // knob (non-default config value, or CAVC_NODE_REPR) pins its
+        // dimension and the controller never overrides it — ablation
+        // baselines stay exact. The watchdog's forced-delta override is
+        // checked upstream of the tune handle (`JobCtl::repr_for`). A
+        // job whose config says `autotune: Some(false)` opts out of
+        // consultation entirely, even on a tuner-enabled service (the
+        // one-shot shims route ablation configs through the shared
+        // default service).
+        let job_tune = if cfg.autotune == Some(false) {
+            None
+        } else {
+            self.inner.tune.as_ref().map(|t| {
+                Arc::new(JobTune {
+                    shared: Arc::clone(&t.shared),
+                    tune_repr: cfg.node_repr == NodeRepr::Owned
+                        && std::env::var_os("CAVC_NODE_REPR").is_none(),
+                    tune_pin: cfg.max_pin_depth == engine::DEFAULT_MAX_PIN_DEPTH,
+                    tune_induce: cfg.induce_threshold == engine::DEFAULT_INDUCE_THRESHOLD,
+                })
+            })
+        };
         let job_cfg = JobCfg {
             component_aware: cfg.component_aware,
             use_bounds: cfg.use_bounds,
@@ -1617,6 +1814,7 @@ impl VcService {
                 .or_else(super::faults::FaultPlan::from_env)
                 .map(|plan| Arc::new(super::faults::FaultInjector::new(plan))),
             memo: job_memo,
+            tune: job_tune,
         };
         let prep_cfg = cfg.prep_cfg();
 
@@ -1635,7 +1833,7 @@ impl VcService {
                     }
                 }
             }
-            let full = st.queued >= adm.max_queued;
+            let full = st.queued >= adm.max_queued.load(Ordering::Relaxed);
             let over_quota = match (&opts.tenant, &adm.quota) {
                 (Some(name), Some(q)) => match st.tenants.get(name) {
                     Some(e) => {
@@ -1756,18 +1954,29 @@ impl VcService {
             pvc: c.classes[1].snapshot(),
             mis: c.classes[2].snapshot(),
             memo: self.inner.memo.as_ref().map(|m| m.stats()).unwrap_or_default(),
+            autotune: self.inner.tune.as_ref().map(|t| t.shared.stats(true)).unwrap_or_default(),
         }
     }
 }
 
 impl Drop for VcService {
     fn drop(&mut self) {
-        // Order matters: the admission queue drains into the scheduler
-        // first (the dispatcher exits only once it is empty), then the
-        // pool drains and exits — held handles' `wait` calls return
-        // (the drop-drains contract). The recovery thread goes last:
-        // draining workers can still hand it failed jobs, and every one
-        // of those must publish an outcome before the service is gone.
+        // Order matters: the tuner goes first (it only reads counters
+        // and re-plans capacities — stopping it early just freezes the
+        // knobs at their last decision), then the admission queue
+        // drains into the scheduler (the dispatcher exits only once it
+        // is empty), then the pool drains and exits — held handles'
+        // `wait` calls return (the drop-drains contract). The recovery
+        // thread goes last: draining workers can still hand it failed
+        // jobs, and every one of those must publish an outcome before
+        // the service is gone.
+        if let Some(t) = &self.inner.tune {
+            *t.stop.lock().unwrap() = true;
+            t.cv.notify_all();
+        }
+        if let Some(t) = self.tuner.take() {
+            let _ = t.join();
+        }
         self.inner.admission.request_shutdown();
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();

@@ -67,6 +67,7 @@ use std::time::Duration;
 
 use crate::graph::Graph;
 
+use super::autotune::AutotuneStats;
 use super::memo::MemoStats;
 use super::service::{
     AdmissionStats, ClassStats, JobOptions, Lane, PoolStats, Problem, ProblemKind, ServiceStats,
@@ -843,6 +844,20 @@ fn encode_stats(e: &mut Enc, s: &ServiceStats) {
     e.u64(m.evictions);
     e.u64(m.bytes);
     e.u64(m.saved_nodes);
+    let t = &s.autotune;
+    e.u64(t.enabled as u64);
+    e.u64(t.epochs);
+    e.u64(t.flips);
+    e.u64(t.converged_epoch);
+    e.u64(t.pin_depth);
+    e.u64(t.delta_buckets);
+    e.u64(t.decisions_owned);
+    e.u64(t.decisions_delta);
+    e.u64(t.induce_pass);
+    e.u64(t.induce_block);
+    e.u64(t.steal_rate_ppm);
+    e.u64(t.admission_capacity);
+    e.u64(t.queue_capacity);
 }
 
 fn decode_class(d: &mut Dec<'_>) -> Result<ClassStats, WireError> {
@@ -895,7 +910,22 @@ fn decode_stats(d: &mut Dec<'_>) -> Result<ServiceStats, WireError> {
         bytes: d.u64()?,
         saved_nodes: d.u64()?,
     };
-    Ok(ServiceStats { pool, admission, mvc, pvc, mis, memo })
+    let autotune = AutotuneStats {
+        enabled: d.u64()? != 0,
+        epochs: d.u64()?,
+        flips: d.u64()?,
+        converged_epoch: d.u64()?,
+        pin_depth: d.u64()?,
+        delta_buckets: d.u64()?,
+        decisions_owned: d.u64()?,
+        decisions_delta: d.u64()?,
+        induce_pass: d.u64()?,
+        induce_block: d.u64()?,
+        steal_rate_ppm: d.u64()?,
+        admission_capacity: d.u64()?,
+        queue_capacity: d.u64()?,
+    };
+    Ok(ServiceStats { pool, admission, mvc, pvc, mis, memo, autotune })
 }
 
 // ---------------------------------------------------------------------------
@@ -1144,6 +1174,21 @@ mod tests {
             pvc: ClassStats { tree_nodes: 123, ..ClassStats::default() },
             mis: ClassStats { memo_hits: 8, ..ClassStats::default() },
             memo: MemoStats { bytes: 4096, ..MemoStats::default() },
+            autotune: AutotuneStats {
+                enabled: true,
+                epochs: 40,
+                flips: 6,
+                converged_epoch: 31,
+                pin_depth: 28,
+                delta_buckets: 0b1111_1000,
+                decisions_owned: 100,
+                decisions_delta: 200,
+                induce_pass: 77,
+                induce_block: 3,
+                steal_rate_ppm: 52_000,
+                admission_capacity: 2048,
+                queue_capacity: 512,
+            },
         };
         match roundtrip(&Frame::StatsReply(Box::new(s))) {
             Frame::StatsReply(r) => {
@@ -1157,6 +1202,19 @@ mod tests {
                 assert_eq!(r.pvc.tree_nodes, 123);
                 assert_eq!(r.mis.memo_hits, 8);
                 assert_eq!(r.memo.bytes, 4096);
+                assert!(r.autotune.enabled);
+                assert_eq!(r.autotune.epochs, 40);
+                assert_eq!(r.autotune.flips, 6);
+                assert_eq!(r.autotune.converged_epoch, 31);
+                assert_eq!(r.autotune.pin_depth, 28);
+                assert_eq!(r.autotune.delta_buckets, 0b1111_1000);
+                assert_eq!(r.autotune.decisions_owned, 100);
+                assert_eq!(r.autotune.decisions_delta, 200);
+                assert_eq!(r.autotune.induce_pass, 77);
+                assert_eq!(r.autotune.induce_block, 3);
+                assert_eq!(r.autotune.steal_rate_ppm, 52_000);
+                assert_eq!(r.autotune.admission_capacity, 2048);
+                assert_eq!(r.autotune.queue_capacity, 512);
             }
             f => panic!("wrong frame {f:?}"),
         }

@@ -1,0 +1,161 @@
+//! Differential tests for the online self-tuning controller
+//! ([`cavc::solver::autotune`]): every knob it turns — node
+//! representation, pin depth, induction gating, pool shape — is a
+//! performance lever, never a correctness lever, so a service with the
+//! controller on must return the same objectives and (on serial runs)
+//! bit-identical verified witnesses as one with it off. The watchdog's
+//! soft-pressure forced-delta override must also outrank whatever the
+//! controller decided.
+
+use cavc::graph::generators;
+use cavc::solver::engine::NodeRepr;
+use cavc::solver::{
+    oracle, JobHandle, JobOptions, Lane, Problem, SchedulerKind, Solution, SolverConfig,
+    Termination, VcService,
+};
+use std::time::{Duration, Instant};
+
+/// Component-rich workloads (the memo-suite shape): unions of small
+/// random parts, so jobs split into several induced components and the
+/// controller sees traffic in more than one width bucket.
+fn workload() -> Vec<cavc::graph::Graph> {
+    (0..6u64).map(|seed| generators::union_of_random(4, 4, 8, 0.35, seed)).collect()
+}
+
+fn extract_opts() -> JobOptions {
+    JobOptions { extract_witness: true, ..JobOptions::default() }
+}
+
+/// Run the workload once through `svc`, returning (objective, witness)
+/// per job after asserting completion and witness verification.
+fn run_batch(svc: &VcService) -> Vec<(u32, Vec<u32>)> {
+    let handles: Vec<_> = workload()
+        .into_iter()
+        .map(|g| svc.submit_with(Problem::mvc(g), extract_opts()))
+        .collect();
+    handles
+        .into_iter()
+        .enumerate()
+        .map(|(i, h)| {
+            let sol = h.wait();
+            assert_eq!(sol.termination, Termination::Complete, "job {i}");
+            assert_eq!(sol.witness_verified, Some(true), "job {i}: witness must verify");
+            (sol.objective, sol.witness.expect("extracting job returns a witness"))
+        })
+        .collect()
+}
+
+/// Serial runs are bit-deterministic, so the controller must be fully
+/// transparent: same objectives, same (sorted) witness arrays, across
+/// both schedulers and both configured node representations, on both
+/// cold and memo-warm passes.
+#[test]
+fn serial_answers_are_bit_identical_with_autotune_on_and_off() {
+    for sched in [SchedulerKind::WorkSteal, SchedulerKind::Sharded] {
+        for repr in [NodeRepr::Owned, NodeRepr::Delta] {
+            let cfg = SolverConfig::proposed().with_node_repr(repr);
+            let on = VcService::builder()
+                .config(cfg.clone())
+                .scheduler(sched)
+                .workers(1)
+                .autotune(true)
+                .build();
+            let off = VcService::builder()
+                .config(cfg)
+                .scheduler(sched)
+                .workers(1)
+                .autotune(false)
+                .build();
+            let tag = format!("{}/{}", sched.name(), repr.name());
+            // cold pass, then a memo-warm pass, on each service
+            let on_cold = run_batch(&on);
+            let on_warm = run_batch(&on);
+            let off_cold = run_batch(&off);
+            let off_warm = run_batch(&off);
+            assert_eq!(on_cold, off_cold, "{tag}: cold answers diverge with autotune on");
+            assert_eq!(on_warm, off_warm, "{tag}: warm answers diverge with autotune on");
+            assert_eq!(on_cold, on_warm, "{tag}: warm pass diverges from cold (autotune on)");
+            for (i, (g, (obj, _))) in workload().iter().zip(&on_cold).enumerate() {
+                assert_eq!(*obj, oracle::mvc_size(g), "{tag}: job {i} objective");
+            }
+            assert!(on.stats().autotune.enabled, "{tag}: controller reports disabled");
+            assert!(!off.stats().autotune.enabled, "{tag}: off-service reports enabled");
+        }
+    }
+}
+
+/// Multi-worker passes are not bit-deterministic, but objectives are
+/// exact and every witness must still verify — with the controller
+/// live-retuning under genuine steal traffic.
+#[test]
+fn concurrent_answers_agree_and_verify_with_autotune_on() {
+    let on = VcService::builder().workers(4).autotune(true).build();
+    let off = VcService::builder().workers(4).autotune(false).build();
+    let on_res = run_batch(&on);
+    let off_res = run_batch(&off);
+    for (i, ((g, (on_obj, _)), (off_obj, _))) in
+        workload().iter().zip(&on_res).zip(&off_res).enumerate()
+    {
+        assert_eq!(on_obj, off_obj, "job {i}: objective diverges with autotune on");
+        assert_eq!(*on_obj, oracle::mvc_size(g), "job {i} objective");
+    }
+    // The controller thread actually ran while the batch was in flight.
+    let t0 = Instant::now();
+    while on.stats().autotune.epochs == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(30), "controller never ticked");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+fn wait_bounded(h: &JobHandle, what: &str) -> Solution {
+    let t0 = Instant::now();
+    loop {
+        if let Some(sol) = h.try_result() {
+            return sol;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(60), "hung waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The degradation ladder outranks the controller: under injected soft
+/// memory pressure every newly set-up job branches under the delta
+/// representation, even when its config asks for owned frames and the
+/// controller is live (and may have decided owned for every bucket).
+#[test]
+fn watchdog_forced_delta_outranks_the_controller() {
+    let cfg = SolverConfig::proposed().with_node_repr(NodeRepr::Owned);
+    let svc = VcService::builder().config(cfg).workers(2).mem_soft(1).autotune(true).build();
+    // a hog keeps the ledger above the (tiny) soft limit...
+    let hog = svc.submit(Problem::mvc(generators::p_hat(180, 0.35, 0.85, 11)));
+    let t0 = Instant::now();
+    while svc.stats().admission.live_bytes <= 1 {
+        assert!(t0.elapsed() < Duration::from_secs(60), "hog never charged the ledger");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    // ...while a latency-lane job (which bypasses the throughput hold)
+    // is forced onto delta frames at setup despite its owned config: a
+    // dense-enough single component so the job genuinely branches.
+    let g = generators::erdos_renyi(18, 0.25, 3);
+    let opt = oracle::mvc_size(&g);
+    let h = svc.submit_with(
+        Problem::mvc(g),
+        JobOptions {
+            priority: Some(Lane::Latency),
+            extract_witness: true,
+            ..JobOptions::default()
+        },
+    );
+    let sol = wait_bounded(&h, "latency job under soft pressure");
+    assert_eq!(sol.termination, Termination::Complete);
+    assert_eq!(sol.objective, opt, "forced-delta mode changed an answer");
+    assert_eq!(sol.witness_verified, Some(true));
+    assert!(
+        sol.stats.delta_children > 0,
+        "owned-config job under soft pressure must branch on delta frames \
+         (delta_children = {})",
+        sol.stats.delta_children
+    );
+    hog.cancel();
+    wait_bounded(&hog, "watchdog hog");
+}
